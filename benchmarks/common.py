@@ -1,0 +1,50 @@
+"""Shared benchmark plumbing: 8 emulated devices, timing, CSV output.
+
+CPU wall-times are *relative* indicators (the interconnect is emulated);
+the hardware-grounded numbers live in the roofline analysis
+(results/dryrun + EXPERIMENTS.md). Each bench prints
+``name,us_per_call,derived`` rows per the harness contract.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P  # noqa: F401
+
+
+def make_mesh(shape=(8,), axes=("x",)):
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def smap(mesh, fn, in_specs, out_specs):
+    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False))
+
+
+def timeit(fn, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def row(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")

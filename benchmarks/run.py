@@ -1,0 +1,24 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+# CPU wall-times are relative (emulated interconnect); hardware-grounded
+# numbers are in the roofline analysis (EXPERIMENTS.md §Roofline).
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import paper_figures
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in paper_figures.ALL:
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            print(f"BENCH_FAILED,{fn.__name__},", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

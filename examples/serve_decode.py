@@ -1,0 +1,15 @@
+"""Batched serving example: prefill-free decode loop with a sharded KV cache
+(flash-decode logsumexp merge over the model axis) on 8 emulated devices.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/serve_decode.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+from repro.launch.serve import generate
+
+generate("tinyllama-1.1b", reduced=True, batch=4, prompt_len=4,
+         gen_tokens=24, mesh_shape=(2, 4))
+generate("falcon-mamba-7b", reduced=True, batch=4, prompt_len=4,
+         gen_tokens=24, mesh_shape=None)

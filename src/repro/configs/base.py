@@ -1,0 +1,261 @@
+"""Architecture + run configuration dataclasses.
+
+`ArchConfig` describes the model (one file per assigned architecture in this
+package); `RunConfig` describes how it is executed (mesh axes, PK overlap
+flags, remat/microbatching, dtypes). The same ArchConfig drives the smoke
+test (via `.reduced()`), the dry-run (full shapes, ShapeDtypeStruct only) and
+training/serving.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal, Sequence
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One position in the repeating layer pattern."""
+    mixer: Literal["attn", "mamba"] = "attn"
+    mlp: Literal["dense", "moe", "none"] = "dense"
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_every: int = 1               # pattern: layer i is MoE iff i % moe_every == (moe_every-1)
+
+    # SSM / hybrid
+    ssm_state: int = 16
+    d_inner_mult: int = 2
+    conv_kernel: int = 4
+    dt_rank: int | None = None
+    attn_every: int = 0              # hybrid: layer i is attention iff i % attn_every == 0
+
+    # attention
+    rope_theta: float = 10000.0
+    sliding_window: int | None = None
+
+    # encoder-decoder
+    encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+
+    # modality frontend (STUB — input_specs provides precomputed embeddings)
+    frontend: Literal[None, "audio", "vision"] = None
+    n_frontend_tokens: int = 0
+
+    act: str = "silu"
+    gated_mlp: bool = True
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+
+    # --- derived ---
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.d_inner_mult * self.d_model
+
+    @property
+    def dtr(self) -> int:
+        return self.dt_rank if self.dt_rank is not None else math.ceil(self.d_model / 16)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def is_ssm_only(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def is_hybrid(self) -> bool:
+        return self.attn_every > 0
+
+    @property
+    def subquadratic(self) -> bool:
+        """Eligible for long_500k (sub-quadratic sequence mixing)."""
+        return self.is_ssm_only or self.is_hybrid or self.sliding_window is not None
+
+    def padded_vocab(self, multiple: int = 16) -> int:
+        return _round_up(self.vocab_size, multiple)
+
+    def layer_pattern(self) -> tuple[LayerSpec, ...]:
+        """The repeating period of layer types.
+
+        Hybrid (jamba): period = attn_every layers, attention at position 0,
+        mamba elsewhere; MoE every `moe_every` positions. Pure archs: period
+        length lcm(moe_every, 1) so the scan body stays small.
+        """
+        if self.is_hybrid:
+            period = self.attn_every
+        elif self.is_moe:
+            period = self.moe_every
+        else:
+            period = 1
+        specs = []
+        for i in range(period):
+            mixer = "mamba" if (self.is_ssm_only or
+                                (self.is_hybrid and i % self.attn_every != 0)) else "attn"
+            if self.is_ssm_only:
+                mlp = "none"          # mamba-1 blocks have no separate MLP
+                mixer = "mamba"
+            else:
+                mlp = "moe" if (self.is_moe and i % self.moe_every ==
+                                (self.moe_every - 1)) else "dense"
+            specs.append(LayerSpec(mixer=mixer, mlp=mlp))
+        assert self.n_layers % len(specs) == 0, (self.name, self.n_layers, len(specs))
+        return tuple(specs)
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // len(self.layer_pattern())
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, hd = self.d_model, self.hd
+        per_period = 0
+        for spec in self.layer_pattern():
+            if spec.mixer == "attn":
+                per_period += d * (self.n_heads * hd) * 2      # wq, wo
+                per_period += d * (self.n_kv_heads * hd) * 2   # wk, wv
+            else:
+                di, ns, dtr = self.d_inner, self.ssm_state, self.dtr
+                per_period += (d * 2 * di + di * self.conv_kernel
+                               + di * (dtr + 2 * ns) + dtr * di
+                               + di * ns + di + di * d)
+            n_proj = 3 if self.gated_mlp else 2
+            if spec.mlp == "dense":
+                per_period += n_proj * d * self.d_ff
+            elif spec.mlp == "moe":
+                per_period += (self.n_experts * n_proj * d * self.d_ff
+                               + d * self.n_experts)
+            per_period += 2 * d                                # norms
+        n = per_period * self.n_periods
+        v = self.padded_vocab()
+        n += v * d * (1 if self.tie_embeddings else 2)
+        if self.encoder_decoder:
+            n += (d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+                  + (3 if self.gated_mlp else 2) * d * self.d_ff
+                  + 2 * d) * self.n_encoder_layers
+            # decoder cross-attention blocks
+            n += (d * (self.n_heads * hd) * 2 +
+                  d * (self.n_kv_heads * hd) * 2 + d) * self.n_layers
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of n_experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        total = self.param_count()
+        moe_layers = sum(1 for s in self.layer_pattern()
+                         if s.mlp == "moe") * self.n_periods
+        inactive = (moe_layers * (self.n_experts - self.top_k)
+                    * (3 if self.gated_mlp else 2) * d * self.d_ff)
+        return total - inactive
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        pattern = len(self.layer_pattern())
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=max(pattern, 2 if pattern == 1 else pattern),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2),
+            head_dim=16,
+            d_ff=128,
+            vocab_size=256,
+            n_experts=min(self.n_experts, 4) if self.is_moe else 0,
+            top_k=min(self.top_k, 2) if self.is_moe else 0,
+            n_encoder_layers=2 if self.encoder_decoder else 0,
+            n_frontend_tokens=8 if self.frontend else 0,
+            sliding_window=16 if self.sliding_window else None,
+            d_inner_mult=2,
+            ssm_state=8,
+            dt_rank=8,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One assigned (input-shape) cell."""
+    name: str                       # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Execution / distribution knobs."""
+    # mesh
+    dp_axes: tuple[str, ...] = ("data",)    # ("pod","data") multi-pod
+    tp_axis: str = "model"
+    fsdp: bool = True                        # shard params over dp_axes too
+
+    # PK overlap features (paper technique on/off per site)
+    pk_overlap: bool = True                  # use pk_* overlapped collectives
+    pk_bidirectional: bool = False           # 2-link bidirectional rings
+    sp_attention: Literal["ring", "ulysses", "none"] = "ring"
+    moe_strategy: Literal["replicated", "a2a"] = "replicated"
+    moe_chunks: int = 1
+
+    # compute
+    attention_impl: Literal["xla", "pallas"] = "xla"
+    remat: bool = True
+    microbatches: int = 1
+    optimizer_moment_dtype: str = "float32"  # bf16 for the >=300B archs
+    logits_fp32: bool = True
+    loss_chunk: int = 512                    # CE loss sequence chunking
+    ssm_chunk: int = 256                     # mamba scan chunk
+    scan_layers: bool = True                 # False: python-unroll periods
+                                             # (cost-calibration mode)
+    # §Perf hillclimb knobs (EXPERIMENTS.md)
+    bf16_backward_ars: bool = False          # cast residual-stream cotangents
+                                             # to bf16 (halves backward ARs)
+    save_collectives: bool = False           # remat policy: save sub-block
+                                             # outputs so fwd psums are not
+                                             # recomputed in the backward
+    ssm_scan_dtype: str = "float32"          # mamba chunk-scan accum dtype
+    pk_ring_psum: bool = False               # MoE combine via ppermute ring
+                                             # (bf16 payload, overlappable)
+    pk_attn_out_island: bool = False         # attention out-proj through the
+                                             # PK GEMM+AR island
+
+    # serving
+    decode_seq_shard: bool = True            # shard KV cache seq over tp axis
+    serve_moe_tp_data: bool = False          # resident 2D-TP expert weights
+                                             # (ff over dp as TP, not FSDP):
+                                             # no per-token weight gathers

@@ -1,0 +1,153 @@
+"""ParallelKittens cost model (paper §3.1.1), adapted to TPU v5e.
+
+    T_kernel = T_launch + max(T_comp, T_mem, T_comm) + T_non_overlap + T_sync
+
+Each T is derived from work sizes and achievable bandwidths. The model drives
+two things in this framework:
+
+  * the overlap *schedule* search (``core/schedule.py``) — e.g. the paper's
+    communication-hiding condition ``K >= s*R/(2*B)`` (paper §3.1.3), re-derived
+    for ICI bandwidth;
+  * the roofline report (``roofline/model.py``) — the same three terms computed
+    from the *compiled* HLO instead of analytically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Per-chip hardware constants."""
+
+    name: str
+    peak_flops_bf16: float      # FLOP/s
+    hbm_bandwidth: float        # bytes/s
+    ici_bandwidth: float        # bytes/s per link direction
+    ici_links: int              # usable ICI links per chip (2-D torus: 4)
+    hbm_bytes: float            # HBM capacity in bytes
+    vmem_bytes: float           # VMEM per core
+    # Empirical-ish overheads (used for T_launch / T_sync terms).
+    kernel_launch_s: float = 2e-6
+    local_sync_s: float = 64e-9       # paper: intra-SM mbarrier ~64 ns
+    remote_sync_s: float = 1.5e-6     # cross-chip semaphore signal visibility
+
+
+# Grading constants given by the assignment: 197 TFLOP/s bf16, 819 GB/s HBM,
+# ~50 GB/s per ICI link.
+TPU_V5E = HardwareSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bandwidth=819e9,
+    ici_bandwidth=50e9,
+    ici_links=4,
+    hbm_bytes=16e9,
+    vmem_bytes=64 * 2**20 // 4,  # 16 MiB usable working budget per core
+)
+
+# The paper's running example, kept for validating the analysis against the
+# paper's own numbers (Table 3: hiding threshold K ~ 2197 on H100).
+H100_SXM = HardwareSpec(
+    name="h100_sxm",
+    peak_flops_bf16=989e12,
+    hbm_bandwidth=3.35e12,
+    ici_bandwidth=450e9,   # NVLink unidirectional
+    ici_links=1,
+    hbm_bytes=80e9,
+    vmem_bytes=227 * 2**10,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCost:
+    """The paper's decomposition for one kernel invocation (seconds)."""
+
+    t_launch: float
+    t_comp: float
+    t_mem: float
+    t_comm: float
+    t_non_overlap: float
+    t_sync: float
+
+    @property
+    def total(self) -> float:
+        return (self.t_launch + max(self.t_comp, self.t_mem, self.t_comm)
+                + self.t_non_overlap + self.t_sync)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_comp, "memory": self.t_mem,
+                 "collective": self.t_comm}
+        return max(terms, key=terms.get)
+
+
+def gemm_cost(m: int, n: int, k: int, dtype_bytes: int,
+              hw: HardwareSpec = TPU_V5E, *, efficiency: float = 0.9) -> float:
+    """Seconds for a local GEMM at `efficiency` of peak."""
+    flops = 2.0 * m * n * k
+    return flops / (hw.peak_flops_bf16 * efficiency)
+
+
+def transfer_cost(nbytes: float, hw: HardwareSpec = TPU_V5E,
+                  *, links: int = 1) -> float:
+    """Seconds to move nbytes over `links` ICI link-directions."""
+    return nbytes / (hw.ici_bandwidth * links)
+
+
+def hiding_threshold_k(dtype_bytes: int, hw: HardwareSpec = TPU_V5E,
+                       *, links: int = 1) -> int:
+    """Paper §3.1.3: GEMM+RS communication is fully hidden when
+
+        T_comp_tile >= T_comm_tile  <=>  K >= s*R / (2*B)
+
+    For BF16 on H100 (s=2, R=989e12, B=450e9) the paper derives K >= 2197;
+    on v5e with one ring link-pair this gives K >= 3940.
+    """
+    return math.ceil(dtype_bytes * hw.peak_flops_bf16
+                     / (2.0 * hw.ici_bandwidth * links))
+
+
+def ring_collective_bytes(shard_bytes: float, n_devices: int,
+                          kind: str) -> float:
+    """Per-device ICI traffic for ring collectives over an axis of size N.
+
+    `shard_bytes` is the size of ONE shard (the unit each device owns).
+    """
+    if n_devices <= 1:
+        return 0.0
+    if kind in ("all_gather", "reduce_scatter"):
+        return shard_bytes * (n_devices - 1)
+    if kind == "all_reduce":  # RS + AG
+        return 2.0 * shard_bytes * (n_devices - 1)
+    if kind == "all_to_all":
+        return shard_bytes * (n_devices - 1) / n_devices
+    if kind == "ppermute":
+        return shard_bytes
+    raise ValueError(f"unknown collective kind: {kind}")
+
+
+def overlapped_gemm_collective_cost(
+    m: int, n: int, k: int, *, axis_size: int, dtype_bytes: int = 2,
+    kind: str = "reduce_scatter", n_chunks: int = 1,
+    hw: HardwareSpec = TPU_V5E,
+) -> KernelCost:
+    """Analytic cost of a chunked overlapped GEMM×collective (PK schedule).
+
+    Models the decomposed ring schedule: the collective for chunk i+1 runs on
+    the ICI DMA engines while chunk i's GEMM runs on the MXU. With C chunks the
+    non-overlapped residue is one chunk's transfer (pipeline fill).
+    """
+    t_comp = gemm_cost(m, n, k, dtype_bytes, hw)
+    out_bytes = m * n * dtype_bytes
+    comm_bytes = ring_collective_bytes(out_bytes / max(axis_size, 1),
+                                       axis_size, kind)
+    t_comm = transfer_cost(comm_bytes, hw)
+    # HBM traffic: read A, B once; write C once (chunking re-reads one operand).
+    t_mem = ((m * k + k * n) * dtype_bytes * max(1, n_chunks // 4 + 1)
+             + out_bytes) / hw.hbm_bandwidth
+    fill = t_comm / max(n_chunks, 1)
+    t_sync = 2.0 * n_chunks * hw.remote_sync_s * max(axis_size - 1, 0)
+    return KernelCost(t_launch=hw.kernel_launch_s, t_comp=t_comp, t_mem=t_mem,
+                      t_comm=t_comm, t_non_overlap=fill, t_sync=t_sync)

@@ -1,0 +1,197 @@
+"""Expert parallelism (paper §4.3, Fig. 12) — capacity-based MoE with two
+dispatch strategies:
+
+* ``replicated`` (beyond-paper default, DESIGN §4): activations are already
+  replicated across the `model` axis after attention (Megatron residual
+  stream), so each model-rank simply computes *the experts it owns* on the
+  tokens routed to them — dispatch is a local gather, and combine rides the
+  same psum the TP-FFN would need anyway. EP adds **zero** extra collectives.
+  EP×TP hybrid: ``ep = gcd(E, model)``, ``tp_ff = model // ep`` — rank r owns
+  experts ``[(r // tp_ff) * E/ep, ...)`` with an ``ff / tp_ff`` hidden slice.
+
+* ``a2a`` (paper-faithful): GShard-style dispatch — tokens are all-to-all'd to
+  the data-rank that owns their expert, expert GEMM, all-to-all back. The PK
+  schedule chunks the dispatch so expert GEMM on chunk i overlaps the
+  transfer of chunk i+1 (the paper's Comet comparison).
+
+Expert weights for the replicated strategy are stored **device-major** —
+``(model_size, E_loc, d, ff_loc)`` sharded ``P('model')`` — i.e. a PGL over
+the model axis (core/pgl.py), mirroring the paper's symmetric allocation.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ep_tp_split(n_experts: int, model_size: int) -> tuple[int, int]:
+    """(ep, tp_ff): expert-parallel degree and per-expert FFN TP degree."""
+    ep = math.gcd(n_experts, model_size)
+    return ep, model_size // ep
+
+
+def capacity(n_tokens: int, n_experts: int, top_k: int,
+             capacity_factor: float) -> int:
+    return max(1, math.ceil(n_tokens * top_k / n_experts * capacity_factor))
+
+
+class RouterOut(NamedTuple):
+    probs: jax.Array      # (T, E) f32
+    top_vals: jax.Array   # (T, K) f32
+    top_idx: jax.Array    # (T, K) i32
+
+
+def route(x: jax.Array, router_w: jax.Array, *, top_k: int,
+          norm_topk: bool = True) -> RouterOut:
+    logits = jnp.dot(x.astype(jnp.float32), router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = lax.top_k(probs, top_k)
+    if norm_topk:
+        top_vals = top_vals / jnp.maximum(
+            top_vals.sum(axis=-1, keepdims=True), 1e-9)
+    return RouterOut(probs, top_vals, top_idx.astype(jnp.int32))
+
+
+def aux_load_balance_loss(r: RouterOut, n_experts: int) -> jax.Array:
+    """Switch-style load balance loss (fraction × mean prob per expert)."""
+    t = r.top_idx.shape[0]
+    frac = jnp.zeros((n_experts,), jnp.float32).at[
+        r.top_idx.reshape(-1)].add(1.0) / (t * r.top_idx.shape[1])
+    mean_p = r.probs.mean(axis=0)
+    return n_experts * jnp.sum(frac * mean_p)
+
+
+def _local_gates(r: RouterOut, e0, e_loc: int) -> jax.Array:
+    """(E_loc, T) combined gate weight of each token for each owned expert."""
+    e_ids = e0 + jnp.arange(e_loc)                       # (E_loc,)
+    hit = (r.top_idx[:, :, None] == e_ids[None, None, :])  # (T, K, E_loc)
+    return jnp.einsum("tke,tk->et", hit.astype(jnp.float32), r.top_vals)
+
+
+def _expert_ffn(x_sel, w1, w3, w2, *, act=jax.nn.silu):
+    """x_sel: (E_loc, C, d); w1/w3: (E_loc, d, f); w2: (E_loc, f, d)."""
+    h = jnp.einsum("ecd,edf->ecf", x_sel, w1,
+                   preferred_element_type=jnp.float32)
+    if w3 is not None:
+        h3 = jnp.einsum("ecd,edf->ecf", x_sel, w3,
+                        preferred_element_type=jnp.float32)
+        h = act(h) * h3
+    else:
+        h = act(h)
+    return jnp.einsum("ecf,efd->ecd", h.astype(x_sel.dtype), w2,
+                      preferred_element_type=jnp.float32)
+
+
+def pk_moe_replicated(x, router_w, w1, w3, w2, *, axis_name: str,
+                      n_experts: int, top_k: int,
+                      capacity_factor: float = 1.25, norm_topk: bool = True,
+                      n_chunks: int = 1, ring_combine: bool = False):
+    """Replicated-dispatch MoE. Call INSIDE shard_map with `axis_name` bound.
+
+    x: (T, d) tokens (replicated over axis). w1/w3: (E_loc, d, ff_loc),
+    w2: (E_loc, ff_loc, d) — this rank's device-major slice. Returns
+    ((T, d) output, aux_loss).
+    """
+    model_size = lax.axis_size(axis_name)
+    r_idx = lax.axis_index(axis_name)
+    ep, tp_ff = ep_tp_split(n_experts, model_size)
+    e_loc = n_experts // ep
+    assert w1.shape[0] == e_loc, (w1.shape, e_loc)
+    t = x.shape[0]
+    cap = min(capacity(t, n_experts, top_k, capacity_factor), t)
+
+    r = route(x, router_w, top_k=top_k, norm_topk=norm_topk)
+    e0 = (r_idx // tp_ff) * e_loc
+    gates = _local_gates(r, e0, e_loc)                  # (E_loc, T)
+    sel_gate, sel_idx = lax.top_k(gates, cap)           # (E_loc, C)
+    valid = (sel_gate > 0).astype(jnp.float32)
+
+    y = jnp.zeros((t, x.shape[1]), jnp.float32)
+    c_chunk = cap // n_chunks if n_chunks > 1 and cap % n_chunks == 0 else cap
+    n_eff = cap // c_chunk
+    for ci in range(n_eff):
+        sl = slice(ci * c_chunk, (ci + 1) * c_chunk)
+        idx_c = sel_idx[:, sl]
+        x_sel = jnp.take(x, idx_c.reshape(-1), axis=0).reshape(
+            e_loc, c_chunk, x.shape[1])
+        out_c = _expert_ffn(x_sel, w1, w3, w2)
+        wgt = (sel_gate[:, sl] * valid[:, sl])[..., None]
+        y = y.at[idx_c.reshape(-1)].add((out_c * wgt).reshape(-1, x.shape[1]))
+
+    # One psum folds together both the E_loc partition across ep groups and
+    # the ff_loc partial sums across the tp_ff subgroups. Reduce in the
+    # activation dtype (bf16): halves the dominant EP collective vs f32.
+    if ring_combine:
+        from repro.core.collectives import pk_psum_ring
+        y = pk_psum_ring(y.astype(x.dtype), axis_name)
+    else:
+        y = lax.psum(y.astype(x.dtype), axis_name)
+    return y, aux_load_balance_loss(r, n_experts)
+
+
+def pk_moe_a2a(x, router_w, w1, w3, w2, *, axis_name: str, n_experts: int,
+               top_k: int, capacity_factor: float = 1.25,
+               norm_topk: bool = True, n_chunks: int = 1):
+    """Paper-faithful a2a-dispatch MoE (GShard schedule) over `axis_name`
+    (typically the data axis). Experts sharded E_loc = E / axis_size; w1/w3:
+    (E_loc, d, ff), w2: (E_loc, ff, d). Tokens x: (T, d) local to this rank.
+
+    n_chunks > 1 splits the capacity dim so chunk i's expert GEMM overlaps
+    chunk i+1's all-to-all (the PK schedule; n_chunks=1 is the bulk baseline).
+    """
+    n = lax.axis_size(axis_name)
+    assert n_experts % n == 0, (n_experts, n)
+    e_loc = n_experts // n
+    t, d = x.shape
+    c_send = min(capacity(t, n_experts, top_k, capacity_factor), t)
+
+    r = route(x, router_w, top_k=top_k, norm_topk=norm_topk)
+    gates = _local_gates(r, 0, n_experts)               # (E, T)
+    sel_gate, sel_idx = lax.top_k(gates, c_send)        # (E, C)
+    valid = sel_gate > 0
+
+    def chunk_fwd(sl):
+        idx_c = sel_idx[:, sl]                          # (E, Cc)
+        cc = idx_c.shape[1]
+        # Dispatch tensor, destination-rank major: [dst, local_expert, slot].
+        x_send = jnp.take(x, idx_c.reshape(-1), axis=0).reshape(
+            n, e_loc, cc, d)
+        # tiled a2a with split==concat==0 is the "transpose" collective:
+        # dim0 becomes the SOURCE rank, payload = tokens for MY experts.
+        x_recv = lax.all_to_all(x_send, axis_name, split_axis=0,
+                                concat_axis=0, tiled=True)
+        x_mine = x_recv.transpose(1, 0, 2, 3).reshape(e_loc, n * cc, d)
+        out = _expert_ffn(x_mine.astype(x.dtype), w1, w3, w2)  # (E_loc,n*Cc,d)
+        out = (out.astype(x.dtype).reshape(e_loc, n, cc, d)
+               .transpose(1, 0, 2, 3))                  # back to [src, j, c]
+        back = lax.all_to_all(out, axis_name, split_axis=0, concat_axis=0,
+                              tiled=True)               # [owner_rank, j, c]
+        y_back = back.reshape(n_experts, cc, d)         # e = r*e_loc + j ✓
+        wgt = (sel_gate[:, sl] * valid[:, sl].astype(jnp.float32))[..., None]
+        return idx_c, y_back.astype(jnp.float32) * wgt
+
+    y = jnp.zeros((t, d), jnp.float32)
+    c_chunk = c_send // n_chunks if n_chunks > 1 and c_send % n_chunks == 0 \
+        else c_send
+    for ci in range(c_send // c_chunk):
+        idx_c, contrib = chunk_fwd(slice(ci * c_chunk, (ci + 1) * c_chunk))
+        y = y.at[idx_c.reshape(-1)].add(contrib.reshape(-1, d))
+    return y.astype(x.dtype), aux_load_balance_loss(r, n_experts)
+
+
+def moe_reference_dense(x, router_w, w1_full, w3_full, w2_full, *,
+                        n_experts: int, top_k: int, norm_topk: bool = True):
+    """Oracle: every expert on every token, masked combine — no capacity drop.
+    Used by tests to bound the capacity-induced error of the parallel paths
+    and to check exact equality when capacity_factor covers all tokens."""
+    r = route(x, router_w, top_k=top_k, norm_topk=norm_topk)
+    outs = _expert_ffn(jnp.broadcast_to(x, (n_experts, *x.shape)),
+                       w1_full, w3_full, w2_full)        # (E, T, d)
+    gates = _local_gates(r, 0, n_experts)                # (E, T)
+    y = jnp.einsum("etd,et->td", outs, gates)
+    return y.astype(x.dtype), aux_load_balance_loss(r, n_experts)

@@ -1,0 +1,79 @@
+"""Parallel Global Layout (PGL) — paper §3.2.1, adapted to JAX/TPU.
+
+On GPUs, a PGL is a set of identically-shaped buffers allocated on every
+device, addressable from kernels by (device, tile-coordinate). The CUDA
+plumbing the paper needs to build it (IPC handles, VMM, multicast objects —
+paper Appendices E/F) is subsumed on TPU by XLA's SPMD runtime: a PGL is a
+named, mesh-sharded array whose leading axis is the device axis.
+
+Two views exist:
+
+  * **jax level** — ``PGL.zeros()/shape_dtype()`` produce an array (or
+    ShapeDtypeStruct) with sharding ``P(axis_name, ...)``; inside a
+    ``shard_map`` each device sees exactly its local slab, which is what a PK
+    kernel addresses.
+  * **Pallas level** — ``kernels/pk_comm.py`` passes the local slab with
+    ``memory_space=ANY`` (HBM) into ``pl.pallas_call`` and uses
+    ``pltpu.make_async_remote_copy`` / ``semaphore_*`` to implement the eight
+    PK primitives against peer slabs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class PGL:
+    """A logically-global buffer with one identical slab per device on `axis`.
+
+    Global shape is ``(axis_size, *local_shape)``; device d owns slab d.
+    """
+
+    name: str
+    mesh: Mesh
+    axis: str
+    local_shape: tuple[int, ...]
+    dtype: jnp.dtype = jnp.bfloat16
+
+    @property
+    def axis_size(self) -> int:
+        return self.mesh.shape[self.axis]
+
+    @property
+    def global_shape(self) -> tuple[int, ...]:
+        return (self.axis_size, *self.local_shape)
+
+    @property
+    def sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P(self.axis, *([None] * len(self.local_shape))))
+
+    @property
+    def spec(self) -> P:
+        return P(self.axis, *([None] * len(self.local_shape)))
+
+    def shape_dtype(self) -> jax.ShapeDtypeStruct:
+        """Allocation-free stand-in (dry-run path)."""
+        return jax.ShapeDtypeStruct(self.global_shape, self.dtype,
+                                    sharding=self.sharding)
+
+    def zeros(self) -> jax.Array:
+        return jax.device_put(
+            jnp.zeros(self.global_shape, self.dtype), self.sharding)
+
+    def from_array(self, x: jax.Array) -> jax.Array:
+        assert x.shape == self.global_shape, (x.shape, self.global_shape)
+        return jax.device_put(x.astype(self.dtype), self.sharding)
+
+
+def barrier_pgl(name: str, mesh: Mesh, axis: str,
+                n_slots: int = 1) -> PGL:
+    """Integer barrier/flag buffer, one slot-vector per device (paper's
+    ``barrier_t``: a PGL of integers used by signal/wait)."""
+    return PGL(name=name, mesh=mesh, axis=axis, local_shape=(n_slots,),
+               dtype=jnp.int32)

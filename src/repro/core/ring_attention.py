@@ -1,0 +1,188 @@
+"""Sequence-parallel attention (paper §4.2), JAX/shard_map level.
+
+Ring Attention: KV shards rotate around the ring; each device runs blockwise
+(online-softmax) attention on the shard it holds while the *next* shard is in
+flight. The paper's "remote cache reuse" fix (§3.1.3) — bulk-prefetching the
+next KV block into local HBM with dedicated communication SMs instead of
+letting every block re-read over the interconnect — maps here to the landing
+buffer the ppermute writes into, transferred once per hop by the ICI DMA
+engines while the MXU computes.
+
+Also contains the SSM analogue: sequence-parallel state passing for Mamba
+(ring of (D,N) boundary states instead of KV blocks).
+
+All functions are called INSIDE shard_map with `axis_name` bound; sequence is
+sharded over that axis, heads/batch are local.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.collectives import ring_shift
+
+NEG_INF = -1e30
+
+
+def _grouped_scores(q, k, scale):
+    """q: (B, Hkv, G, Sq, D); k: (B, Hkv, Skv, D) -> (B, Hkv, G, Sq, Skv)."""
+    return jnp.einsum("bkgqd,bksd->bkgqs", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _block_update(q, k, v, m, l, o, *, scale, mask=None):
+    """One online-softmax accumulation step (FlashAttention rule).
+
+    Shapes: q (B,Hkv,G,Sq,D); k,v (B,Hkv,Skv,D); m,l (B,Hkv,G,Sq) f32;
+    o (B,Hkv,G,Sq,D) f32.
+    """
+    s = _grouped_scores(q, k, scale)
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m - m_new)
+    l_new = l * alpha + p.sum(axis=-1)
+    o_new = o * alpha[..., None] + jnp.einsum(
+        "bkgqs,bksd->bkgqd", p, v.astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+    return m_new, l_new, o_new
+
+
+def _causal_block_mask(sq: int, skv: int, q_offset, kv_offset,
+                       window: int | None = None):
+    """True = keep. Global-position causal (+ optional sliding window)."""
+    qi = q_offset + jnp.arange(sq)[:, None]
+    ki = kv_offset + jnp.arange(skv)[None, :]
+    keep = ki <= qi
+    if window is not None:
+        keep = keep & (ki > qi - window)
+    return keep  # (Sq, Skv)
+
+
+def pk_ring_attention(q, k, v, axis_name: str, *, causal: bool = True,
+                      window: int | None = None, scale: float | None = None):
+    """q: (B, Hq, S_loc, D); k, v: (B, Hkv, S_loc, D), sequence sharded over
+    `axis_name`. Returns (B, Hq, S_loc, D) in q.dtype.
+
+    Per ring step i the held KV block originates from device (d - i) % n
+    (right-going ring). Causal scheduling: blocks with src > d contribute
+    nothing and are skipped via lax.switch (real branch on TPU — the paper's
+    "communication pattern can reduce transfer size" point shows up here as
+    skipped *compute*; transfers still go all the way around to keep the ring
+    uniform).
+    """
+    n = lax.axis_size(axis_name)
+    d = lax.axis_index(axis_name)
+    b, hq, s_loc, dim = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    scale = scale if scale is not None else dim ** -0.5
+
+    qg = q.reshape(b, hkv, g, s_loc, dim)
+    m = jnp.full((b, hkv, g, s_loc), NEG_INF, jnp.float32)
+    l = jnp.zeros((b, hkv, g, s_loc), jnp.float32)
+    o = jnp.zeros((b, hkv, g, s_loc, dim), jnp.float32)
+
+    kv = (k, v)
+    for i in range(n):
+        src = (d - i) % n
+        k_i, v_i = kv
+        # Start the next hop before consuming the current block so the
+        # transfer overlaps this step's attention compute.
+        if i < n - 1:
+            kv = ring_shift(kv, axis_name)
+
+        def full_block(args):
+            m_, l_, o_ = args
+            if window is None:
+                return _block_update(qg, k_i, v_i, m_, l_, o_, scale=scale)
+            mask = _causal_block_mask(s_loc, s_loc, d * s_loc, src * s_loc,
+                                      window)
+            return _block_update(qg, k_i, v_i, m_, l_, o_, scale=scale,
+                                 mask=mask)
+
+        def diag_block(args):
+            m_, l_, o_ = args
+            mask = _causal_block_mask(s_loc, s_loc, d * s_loc, src * s_loc,
+                                      window)
+            return _block_update(qg, k_i, v_i, m_, l_, o_, scale=scale,
+                                 mask=mask)
+
+        def skip_block(args):
+            return args
+
+        if causal:
+            case = jnp.where(src < d, 0, jnp.where(src == d, 1, 2))
+            m, l, o = lax.switch(case, [full_block, diag_block, skip_block],
+                                 (m, l, o))
+        else:
+            m, l, o = full_block((m, l, o))
+
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, s_loc, dim).astype(q.dtype)
+
+
+def ring_attention_baseline(q, k, v, axis_name: str, *, causal: bool = True,
+                            window: int | None = None,
+                            scale: float | None = None):
+    """Non-overlapped baseline: bulk all-gather of the full K/V (the NCCL-ish
+    schedule the paper's xDiT baseline reduces to), then one local attention
+    over the full sequence."""
+    d = lax.axis_index(axis_name)
+    s_loc = q.shape[2]
+    k_full = lax.all_gather(k, axis_name, axis=2, tiled=True)
+    v_full = lax.all_gather(v, axis_name, axis=2, tiled=True)
+    b, hq, _, dim = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else dim ** -0.5
+    qg = q.reshape(b, hkv, g, s_loc, dim)
+    s = _grouped_scores(qg, k_full, scale)
+    if causal or window is not None:
+        mask = _causal_block_mask(s_loc, k_full.shape[2], d * s_loc, 0,
+                                  window if window is not None else None)
+        if not causal:  # window-only (bidirectional) — not used by our archs
+            mask = mask | (jnp.arange(k_full.shape[2])[None, :] >
+                           d * s_loc + jnp.arange(s_loc)[:, None])
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v_full.astype(jnp.float32))
+    return out.reshape(b, hq, s_loc, dim).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sequence-parallel SSM: ring state passing (the ring-attention analogue for
+# attention-free layers; DESIGN §6, falcon-mamba row).
+# ---------------------------------------------------------------------------
+
+def ssm_entry_states(chunk_decay, chunk_exit, axis_name: str):
+    """Sequence-parallel linear-SSM state exchange.
+
+    For a diagonal SSM ``h_t = a_t * h_{t-1} + b_t``, a sequence chunk acts on
+    its entry state as an affine map ``h_out = A * h_in + S`` where A is the
+    chunk's total decay and S its exit-from-zero state. Each device d needs
+    ``h_entry_d`` — the composition of all chunks j < d applied to zero.
+
+    This runs an exclusive scan over the device (sequence) axis as a ring
+    pipeline of n-1 hops, each forwarding the running composition
+    ``(A_window, S_window)`` one hop right. Device d reads its answer at hop
+    i == d, when the incoming window is exactly [0 .. d-1]. Payload per hop is
+    one (..., D, N) state pair — negligible ICI traffic, so all heavy chunk
+    compute stays fully parallel (the SSM analogue of Ring Attention).
+    """
+    n = lax.axis_size(axis_name)
+    d = lax.axis_index(axis_name)
+    h_entry = jnp.zeros_like(chunk_exit)
+    cA, cS = chunk_decay, chunk_exit          # window [d, d]
+    for i in range(1, n):
+        cA_in, cS_in = ring_shift((cA, cS), axis_name)  # window [d-i .. d-1]
+        h_entry = jnp.where(d == i, cS_in, h_entry)
+        # compose: incoming window first, then our chunk -> window [d-i .. d]
+        cA, cS = chunk_decay * cA_in, chunk_decay * cS_in + chunk_exit
+    return h_entry

@@ -1,0 +1,79 @@
+"""Overlap schedule selection (paper §3.1.3 "SM partitioning", TPU form).
+
+On GPUs the knob is how many SMs to dedicate to communication; on TPU the ICI
+DMA engines are free, so the knobs become (a) whether to decompose a bulk
+collective into a ring pipeline at all, (b) the chunk count, and (c) whether
+to use the bidirectional ring (2 link-pairs). This module picks them from the
+paper's cost model — the analytic analogue of PK's runtime SM-split search.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import costmodel as cm
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapPolicy:
+    strategy: str            # "none" | "ring" | "ring_bidir"
+    n_chunks: int
+    hidden_fraction: float   # predicted fraction of T_comm hidden
+    reason: str
+
+    @property
+    def enabled(self) -> bool:
+        return self.strategy != "none"
+
+
+def choose_gemm_collective(m: int, n: int, k: int, *, axis_size: int,
+                           kind: str, dtype_bytes: int = 2,
+                           hw: cm.HardwareSpec = cm.TPU_V5E,
+                           allow_bidir: bool = True) -> OverlapPolicy:
+    """Pick the schedule for a fused GEMM×collective.
+
+    The paper's hiding condition (§3.1.3): per-ring-step compute must cover the
+    per-step transfer. For GEMM+RS with N steps, step compute = 2*m*n*k/N
+    flops, step transfer = (m/N)*n*s bytes -> hidden iff K >= s*R/(2*B*links).
+    """
+    if axis_size <= 1:
+        return OverlapPolicy("none", 1, 1.0, "single device on axis")
+    links = 2 if (allow_bidir and axis_size % 2 == 0) else 1
+    k_eff = k * axis_size if kind == "all_gather" else k
+    threshold = cm.hiding_threshold_k(dtype_bytes, hw, links=links)
+    t_comp = cm.gemm_cost(m, n, k_eff, dtype_bytes, hw)
+    shard_bytes = m * n * dtype_bytes / axis_size
+    t_comm = cm.transfer_cost(
+        cm.ring_collective_bytes(shard_bytes, axis_size, kind), hw, links=links)
+    if t_comm == 0.0:
+        return OverlapPolicy("none", 1, 1.0, "no transfer")
+    hidden = min(1.0, t_comp / t_comm)
+    if t_comp < 20 * hw.remote_sync_s * axis_size:
+        # Sync overhead of the decomposed schedule would dominate the GEMM —
+        # the paper's "small problem sizes" regime where Flux/CUTLASS fall
+        # below the non-overlapped baseline (Fig. 7). Stay bulk.
+        return OverlapPolicy("none", 1, 0.0,
+                             f"GEMM too small vs sync cost (t_comp={t_comp:.2e}s)")
+    strategy = "ring_bidir" if links == 2 else "ring"
+    reason = (f"K_eff={k_eff} vs hiding threshold {threshold} "
+              f"({'fully' if k_eff >= threshold else 'partially'} hidden; "
+              f"hidden_frac={hidden:.2f})")
+    return OverlapPolicy(strategy, axis_size, hidden, reason)
+
+
+def choose_a2a_chunks(payload_bytes: float, *, axis_size: int,
+                      downstream_compute_s: float,
+                      hw: cm.HardwareSpec = cm.TPU_V5E) -> int:
+    """Chunk count for a2a×compute overlap (Ulysses / MoE dispatch). More
+    chunks -> finer overlap but more per-chunk launch+sync overhead; choose
+    the largest count whose per-chunk overhead stays <10% of chunk time."""
+    t_comm = cm.transfer_cost(
+        cm.ring_collective_bytes(payload_bytes, axis_size, "all_to_all"), hw)
+    if t_comm <= 0:
+        return 1
+    best = 1
+    for c in (2, 4, 8):
+        per_chunk = max(t_comm, downstream_compute_s) / c
+        if per_chunk > 10 * (hw.kernel_launch_s + hw.remote_sync_s):
+            best = c
+    return best

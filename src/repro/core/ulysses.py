@@ -1,0 +1,81 @@
+"""DeepSpeed-Ulysses sequence parallelism (paper §4.2, Fig. 11).
+
+Everything outside self-attention is sequence-sharded; attention itself is
+head-sharded. The re-sharding is a 4-D (B, S, H, D) all-to-all along inner
+(non-leading) dimensions — the exact case where NCCL forces reshape+copy
+staging (paper App. B, Fig. 17) and where PK's fine-grained a2a wins. On TPU,
+`lax.all_to_all` already operates on strided layouts with no host-side
+reshape; the PK refinement is *chunking* the a2a so attention on early head
+chunks overlaps the transfer of later ones.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.collectives import pk_all_to_all
+from repro.core.ring_attention import _block_update, _causal_block_mask, NEG_INF
+
+
+def _local_attention(q, k, v, *, causal, window, scale, q_offset=0):
+    """q: (B, Hq, S, D); k, v: (B, Hkv, Skv, D). Full (non-ring) attention."""
+    b, hq, s, dim = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else dim ** -0.5
+    qg = q.reshape(b, hkv, g, s, dim)
+    sc = jnp.einsum("bkgqd,bksd->bkgqs", qg, k,
+                    preferred_element_type=jnp.float32) * scale
+    if causal or window is not None:
+        mask = _causal_block_mask(s, k.shape[2], q_offset, 0, window)
+        sc = jnp.where(mask, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, s, dim).astype(q.dtype)
+
+
+def _repeat_kv_to(k, n_target_heads):
+    hkv = k.shape[1]
+    if hkv >= n_target_heads:
+        return k
+    assert n_target_heads % hkv == 0
+    return jnp.repeat(k, n_target_heads // hkv, axis=1)
+
+
+def pk_ulysses_attention(q, k, v, axis_name: str, *, causal: bool = True,
+                         window: int | None = None, scale: float | None = None,
+                         n_chunks: int = 1):
+    """q: (B, Hq, S_loc, D); k, v: (B, Hkv, S_loc, D), sequence sharded.
+
+    a2a reshards to head-sharded full-sequence, attends, reshards back. If
+    Hkv < axis size (GQA), KV heads are repeated to the axis size first
+    (Megatron-style replication; DESIGN §4).
+    """
+    n = lax.axis_size(axis_name)
+    b, hq, s_loc, dim = q.shape
+    assert hq % n == 0, (hq, n)
+    kr = _repeat_kv_to(k, max(k.shape[1], n))
+    vr = _repeat_kv_to(v, max(v.shape[1], n))
+    # (B, H, S_loc, D): split head dim across axis, gather sequence.
+    q_h = pk_all_to_all(q, axis_name, split_axis=1, concat_axis=2,
+                        n_chunks=n_chunks)
+    k_h = pk_all_to_all(kr, axis_name, split_axis=1, concat_axis=2,
+                        n_chunks=n_chunks)
+    v_h = pk_all_to_all(vr, axis_name, split_axis=1, concat_axis=2,
+                        n_chunks=n_chunks)
+    out_h = _local_attention(q_h, k_h, v_h, causal=causal, window=window,
+                             scale=scale)
+    # Back: split sequence, gather heads.
+    return pk_all_to_all(out_h, axis_name, split_axis=2, concat_axis=1,
+                         n_chunks=n_chunks)
+
+
+def ulysses_attention_baseline(q, k, v, axis_name: str, *, causal: bool = True,
+                               window: int | None = None,
+                               scale: float | None = None):
+    """The YunChang-style baseline: same math, single bulk a2a (n_chunks=1);
+    kept separate so benchmarks can report both sides of paper Fig. 11."""
+    return pk_ulysses_attention(q, k, v, axis_name, causal=causal,
+                                window=window, scale=scale, n_chunks=1)

@@ -1,0 +1,59 @@
+"""Deterministic sharded synthetic token pipeline.
+
+Stateless-by-construction: batch(step) is a pure function of (seed, step), so
+the checkpointable cursor is just the step integer — restart/elastic-resize
+resume produces bit-identical batches regardless of host count (the property
+a real distributed loader needs; here the "index shuffle" is a PRNG fold).
+
+Sequences follow a learnable rule (per-sequence stride r: x_{t+1} = (x_t + r)
+mod V with light noise) so example trainings show real loss descent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_rules: int = 8
+    noise: float = 0.02
+
+
+class SyntheticLM:
+    def __init__(self, cfg: DataConfig, mesh: Mesh | None = None,
+                 dp_axes=("data",)):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.dp = dp_axes[0] if len(dp_axes) == 1 else tuple(dp_axes)
+
+    def batch(self, step: int):
+        c = self.cfg
+        key = jax.random.fold_in(jax.random.PRNGKey(c.seed), step)
+        k1, k2, k3 = jax.random.split(key, 3)
+        start = jax.random.randint(k1, (c.global_batch, 1), 0, c.vocab_size)
+        rule = jax.random.randint(k2, (c.global_batch, 1), 1, c.n_rules + 1)
+        t = jnp.arange(c.seq_len + 1)[None, :]
+        toks = (start + rule * t) % c.vocab_size
+        noise_mask = jax.random.bernoulli(k3, c.noise,
+                                          (c.global_batch, c.seq_len + 1))
+        noise_tok = jax.random.randint(k3, (c.global_batch, c.seq_len + 1),
+                                       0, c.vocab_size)
+        toks = jnp.where(noise_mask, noise_tok, toks).astype(jnp.int32)
+        batch = {
+            "tokens": toks[:, :-1],
+            "targets": toks[:, 1:],
+            "weights": jnp.ones((c.global_batch, c.seq_len), jnp.float32),
+        }
+        if self.mesh is not None:
+            sh = NamedSharding(self.mesh, P(self.dp, None))
+            batch = {k: jax.device_put(v, sh) for k, v in batch.items()}
+        return batch

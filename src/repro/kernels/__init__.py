@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the paper's compute hot-spots + the PK communication
+# primitives. Each kernel: <name>.py (pl.pallas_call + BlockSpec), wrapped in
+# ops.py, oracled in ref.py. Communication kernels (pk_comm, collective_matmul)
+# are validated cross-device in TPU interpret mode under shard_map.
+from repro.kernels import ref

@@ -1,0 +1,100 @@
+"""FlashAttention kernel (online softmax, causal + sliding-window), TPU
+BlockSpec tiling. Grid = (B*H, q_blocks, kv_blocks) with the kv dim
+sequential; m/l/acc live in VMEM scratch across kv steps. Fully-masked
+kv blocks are skipped with pl.when — on TPU this is a real branch, so SWA
+compute scales with the window, not the sequence (paper §3.1.3: scheduling
+decides what work exists, not just where it runs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale: float, causal: bool, window: int | None,
+               blq: int, blk: int, kv_steps: int):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = qi * blq
+    k_lo = ki * blk
+    # Block-level schedule: skip blocks with no visible entries.
+    run = jnp.bool_(True)
+    if causal:
+        run &= k_lo <= q_lo + blq - 1
+    if window is not None:
+        run &= k_lo + blk - 1 > q_lo - window
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0]                                   # (blq, d)
+        k = k_ref[0]
+        v = v_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        rows = q_lo + jax.lax.broadcasted_iota(jnp.int32, (blq, blk), 0)
+        cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, (blq, blk), 1)
+        keep = jnp.ones((blq, blk), jnp.bool_)
+        if causal:
+            keep &= cols <= rows
+        if window is not None:
+            keep &= cols > rows - window
+        s = jnp.where(keep, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+
+    @pl.when(ki == kv_steps - 1)
+    def _store():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    scale: float | None = None, blq: int = 128,
+                    blk: int = 128, interpret: bool = False):
+    """q, k, v: (B, H, S, D) (equal head counts; ops handles GQA).
+    S must tile by blq/blk; D MXU-aligned (ops pads)."""
+    b, h, s, d = q.shape
+    skv = k.shape[2]
+    assert s % blq == 0 and skv % blk == 0, (s, skv, blq, blk)
+    scale = scale if scale is not None else d ** -0.5
+    grid = (b * h, s // blq, skv // blk)
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, skv, d)
+    vf = v.reshape(b * h, skv, d)
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, scale=scale, causal=causal,
+                          window=window, blq=blq, blk=blk, kv_steps=grid[2]),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, blq, d), lambda bh, i, j: (bh, i, 0)),
+                  pl.BlockSpec((1, blk, d), lambda bh, i, j: (bh, j, 0)),
+                  pl.BlockSpec((1, blk, d), lambda bh, i, j: (bh, j, 0))],
+        out_specs=pl.BlockSpec((1, blq, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((blq, 1), jnp.float32),
+                        pltpu.VMEM((blq, 1), jnp.float32),
+                        pltpu.VMEM((blq, d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,50 @@
+"""Grouped (batched-expert) matmul kernel — the MoE expert GEMM
+(paper §4.3). x: (E, C, d) capacity-gathered tokens per expert,
+w: (E, d, f) expert weights. Grid (e, c_tile, f_tile, k_tile) with fp32
+accumulation; the expert dim is a parallel grid axis so experts map onto
+separate cores/steps without host-side loops.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(x_ref[0], w_ref[0],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(3) == k_steps - 1)
+    def _store():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def grouped_matmul(x, w, *, bc: int = 128, bf: int = 128, bk: int = 128,
+                   interpret: bool = False):
+    """(E, C, d) @ (E, d, f) -> (E, C, f); C/f/d must tile (ops pads)."""
+    e, c, d = x.shape
+    e2, d2, f = w.shape
+    assert e == e2 and d == d2 and c % bc == 0 and f % bf == 0 and d % bk == 0
+    grid = (e, c // bc, f // bf, d // bk)
+    return pl.pallas_call(
+        functools.partial(_gmm_kernel, k_steps=grid[3]),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bc, bk), lambda ei, ci, fi, ki: (ei, ci, ki)),
+                  pl.BlockSpec((1, bk, bf), lambda ei, ci, fi, ki: (ei, ki, fi))],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda ei, ci, fi, ki: (ei, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((e, c, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(x, w)

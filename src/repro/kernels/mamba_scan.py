@@ -1,0 +1,82 @@
+"""Chunked selective-scan kernel (Mamba-1). Grid = (B, n_chunks) with the
+chunk dim sequential; the (D, N) SSM state carries across chunks in VMEM
+scratch, so nothing of size (B, S, D, N) ever exists — HBM traffic is the
+inputs/outputs only, matching the memory-term analysis in DESIGN §5.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(dt_ref, b_ref, c_ref, x_ref, a_ref, h0_ref, y_ref,
+                 hlast_ref, h_ref, *, cs: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = h0_ref[0]
+
+    a = a_ref[...]                                   # (D, N) f32 (-exp(A_log))
+    dt = dt_ref[0].astype(jnp.float32)               # (cs, D)
+    b = b_ref[0].astype(jnp.float32)                 # (cs, N)
+    c = c_ref[0].astype(jnp.float32)                 # (cs, N)
+    x = x_ref[0].astype(jnp.float32)                 # (cs, D)
+
+    def step(t, h):
+        dt_t = jax.lax.dynamic_slice_in_dim(dt, t, 1, 0)    # (1, D)
+        b_t = jax.lax.dynamic_slice_in_dim(b, t, 1, 0)      # (1, N)
+        c_t = jax.lax.dynamic_slice_in_dim(c, t, 1, 0)
+        x_t = jax.lax.dynamic_slice_in_dim(x, t, 1, 0)
+        a_bar = jnp.exp(dt_t.T * a)                         # (D, N)
+        bx = (dt_t * x_t).T * b_t                           # (D, N)
+        h = a_bar * h + bx
+        y_t = jnp.sum(h * c_t, axis=1, keepdims=True).T     # (1, D)
+        y_ref[0, pl.dslice(t, 1), :] = y_t.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, cs, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        hlast_ref[0] = h
+
+
+def mamba_scan(dt, b_ssm, c_ssm, x, a, h0, *, chunk: int = 128,
+               interpret: bool = False):
+    """dt, x: (B, S, D); b_ssm, c_ssm: (B, S, N); a: (D, N) f32;
+    h0: (B, D, N) f32. Returns (y (B, S, D) f32, h_last (B, D, N))."""
+    bsz, s, d = dt.shape
+    n = b_ssm.shape[-1]
+    if s % chunk != 0:
+        chunk = s
+    grid = (bsz, s // chunk)
+    y, h_last = pl.pallas_call(
+        functools.partial(_scan_kernel, cs=chunk, n_chunks=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, d), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, d), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((d, n), lambda bi, ci: (0, 0)),
+            pl.BlockSpec((1, d, n), lambda bi, ci: (bi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, d), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, d, n), lambda bi, ci: (bi, 0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((bsz, s, d), jnp.float32),
+                   jax.ShapeDtypeStruct((bsz, d, n), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((d, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(dt, b_ssm, c_ssm, x, a, h0)
+    return y, h_last

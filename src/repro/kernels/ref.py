@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q,k,v: (B, H, S, D) (same head count — GQA repeat happens in ops)."""
+    b, h, s, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    s_ = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                    preferred_element_type=jnp.float32) * scale
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(k.shape[2])[None, :]
+    keep = jnp.ones((s, k.shape[2]), bool)
+    if causal:
+        keep &= ki <= qi
+    if window is not None:
+        keep &= ki > qi - window
+    s_ = jnp.where(keep, s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def grouped_matmul_ref(x, w):
+    """x: (E, C, d); w: (E, d, f) -> (E, C, f)."""
+    return jnp.einsum("ecd,edf->ecf", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def mamba_scan_ref(dt, b_ssm, c_ssm, x, a, h0):
+    """Sequential reference of the diagonal selective scan.
+
+    dt, x: (B, S, D); b_ssm, c_ssm: (B, S, N); a: (D, N); h0: (B, D, N).
+    Returns (y (B, S, D) f32, h_last)."""
+    a_bar = jnp.exp(dt.astype(jnp.float32)[..., None] * a[None, None])
+    bx = (dt[..., None] * b_ssm[:, :, None, :] * x[..., None]).astype(jnp.float32)
+
+    def step(h, args):
+        ab, bb, c = args
+        h = ab * h + bb
+        y = jnp.einsum("bdn,bn->bd", h, c.astype(jnp.float32))
+        return h, y
+
+    h_last, ys = jax.lax.scan(
+        step, h0, (a_bar.swapaxes(0, 1), bx.swapaxes(0, 1),
+                   c_ssm.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), h_last
+
+
+# --- distributed oracles (global-array semantics; used with shard_map) ---
+
+def all_gather_ref(x_global):
+    """Identity at the global level: the kernel gathers shards so every
+    device holds the full array."""
+    return x_global
+
+
+def reduce_scatter_ref(x_global):
+    """x_global: (n_dev, n_dev, blk...) — device d holds partials x[d];
+    result shard d = sum_j x[j, d]."""
+    return x_global.sum(axis=0)
+
+
+def ag_matmul_ref(x, w):
+    return matmul_ref(x, w)
+
+
+def matmul_rs_ref(x, w):
+    """Global semantics of GEMM+RS: plain matmul; sharding splits rows."""
+    return matmul_ref(x, w)

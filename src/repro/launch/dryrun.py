@@ -1,0 +1,270 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run (assignment MULTI-POD DRY-RUN): lower + compile every
+# (architecture × input-shape) cell on the production meshes, print
+# memory_analysis / cost_analysis, and record roofline terms.
+#
+# NOTE: the two lines above MUST run before any other import — jax locks the
+# device count at first init.
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, cells_for, get_config  # noqa: E402
+from repro.configs.base import RunConfig  # noqa: E402
+from repro.launch import specs as SP  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.sharding import ShardingRules  # noqa: E402
+from repro.optim.adamw import AdamW  # noqa: E402
+from repro.roofline import hlo as HLO  # noqa: E402
+from repro.roofline import model as RM  # noqa: E402
+from repro.train.step import make_serve_step, make_train_step  # noqa: E402
+
+
+def run_config_for(cfg, *, multi_pod: bool, pk_overlap: bool = True,
+                   microbatches: int | None = None,
+                   serving: bool = False) -> RunConfig:
+    big = cfg.param_count() > 100e9
+    # Serving: keep weights resident (TP-only) when they fit half of HBM on
+    # the model axis — FSDP weight all-gathers per decoded token would
+    # otherwise dominate T_comm (observed: 4.7 GB/token on a 20 B dense
+    # model). The >=300 B archs must stay FSDP-sharded even when serving.
+    fits_tp_only = cfg.param_count() * 2 <= 0.5 * 16e9 * 16
+    # microbatches must divide the per-dp-rank batch: a per-microbatch global
+    # batch smaller than the dp size forces XLA to replicate activations
+    # (observed: 152 GB/device on jamba multi-pod before this cap).
+    dp_size = 32 if multi_pod else 16
+    mb_cap = max(1, 256 // dp_size)
+    mb = microbatches if microbatches is not None else (16 if big else 8)
+    return RunConfig(
+        dp_axes=("pod", "data") if multi_pod else ("data",),
+        fsdp=not (serving and fits_tp_only),
+        pk_overlap=pk_overlap,
+        microbatches=min(mb, mb_cap),
+        optimizer_moment_dtype="bfloat16" if big else "float32",
+    )
+
+
+def _lower_one(cfg, cell, mesh, run, rules):
+    """Build and lower the cell's step function. Returns lowered."""
+    if cell.kind == "train":
+        moment_dtype = (jnp.bfloat16 if run.optimizer_moment_dtype ==
+                        "bfloat16" else jnp.float32)
+        state, sspecs = SP.train_state_specs(cfg, run, rules, moment_dtype)
+        batch, bspecs = SP.batch_specs(cfg, cell, rules)
+        opt = AdamW(moment_dtype=moment_dtype)
+        step = make_train_step(cfg, run, rules, opt)
+        jitted = jax.jit(step,
+                         in_shardings=(SP.named(mesh, sspecs),
+                                       SP.named(mesh, bspecs)),
+                         donate_argnums=(0,))
+        lowered = jitted.lower(state, batch)
+    elif cell.kind == "prefill":
+        from repro.train.step import make_prefill_step
+        tmpl_state, sspecs = SP.train_state_specs(cfg, run, rules)
+        params, pspecs = tmpl_state.params, sspecs.params
+        batch, bspecs = SP.batch_specs(cfg, cell, rules)
+        step = make_prefill_step(cfg, run, rules)
+        jitted = jax.jit(step, in_shardings=(SP.named(mesh, pspecs),
+                                             SP.named(mesh, bspecs)))
+        lowered = jitted.lower(params, batch)
+    else:  # decode
+        long_ctx = cell.name == "long_500k"
+        (params, cache, tokens), (pspecs, cspecs, tspec) = SP.decode_specs(
+            cfg, run, rules, cell)
+        step = make_serve_step(cfg, run, rules, long_ctx=long_ctx)
+        jitted = jax.jit(step,
+                         in_shardings=(SP.named(mesh, pspecs),
+                                       SP.named(mesh, cspecs),
+                                       SP.named(mesh, {"t": tspec})["t"]),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(params, cache, tokens)
+    return lowered
+
+
+def _cost_of(compiled):
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = HLO.collective_bytes(hlo)
+    del hlo
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)), coll)
+
+
+def lower_cell(arch: str, cell_name: str, *, multi_pod: bool,
+               pk_overlap: bool = True, microbatches: int | None = None,
+               calibrate: bool = True, run_overrides: dict | None = None):
+    """Lower + compile one (arch × cell × mesh). Returns result dict.
+
+    Cost-term calibration: XLA's cost_analysis counts while-loop (scan)
+    bodies ONCE, so a depth-L scanned model under-reports flops by ~L×. We
+    lower two shallow variants (1 and 2 periods, microbatches=1, inner scans
+    unchunked so no other loops exist) — every cost term is exactly linear in
+    the period count, so:  cost(L) = cost(1p) + (cost(2p)-cost(1p))·(L-1).
+    The full compile still proves memory/sharding and is what ships."""
+    cfg = get_config(arch)
+    cell = SHAPES[cell_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    run = run_config_for(cfg, multi_pod=multi_pod, pk_overlap=pk_overlap,
+                         microbatches=microbatches,
+                         serving=cell.kind == "decode")
+    if run_overrides:
+        run = dataclasses.replace(run, **run_overrides)
+    rules = ShardingRules(mesh, run)
+    n_chips = 512 if multi_pod else 256
+
+    t0 = time.time()
+    lowered = _lower_one(cfg, cell, mesh, run, rules)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    raw_flops, raw_bytes, raw_coll = _cost_of(compiled)
+
+    if calibrate:
+        pat = len(cfg.layer_pattern())
+        cal_run = dataclasses.replace(
+            run, microbatches=1, loss_chunk=cell.seq_len,
+            ssm_chunk=cell.seq_len, scan_layers=False)
+        points = []
+        for k in (1, 2):
+            cfg_k = dataclasses.replace(
+                cfg, n_layers=k * pat,
+                n_encoder_layers=(k * pat if cfg.encoder_decoder else 0))
+            comp_k = _lower_one(cfg_k, cell, mesh, cal_run, rules).compile()
+            points.append(_cost_of(comp_k))
+            del comp_k
+        (f1, b1, c1), (f2, b2, c2) = points
+        L = cfg.n_periods
+        flops = f1 + (f2 - f1) * (L - 1)
+        bytes_acc = b1 + (b2 - b1) * (L - 1)
+        coll_kinds = {}
+        for kind in set(c1.by_kind) | set(c2.by_kind):
+            v1, n1 = c1.by_kind.get(kind, (0.0, 0))
+            v2, n2 = c2.by_kind.get(kind, (0.0, 0))
+            coll_kinds[kind] = [max(v1 + (v2 - v1) * (L - 1), 0.0),
+                                n1 + (n2 - n1) * (L - 1)]
+        coll = HLO.CollectiveStats(
+            by_kind=coll_kinds,
+            total_bytes=sum(v for v, _ in coll_kinds.values()),
+            op_count=int(sum(c for _, c in coll_kinds.values())))
+    else:
+        flops, bytes_acc, coll = raw_flops, raw_bytes, raw_coll
+
+    mf = RM.model_flops(cfg, cell)
+    roof = RM.build(arch, cell_name, mesh_name, flops=flops,
+                    hbm_bytes=bytes_acc, coll=coll, model_flops_total=mf,
+                    n_chips=n_chips, args_bytes=mem.argument_size_in_bytes)
+
+    result = {
+        "arch": arch, "cell": cell_name, "mesh": mesh_name,
+        "parser_version": 2,
+        "kind": cell.kind, "pk_overlap": pk_overlap,
+        "microbatches": run.microbatches,
+        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            # memory_analysis reports the per-device SPMD module directly
+            "peak_per_device_gb": round(
+                (mem.argument_size_in_bytes + mem.temp_size_in_bytes) / 1e9,
+                3),
+        },
+        "cost": {"flops": flops, "bytes_accessed": bytes_acc,
+                 "raw_flops_uncorrected": raw_flops,
+                 "raw_bytes_uncorrected": raw_bytes},
+        "collectives": {k: {"bytes": v, "ops": c}
+                        for k, (v, c) in coll.by_kind.items()},
+        "collective_bytes_total": coll.total_bytes,
+        "roofline": dataclasses.asdict(roof),
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--cell", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-pk", action="store_true",
+                    help="baseline without PK overlapped collectives")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--set", action="append", default=[],
+                    help="RunConfig override key=json (e.g. "
+                         "--set save_collectives=true)")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = json.loads(v)
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        cells = cells_for(arch) if args.cell == "all" else [args.cell]
+        for cell in cells:
+            if cell not in cells_for(arch):
+                print(f"SKIP {arch} × {cell} (DESIGN §6 inapplicable)")
+                n_skip += 1
+                continue
+            for multi_pod in meshes:
+                mesh_name = "2x16x16" if multi_pod else "16x16"
+                suffix = ("_nopk" if args.no_pk else "") + args.tag
+                fn = outdir / f"{arch}__{cell}__{mesh_name}{suffix}.json"
+                if fn.exists() and not args.force:
+                    print(f"CACHED {fn.name}")
+                    n_ok += 1
+                    continue
+                print(f"=== {arch} × {cell} × {mesh_name} "
+                      f"(pk={not args.no_pk}) ===", flush=True)
+                try:
+                    res = lower_cell(arch, cell, multi_pod=multi_pod,
+                                     pk_overlap=not args.no_pk,
+                                     microbatches=args.microbatches,
+                                     run_overrides=overrides or None)
+                    fn.write_text(json.dumps(res, indent=1))
+                    m = res["memory"]
+                    r = res["roofline"]
+                    print(f"  lower {res['t_lower_s']}s compile "
+                          f"{res['t_compile_s']}s | "
+                          f"args {m['argument_bytes']/1e9:.1f}GB temp "
+                          f"{m['temp_bytes']/1e9:.1f}GB | "
+                          f"flops/dev {res['cost']['flops']:.2e} | "
+                          f"coll {res['collective_bytes_total']/1e6:.0f}MB | "
+                          f"bottleneck {r['bottleneck']} "
+                          f"roofline {r['roofline_fraction']:.2f}",
+                          flush=True)
+                    n_ok += 1
+                except Exception:
+                    n_fail += 1
+                    print(f"  FAILED {arch} × {cell} × {mesh_name}")
+                    traceback.print_exc()
+                finally:
+                    jax.clear_caches()
+    print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed, {n_skip} skipped")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

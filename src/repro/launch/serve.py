@@ -1,0 +1,87 @@
+"""Serving launcher: batched prefill + decode loop.
+
+`python -m repro.launch.serve --arch tinyllama-1.1b --reduced --tokens 32`
+runs a real batched generation on local devices and reports tokens/s.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import RunConfig
+from repro.launch import specs as SP
+from repro.launch.mesh import make_mesh
+from repro.models import transformer as T
+from repro.models.sharding import ShardingRules
+from repro.train.step import make_serve_step
+
+
+def generate(arch: str, *, reduced: bool, batch: int, prompt_len: int,
+             gen_tokens: int, mesh_shape=None, mesh_axes=("data", "model"),
+             seed: int = 0, greedy: bool = True):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    mesh = make_mesh(mesh_shape, mesh_axes) if mesh_shape else None
+    run = RunConfig(dp_axes=("data",), fsdp=False, decode_seq_shard=mesh is not None)
+    rules = ShardingRules(mesh, run) if mesh is not None else None
+
+    tmpl = T.param_template(cfg, run, rules)
+    params = T.init_params(tmpl, jax.random.PRNGKey(seed), cfg.d_model)
+    if rules is not None:
+        params = jax.tree.map(jax.device_put, params,
+                              SP.named(mesh, T.param_specs(tmpl)))
+
+    s_max = prompt_len + gen_tokens
+    ct = T.cache_template(cfg, run, rules, batch=batch, s_max=s_max,
+                          enc_len=prompt_len if cfg.encoder_decoder else 0)
+    cache = T.init_params(ct, jax.random.PRNGKey(1), cfg.d_model)
+    if rules is not None:
+        cache = jax.tree.map(jax.device_put, cache,
+                             SP.named(mesh, T.param_specs(ct)))
+
+    step = jax.jit(make_serve_step(cfg, run, rules), donate_argnums=(1,))
+    key = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(key, (batch, 1), 0, cfg.vocab_size)
+    if cfg.encoder_decoder:
+        enc = jnp.ones((batch, prompt_len, cfg.d_model), jnp.bfloat16)
+        # precompute stub cross KV = zeros already in cache; fine for perf
+    # prefill simulation: feed prompt tokens one by one (correct but simple —
+    # a production prefill uses forward_prefill; exercised in tests)
+    out_tokens = []
+    t0 = time.perf_counter()
+    for i in range(prompt_len + gen_tokens):
+        logits, cache = step(params, cache, tokens)
+        tokens = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)[:, None] \
+            .astype(jnp.int32)
+        if i >= prompt_len:
+            out_tokens.append(tokens)
+    jax.block_until_ready(tokens)
+    dt = time.perf_counter() - t0
+    total = batch * (prompt_len + gen_tokens)
+    print(f"[serve] {arch}: {total} tokens in {dt:.2f}s "
+          f"({total/dt:.1f} tok/s, batch={batch})")
+    return jnp.concatenate(out_tokens, axis=1) if out_tokens else None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--mesh-shape", type=int, nargs="*", default=None)
+    args = ap.parse_args()
+    generate(args.arch, reduced=args.reduced, batch=args.batch,
+             prompt_len=args.prompt_len, gen_tokens=args.tokens,
+             mesh_shape=args.mesh_shape)
+
+
+if __name__ == "__main__":
+    main()

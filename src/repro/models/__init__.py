@@ -1,0 +1,7 @@
+from repro.models import layers, ssm, transformer
+from repro.models.sharding import ShardingRules
+from repro.models.transformer import (
+    param_template, param_specs, abstract_params, init_params,
+    forward_train, forward_prefill, decode_step, decode_step_encdec,
+    cache_template,
+)

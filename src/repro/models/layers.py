@@ -1,0 +1,620 @@
+"""Model layers: norms, RoPE, GQA attention (causal/SWA/cross/decode), MLP,
+MoE wrapper, vocab-parallel embedding and loss.
+
+Everything is functional: `fn(params_subtree, x, ...)`. Activation sharding
+is maintained with with_sharding_constraint (XLA Auto skeleton); the
+PK-overlapped paths are shard_map islands from repro.core, switched by
+RunConfig (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.core import moe as pk_moe
+from repro.core import (pk_ring_attention, pk_ulysses_attention,
+                        pk_matmul_all_reduce, pk_all_gather_matmul)
+from repro.models.sharding import ShardingRules
+
+NEG_INF = -1e30
+
+
+def constrain(x, rules: ShardingRules | None, spec: P):
+    if rules is None:
+        return x
+    return lax.with_sharding_constraint(x, rules.named(spec))
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(w, x, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def get_act(name: str):
+    return {"silu": jax.nn.silu, "gelu": functools.partial(jax.nn.gelu, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, H, S, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[:, None] * inv[None, :]   # (S, hd/2)
+        cos, sin = jnp.cos(ang)[None, None], jnp.sin(ang)[None, None]
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * inv
+        cos, sin = jnp.cos(ang)[:, None], jnp.sin(ang)[:, None]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _full_attention(q, k, v, *, causal, window, q_offset=0, kv_len=None,
+                    scale=None):
+    """q: (B,Hq,Sq,hd); k,v: (B,Hkv,Skv,hd). fp32 softmax, GQA grouped."""
+    b, hq, sq, hd = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(b, hkv, g, sq, hd)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    qi = q_offset + jnp.arange(sq)[:, None]
+    ki = jnp.arange(skv)[None, :]
+    keep = jnp.ones((sq, skv), bool)
+    if causal:
+        keep &= ki <= qi
+    if window is not None:
+        keep &= ki > qi - window
+    if kv_len is not None:                      # decode: valid cache prefix
+        keep &= ki < kv_len
+    s = jnp.where(keep, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, sq, hd).astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, *, causal, window, scale=None,
+                       qc: int = 512, kc: int = 1024):
+    """Memory-bounded XLA attention (flash-style online softmax over kv
+    chunks inside a scan over q chunks) — the jnp twin of
+    kernels/flash_attention.py, used when S·Skv would blow HBM (32k+ prefill).
+    Fully-masked kv blocks are skipped via lax.cond (real compute savings,
+    same as the kernel's block schedule)."""
+    b, hq, s, hd = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else hd ** -0.5
+    qc = min(qc, s)
+    kc = min(kc, skv)
+    assert s % qc == 0 and skv % kc == 0, (s, qc, skv, kc)
+    nq, nk = s // qc, skv // kc
+    qg = q.reshape(b, hkv, g, nq, qc, hd).transpose(3, 0, 1, 2, 4, 5)
+    kb = k.reshape(b, hkv, nk, kc, hd)
+    vb = v.reshape(b, hkv, nk, kc, hd)
+
+    def one_q_block(args):
+        qi, qblk = args                                  # (b,hkv,g,qc,hd)
+        m0 = jnp.full((b, hkv, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qc), jnp.float32)
+        o0 = jnp.zeros((b, hkv, g, qc, hd), jnp.float32)
+
+        def kv_step(carry, ki):
+            m, l, o = carry
+            k_i = lax.dynamic_index_in_dim(kb, ki, 2, keepdims=False)
+            v_i = lax.dynamic_index_in_dim(vb, ki, 2, keepdims=False)
+            q_lo = qi * qc
+            k_lo = ki * kc
+            run_blk = jnp.bool_(True)
+            if causal:
+                run_blk &= k_lo <= q_lo + qc - 1
+            if window is not None:
+                run_blk &= k_lo + kc - 1 > q_lo - window
+
+            def do(args):
+                m_, l_, o_ = args
+                sc = jnp.einsum("bkgqd,bksd->bkgqs", qblk, k_i,
+                                preferred_element_type=jnp.float32) * scale
+                rows = q_lo + jnp.arange(qc)[:, None]
+                cols = k_lo + jnp.arange(kc)[None, :]
+                keep = jnp.ones((qc, kc), bool)
+                if causal:
+                    keep &= cols <= rows
+                if window is not None:
+                    keep &= cols > rows - window
+                sc = jnp.where(keep, sc, NEG_INF)
+                m_new = jnp.maximum(m_, sc.max(axis=-1))
+                p_ = jnp.exp(sc - m_new[..., None])
+                alpha = jnp.exp(m_ - m_new)
+                l_new = l_ * alpha + p_.sum(axis=-1)
+                o_new = o_ * alpha[..., None] + jnp.einsum(
+                    "bkgqs,bksd->bkgqd", p_, v_i.astype(jnp.float32))
+                return m_new, l_new, o_new
+
+            return lax.cond(run_blk, do, lambda a: a, (m, l, o)), None
+
+        (m, l, o), _ = lax.scan(kv_step, (m0, l0, o0), jnp.arange(nk))
+        return o / jnp.maximum(l, 1e-30)[..., None]
+
+    out = lax.map(one_q_block, (jnp.arange(nq), qg))     # (nq,b,hkv,g,qc,hd)
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, s, hd)
+    return out.astype(q.dtype)
+
+
+# kv lengths at/above this use the chunked path (HBM budget, DESIGN §5)
+XLA_ATTN_CHUNK_THRESHOLD = 8192
+
+
+def attention_block(p, x, cfg: ArchConfig, run: RunConfig,
+                    rules: ShardingRules | None, *, causal=True,
+                    positions=None, cross_kv=None, seq_sharded=False):
+    """Full attention sub-layer (projections + mixing + out-proj).
+
+    p: {"wq","wk","wv","wo"}; x: (B, S, d) [if seq_sharded: S is the local
+    shard and ring/ulysses attention runs over the tp axis].
+    cross_kv: precomputed (k, v) for cross-attention (enc-dec decoder).
+    """
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, s, hq, hd)
+    q = q.transpose(0, 2, 1, 3)
+    if cross_kv is None:
+        k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+        v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    else:
+        k, v = cross_kv
+    if positions is None:
+        positions = jnp.arange(s)
+    if cross_kv is None:                         # RoPE on self-attention only
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if seq_sharded and rules is not None:
+        # Sequence parallelism: ring attention over the tp axis (PK §4.2).
+        axis = rules.tp
+        fn = {"ring": pk_ring_attention, "ulysses": pk_ulysses_attention,
+              }.get(run.sp_attention, pk_ring_attention)
+        bspec = rules.dim(b, rules.dp)
+        attn = jax.shard_map(
+            lambda q_, k_, v_: fn(q_, k_, v_, axis, causal=causal,
+                                  window=cfg.sliding_window),
+            mesh=rules.mesh,
+            in_specs=(P(bspec, None, axis, None),) * 3,
+            out_specs=P(bspec, None, axis, None),
+            check_vma=False)
+        o = attn(q, k, v)
+    else:
+        if rules is not None:
+            q = constrain(q, rules, rules.act_bhsd(hq))
+        win = cfg.sliding_window if cross_kv is None else None
+        if k.shape[2] >= XLA_ATTN_CHUNK_THRESHOLD:
+            o = _chunked_attention(q, k, v, causal=causal, window=win)
+        else:
+            o = _full_attention(q, k, v, causal=causal, window=win)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    if (rules is not None and run.pk_attn_out_island
+            and (hq * hd) % rules.mesh.shape[rules.tp] == 0
+            and (b * s) % rules.mesh.shape[rules.tp] == 0):
+        # out-projection as the PK GEMM+AR island (paper Fig. 9 position):
+        # ring permutes keep bf16 payloads and overlap with the block GEMMs.
+        out = _pk_attn_out_island(p["wo"], o, cfg, run, rules, b, s)
+    else:
+        out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
+    if rules is not None:
+        out = constrain(out, rules, rules.act_btd())
+    return out
+
+
+def _pk_attn_out_island(wo, o, cfg, run, rules, b, s):
+    tp = rules.tp
+    f = rules.fsdp_axes
+    d = cfg.d_model
+    h_full = o.shape[-1]
+
+    def island(o_, wo_):
+        if f is not None:
+            wo_ = _maybe_allgather(wo_, f, 1, d)
+        t = o_.reshape(-1, o_.shape[-1])
+        out = pk_matmul_all_reduce(t, wo_, tp)
+        return out.reshape(o_.shape[0], s, d)
+
+    bspec = rules.dim(b, rules.dp)
+    wspec = rules.w2d(h_full, d, tp_dim=0)
+    return jax.shard_map(
+        island, mesh=rules.mesh,
+        in_specs=(P(bspec, None, rules.dim(h_full, tp)), wspec),
+        out_specs=P(bspec, None, None), check_vma=False)(o, wo)
+
+
+def decode_attention(p, x, cache_k, cache_v, pos, cfg: ArchConfig,
+                     run: RunConfig, rules: ShardingRules | None, *,
+                     cross_kv=None, long_ctx=False):
+    """One-token decode with KV cache.
+
+    x: (B, 1, d); cache_k/v: (B, Hkv, S_max, hd); pos: scalar current index.
+    Returns (out (B,1,d), new_k, new_v). If run.decode_seq_shard, attention
+    over the sharded cache uses the flash-decode logsumexp merge over the tp
+    axis (shard_map island) — the SP serving path (DESIGN §4).
+    """
+    b, _, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cache_k_in, cache_v_in = cache_k, cache_v
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, 1, hq, hd).transpose(0, 2, 1, 3)
+    if cross_kv is None:
+        k_new = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(b, 1, hkv, hd).transpose(0, 2, 1, 3)
+        v_new = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(b, 1, hkv, hd).transpose(0, 2, 1, 3)
+        q = apply_rope(q, jnp.full((1,), pos), cfg.rope_theta)
+        k_new = apply_rope(k_new, jnp.full((1,), pos), cfg.rope_theta)
+        kv_len = pos + 1          # cache write is deferred (see below)
+    else:
+        k_att, v_att = cross_kv
+        kv_len = k_att.shape[2]
+
+    window = cfg.sliding_window if cross_kv is None else None
+    if rules is not None and run.decode_seq_shard and cross_kv is None:
+        # The cache slot write happens INSIDE the island, shard-locally:
+        # a dynamic_update_slice on a seq-sharded array at the jit level
+        # would force XLA to all-gather the whole cache (GBs per token).
+        axis = (tuple(run.dp_axes) + (rules.tp,)) if long_ctx else rules.tp
+        cache_spec = rules.kv_cache(hkv, b, long_ctx=long_ctx)
+        bspec = None if long_ctx else rules.dim(b, rules.dp)
+
+        def island(q_, k_old, v_old, kn, vn):
+            ax_idx = lax.axis_index(axis)
+            s_loc = k_old.shape[2]
+            offset = ax_idx * s_loc
+            # shard-local cache update (one-sided, pre-allocated slot — the
+            # PK §3.1.4 principle applied to the KV cache)
+            local_pos = pos - offset
+            hit = (local_pos >= 0) & (local_pos < s_loc)
+            lp = jnp.clip(local_pos, 0, s_loc - 1)
+
+            def upd(c, n):
+                new = lax.dynamic_update_slice(c, n.astype(c.dtype),
+                                               (0, 0, lp, 0))
+                return lax.cond(hit, lambda: new, lambda: c)
+
+            k_ = upd(k_old, kn)
+            v_ = upd(v_old, vn)
+            # local partial attention + logsumexp merge over the axis
+            g = hq // hkv
+            qg = q_.reshape(q_.shape[0], hkv, g, 1, hd)
+            s_ = jnp.einsum("bkgqd,bksd->bkgqs", qg, k_,
+                            preferred_element_type=jnp.float32) * hd ** -0.5
+            ki = offset + jnp.arange(s_loc)[None, None, None, None, :]
+            keep = ki < kv_len
+            if window is not None:
+                keep &= ki > (kv_len - 1) - window
+            s_ = jnp.where(keep, s_, NEG_INF)
+            m_loc = s_.max(axis=-1)                                # (b,k,g,1)
+            m_glob = lax.pmax(m_loc, axis)
+            p_ = jnp.exp(s_ - m_glob[..., None])
+            l_loc = p_.sum(axis=-1)
+            o_loc = jnp.einsum("bkgqs,bksd->bkgqd", p_, v_.astype(jnp.float32))
+            l_glob = lax.psum(l_loc, axis)
+            o_glob = lax.psum(o_loc, axis)
+            o = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+            return (o.reshape(q_.shape[0], hq, 1, hd).astype(q_.dtype),
+                    k_, v_)
+
+        qspec = P(bspec, None, None, None)
+        o, cache_k, cache_v = jax.shard_map(
+            island, mesh=rules.mesh,
+            in_specs=(qspec, cache_spec, cache_spec, qspec, qspec),
+            out_specs=(qspec, cache_spec, cache_spec),
+            check_vma=False)(q, cache_k_in, cache_v_in, k_new, v_new)
+    else:
+        if cross_kv is None:
+            cache_k = lax.dynamic_update_slice(
+                cache_k_in, k_new.astype(cache_k_in.dtype), (0, 0, pos, 0))
+            cache_v = lax.dynamic_update_slice(
+                cache_v_in, v_new.astype(cache_v_in.dtype), (0, 0, pos, 0))
+            k_att, v_att = cache_k, cache_v
+        o = _full_attention(q, k_att, v_att, causal=False, window=window,
+                            q_offset=0, kv_len=kv_len)
+        # causal handled via kv_len (all cached positions <= pos are visible);
+        # SWA via window against kv_len-1.
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, hq * hd)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
+    if cross_kv is None:
+        return out, cache_k, cache_v
+    return out, None, None
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+def mlp_block(p, x, cfg: ArchConfig, run: RunConfig,
+              rules: ShardingRules | None):
+    """Dense (optionally gated) MLP with TP. PK mode: the two GEMMs run as a
+    shard_map island with overlapped AG+GEMM / GEMM+AR rings (paper §4.1)."""
+    act = get_act(cfg.act)
+    if rules is not None and run.pk_overlap and _tp_divides(cfg, rules):
+        return _pk_mlp_island(p, x, cfg, run, rules)
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"])
+    if cfg.gated_mlp:
+        h = act(h) * jnp.einsum("bsd,df->bsf", x, p["w3"])
+    else:
+        h = act(h)
+    out = jnp.einsum("bsf,fd->bsd", h, p["w2"])
+    if rules is not None:
+        out = constrain(out, rules, rules.act_btd())
+    return out
+
+
+def _tp_divides(cfg: ArchConfig, rules: ShardingRules) -> bool:
+    tp = rules.mesh.shape[rules.tp]
+    return cfg.d_ff % tp == 0
+
+
+def _pk_mlp_island(p, x, cfg: ArchConfig, run: RunConfig, rules: ShardingRules):
+    """Megatron MLP as explicit PK collectives: x (replicated over tp)
+    × w1 (col-shard) -> h (ff-sharded, local) -> act -> × w2 (row-shard)
+    -> pk overlapped GEMM+AR. FSDP gathers of weights happen inside so XLA
+    overlaps them with the previous chunk's compute."""
+    from repro.core import matmul_all_reduce_baseline
+    act = get_act(cfg.act)
+    tp = rules.tp
+    tp_size = rules.mesh.shape[tp]
+    b, s, d = x.shape
+    f = rules.fsdp_axes
+
+    def island(x_, w1, w3, w2):
+        if f is not None:  # FSDP all-gather (ZeRO-3) of the weight shards
+            w1 = _maybe_allgather(w1, f, 0, cfg.d_model)
+            w3 = _maybe_allgather(w3, f, 0, cfg.d_model) if cfg.gated_mlp else w3
+            w2 = _maybe_allgather(w2, f, 1, cfg.d_model)
+        t = x_.reshape(-1, d)
+        h = jnp.einsum("td,df->tf", t, w1)
+        if cfg.gated_mlp:
+            h = act(h) * jnp.einsum("td,df->tf", t, w3)
+        else:
+            h = act(h)
+        m = h.shape[0]
+        if m % tp_size == 0 and m // tp_size > 0:
+            out = pk_matmul_all_reduce(h.astype(x_.dtype), w2, tp)
+        else:  # tiny token counts (decode): ring schedule not worth it
+            out = matmul_all_reduce_baseline(h.astype(x_.dtype), w2, tp)
+        return out.reshape(x_.shape[0], s, d)
+
+    w1s = rules.w2d(cfg.d_model, cfg.d_ff, tp_dim=1)
+    w2s = rules.w2d(cfg.d_ff, cfg.d_model, tp_dim=0)
+    w3 = p["w3"] if cfg.gated_mlp else jnp.zeros((), x.dtype)
+    bspec = rules.dim(b, rules.dp)
+    in_specs = (P(bspec, None, None), w1s, w1s if cfg.gated_mlp else P(),
+                w2s)
+    out = jax.shard_map(island, mesh=rules.mesh, in_specs=in_specs,
+                        out_specs=P(bspec, None, None),
+                        check_vma=False)(x, p["w1"], w3, p["w2"])
+    return out
+
+
+def _maybe_allgather(w, axes, dim: int, full_size: int):
+    if w is None:
+        return None
+    names = (axes,) if isinstance(axes, str) else tuple(axes)
+    for a in names:
+        if w.shape[dim] < full_size:
+            w = lax.all_gather(w, a, axis=dim, tiled=True)
+    return w
+
+
+def moe_block(p, x, cfg: ArchConfig, run: RunConfig,
+              rules: ShardingRules | None):
+    """MoE sub-layer; returns (out, aux_loss). shard_map island over the tp
+    axis with device-major expert weights (core/moe.py)."""
+    b, s, d = x.shape
+    if rules is None:
+        # single-device reference path (smoke tests): dense oracle
+        y, aux = pk_moe.moe_reference_dense(
+            x.reshape(-1, d), p["router"], p["w1"].reshape(-1, *p["w1"].shape[2:]),
+            p["w3"].reshape(-1, *p["w3"].shape[2:]) if cfg.gated_mlp else None,
+            p["w2"].reshape(-1, *p["w2"].shape[2:]),
+            n_experts=cfg.n_experts, top_k=cfg.top_k)
+        return y.reshape(b, s, d), aux
+
+    tp = rules.tp
+    f = rules.fsdp_axes
+    bspec = rules.dim(b, rules.dp)
+
+    if run.serve_moe_tp_data:
+        # resident 2D-TP: weights stay put (ff sliced over dp); tokens are
+        # all-gathered over dp (activation-sized), expert partials are
+        # psum_scatter'd back — O(T*d) traffic instead of O(W) per step.
+        def island(x_, router, w1, w3, w2):
+            w1, w2 = w1[0], w2[0]
+            w3 = w3[0] if cfg.gated_mlp else None
+            t = x_.reshape(-1, d)
+            if bspec is not None:
+                names = (rules.dp,) if isinstance(rules.dp, str) \
+                    else tuple(rules.dp)
+                for a in names:
+                    t = lax.all_gather(t, a, axis=0, tiled=True)
+            y, aux = pk_moe.pk_moe_replicated(
+                t, router, w1, w3, w2, axis_name=tp,
+                n_experts=cfg.n_experts, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor,
+                n_chunks=run.moe_chunks)
+            if bspec is not None:
+                y = lax.psum_scatter(y.astype(jnp.float32), rules.dp,
+                                     scatter_dimension=0, tiled=True)
+            else:
+                y = lax.psum(y.astype(jnp.float32), rules.dp)
+            return y.astype(x_.dtype).reshape(x_.shape), \
+                lax.pmean(aux, tp)[None]
+
+        dpff = rules.dim(cfg.d_ff // (rules.mesh.shape[tp] //
+                                      pk_moe.ep_tp_split(cfg.n_experts,
+                                                         rules.mesh.shape[tp])[0]),
+                         rules.dp)
+        wspec = P(tp, None, None, dpff)
+        w2spec = P(tp, None, dpff, None)
+    else:
+        def island(x_, router, w1, w3, w2):
+            w1, w2 = w1[0], w2[0]
+            w3 = w3[0] if cfg.gated_mlp else None
+            if f is not None:
+                w1 = _maybe_allgather(w1, f, 1, cfg.d_model)
+                w3 = _maybe_allgather(w3, f, 1, cfg.d_model)
+                w2 = _maybe_allgather(w2, f, 2, cfg.d_model)
+            t = x_.reshape(-1, d)
+            y, aux = pk_moe.pk_moe_replicated(
+                t, router, w1, w3, w2, axis_name=tp, n_experts=cfg.n_experts,
+                top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                n_chunks=run.moe_chunks, ring_combine=run.pk_ring_psum)
+            return y.reshape(x_.shape), lax.pmean(aux, tp)[None]
+
+        # device-major PGL weights: (M, E_loc, d[, /fsdp], ff_loc)
+        wspec = P(tp, None, rules.dim(cfg.d_model, f), None)
+        w2spec = P(tp, None, None, rules.dim(cfg.d_model, f))
+
+    out, aux = jax.shard_map(
+        island, mesh=rules.mesh,
+        in_specs=(P(bspec, None, None), P(), wspec,
+                  wspec if cfg.gated_mlp else P(), w2spec),
+        out_specs=(P(bspec, None, None), P(bspec)),
+        check_vma=False)(x, p["router"], p["w1"],
+                         p["w3"] if cfg.gated_mlp else jnp.zeros((), x.dtype),
+                         p["w2"])
+    return out, jnp.mean(aux.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Vocab-parallel embedding + loss
+# ---------------------------------------------------------------------------
+
+def embed_tokens(p, tokens, rules: ShardingRules | None):
+    """tokens (B, S) -> (B, S, d). Megatron vocab-parallel gather+psum island
+    when sharded; plain take otherwise."""
+    emb = p["embed"]
+    if rules is None:
+        return jnp.take(emb, tokens, axis=0)
+    v, d_model = emb.shape
+    tp = rules.tp
+    f = rules.fsdp_axes
+    if v % rules.mesh.shape[tp] != 0:
+        return jnp.take(emb, tokens, axis=0)
+
+    def island(emb_, tok):
+        # gather from the LOCAL (V_loc, d_loc) shard, then combine with
+        # activation-sized collectives — never all-gather the table itself
+        # (a (B,S)-token lookup must move O(B·S·d), not O(V·d)).
+        v_loc = emb_.shape[0]
+        v0 = lax.axis_index(tp) * v_loc
+        local = tok - v0
+        ok = (local >= 0) & (local < v_loc)
+        x = jnp.take(emb_, jnp.clip(local, 0, v_loc - 1), axis=0)
+        x = jnp.where(ok[..., None], x, 0)
+        x = lax.psum(x, tp)                      # combine vocab shards
+        if f is not None and x.shape[-1] < d_model:
+            names = (f,) if isinstance(f, str) else tuple(f)
+            for a in names:                      # gather the d shards
+                x = lax.all_gather(x, a, axis=-1, tiled=True)
+        return x
+
+    bspec = rules.dim(tokens.shape[0], rules.dp)
+    return jax.shard_map(
+        island, mesh=rules.mesh,
+        in_specs=(P(tp, rules.dim(emb.shape[1], rules.fsdp_axes)),
+                  P(bspec, None)),
+        out_specs=P(bspec, None, None), check_vma=False)(emb, tokens)
+
+
+def lm_loss(p, x, targets, weights, cfg: ArchConfig, run: RunConfig,
+            rules: ShardingRules | None, *, chunk: int = 512):
+    """Chunked vocab-parallel cross-entropy. x: (B,S,d); targets (B,S).
+    Never materializes the full (B,S,V) logits: sequence is chunked and the
+    softmax statistics are psum-merged over the vocab (tp) shard."""
+    head = p["lm_head"]
+    b, s, d = x.shape
+    v = head.shape[1]
+    tp = rules.tp if rules is not None else None
+    sharded = rules is not None and v % rules.mesh.shape[tp] == 0
+    n_chunks = max(1, s // chunk) if s % chunk == 0 else 1
+    xc = x.reshape(b, n_chunks, s // n_chunks, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, n_chunks, s // n_chunks).transpose(1, 0, 2)
+    wc = weights.reshape(b, n_chunks, s // n_chunks).transpose(1, 0, 2)
+
+    if not sharded:
+        def body(carry, args):
+            xi, ti, wi = args
+            logits = jnp.einsum("bsd,dv->bsv", xi, head).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            tgt = jnp.take_along_axis(logits, ti[..., None], axis=-1)[..., 0]
+            return (carry[0] + jnp.sum((lse - tgt) * wi),
+                    carry[1] + jnp.sum(wi)), None
+        (tot, cnt), _ = lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (xc, tc, wc))
+        return tot / jnp.maximum(cnt, 1.0)
+
+    hspec = rules.w2d(d, v, tp_dim=1)
+    f = rules.fsdp_axes
+
+    def island(xc_, tc_, wc_, head_):
+        head_ = _maybe_allgather(head_, f, 0, d)      # FSDP gather of d
+        v_loc = head_.shape[1]
+        v0 = lax.axis_index(tp) * v_loc
+
+        def body(carry, args):
+            xi, ti, wi = args
+            logits = jnp.einsum("bsd,dv->bsv", xi, head_).astype(jnp.float32)
+            # global max is for numerical stability only — no gradient needed
+            m_loc = lax.stop_gradient(logits).max(axis=-1)
+            m = lax.pmax(m_loc, tp)
+            se = lax.psum(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1), tp)
+            lse = m + jnp.log(se)
+            loc = ti - v0
+            ok = (loc >= 0) & (loc < v_loc)
+            tgt = jnp.take_along_axis(logits, jnp.clip(loc, 0, v_loc - 1)[..., None],
+                                      axis=-1)[..., 0]
+            tgt = lax.psum(jnp.where(ok, tgt, 0.0), tp)
+            return (carry[0] + jnp.sum((lse - tgt) * wi),
+                    carry[1] + jnp.sum(wi)), None
+
+        (tot, cnt), _ = lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (xc_, tc_, wc_))
+        return tot[None], cnt[None]
+
+    bspec = rules.dim(b, rules.dp)
+    tot, cnt = jax.shard_map(
+        island, mesh=rules.mesh,
+        in_specs=(P(None, bspec, None, None), P(None, bspec),
+                  P(None, bspec), hspec),
+        out_specs=(P(bspec), P(bspec)), check_vma=False)(xc, tc, wc, head)
+    return jnp.sum(tot) / jnp.maximum(jnp.sum(cnt), 1.0)
+
+
+def lm_logits(p, x, rules: ShardingRules | None):
+    """Full logits for serving (B, S, V)."""
+    logits = jnp.einsum("bsd,dv->bsv", x, p["lm_head"]).astype(jnp.float32)
+    if rules is not None:
+        logits = constrain(logits, rules,
+                           P(rules.dp, None,
+                             rules.dim(logits.shape[-1], rules.tp)))
+    return logits

@@ -1,0 +1,99 @@
+"""Sharding rules: DP / FSDP(ZeRO-3) / TP / EP×TP / SP (DESIGN.md §4).
+
+Builds PartitionSpec trees for params, activations and KV caches given the
+mesh and RunConfig. Dims are sharded only when divisible by the axis-product;
+otherwise replicated (e.g. KV heads when kv < model — Megatron-style
+replication).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, RunConfig
+
+
+def axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    run: RunConfig
+
+    @property
+    def dp(self):  # batch axes
+        a = self.run.dp_axes
+        return a[0] if len(a) == 1 else a
+
+    @property
+    def tp(self) -> str:
+        return self.run.tp_axis
+
+    @property
+    def fsdp_axes(self):
+        return self.dp if self.run.fsdp else None
+
+    def dim(self, size: int, axes):
+        """Shard `size` over `axes` iff divisible, else replicate."""
+        if axes is None:
+            return None
+        if size % axes_size(self.mesh, axes) == 0:
+            return axes
+        return None
+
+    def spec(self, *entries) -> P:
+        return P(*entries)
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # --- common param specs (sizes needed for divisibility checks) ---
+
+    def w2d(self, d_in: int, d_out: int, *, tp_dim: int | None) -> P:
+        """(d_in, d_out) weight; tp_dim says which dim (0/1/None) is TP."""
+        f = self.fsdp_axes
+        if tp_dim == 0:
+            return P(self.dim(d_in, self.tp), self.dim(d_out, f))
+        if tp_dim == 1:
+            return P(self.dim(d_in, f), self.dim(d_out, self.tp))
+        return P(self.dim(d_in, f), None)
+
+    def stacked(self, spec: P) -> P:
+        """Prepend the n_periods scan dim (replicated)."""
+        return P(None, *spec)
+
+    # --- activations ---
+
+    def act_btd(self) -> P:           # (B, S, d) residual stream
+        return P(self.dp, None, None)
+
+    def act_bhsd(self, n_heads: int) -> P:  # (B, H, S, hd) head-sharded
+        return P(self.dp, self.dim(n_heads, self.tp), None, None)
+
+    def act_seq_sharded(self) -> P:   # (B, S, d) sequence-parallel
+        return P(self.dp, self.tp, None)
+
+    def kv_cache(self, n_kv: int, batch: int, *, long_ctx: bool = False) -> P:
+        """(B, Hkv, S_max, hd). decode_32k: batch over dp, seq over tp.
+        long_500k (batch=1): seq over (dp×tp) combined."""
+        if not self.run.decode_seq_shard:
+            return P(self.dim(batch, self.dp), self.dim(n_kv, self.tp), None, None)
+        if long_ctx:
+            flat = (tuple(self.run.dp_axes) + (self.tp,))
+            return P(None, None, flat, None)
+        return P(self.dim(batch, self.dp), None, self.tp, None)
+
+    def ssm_cache(self, batch: int) -> P:
+        """(B, d_inner, N) + conv (B, d_inner, ck-1): d_inner over tp."""
+        return P(self.dim(batch, self.dp), self.tp, None)

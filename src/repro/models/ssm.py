@@ -1,0 +1,154 @@
+"""Mamba-1 selective SSM block (falcon-mamba, jamba mamba layers).
+
+Training/prefill uses a chunked state-passing scan: within-chunk parallel
+(associative affine composition), across-chunk sequential (lax.scan carry).
+All (B, chunk, d_inner, N) tensors are materialized only inside the chunk
+body, bounding peak memory to one chunk — the same blocking the Pallas kernel
+(kernels/mamba_scan.py) uses on TPU VMEM. Decode is the O(1) recurrence.
+
+Sequence parallelism across devices reuses core.ring_attention.ssm_entry_states
+(chunk decay/exit composition around the ring).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.models.sharding import ShardingRules
+
+
+def _causal_conv1d(x, w, b):
+    """Depthwise causal conv. x: (B, S, di); w: (di, ck); b: (di,)."""
+    ck = w.shape[1]
+    pad = jnp.pad(x, ((0, 0), (ck - 1, 0), (0, 0)))
+    views = [pad[:, i:i + x.shape[1], :] * w[:, i][None, None, :]
+             for i in range(ck)]
+    return sum(views) + b[None, None, :]
+
+
+def selective_scan_chunked(dt, b_ssm, c_ssm, x_conv, a, d_skip, h0, *,
+                           chunk: int = 256, scan_dtype=jnp.float32):
+    """Chunked selective scan.
+
+    dt, x_conv: (B, S, di); b_ssm, c_ssm: (B, S, N); a: (di, N); h0: (B, di, N).
+    Returns (y (B, S, di) f32, h_last). Nothing of size (B, S, di, N) is ever
+    materialized — only (B, chunk, di, N) inside the scan body.
+    """
+    b, s, di = dt.shape
+    n = a.shape[1]
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+
+    def to_chunks(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    dt_c, b_c, c_c, x_c = map(to_chunks, (dt, b_ssm, c_ssm, x_conv))
+
+    def chunk_body(h, args):
+        dt_i, b_i, c_i, x_i = args                     # (B, chunk, ...)
+        # scan_dtype=bf16 halves the dominant (B,chunk,di,N) HBM traffic
+        # (§Perf C1); the cross-chunk carry stays f32 for stability.
+        a_bar = jnp.exp(dt_i.astype(jnp.float32)[..., None]
+                        * a[None, None]).astype(scan_dtype)
+        bx = (dt_i[..., None] * b_i[:, :, None, :]
+              * x_i[..., None]).astype(scan_dtype)     # (B, chunk, di, N)
+
+        def comb(u, v):  # affine composition (a,b)∘(a',b') = (a'a, a'b+b')
+            return (u[0] * v[0], v[0] * u[1] + v[1])
+
+        aa, bb = lax.associative_scan(comb, (a_bar, bx), axis=1)
+        h_all = (aa.astype(jnp.float32) * h[:, None]
+                 + bb.astype(jnp.float32))             # (B, chunk, di, N)
+        y_i = jnp.einsum("bsdn,bsn->bsd", h_all.astype(scan_dtype),
+                         c_i.astype(scan_dtype),
+                         preferred_element_type=jnp.float32)
+        y_i = y_i + x_i.astype(jnp.float32) * d_skip[None, None, :]
+        return h_all[:, -1], y_i
+
+    if nc == 1:
+        h_last, y_c = chunk_body(h0, (dt_c[0], b_c[0], c_c[0], x_c[0]))
+        return y_c.reshape(b, s, di), h_last
+    h_last, y_c = lax.scan(chunk_body, h0, (dt_c, b_c, c_c, x_c))
+    y = y_c.swapaxes(0, 1).reshape(b, s, di)
+    return y, h_last
+
+
+def mamba_mix(p, x, cfg: ArchConfig, *, h0=None, conv_state=None,
+              chunk: int = 256, return_state: bool = False,
+              scan_dtype=jnp.float32):
+    """Core mamba mixing. x: (B, S, di) (post in_proj split, pre conv).
+
+    p: {"conv_w","conv_b","x_proj","dt_proj","dt_bias","A_log","D"}.
+    Returns y (B, S, di) [+ (h_last, conv_tail) if return_state].
+    """
+    b, s, di = x.shape
+    n = cfg.ssm_state
+    if conv_state is not None:  # decode/continuation: prepend cached tail
+        xin = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+        x_conv = _causal_conv1d(xin, p["conv_w"], p["conv_b"])[:, -s:]
+    else:
+        xin = x
+        x_conv = _causal_conv1d(x, p["conv_w"], p["conv_b"])
+    x_conv = jax.nn.silu(x_conv)
+
+    proj = jnp.einsum("bsd,dr->bsr", x_conv, p["x_proj"])
+    dt, b_ssm, c_ssm = jnp.split(proj, [cfg.dtr, cfg.dtr + n], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dt, p["dt_proj"])
+                         + p["dt_bias"][None, None, :])          # (B,S,di)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (di, N)
+
+    h0 = jnp.zeros((b, di, n), jnp.float32) if h0 is None else h0
+    y, h_last = selective_scan_chunked(dt, b_ssm, c_ssm, x_conv, a,
+                                       p["D"].astype(jnp.float32), h0,
+                                       chunk=chunk, scan_dtype=scan_dtype)
+    y = y.astype(x.dtype)
+    if return_state:
+        ck = p["conv_w"].shape[1]
+        conv_tail = xin[:, -(ck - 1):, :] if ck > 1 else \
+            jnp.zeros((b, 0, di), x.dtype)
+        return y, (h_last, conv_tail)
+    return y
+
+
+def mamba_block(p, x, cfg: ArchConfig, run: RunConfig,
+                rules: ShardingRules | None, *, cache=None):
+    """Full mamba block: in_proj -> conv/SSM mix -> gate -> out_proj.
+
+    Train/prefill: cache=None. Decode: cache=(h, conv_tail) (di sharded over
+    tp), returns (out, new_cache).
+    """
+    b, s, d = x.shape
+    di = cfg.d_inner
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x_ssm, z = jnp.split(xz, 2, axis=-1)
+    if rules is not None:
+        spec = P(rules.dp, None, rules.dim(di, rules.tp))
+        x_ssm = lax.with_sharding_constraint(x_ssm, rules.named(spec))
+        z = lax.with_sharding_constraint(z, rules.named(spec))
+
+    if cache is None:
+        y = mamba_mix(p, x_ssm, cfg, chunk=run.ssm_chunk,
+                      scan_dtype=(jnp.bfloat16 if run.ssm_scan_dtype ==
+                                  "bfloat16" else jnp.float32))
+        new_cache = None
+    else:
+        h, conv_tail = cache
+        y, new_cache = mamba_mix(p, x_ssm, cfg, h0=h, conv_state=conv_tail,
+                                 return_state=True)
+
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if rules is not None:
+        out = lax.with_sharding_constraint(out, rules.named(rules.act_btd()))
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    di, n, ck = cfg.d_inner, cfg.ssm_state, cfg.conv_kernel
+    return (jnp.zeros((batch, di, n), jnp.float32),
+            jnp.zeros((batch, ck - 1, di), dtype))

@@ -1,0 +1,108 @@
+"""Collective-byte extraction from compiled (post-SPMD) HLO text.
+
+cost_analysis() has FLOPs and HBM bytes but NOT collective traffic, so we
+parse `compiled.as_text()`: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op line carries its per-device output shape
+and replica groups; ICI bytes-per-device follow from the collective's ring
+cost (costmodel.ring_collective_bytes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+# e.g.  %all-gather.12 = bf16[16,1024,512]{2,1,0} all-gather(...), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s+(?:\(?)((?:\w+\[[\d,]*\][^ ]*\s*,?\s*)+)\)?\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(([^)]*)\)")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUP_RE2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUP_RE2.search(line)          # iota form [n_groups,group_size]
+    if m:
+        return int(m.group(2))
+    m = _GROUP_RE.search(line)           # explicit first group {0,1,...}
+    if m:
+        return len([t for t in m.group(1).split(",") if t.strip() != ""])
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-device ICI traffic, bytes."""
+    by_kind: dict
+    total_bytes: float
+    op_count: int
+
+    def summary(self) -> str:
+        parts = [f"{k}: {v/1e6:.1f} MB ({c} ops)"
+                 for k, (v, c) in sorted(self.by_kind.items())]
+        return "; ".join(parts) or "none"
+
+
+def collective_bytes(hlo_text: str, *, default_group: int = 2) -> CollectiveStats:
+    """Sum per-device ICI bytes over all collective ops in the module.
+
+    Ring-model per-device traffic for a payload of per-device size S over a
+    group of size N: AG: S*(N-1) [S = per-device input shard = out/N];
+    RS: S_in*(N-1)/N; AR: 2*S_in*(N-1)/N; A2A: S*(N-1)/N; permute: S.
+    """
+    by_kind = defaultdict(lambda: [0.0, 0])
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shapes, kind, operands = m.group(1), m.group(2), m.group(3)
+        kind = kind.replace("-start", "")
+        out_bytes = _shape_bytes(shapes)
+        # XLA:CPU promotes bf16 reductions to f32 (convert -> all-reduce f32
+        # -> convert). The TPU target reduces in bf16, so count the true
+        # payload when the reduction is convert-fed.
+        if (kind in ("all-reduce", "reduce-scatter")
+                and "convert" in operands and "f32[" in shapes):
+            out_bytes *= 0.5
+        n = max(_group_size(line, default_group), 1)
+        if n == 1:
+            continue
+        if kind == "all-gather":
+            moved = out_bytes * (n - 1) / n          # out = gathered
+        elif kind == "all-reduce":
+            moved = 2.0 * out_bytes * (n - 1) / n
+        elif kind == "reduce-scatter":
+            moved = out_bytes * (n - 1)              # out = scattered shard
+        elif kind == "all-to-all":
+            moved = out_bytes * (n - 1) / n
+        else:                                        # collective-permute
+            moved = out_bytes
+        by_kind[kind][0] += moved
+        by_kind[kind][1] += 1
+    total = sum(v for v, _ in by_kind.values())
+    count = sum(c for _, c in by_kind.values())
+    return CollectiveStats(by_kind=dict(by_kind), total_bytes=total,
+                           op_count=count)

@@ -1,0 +1,57 @@
+"""Elastic scaling: restore a checkpoint onto a different mesh.
+
+Most parameters are stored in logical layout, so elasticity is just
+device_put with the new mesh's NamedShardings. The one mesh-dependent layout
+is the MoE device-major PGL (model-axis size baked into dim 0) — converted
+through the logical layout on host (core/moe_layout.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.core.moe_layout import dm_to_logical, logical_to_dm
+from repro.ckpt.manager import CheckpointManager
+from repro.models import transformer as T
+from repro.models.sharding import ShardingRules
+
+
+def moe_converter(cfg: ArchConfig, old_m: int, new_m: int):
+    """Per-leaf converter for CheckpointManager.restore: reshapes MoE
+    device-major expert weights from model-axis size old_m to new_m."""
+    if old_m == new_m or not cfg.is_moe:
+        return None
+
+    def convert(key: str, arr: np.ndarray) -> np.ndarray:
+        leaf = key.split("/")[-1]
+        if "moe" not in key or leaf not in ("w1", "w2", "w3"):
+            return arr
+        # stacked over periods: (P, M, E_loc, ...) -> convert per period
+        out = []
+        for p in range(arr.shape[0]):
+            logical = dm_to_logical(arr[p], cfg.n_experts, w2=(leaf == "w2"))
+            out.append(logical_to_dm(logical, new_m, w2=(leaf == "w2")))
+        return np.stack(out)
+
+    return convert
+
+
+def elastic_restore(ckpt_dir: str, cfg: ArchConfig, run: RunConfig,
+                    new_mesh, *, old_model_size: int, template=None):
+    """Load the newest checkpoint and place it on `new_mesh` (any size whose
+    axes divide the sharded dims). Returns (state_pytree, extra)."""
+    rules = ShardingRules(new_mesh, run)
+    tmpl = T.param_template(cfg, run, rules) if template is None else template
+    params_abs = T.abstract_params(tmpl)
+    specs = T.param_specs(tmpl)
+    shardings = jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(new_mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    mgr = CheckpointManager(ckpt_dir)
+    new_m = new_mesh.shape[run.tp_axis]
+    conv = moe_converter(cfg, old_model_size, new_m)
+    return mgr.restore(params_abs, shardings=shardings, convert=conv)

@@ -1,0 +1,50 @@
+"""Straggler watchdog: per-step wall-time EMA with a deadline multiple.
+
+On a real pod this drives mitigation (preempt + re-slot the slow host, or
+drop to the checkpoint and exclude it — runtime/elastic.py); in this
+container the detection logic is what we can exercise (tests inject delays).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    factor: float = 3.0          # deadline = factor × EMA
+    ema_decay: float = 0.9
+    min_samples: int = 5
+    ema: float = 0.0
+    n: int = 0
+    events: list = dataclasses.field(default_factory=list)
+
+    def record(self, step: int, dt: float) -> bool:
+        """Record a step time; returns True if this step is a straggler."""
+        is_straggler = (self.n >= self.min_samples
+                        and dt > self.factor * self.ema)
+        if is_straggler:
+            self.events.append({"step": step, "dt": dt, "ema": self.ema})
+        else:  # stragglers don't poison the EMA
+            self.ema = (dt if self.n == 0
+                        else self.ema_decay * self.ema
+                        + (1 - self.ema_decay) * dt)
+            self.n += 1
+        return is_straggler
+
+    @property
+    def deadline(self) -> float:
+        return self.factor * self.ema if self.n >= self.min_samples else float("inf")
+
+
+class StepTimer:
+    def __init__(self):
+        self.t0 = None
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0

@@ -1,0 +1,91 @@
+"""Training / serving step factories: grad accumulation (microbatching),
+optimizer update with donation-friendly state threading, optional gradient
+compression hook, and the serve (decode) step used by the inference cells.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.models import transformer as T
+from repro.models.sharding import ShardingRules
+from repro.optim.adamw import AdamW, AdamWState
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def make_train_step(cfg: ArchConfig, run: RunConfig,
+                    rules: ShardingRules | None, optimizer: AdamW,
+                    grad_transform: Callable | None = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    Microbatching: batch leading dim is split into run.microbatches chunks and
+    gradients are accumulated with lax.scan — bounds activation memory while
+    keeping one optimizer update per step. grad_transform (e.g. int8
+    compression with error feedback, optim/compress.py) is applied to the
+    accumulated gradient before the update."""
+
+    def loss_fn(params, mb):
+        loss, metrics = T.forward_train(params, mb, cfg, run, rules)
+        return loss, metrics
+
+    def train_step(state: TrainState, batch):
+        nm = run.microbatches
+        if nm > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(nm, b // nm, *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / nm, g_acc, g)
+                return (g_acc, l_acc + loss / nm), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+            (grads, loss), _ = lax.scan(accum, (g0, jnp.zeros(())), mbs)
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, batch)
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt, gnorm = optimizer.update(grads, state.opt, state.params)
+        return TrainState(params, opt), {"loss": loss, "grad_norm": gnorm,
+                                         "step": opt.step}
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig, run: RunConfig,
+                    rules: ShardingRules | None, *, long_ctx: bool = False):
+    """Returns serve_step(params, cache, tokens) -> (logits, cache) — one new
+    token against a pre-filled KV/SSM cache (the decode_* shape cells)."""
+    if cfg.encoder_decoder:
+        def serve_step(params, cache, tokens):
+            return T.decode_step_encdec(params, cache, tokens, cfg, run, rules)
+    else:
+        def serve_step(params, cache, tokens):
+            return T.decode_step(params, cache, tokens, cfg, run, rules,
+                                 long_ctx=long_ctx)
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig, run: RunConfig,
+                      rules: ShardingRules | None):
+    def prefill_step(params, batch):
+        return T.forward_prefill(params, batch, cfg, run, rules)
+    return prefill_step

@@ -1,0 +1,139 @@
+"""Fault tolerance: atomic checkpoints, crash->resume equivalence, straggler
+watchdog, elastic (mesh-resize) restore including MoE layout conversion."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.manager import CheckpointManager
+from repro.core.moe_layout import dm_to_logical, logical_to_dm
+from repro.runtime.straggler import StragglerWatchdog
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (8, 4)),
+            "nested": {"b": jnp.arange(6, dtype=jnp.int32),
+                       "c": jnp.ones((3,), jnp.bfloat16)}}
+
+
+def test_ckpt_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=False)
+    state = _tree()
+    mgr.save(10, state, {"note": "x"})
+    restored, extra = mgr.restore(state)
+    assert extra["step"] == 10 and extra["note"] == "x"
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_ckpt_keep_n_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_ckpt_async_and_atomic(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3, async_save=True)
+    mgr.save(5, _tree())
+    mgr.wait()
+    assert mgr.latest_step() == 5
+    assert not list(tmp_path.glob("tmp_*")), "tmp dir must be renamed away"
+
+
+def test_crash_resume_equivalence(tmp_path):
+    """Train 12 steps with a crash at step 7 + restart == uninterrupted run
+    (exactly — data cursor and optimizer state both live in the checkpoint)."""
+    from repro.launch.train import build_and_train
+
+    class Crash(Exception):
+        pass
+
+    def hook(step):
+        if step == 7:
+            raise Crash()
+
+    kw = dict(steps=12, reduced=True, mesh_shape=None, mesh_axes=None,
+              batch=2, seq=16, lr=1e-3, log_every=1, ckpt_every=3)
+    with pytest.raises(Crash):
+        build_and_train("tinyllama-1.1b", ckpt_dir=str(tmp_path / "crash"),
+                        fault_hook=hook, **kw)
+    _, log_resumed = build_and_train(
+        "tinyllama-1.1b", ckpt_dir=str(tmp_path / "crash"), **kw)
+    _, log_clean = build_and_train(
+        "tinyllama-1.1b", ckpt_dir=str(tmp_path / "clean"), **kw)
+    assert log_resumed[-1]["step"] == log_clean[-1]["step"] == 12
+    np.testing.assert_allclose(log_resumed[-1]["loss"],
+                               log_clean[-1]["loss"], rtol=1e-4)
+
+
+def test_straggler_watchdog():
+    wd = StragglerWatchdog(factor=3.0, min_samples=3)
+    for i in range(5):
+        assert not wd.record(i, 0.10)
+    assert wd.record(5, 0.45)          # 4.5x EMA -> straggler
+    assert wd.events[0]["step"] == 5
+    assert not wd.record(6, 0.11)      # EMA not poisoned by the straggler
+    assert abs(wd.ema - 0.10) < 0.02
+
+
+@pytest.mark.parametrize("e,m1,m2", [(8, 4, 2), (16, 4, 8), (8, 2, 8),
+                                     (4, 8, 2)])
+def test_moe_layout_roundtrip(e, m1, m2):
+    d, ff = 8, 16
+    rng = np.random.default_rng(0)
+    logical = rng.normal(size=(e, d, ff)).astype(np.float32)
+    dm1 = logical_to_dm(logical, m1)
+    np.testing.assert_array_equal(dm_to_logical(dm1, e), logical)
+    # convert across mesh sizes through logical
+    dm2 = logical_to_dm(dm_to_logical(dm1, e), m2)
+    np.testing.assert_array_equal(dm_to_logical(dm2, e), logical)
+    # w2 orientation
+    logical2 = rng.normal(size=(e, ff, d)).astype(np.float32)
+    dmw2 = logical_to_dm(logical2, m1, w2=True)
+    np.testing.assert_array_equal(dm_to_logical(dmw2, e, w2=True), logical2)
+
+
+def test_elastic_restore_across_meshes(tmp_path):
+    """Save params sharded on (1,2), restore onto (2,1) — values identical."""
+    from repro.configs import get_config
+    from repro.configs.base import RunConfig
+    from repro.launch.mesh import make_mesh
+    from repro.models import transformer as T
+    from repro.models.sharding import ShardingRules
+    from repro.runtime.elastic import elastic_restore
+
+    cfg = get_config("moonshot-v1-16b-a3b").reduced()
+    run = RunConfig(dp_axes=("data",), fsdp=True)
+    mesh1 = make_mesh((1, 2), ("data", "model"))
+    rules1 = ShardingRules(mesh1, run)
+    tmpl1 = T.param_template(cfg, run, rules1)
+    params1 = T.init_params(tmpl1, jax.random.PRNGKey(0), cfg.d_model)
+
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    mgr.save(1, params1)
+
+    mesh2 = make_mesh((2, 1), ("data", "model"))
+    restored, _ = elastic_restore(str(tmp_path), cfg, run, mesh2,
+                                  old_model_size=2)
+    # logical equality of MoE weights across layouts
+    p1 = jax.tree.leaves_with_path(params1)
+    flat2 = {"/".join(str(getattr(q, 'key', q)) for q in path): leaf
+             for path, leaf in jax.tree.leaves_with_path(restored)}
+    for path, leaf in p1:
+        key = "/".join(str(getattr(q, 'key', q)) for q in path)
+        a, b = np.asarray(leaf, np.float32), np.asarray(flat2[key], np.float32)
+        if "moe" in key and key.split("/")[-1] in ("w1", "w2", "w3"):
+            w2flag = key.endswith("w2")
+            la = np.stack([dm_to_logical(a[i], cfg.n_experts, w2=w2flag)
+                           for i in range(a.shape[0])])
+            lb = np.stack([dm_to_logical(b[i], cfg.n_experts, w2=w2flag)
+                           for i in range(b.shape[0])])
+            np.testing.assert_array_equal(la, lb)
+        else:
+            np.testing.assert_array_equal(a, b)

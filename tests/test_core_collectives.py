@@ -1,0 +1,103 @@
+"""shard_map-level PK overlapped collectives vs bulk baselines vs math."""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (all_gather_matmul_baseline, matmul_all_reduce_baseline,
+                        matmul_reduce_scatter_baseline, pk_all_gather_matmul,
+                        pk_all_to_all, pk_matmul_all_reduce,
+                        pk_matmul_reduce_scatter, ring_shift)
+
+N = 4
+
+
+@pytest.fixture(scope="module")
+def sm(mesh4):
+    return partial(jax.shard_map, mesh=mesh4, check_vma=False)
+
+
+@pytest.mark.parametrize("fn,bidir", [
+    (all_gather_matmul_baseline, False),
+    (pk_all_gather_matmul, False),
+    (pk_all_gather_matmul, True),
+])
+def test_ag_matmul(sm, fn, bidir):
+    m_loc, k, n_out = 8, 16, 12
+    x = jax.random.normal(jax.random.PRNGKey(0), (N * m_loc, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n_out))
+    kwargs = {"bidirectional": bidir} if fn is pk_all_gather_matmul else {}
+    f = jax.jit(sm(lambda x, w: fn(x, w, "x", **kwargs),
+                   in_specs=(P("x"), P()), out_specs=P()))
+    np.testing.assert_allclose(np.asarray(f(x, w)), np.asarray(x @ w),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("fn", [matmul_reduce_scatter_baseline,
+                                pk_matmul_reduce_scatter])
+def test_matmul_rs(sm, fn):
+    m, k_loc, n_out = 16, 8, 12
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, N * k_loc))
+    w = jax.random.normal(jax.random.PRNGKey(1), (N * k_loc, n_out))
+    f = jax.jit(sm(lambda x, w: fn(x, w, "x"),
+                   in_specs=(P(None, "x"), P("x", None)),
+                   out_specs=P("x", None)))
+    np.testing.assert_allclose(np.asarray(f(x, w)), np.asarray(x @ w),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("fn", [matmul_all_reduce_baseline,
+                                pk_matmul_all_reduce])
+def test_matmul_ar(sm, fn):
+    m, k_loc, n_out = 16, 8, 12
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, N * k_loc))
+    w = jax.random.normal(jax.random.PRNGKey(1), (N * k_loc, n_out))
+    f = jax.jit(sm(lambda x, w: fn(x, w, "x"),
+                   in_specs=(P(None, "x"), P("x", None)), out_specs=P()))
+    np.testing.assert_allclose(np.asarray(f(x, w)), np.asarray(x @ w),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pk_all_to_all_chunked(sm):
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, N * 4, 16))
+    ref = jax.jit(sm(lambda x: pk_all_to_all(x, "x", split_axis=2,
+                                             concat_axis=1, n_chunks=1),
+                     in_specs=P(None, "x"), out_specs=P(None, None, "x")))
+    chk = jax.jit(sm(lambda x: pk_all_to_all(x, "x", split_axis=2,
+                                             concat_axis=1, n_chunks=2),
+                     in_specs=P(None, "x"), out_specs=P(None, None, "x")))
+    np.testing.assert_allclose(np.asarray(ref(x)), np.asarray(chk(x)))
+
+
+def test_ring_shift_pytree(sm):
+    x = jnp.arange(N * 3, dtype=jnp.float32).reshape(N, 3)
+    f = jax.jit(sm(lambda t: ring_shift({"a": t, "b": 2 * t}, "x"),
+                   in_specs=P("x"), out_specs=P("x")))
+    out = f(x)
+    np.testing.assert_allclose(np.asarray(out["a"]),
+                               np.asarray(jnp.roll(x, 1, axis=0)))
+    np.testing.assert_allclose(np.asarray(out["b"]),
+                               np.asarray(jnp.roll(2 * x, 1, axis=0)))
+
+
+def test_grad_through_pk_rs(sm):
+    """PK rings must be differentiable (used inside the MLP islands)."""
+    m, k_loc, n_out = 16, 8, 12
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, N * k_loc))
+    w = jax.random.normal(jax.random.PRNGKey(1), (N * k_loc, n_out))
+
+    def loss(fn):
+        def inner(x, w):
+            y = fn(x, w, "x")
+            return jax.lax.psum(jnp.sum(y ** 2), "x") / N
+        f = sm(inner, in_specs=(P(None, "x"), P("x", None)), out_specs=P())
+        return jax.jit(jax.grad(lambda w: f(x, w)))(w)
+
+    g_pk = loss(pk_matmul_reduce_scatter)
+    g_base = loss(matmul_reduce_scatter_baseline)
+    np.testing.assert_allclose(np.asarray(g_pk), np.asarray(g_base),
+                               rtol=1e-3, atol=1e-3)

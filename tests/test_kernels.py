@@ -1,0 +1,96 @@
+"""Per-kernel allclose vs the pure-jnp oracles (ref.py), sweeping shapes and
+dtypes, in TPU interpret mode on CPU."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.grouped_matmul import grouped_matmul
+from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.matmul import matmul
+from repro.kernels import ops
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128),
+                                   (128, 256, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul(m, k, n, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n), dtype)
+    got = matmul(x, w, interpret=True)
+    want = ref.matmul_ref(x, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 8)
+
+
+def test_matmul_padded_wrapper():
+    x = jax.random.normal(jax.random.PRNGKey(0), (100, 200), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (200, 72), jnp.float32)
+    got = ops.matmul(x, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.matmul_ref(x, w)),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 128),
+                                           (False, None)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(causal, window, dtype):
+    b, h, s, d = 2, 3, 256, 128
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, h, s, d), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, h, s, d), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, h, s, d), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_gqa_and_padding():
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 200, 48), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 200, 48), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 200, 48), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention_ref(q, jnp.repeat(k, 4, 1), jnp.repeat(v, 4, 1),
+                                   causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("e,c,d,f", [(4, 128, 128, 256), (2, 256, 128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_matmul(e, c, d, f, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (e, c, d), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (e, d, f), dtype)
+    got = grouped_matmul(x, w, interpret=True)
+    want = ref.grouped_matmul_ref(x, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 8)
+
+
+@pytest.mark.parametrize("b,s,d,n,chunk", [(2, 256, 64, 8, 64),
+                                           (1, 128, 32, 16, 128)])
+def test_mamba_scan(b, s, d, n, chunk):
+    key = jax.random.PRNGKey(0)
+    dt = jax.nn.softplus(jax.random.normal(key, (b, s, d)))
+    b_ssm = jax.random.normal(jax.random.PRNGKey(1), (b, s, n))
+    c_ssm = jax.random.normal(jax.random.PRNGKey(2), (b, s, n))
+    x = jax.random.normal(jax.random.PRNGKey(3), (b, s, d))
+    a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(4), (d, n)))
+    h0 = jax.random.normal(jax.random.PRNGKey(5), (b, d, n))
+    got_y, got_h = mamba_scan(dt, b_ssm, c_ssm, x, a, h0, chunk=chunk,
+                              interpret=True)
+    want_y, want_h = ref.mamba_scan_ref(dt, b_ssm, c_ssm, x, a, h0)
+    np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_h), np.asarray(want_h),
+                               rtol=1e-4, atol=1e-4)

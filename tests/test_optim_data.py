@@ -1,0 +1,114 @@
+"""Optimizer, gradient compression, schedules, data pipeline."""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.optim.adamw import AdamW, warmup_cosine
+from repro.optim.compress import (ErrorFeedbackInt8, _quant_dequant,
+                                  compressed_psum)
+
+
+def test_adamw_converges_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0, clip_norm=None)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.tree.map(lambda w: 2 * w, params)
+        params, state, _ = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_adamw_clipnorm_and_bf16_moments():
+    opt = AdamW(lr=1e-2, clip_norm=1.0, moment_dtype=jnp.bfloat16)
+    params = {"w": jnp.ones((4,))}
+    state = opt.init(params)
+    assert state.m["w"].dtype == jnp.bfloat16
+    params2, state, gnorm = opt.update({"w": jnp.full((4,), 100.0)},
+                                       state, params)
+    assert float(gnorm) == pytest.approx(200.0)
+    assert np.all(np.isfinite(np.asarray(params2["w"])))
+
+
+def test_warmup_cosine():
+    lr = warmup_cosine(1.0, warmup=10, total=100)
+    assert float(lr(jnp.array(0))) == 0.0
+    assert float(lr(jnp.array(10))) == pytest.approx(1.0, abs=0.01)
+    assert float(lr(jnp.array(100))) == pytest.approx(0.1, abs=0.02)
+
+
+def test_quant_dequant_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 3
+    deq = _quant_dequant(x)
+    scale = float(jnp.abs(x).max()) / 127.0
+    assert float(jnp.abs(deq - x).max()) <= scale * 0.51 + 1e-6
+
+
+def test_error_feedback_conservation():
+    """compressed + residual == original (+ previous residual), exactly."""
+    ef = ErrorFeedbackInt8()
+    params = {"w": jnp.zeros((100,))}
+    state = ef.init(params)
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (100,))}
+    out, state2 = ef.transform(g, state)
+    np.testing.assert_allclose(np.asarray(out["w"] + state2.residual["w"]),
+                               np.asarray(g["w"]), rtol=1e-6, atol=1e-6)
+
+
+def test_error_feedback_unbiased_over_time():
+    ef = ErrorFeedbackInt8()
+    params = {"w": jnp.zeros((64,))}
+    state = ef.init(params)
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64,)) * 1e-3}
+    acc = jnp.zeros((64,))
+    for _ in range(50):
+        out, state = ef.transform(g, state)
+        acc = acc + out["w"]
+    np.testing.assert_allclose(np.asarray(acc / 50), np.asarray(g["w"]),
+                               rtol=0.05, atol=1e-5)
+
+
+def test_compressed_psum(mesh4):
+    sm = partial(jax.shard_map, mesh=mesh4, check_vma=False)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 256))
+    want = np.asarray(x.sum(axis=0))
+    f = jax.jit(sm(lambda x: compressed_psum(x[0], "x")[None],
+                   in_specs=P("x"), out_specs=P("x")))
+    got = np.asarray(f(x))
+    for d in range(4):
+        np.testing.assert_allclose(got[d] if got.ndim == 2 else got[d, 0],
+                                   want, rtol=0.05, atol=0.05)
+
+
+def test_data_determinism_and_structure():
+    cfg = DataConfig(vocab_size=64, seq_len=32, global_batch=4, seed=7)
+    d1, d2 = SyntheticLM(cfg), SyntheticLM(cfg)
+    b1, b2 = d1.batch(13), d2.batch(13)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    assert b1["tokens"].shape == (4, 32)
+    # targets are next-token shifted & learnable (mostly rule-following)
+    t, y = np.asarray(b1["tokens"]), np.asarray(b1["targets"])
+    diffs = (y - t) % cfg.vocab_size
+    # per-sequence modal stride should dominate (noise is 2%)
+    for i in range(4):
+        vals, counts = np.unique(diffs[i], return_counts=True)
+        assert counts.max() / diffs.shape[1] > 0.9
+
+
+def test_train_loss_decreases():
+    from repro.launch.train import build_and_train
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        _, log = build_and_train(
+            "tinyllama-1.1b", steps=40, reduced=True, mesh_shape=None,
+            mesh_axes=None, batch=4, seq=32, ckpt_dir=d, lr=5e-3,
+            log_every=1, ckpt_every=100)
+    first = np.mean([m["loss"] for m in log[:5]])
+    last = np.mean([m["loss"] for m in log[-5:]])
+    assert last < first - 0.3, (first, last)

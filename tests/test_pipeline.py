@@ -1,0 +1,75 @@
+"""GPipe pipeline parallelism: schedule correctness + gradients."""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.train.pipeline import gpipe_apply, gpipe_loss
+
+N_STAGES = 4
+
+
+@pytest.fixture(scope="module")
+def pipe_mesh():
+    return jax.make_mesh((N_STAGES,), ("pipe",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def _stage_fn(w, x):
+    return jnp.tanh(x @ w)
+
+
+def test_gpipe_matches_sequential(pipe_mesh):
+    d, mb, m = 8, 4, 6
+    ws = jax.random.normal(jax.random.PRNGKey(0), (N_STAGES, d, d)) * 0.5
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, mb, d))
+
+    # sequential reference
+    want = x
+    for i in range(N_STAGES):
+        want = jnp.tanh(want @ ws[i])
+
+    f = jax.jit(jax.shard_map(
+        lambda ws_, x_: gpipe_apply(_stage_fn, ws_[0], x_, "pipe"),
+        mesh=pipe_mesh, in_specs=(P("pipe"), P()), out_specs=P(None),
+        check_vma=False))
+    # outputs valid on last stage; out_specs P(None) takes stage 0's copy —
+    # collect via the loss path instead: check with explicit gather
+    g = jax.jit(jax.shard_map(
+        lambda ws_, x_: jax.lax.all_gather(
+            gpipe_apply(_stage_fn, ws_[0], x_, "pipe"), "pipe"),
+        mesh=pipe_mesh, in_specs=(P("pipe"), P()), out_specs=P(None),
+        check_vma=False))
+    gathered = g(ws, x)                      # (n_stages, M, mb, d)
+    np.testing.assert_allclose(np.asarray(gathered[-1]), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gpipe_grads(pipe_mesh):
+    d, mb, m = 8, 4, 6
+    ws = jax.random.normal(jax.random.PRNGKey(0), (N_STAGES, d, d)) * 0.5
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, mb, d))
+    tgt = jax.random.normal(jax.random.PRNGKey(2), (m, mb, d))
+
+    def loss_fn(outs, targets):
+        return jnp.mean((outs - targets) ** 2)
+
+    piped = jax.jit(jax.grad(lambda w: jax.shard_map(
+        lambda ws_, x_, t_: gpipe_loss(_stage_fn, loss_fn, ws_[0], x_, t_,
+                                       "pipe"),
+        mesh=pipe_mesh, in_specs=(P("pipe"), P(), P()), out_specs=P(),
+        check_vma=False)(w, x, tgt)))(ws)
+
+    def seq_loss(w):
+        h = x
+        for i in range(N_STAGES):
+            h = jnp.tanh(h @ w[i])
+        return jnp.mean((h - tgt) ** 2)
+
+    want = jax.grad(seq_loss)(ws)
+    np.testing.assert_allclose(np.asarray(piped), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)

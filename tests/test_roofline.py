@@ -1,0 +1,63 @@
+"""Roofline machinery: HLO collective parsing and term construction."""
+
+import numpy as np
+
+from repro.core.costmodel import TPU_V5E
+from repro.roofline.hlo import collective_bytes
+from repro.roofline.model import build, model_flops
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[16,1024,512]{2,1,0} all-gather(%a), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar.1 = f32[4096,2048]{1,0} all-reduce(%b), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = bf16[256,128]{1,0} reduce-scatter(%c), replica_groups=[32,8]<=[256], dimensions={0}
+  %cp-start = bf16[64,64]{1,0} collective-permute-start(%d), source_target_pairs={{0,1}}
+  %a2a = f32[8,8,8]{2,1,0} all-to-all(%e), replica_groups={{0,1,2,3,4,5,6,7}}
+  %not-a-collective = f32[128]{0} add(%f, %g)
+}
+"""
+
+
+def test_collective_bytes_parsing():
+    stats = collective_bytes(HLO)
+    assert set(stats.by_kind) == {"all-gather", "all-reduce",
+                                  "reduce-scatter", "collective-permute",
+                                  "all-to-all"}
+    ag_b = 16 * 1024 * 512 * 2 * 15 / 16
+    ar_b = 2 * 4096 * 2048 * 4 * 3 / 4
+    rs_b = 256 * 128 * 2 * 7
+    cp_b = 64 * 64 * 2
+    a2a_b = 8 * 8 * 8 * 4 * 7 / 8
+    assert abs(stats.by_kind["all-gather"][0] - ag_b) < 1
+    assert abs(stats.by_kind["all-reduce"][0] - ar_b) < 1
+    assert abs(stats.by_kind["reduce-scatter"][0] - rs_b) < 1
+    assert abs(stats.by_kind["collective-permute"][0] - cp_b) < 1
+    assert abs(stats.by_kind["all-to-all"][0] - a2a_b) < 1
+    assert stats.op_count == 5
+
+
+def test_roofline_build_terms():
+    stats = collective_bytes(HLO)
+    r = build("archx", "train_4k", "16x16", flops=1e15, hbm_bytes=1e12,
+              coll=stats, model_flops_total=200e15, n_chips=256)
+    assert abs(r.t_compute - 1e15 / TPU_V5E.peak_flops_bf16) < 1e-9
+    assert abs(r.t_memory - 1e12 / TPU_V5E.hbm_bandwidth) < 1e-9
+    assert r.bottleneck in ("compute", "memory", "collective")
+    assert 0 < r.useful_ratio < 1.0
+    assert 0 <= r.roofline_fraction <= 1.0
+
+
+def test_model_flops_kinds():
+    cfg = get_config("tinyllama-1.1b")
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    pf = model_flops(cfg, SHAPES["prefill_32k"])
+    de = model_flops(cfg, SHAPES["decode_32k"])
+    assert tr == 6 * cfg.active_param_count() * 256 * 4096
+    assert pf == 2 * cfg.active_param_count() * 32 * 32768
+    assert de == 2 * cfg.active_param_count() * 128
+    # MoE uses active params
+    moe = get_config("moonshot-v1-16b-a3b")
+    assert model_flops(moe, SHAPES["train_4k"]) < \
+        6 * moe.param_count() * 256 * 4096

@@ -1,0 +1,149 @@
+"""Sequence parallelism (ring / Ulysses / SSM state ring) and expert
+parallelism (replicated + a2a dispatch) vs oracles."""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (moe_reference_dense, pk_moe_a2a, pk_moe_replicated,
+                        pk_ring_attention, pk_ulysses_attention,
+                        ring_attention_baseline, ssm_entry_states, ep_tp_split)
+
+N = 4
+
+
+@pytest.fixture(scope="module")
+def sm(mesh4):
+    return partial(jax.shard_map, mesh=mesh4, check_vma=False)
+
+
+def _ref_attn(q, k, v, causal=True, window=None):
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, s, d)
+    sc = jnp.einsum("bkgqd,bksd->bkgqs", qg, k).astype(jnp.float32) * d ** -0.5
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    keep = jnp.ones((s, s), bool)
+    if causal:
+        keep = ki <= qi
+    if window is not None:
+        keep &= ki > qi - window
+    sc = jnp.where(keep, sc, -1e30)
+    p = jax.nn.softmax(sc, -1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, s, d)
+
+
+@pytest.mark.parametrize("fn", [pk_ring_attention, ring_attention_baseline,
+                                pk_ulysses_attention])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 12),
+                                           (False, None)])
+def test_sp_attention(sm, fn, causal, window):
+    b, hq, hkv, s, d = 2, 8, 2, 32, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, hq, s, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, hkv, s, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, hkv, s, d))
+    f = jax.jit(sm(lambda q, k, v: fn(q, k, v, "x", causal=causal,
+                                      window=window),
+                   in_specs=(P(None, None, "x"),) * 3,
+                   out_specs=P(None, None, "x")))
+    np.testing.assert_allclose(np.asarray(f(q, k, v)),
+                               np.asarray(_ref_attn(q, k, v, causal, window)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ring_attention_grad(sm):
+    b, hq, hkv, s, d = 1, 4, 2, 16, 8
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, hq, s, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, hkv, s, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, hkv, s, d))
+
+    def make(fn):
+        f = sm(lambda q, k, v: jax.lax.psum(
+            jnp.sum(fn(q, k, v, "x", causal=True) ** 2), "x") / N,
+            in_specs=(P(None, None, "x"),) * 3, out_specs=P())
+        return jax.jit(jax.grad(lambda q: f(q, k, v)))(q)
+
+    np.testing.assert_allclose(np.asarray(make(pk_ring_attention)),
+                               np.asarray(make(ring_attention_baseline)),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ssm_entry_states(sm):
+    dm, ns = 6, 5
+    a = jax.random.uniform(jax.random.PRNGKey(0), (N, dm, ns),
+                           minval=0.5, maxval=0.99)
+    sx = jax.random.normal(jax.random.PRNGKey(1), (N, dm, ns))
+    h = jnp.zeros((dm, ns))
+    want = []
+    for i in range(N):
+        want.append(h)
+        h = a[i] * h + sx[i]
+    f = jax.jit(sm(lambda a, s: ssm_entry_states(a[0], s[0], "x")[None],
+                   in_specs=(P("x"), P("x")), out_specs=P("x")))
+    np.testing.assert_allclose(np.asarray(f(a, sx)),
+                               np.asarray(jnp.stack(want)), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_ep_tp_split():
+    assert ep_tp_split(64, 16) == (16, 1)
+    assert ep_tp_split(16, 16) == (16, 1)
+    assert ep_tp_split(8, 16) == (8, 2)
+    assert ep_tp_split(4, 16) == (4, 4)
+    assert ep_tp_split(8, 1) == (1, 1)
+
+
+@pytest.mark.parametrize("strategy", ["replicated", "a2a"])
+def test_moe_vs_dense_oracle(sm, strategy):
+    t, d, ff, e, k = 32, 16, 24, 8, 2
+    x = jax.random.normal(jax.random.PRNGKey(0), (t, d))
+    wr = jax.random.normal(jax.random.PRNGKey(4), (d, e))
+    w1 = jax.random.normal(jax.random.PRNGKey(5), (e, d, ff)) * 0.1
+    w3 = jax.random.normal(jax.random.PRNGKey(6), (e, d, ff)) * 0.1
+    w2 = jax.random.normal(jax.random.PRNGKey(7), (e, ff, d)) * 0.1
+    want, _ = moe_reference_dense(x, wr, w1, w3, w2, n_experts=e, top_k=k)
+    dm = lambda w: w.reshape(N, e // N, *w.shape[1:])
+    cap = float(e) / k                       # capacity covers every token
+    if strategy == "replicated":
+        f = jax.jit(sm(lambda x, wr, a, b, c: pk_moe_replicated(
+            x, wr, a[0], b[0], c[0], axis_name="x", n_experts=e, top_k=k,
+            capacity_factor=cap)[0],
+            in_specs=(P(), P(), P("x"), P("x"), P("x")), out_specs=P()))
+        got = f(x, wr, dm(w1), dm(w3), dm(w2))
+    else:
+        f = jax.jit(sm(lambda x, wr, a, b, c: pk_moe_a2a(
+            x, wr, a[0], b[0], c[0], axis_name="x", n_experts=e, top_k=k,
+            capacity_factor=cap)[0],
+            in_specs=(P("x"), P(), P("x"), P("x"), P("x")),
+            out_specs=P("x")))
+        got = f(x, wr, dm(w1), dm(w3), dm(w2))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_moe_a2a_chunked_matches_bulk(sm):
+    t, d, ff, e, k = 32, 16, 24, 8, 2
+    x = jax.random.normal(jax.random.PRNGKey(0), (t, d))
+    wr = jax.random.normal(jax.random.PRNGKey(4), (d, e))
+    w1 = jax.random.normal(jax.random.PRNGKey(5), (e, d, ff)) * 0.1
+    w3 = jax.random.normal(jax.random.PRNGKey(6), (e, d, ff)) * 0.1
+    w2 = jax.random.normal(jax.random.PRNGKey(7), (e, ff, d)) * 0.1
+    dm = lambda w: w.reshape(N, e // N, *w.shape[1:])
+
+    def run(n_chunks):
+        f = jax.jit(sm(lambda x, wr, a, b, c: pk_moe_a2a(
+            x, wr, a[0], b[0], c[0], axis_name="x", n_experts=e, top_k=k,
+            capacity_factor=2.0, n_chunks=n_chunks)[0],
+            in_specs=(P("x"), P(), P("x"), P("x"), P("x")),
+            out_specs=P("x")))
+        return np.asarray(f(x, wr, dm(w1), dm(w3), dm(w2)))
+
+    np.testing.assert_allclose(run(1), run(2), rtol=1e-5, atol=1e-5)
