@@ -1,0 +1,19 @@
+# Developer entry points. `make test` is the tier-1 gate from ROADMAP.md.
+PY ?= python
+
+.PHONY: test test-full bench quickstart deps
+
+deps:
+	$(PY) -m pip install -r requirements.txt
+
+test:
+	./scripts/test.sh
+
+test-full:          # no -x: full failure report
+	PYTHONPATH=src $(PY) -m pytest -q
+
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run
+
+quickstart:
+	PYTHONPATH=src $(PY) examples/quickstart.py

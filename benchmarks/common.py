@@ -20,15 +20,16 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P  # noqa: F401
 
+from repro import compat
+
 
 def make_mesh(shape=(8,), axes=("x",)):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def smap(mesh, fn, in_specs, out_specs):
-    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                                 out_specs=out_specs, check_vma=False))
+    return jax.jit(compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                    out_specs=out_specs, check_vma=False))
 
 
 def timeit(fn, *args, reps: int = 5, warmup: int = 2) -> float:

@@ -15,14 +15,16 @@ from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import make_mesh, row, smap, timeit
 from repro.core import costmodel as cm
-from repro.core import (all_gather_matmul_baseline, matmul_all_reduce_baseline,
-                        matmul_reduce_scatter_baseline, pk_all_gather_matmul,
-                        pk_all_to_all, pk_matmul_all_reduce,
-                        pk_matmul_reduce_scatter, pk_moe_a2a,
-                        pk_ring_attention, pk_ulysses_attention,
+from repro.core import (pk_moe_a2a, pk_ring_attention, pk_ulysses_attention,
                         ring_attention_baseline)
+from repro.core.comms import CommContext
 
 N = 8
+
+# All collectives go through the unified CommContext; benchmarks pin the
+# backend explicitly (backend="ring" vs "bulk") to measure both sides of
+# each paper figure instead of letting the cost-model policy decide.
+CTX = CommContext(axis_name="x")
 
 
 def fig2_3_transfer_granularity():
@@ -65,24 +67,13 @@ def fig6_allreduce_design_overhead():
     for size_kb in (64, 1024, 8192):
         n_el = size_kb * 1024 // 4
         x = jax.random.normal(jax.random.PRNGKey(0), (N, n_el))
-        f_bulk = smap(mesh, lambda x: jax.lax.psum(x[0], "x")[None],
+        f_bulk = smap(mesh, lambda x: CTX.psum(x[0], backend="bulk")[None],
                       P("x"), P("x"))
         us = timeit(f_bulk, x)
         row(f"fig6_allreduce/xla_psum/{size_kb}KB", us, "")
 
-        def ring_ar(x):
-            from repro.core.collectives import pk_matmul_reduce_scatter  # noqa
-            n = jax.lax.axis_size("x")
-            blk = x.shape[0] // n
-            parts = x.reshape(n, blk)
-            acc = parts[(jax.lax.axis_index("x") + 1) % n]
-            for i in range(1, n):
-                acc = jax.lax.ppermute(acc, "x",
-                                       [(j, (j - 1) % n) for j in range(n)])
-                acc = acc + parts[(jax.lax.axis_index("x") + 1 + i) % n]
-            return jax.lax.all_gather(acc, "x", tiled=True)
-
-        f_ring = smap(mesh, lambda x: ring_ar(x[0])[None], P("x"), P("x"))
+        f_ring = smap(mesh, lambda x: CTX.psum(x[0], backend="ring")[None],
+                      P("x"), P("x"))
         us2 = timeit(f_ring, x)
         row(f"fig6_allreduce/pk_ring/{size_kb}KB", us2,
             f"vs_bulk={us/max(us2,1e-9):.2f}x")
@@ -91,12 +82,15 @@ def fig6_allreduce_design_overhead():
     row("fig6_sync/remote_ns", cm.TPU_V5E.remote_sync_s * 1e6, "per_sync")
 
 
-def _gemm_overlap_bench(tag, pk_fn, base_fn, in_specs, out_specs, make_args):
+def _gemm_overlap_bench(tag, op, in_specs, out_specs, make_args, *,
+                        overlap_backend="ring"):
     mesh = make_mesh()
     for nsz in (512, 1024, 2048):
         args = make_args(nsz)
-        f_pk = smap(mesh, partial(pk_fn, axis_name="x"), in_specs, out_specs)
-        f_b = smap(mesh, partial(base_fn, axis_name="x"), in_specs, out_specs)
+        f_pk = smap(mesh, partial(getattr(CTX, op), backend=overlap_backend),
+                    in_specs, out_specs)
+        f_b = smap(mesh, partial(getattr(CTX, op), backend="bulk"),
+                   in_specs, out_specs)
         us_pk = timeit(f_pk, *args)
         us_b = timeit(f_b, *args)
         row(f"{tag}/pk/N={nsz}", us_pk, f"speedup={us_b/max(us_pk,1e-9):.2f}x")
@@ -111,11 +105,8 @@ def fig7_ag_gemm():
         w = jax.random.normal(jax.random.PRNGKey(1), (nsz // 4, nsz // 4),
                               jnp.bfloat16)
         return x, w
-    _gemm_overlap_bench(
-        "fig7_ag_gemm",
-        lambda x, w, axis_name: pk_all_gather_matmul(x, w, axis_name),
-        lambda x, w, axis_name: all_gather_matmul_baseline(x, w, axis_name),
-        (P("x"), P()), P(), make)
+    _gemm_overlap_bench("fig7_ag_gemm", "all_gather_matmul",
+                        (P("x"), P()), P(), make)
 
 
 def fig8_gemm_rs():
@@ -126,10 +117,8 @@ def fig8_gemm_rs():
         w = jax.random.normal(jax.random.PRNGKey(1),
                               (N * (nsz // 8), nsz // 4), jnp.bfloat16)
         return x, w
-    _gemm_overlap_bench(
-        "fig8_gemm_rs", pk_matmul_reduce_scatter,
-        matmul_reduce_scatter_baseline,
-        (P(None, "x"), P("x", None)), P("x", None), make)
+    _gemm_overlap_bench("fig8_gemm_rs", "matmul_reduce_scatter",
+                        (P(None, "x"), P("x", None)), P("x", None), make)
 
 
 def fig9_gemm_ar():
@@ -140,9 +129,8 @@ def fig9_gemm_ar():
         w = jax.random.normal(jax.random.PRNGKey(1),
                               (N * (nsz // 8), nsz // 4), jnp.bfloat16)
         return x, w
-    _gemm_overlap_bench(
-        "fig9_gemm_ar", pk_matmul_all_reduce, matmul_all_reduce_baseline,
-        (P(None, "x"), P("x", None)), P(), make)
+    _gemm_overlap_bench("fig9_gemm_ar", "matmul_all_reduce",
+                        (P(None, "x"), P("x", None)), P(), make)
 
 
 def fig10_ring_attention():
@@ -223,8 +211,8 @@ def fig15_17_strided_collectives():
         row(f"fig16_tensor_dim_rs/N={nsz}", timeit(f_rs, x), "")
         xa = jax.random.normal(jax.random.PRNGKey(1), (1, nsz, 16, 64),
                                jnp.bfloat16)
-        f_a2a = smap(mesh, lambda x: pk_all_to_all(x, "x", split_axis=2,
-                                                   concat_axis=1),
+        f_a2a = smap(mesh, lambda x: CTX.all_to_all(x, split_axis=2,
+                                                    concat_axis=1),
                      P(None, "x"), P(None, None, "x"))
         row(f"fig17_4d_a2a/S={nsz}", timeit(f_a2a, xa), "")
 

@@ -1,8 +1,9 @@
 """Quickstart: the ParallelKittens-on-TPU public API in 60 lines.
 
-Runs on CPU with 8 emulated devices: builds a (2, 4) data x model mesh, runs
-the PK overlapped GEMM collectives against their bulk baselines, a ring
-attention island, and one train step of a tiny assigned-architecture model.
+Runs on CPU with 8 emulated devices: builds a (2, 4) data x model mesh,
+constructs ONE CommContext, runs the overlapped GEMM collectives against
+their bulk baselines through it, a ring attention island, and one train step
+of a tiny assigned-architecture model.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/quickstart.py
@@ -16,42 +17,51 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import (pk_all_gather_matmul, all_gather_matmul_baseline,
-                        pk_matmul_reduce_scatter, pk_ring_attention,
-                        choose_gemm_collective)
+from repro import compat
+from repro.core import pk_ring_attention
+from repro.core.comms import CommContext
 from repro.launch.mesh import make_mesh
 
 mesh = make_mesh((2, 4), ("data", "model"))
-sm = partial(jax.shard_map, mesh=mesh, check_vma=False)
+sm = partial(compat.shard_map, mesh=mesh, check_vma=False)
 
-# --- 1. overlapped AG+GEMM (paper Fig. 7) vs bulk baseline ---
+# --- 1. ONE context for every collective on the model axis ---
+ctx = CommContext(axis_name="model", mesh=mesh)
+
+# overlapped AG+GEMM (paper Fig. 7): backend="ring" pins the PK schedule,
+# backend="bulk" the non-overlapped baseline; backend=None lets the §3.1.1
+# cost model decide per shape.
 x = jax.random.normal(jax.random.PRNGKey(0), (32, 64))
 w = jax.random.normal(jax.random.PRNGKey(1), (64, 48))
-pk = jax.jit(sm(lambda x, w: pk_all_gather_matmul(x, w, "model"),
+pk = jax.jit(sm(lambda x, w: ctx.all_gather_matmul(x, w, backend="ring"),
                 in_specs=(P("model"), P()), out_specs=P()))
-base = jax.jit(sm(lambda x, w: all_gather_matmul_baseline(x, w, "model"),
+base = jax.jit(sm(lambda x, w: ctx.all_gather_matmul(x, w, backend="bulk"),
                   in_specs=(P("model"), P()), out_specs=P()))
 print("AG+GEMM max |pk - baseline| =",
       jnp.abs(pk(x, w) - base(x, w)).max())
 
-# --- 2. the schedule chooser (paper §3.1.3 hiding condition) ---
-policy = choose_gemm_collective(8192, 8192, 4096, axis_size=16,
-                                kind="reduce_scatter")
+# --- 2. the policy the context routes through (paper §3.1.3) ---
+big = CommContext(axis_name="model", mesh=make_mesh((8,), ("model",)))
+policy = big.gemm_policy(8192, 8192, 4096, kind="reduce_scatter")
 print("GEMM+RS schedule:", policy.strategy, "—", policy.reason)
+print("auto backend at that shape:",
+      big.auto_gemm_backend("matmul_reduce_scatter", 8192, 8192, 4096))
 
-# --- 3. ring attention island (paper §4.2) ---
+# --- 3. ring attention island (paper §4.2) — ring_shift via the context ---
 q = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 32, 16))
 k = jax.random.normal(jax.random.PRNGKey(3), (2, 2, 32, 16))
 v = jax.random.normal(jax.random.PRNGKey(4), (2, 2, 32, 16))
-ring = jax.jit(sm(lambda q, k, v: pk_ring_attention(q, k, v, "model"),
+ring = jax.jit(sm(lambda q, k, v: pk_ring_attention(q, k, v, "model",
+                                                    ctx=ctx),
                   in_specs=(P(None, None, "model"),) * 3,
                   out_specs=P(None, None, "model")))
 print("ring attention out:", ring(q, k, v).shape)
 
 # --- 4. one real train step of an assigned arch (reduced config) ---
+import tempfile
 from repro.launch.train import build_and_train
 state, log = build_and_train(
     "tinyllama-1.1b", steps=3, reduced=True, mesh_shape=(2, 4),
     mesh_axes=("data", "model"), batch=4, seq=64,
-    ckpt_dir="/tmp/quickstart_ckpt", log_every=1)
+    ckpt_dir=tempfile.mkdtemp(prefix="quickstart_ckpt_"), log_every=1)
 print("3-step train loss:", [round(m["loss"], 3) for m in log])

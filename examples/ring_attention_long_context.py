@@ -15,12 +15,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import (pk_ring_attention, ring_attention_baseline,
                         pk_ulysses_attention, ssm_entry_states)
 from repro.launch.mesh import make_mesh
 
 mesh = make_mesh((8,), ("sp",))
-sm = partial(jax.shard_map, mesh=mesh, check_vma=False)
+sm = partial(compat.shard_map, mesh=mesh, check_vma=False)
 B, Hq, Hkv, S, D = 1, 8, 2, 8 * 512, 64
 q = jax.random.normal(jax.random.PRNGKey(0), (B, Hq, S, D), jnp.bfloat16)
 k = jax.random.normal(jax.random.PRNGKey(1), (B, Hkv, S, D), jnp.bfloat16)

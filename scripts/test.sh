@@ -1,0 +1,5 @@
+#!/usr/bin/env sh
+# Tier-1 gate (ROADMAP.md): every PR runs exactly this.
+set -eu
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"

@@ -1,0 +1,121 @@
+"""JAX version compatibility layer.
+
+The codebase targets the current JAX API (``jax.shard_map``,
+``jax.sharding.AxisType``, ``pltpu.CompilerParams`` /
+``pltpu.InterpretParams``); older releases (e.g. 0.4.x) spell these
+differently or lack them entirely. Every use of a version-sensitive symbol
+goes through this module so the rest of the tree stays on the modern
+spelling.
+
+Exports
+-------
+shard_map(f, *, mesh, in_specs, out_specs, check_vma)
+    ``jax.shard_map`` when present, else ``jax.experimental.shard_map``
+    with ``check_vma`` mapped onto the old ``check_rep`` flag.
+make_mesh(shape, axes)
+    ``jax.make_mesh`` with explicit ``AxisType.Auto`` axis types when the
+    running JAX supports them, and without the kwarg when it does not.
+CompilerParams / interpret_params() / ANY / hbm_scratch()
+    Pallas-TPU naming shims.
+HAS_TPU_INTERPRET
+    True iff this JAX ships the TPU interpret mode (per-device semaphore +
+    remote-DMA emulation on CPU). The Pallas communication kernels need it
+    to run anywhere but a real TPU.
+default_interpret()
+    The interpret-mode default every kernel wrapper shares: interpret off
+    on a real TPU, on elsewhere.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.experimental import pallas as pl  # noqa: F401  (re-export surface)
+from jax.experimental.pallas import tpu as pltpu
+
+# --- mesh construction ------------------------------------------------------
+
+try:
+    _AXIS_TYPE_AUTO = jax.sharding.AxisType.Auto
+except AttributeError:          # jax < 0.5: meshes have no axis types
+    _AXIS_TYPE_AUTO = None
+
+HAS_AXIS_TYPES = _AXIS_TYPE_AUTO is not None
+
+
+def make_mesh(shape, axes, *, devices=None):
+    """``jax.make_mesh`` across JAX versions (axis_types feature-detected)."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if HAS_AXIS_TYPES:
+        kwargs["axis_types"] = (_AXIS_TYPE_AUTO,) * len(tuple(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
+
+
+# --- named-axis helpers -----------------------------------------------------
+
+from jax import lax as _lax
+
+if hasattr(_lax, "axis_size"):
+    axis_size = _lax.axis_size
+else:                           # jax < 0.6: psum of a literal folds statically
+    def axis_size(axis_name):
+        return _lax.psum(1, axis_name)
+
+
+# --- shard_map --------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:                           # jax < 0.6: experimental, check_rep spelling
+    from jax.experimental.shard_map import shard_map as _shard_map_legacy
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map_legacy(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check_vma)
+
+
+# --- Pallas TPU naming ------------------------------------------------------
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+_InterpretParams = getattr(pltpu, "InterpretParams", None) \
+    or getattr(pltpu, "TPUInterpretParams", None)
+
+#: True iff pltpu ships the TPU interpret mode (semaphore/remote-DMA
+#: emulation). Without it the communication kernels only run on real TPUs.
+HAS_TPU_INTERPRET = _InterpretParams is not None
+
+if hasattr(pltpu, "MemorySpace"):
+    ANY = pltpu.MemorySpace.ANY
+    _HBM = getattr(pltpu.MemorySpace, "HBM", pltpu.MemorySpace.ANY)
+else:                           # jax < 0.6: TPUMemorySpace enum
+    ANY = pltpu.TPUMemorySpace.ANY
+    _HBM = getattr(pltpu.TPUMemorySpace, "HBM", pltpu.TPUMemorySpace.ANY)
+
+
+def interpret_params(**kwargs):
+    """TPU InterpretParams, or a clear error on JAX builds without it."""
+    if _InterpretParams is None:
+        raise NotImplementedError(
+            "This JAX build has no pltpu.InterpretParams — the Pallas "
+            "communication kernels can only run on a real TPU backend.")
+    return _InterpretParams(**kwargs)
+
+
+def hbm_scratch(shape, dtype):
+    """HBM-resident kernel scratch (landing buffers for ring kernels)."""
+    return _HBM(tuple(shape), dtype)
+
+
+def default_interpret() -> bool:
+    """Kernels run compiled on TPU, interpreted everywhere else."""
+    return jax.default_backend() != "tpu"
+
+
+def tpu_kernels_supported() -> bool:
+    """Can the Pallas communication kernels execute here at all?"""
+    return jax.default_backend() == "tpu" or HAS_TPU_INTERPRET

@@ -228,6 +228,8 @@ class RunConfig:
     # PK overlap features (paper technique on/off per site)
     pk_overlap: bool = True                  # use pk_* overlapped collectives
     pk_bidirectional: bool = False           # 2-link bidirectional rings
+    comm_backend: str | None = None          # pin one CommContext backend
+                                             # ("bulk"/"ring"/...; None=policy)
     sp_attention: Literal["ring", "ulysses", "none"] = "ring"
     moe_strategy: Literal["replicated", "a2a"] = "replicated"
     moe_chunks: int = 1

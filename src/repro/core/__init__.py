@@ -7,16 +7,19 @@
 # moe        — expert parallelism (paper §4.3)
 # schedule   — overlap policy search (paper §3.1.3 SM-partitioning analogue)
 #
+# comms      — the unified CommContext entry point (policy-driven dispatch)
+#
 # The Pallas-level twins of these (device-initiated RDMA, semaphores, the
 # LCSC template) live in repro.kernels.pk_comm / repro.kernels.collective_matmul.
 
 from repro.core import costmodel
 from repro.core.pgl import PGL, barrier_pgl
-from repro.core.collectives import (
+from repro.core.comms import (
+    CommContext, collective_id, register_collective,
     all_gather_matmul_baseline, pk_all_gather_matmul,
     matmul_reduce_scatter_baseline, pk_matmul_reduce_scatter,
     matmul_all_reduce_baseline, pk_matmul_all_reduce,
-    all_to_all_baseline, pk_all_to_all, ring_shift,
+    all_to_all_baseline, pk_all_to_all, pk_psum_ring, ring_shift,
 )
 from repro.core.ring_attention import (
     pk_ring_attention, ring_attention_baseline, ssm_entry_states,
@@ -25,4 +28,5 @@ from repro.core.ulysses import pk_ulysses_attention, ulysses_attention_baseline
 from repro.core.moe import (
     pk_moe_replicated, pk_moe_a2a, moe_reference_dense, ep_tp_split, capacity,
 )
-from repro.core.schedule import OverlapPolicy, choose_gemm_collective
+from repro.core.schedule import (OverlapPolicy, choose_a2a_chunks,
+                                 choose_gemm_collective)

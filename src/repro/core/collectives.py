@@ -1,233 +1,39 @@
-"""PK overlapped collective×compute operators (paper §4.1), JAX/shard_map level.
+"""DEPRECATED module kept for import compatibility.
 
-Each operator comes in two flavors:
+The overlapped collective×compute operators moved to ``repro.core.comms``,
+which also provides the policy-driven ``CommContext`` entry point that new
+code should use instead of these free functions:
 
-  * ``*_baseline`` — the non-overlapped reference (bulk XLA collective followed
-    by the GEMM), the analogue of the paper's cuBLAS+NCCL baseline;
-  * ``pk_*`` — the ParallelKittens schedule: the collective is decomposed into
-    per-shard ``lax.ppermute`` steps that are *data-independent* of the current
-    GEMM chunk, so XLA's scheduler runs them on the ICI DMA engines while the
-    MXU computes the previous chunk. This is the TPU realization of the paper's
-    inter-SM overlapping (§3.1.3): TPU DMA engines are the "communication SMs",
-    and they cost zero compute occupancy.
+    from repro.core.comms import CommContext
+    ctx = CommContext(axis_name="model", mesh=mesh)
+    y = ctx.all_gather_matmul(x, w)          # was: pk_all_gather_matmul(...)
 
-All ``pk_*`` functions MUST be called inside ``shard_map`` with `axis_name`
-bound. Ring direction conventions:
-
-  * "send right": perm (j -> j+1); after i hops device d holds shard (d-i)%n.
-  * "send left":  perm (j -> j-1); after i hops device d holds shard (d+i)%n.
-
-The bidirectional variants split the payload in half and run both directions
-concurrently — on a 2-D torus this uses two link-pairs and halves T_comm
-(a beyond-paper optimization; recorded separately in EXPERIMENTS.md §Perf).
+Importing names from here keeps working but emits a DeprecationWarning.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Callable
+import warnings
 
-import jax
-import jax.numpy as jnp
-from jax import lax
+from repro.core import comms as _comms
 
+_MOVED = (
+    "all_gather_matmul_baseline", "pk_all_gather_matmul",
+    "matmul_reduce_scatter_baseline", "pk_matmul_reduce_scatter",
+    "matmul_all_reduce_baseline", "pk_matmul_all_reduce",
+    "all_to_all_baseline", "pk_all_to_all", "pk_psum_ring", "ring_shift",
+    # internals some callers poked at
+    "_perm_right", "_perm_left", "_axis_info",
+)
 
-def _perm_right(n: int):
-    return [(j, (j + 1) % n) for j in range(n)]
-
-
-def _perm_left(n: int):
-    return [(j, (j - 1) % n) for j in range(n)]
-
-
-def _axis_info(axis_name):
-    n = lax.axis_size(axis_name)
-    d = lax.axis_index(axis_name)
-    return n, d
+__all__ = list(_MOVED)
 
 
-# ---------------------------------------------------------------------------
-# AG + GEMM (paper Fig. 7) — tensor-parallel first projection.
-# ---------------------------------------------------------------------------
-
-def all_gather_matmul_baseline(x: jax.Array, w: jax.Array, axis_name: str,
-                               *, preferred=jnp.float32) -> jax.Array:
-    """x: (m_loc, k) row-sharded over axis; w: (k, n_loc) local TP shard.
-    Returns (m, n_loc): bulk all-gather then a single GEMM."""
-    x_full = lax.all_gather(x, axis_name, axis=0, tiled=True)
-    return jnp.dot(x_full, w, preferred_element_type=preferred).astype(x.dtype)
-
-
-def pk_all_gather_matmul(x: jax.Array, w: jax.Array, axis_name: str, *,
-                         bidirectional: bool = False,
-                         preferred=jnp.float32) -> jax.Array:
-    """Overlapped AG+GEMM: rotate x shards around the ring; GEMM each shard on
-    arrival. The ppermute for step i+1 is independent of step i's GEMM, so the
-    transfer hides under compute (paper §3.1.3 intra-/inter-SM overlap)."""
-    n, d = _axis_info(axis_name)
-    m_loc, _ = x.shape
-    n_out = w.shape[1]
-    out = jnp.zeros((n * m_loc, n_out), dtype=x.dtype)
-
-    if not bidirectional or n % 2 != 0:
-        cur = x
-        for i in range(n):
-            src = (d - i) % n  # owner of the shard currently held
-            y = jnp.dot(cur, w, preferred_element_type=preferred).astype(x.dtype)
-            out = lax.dynamic_update_slice(out, y, (src * m_loc, 0))
-            if i < n - 1:
-                cur = lax.ppermute(cur, axis_name, _perm_right(n))
-        return out
-
-    # Bidirectional: each device's shard is split in half; the top halves
-    # travel the right-going ring, the bottom halves the left-going ring.
-    # Each of the n-1 hops moves half a shard per direction over two
-    # link-pairs, halving T_comm versus the unidirectional ring.
-    assert m_loc % 2 == 0, m_loc
-    half = m_loc // 2
-    cur_r, cur_l = jnp.split(x, 2, axis=0)
-    for i in range(n):
-        src_r = (d - i) % n  # right-ring: after i hops we hold (d-i)'s half
-        src_l = (d + i) % n
-        y_r = jnp.dot(cur_r, w, preferred_element_type=preferred).astype(x.dtype)
-        out = lax.dynamic_update_slice(out, y_r, (src_r * m_loc, 0))
-        y_l = jnp.dot(cur_l, w, preferred_element_type=preferred).astype(x.dtype)
-        out = lax.dynamic_update_slice(out, y_l, (src_l * m_loc + half, 0))
-        if i < n - 1:
-            cur_r = lax.ppermute(cur_r, axis_name, _perm_right(n))
-            cur_l = lax.ppermute(cur_l, axis_name, _perm_left(n))
-    return out
-
-
-# ---------------------------------------------------------------------------
-# GEMM + reduce-scatter (paper Fig. 8 / Table 3) — TP second projection.
-# ---------------------------------------------------------------------------
-
-def matmul_reduce_scatter_baseline(x: jax.Array, w: jax.Array, axis_name: str,
-                                   *, preferred=jnp.float32) -> jax.Array:
-    """x: (m, k_loc); w: (k_loc, n). Returns (m_loc, n) = RS(x @ w).
-    Bulk: full partial GEMM then one reduce-scatter."""
-    partial = jnp.dot(x, w, preferred_element_type=preferred)
-    out = lax.psum_scatter(partial, axis_name, scatter_dimension=0, tiled=True)
-    return out.astype(x.dtype)
-
-
-def pk_matmul_reduce_scatter(x: jax.Array, w: jax.Array, axis_name: str, *,
-                             preferred=jnp.float32) -> jax.Array:
-    """Overlapped GEMM+RS (accumulate-and-forward ring).
-
-    At step i, device d computes the partial block destined for device
-    (d+1+i) % n, adds the accumulator arriving from the right, and forwards
-    left. The final step computes d's own block — no trailing permute. The
-    per-step GEMM hides the per-step transfer whenever K >= s*R/(2*B)
-    (costmodel.hiding_threshold_k)."""
-    n, d = _axis_info(axis_name)
-    m = x.shape[0]
-    assert m % n == 0, (m, n)
-    m_blk = m // n
-
-    def partial_block(b):
-        xb = lax.dynamic_slice_in_dim(x, b * m_blk, m_blk, axis=0)
-        return jnp.dot(xb, w, preferred_element_type=preferred)
-
-    # the ring payload travels in the activation dtype (bf16): half the ICI
-    # bytes of an f32 accumulator; each hop's add still runs in f32
-    acc = partial_block((d + 1) % n).astype(x.dtype)
-    for i in range(1, n):
-        acc = lax.ppermute(acc, axis_name, _perm_left(n))
-        acc = (acc.astype(preferred)
-               + partial_block((d + 1 + i) % n)).astype(x.dtype)
-    return acc
-
-
-# ---------------------------------------------------------------------------
-# GEMM + all-reduce (paper Fig. 9).
-# ---------------------------------------------------------------------------
-
-def matmul_all_reduce_baseline(x: jax.Array, w: jax.Array, axis_name: str,
-                               *, preferred=jnp.float32) -> jax.Array:
-    partial = jnp.dot(x, w, preferred_element_type=preferred)
-    return lax.psum(partial, axis_name).astype(x.dtype)
-
-
-def pk_matmul_all_reduce(x: jax.Array, w: jax.Array, axis_name: str, *,
-                         preferred=jnp.float32) -> jax.Array:
-    """Overlapped GEMM+AR. TPU ICI has no in-network reduction (DESIGN §2.1),
-    so the paper's switch-offloaded AR is re-derived as overlapped
-    RS(accumulate-on-arrival) + AG: same 2*(N-1)/N per-device traffic, and the
-    RS half hides under the GEMM."""
-    n, _ = _axis_info(axis_name)
-    rs = pk_matmul_reduce_scatter(x, w, axis_name, preferred=preferred)
-    return lax.all_gather(rs, axis_name, axis=0, tiled=True)
-
-
-# ---------------------------------------------------------------------------
-# Fine-grained all-to-all (paper Fig. 11 / 17) — Ulysses-style head<->sequence
-# re-sharding without host-side reshape/copy.
-# ---------------------------------------------------------------------------
-
-def all_to_all_baseline(x: jax.Array, axis_name: str, *, split_axis: int,
-                        concat_axis: int) -> jax.Array:
-    return lax.all_to_all(x, axis_name, split_axis=split_axis,
-                          concat_axis=concat_axis, tiled=True)
-
-
-def pk_all_to_all(x: jax.Array, axis_name: str, *, split_axis: int,
-                  concat_axis: int, n_chunks: int = 1) -> jax.Array:
-    """Chunked a2a: splitting the payload lets downstream compute start on the
-    first chunk while later chunks are still in flight (inter-SM analogue).
-    With n_chunks=1 this is the native tiled all-to-all, which — unlike NCCL
-    (paper §4.2) — already operates on the strided layout with no reshape.
-
-    Chunks are cut along a *bystander* dim (neither split nor concat) so the
-    chunked result is bit-identical to the bulk op."""
-    if n_chunks == 1:
-        return all_to_all_baseline(x, axis_name, split_axis=split_axis,
-                                   concat_axis=concat_axis)
-    chunk_axis = next((d for d in range(x.ndim)
-                       if d not in (split_axis, concat_axis)
-                       and x.shape[d] % n_chunks == 0 and x.shape[d] > 1),
-                      None)
-    if chunk_axis is None:
-        return all_to_all_baseline(x, axis_name, split_axis=split_axis,
-                                   concat_axis=concat_axis)
-    chunks = jnp.split(x, n_chunks, axis=chunk_axis)
-    outs = [lax.all_to_all(c, axis_name, split_axis=split_axis,
-                           concat_axis=concat_axis, tiled=True) for c in chunks]
-    return jnp.concatenate(outs, axis=chunk_axis)
-
-
-def pk_psum_ring(y: jax.Array, axis_name: str) -> jax.Array:
-    """all-reduce as an explicit accumulate-and-forward ring (RS) + ring AG,
-    built from ppermutes — the TPU re-derivation of the paper's in-network
-    AR (DESIGN §2.1): same 2(N-1)/N per-device traffic, but the payload
-    keeps its dtype (XLA:CPU promotes bf16 all-reduce to f32 — 2x bytes)
-    and each hop is independently overlappable with compute."""
-    n, d = _axis_info(axis_name)
-    lead = y.shape[0]
-    if n == 1:
-        return y
-    if lead % n != 0:
-        return lax.psum(y, axis_name)
-    blk = lead // n
-    parts = y.reshape(n, blk, *y.shape[1:])
-    acc = parts[(d + 1) % n]
-    for i in range(1, n):
-        acc = lax.ppermute(acc, axis_name, _perm_left(n))
-        acc = acc + parts[(d + 1 + i) % n]
-    out = lax.all_gather(acc, axis_name, axis=0, tiled=True)
-    return out.reshape(y.shape)
-
-
-# ---------------------------------------------------------------------------
-# Ring shift — the PK `store_async`-to-neighbor pattern at jax level; the
-# Pallas-level twin lives in kernels/pk_comm.py.
-# ---------------------------------------------------------------------------
-
-def ring_shift(x, axis_name: str, *, reverse: bool = False):
-    """One-hop ring rotation of a pytree (KV blocks in ring attention, SSM
-    states in sequence-parallel Mamba)."""
-    n = lax.axis_size(axis_name)
-    perm = _perm_left(n) if reverse else _perm_right(n)
-    return jax.tree_util.tree_map(
-        lambda t: lax.ppermute(t, axis_name, perm), x)
+def __getattr__(name: str):
+    if name in _MOVED:
+        warnings.warn(
+            f"repro.core.collectives.{name} moved to repro.core.comms; "
+            "prefer the CommContext API (repro.core.comms.CommContext)",
+            DeprecationWarning, stacklevel=2)
+        return getattr(_comms, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

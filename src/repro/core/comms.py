@@ -1,0 +1,670 @@
+"""Unified policy-driven communication API — ``CommContext``.
+
+The paper's core claim is that eight primitives and **one programming
+template** suffice for peak multi-GPU kernels. This module is that template's
+host-side face: every communication op the repo implements is reachable
+through one object, and *which* implementation runs is decided by the §3.1.1
+cost model at trace time — not hardcoded at each call site.
+
+    from repro.core.comms import CommContext
+
+    ctx = CommContext(axis_name="model", mesh=mesh)        # construct once
+    y = ctx.matmul_reduce_scatter(x, w)                    # policy-routed
+    y = ctx.matmul_reduce_scatter(x, w, backend="ring")    # explicit override
+
+Ops (uniform signature: operands, then ``backend=None`` plus op kwargs):
+
+    ==============================  =======================================
+    op                              backends
+    ==============================  =======================================
+    ``all_gather_matmul(x, w)``     bulk | ring | ring_bidir | fused
+    ``matmul_reduce_scatter(x, w)`` bulk | ring | fused
+    ``matmul_all_reduce(x, w)``     bulk | ring | fused
+    ``all_to_all(x)``               bulk | chunked
+    ``psum(x)``                     bulk | ring
+    ``all_gather(x)``               bulk | fused
+    ``reduce_scatter(x)``           bulk | fused
+    ``ring_shift(x)``               bulk | fused
+    ==============================  =======================================
+
+``bulk``    — the non-overlapped XLA collective (paper's cuBLAS+NCCL analogue)
+``ring``    — per-shard ``ppermute`` pipeline; transfers hide under the MXU
+``ring_bidir`` — both ring directions at once (2 link-pairs, halves T_comm)
+``chunked`` — payload split so downstream compute overlaps later chunks
+``fused``   — single Pallas kernel with intra-kernel RDMA overlap (LCSC
+              template; needs a TPU backend or TPU interpret mode)
+
+Dispatch rules (``backend=None``): GEMM×collective ops go through
+``schedule.choose_gemm_collective`` — bulk when the GEMM is too small to
+cover the ring's sync overhead, ``ring_bidir`` when the axis is even and
+bidirectional rings are allowed, ``ring`` otherwise, ``fused`` on a real TPU
+when the operands fit VMEM. ``all_to_all`` picks its chunk count from
+``schedule.choose_a2a_chunks``. A ``backend=`` argument (per call) or
+``CommContext(backend=...)`` (per context) always wins over the policy.
+
+This module also owns the **collective-id allocator**: every Pallas
+communication kernel gets its ``CompilerParams(collective_id=...)`` from
+``collective_id(name)`` instead of a hand-numbered constant, so two kernels
+can never collide on a barrier-semaphore id.
+
+The jax-level implementations (formerly ``repro.core.collectives``) live at
+the bottom of this module and remain importable under their old names from
+``repro.core.collectives`` (deprecated shim) and ``repro.core``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import compat
+from repro.core import costmodel as cm
+from repro.core.schedule import (OverlapPolicy, choose_a2a_chunks,
+                                 choose_gemm_collective)
+
+__all__ = [
+    "CommContext", "collective_id", "register_collective", "OP_BACKENDS",
+    # jax-level implementations (canonical home since the comms redesign)
+    "all_gather_matmul_baseline", "pk_all_gather_matmul",
+    "matmul_reduce_scatter_baseline", "pk_matmul_reduce_scatter",
+    "matmul_all_reduce_baseline", "pk_matmul_all_reduce",
+    "all_to_all_baseline", "pk_all_to_all", "pk_psum_ring", "ring_shift",
+]
+
+
+# ---------------------------------------------------------------------------
+# Central collective-id allocator (replaces hand-numbered 0..5 constants).
+# ---------------------------------------------------------------------------
+
+_COLLECTIVE_IDS: dict[str, int] = {}
+
+# Registered eagerly, in a fixed order, so every process of an SPMD job
+# assigns identical ids no matter which kernel it happens to trace first.
+_CANONICAL_KERNELS = (
+    "ring_all_gather",
+    "ring_reduce_scatter",
+    "p2p_ring_shift",
+    "ag_matmul_fused",
+    "matmul_rs_fused",
+    "lcsc_ring_all_gather",
+)
+
+
+def register_collective(name: str) -> int:
+    """Assign the next id to a named collective kernel.
+
+    MUST be called at kernel-definition (module import) time: import order
+    is deterministic across the processes of an SPMD job, trace order is
+    not — two hosts tracing conditionally-reached kernels in different
+    orders would otherwise map the same id to different kernels."""
+    if name not in _COLLECTIVE_IDS:
+        _COLLECTIVE_IDS[name] = len(_COLLECTIVE_IDS)
+    return _COLLECTIVE_IDS[name]
+
+
+def collective_id(name: str) -> int:
+    """Process-wide stable ``collective_id`` for a registered kernel.
+
+    Pallas requires concurrently-running collective kernels to carry distinct
+    ids (they select the barrier semaphore). Hand-numbering them across files
+    is a collision waiting to happen; kernels call this instead. Unregistered
+    names are an error — silently allocating here would hand out
+    trace-order-dependent ids, the exact cross-process mismatch this
+    allocator exists to prevent."""
+    if name not in _COLLECTIVE_IDS:
+        raise KeyError(
+            f"collective kernel {name!r} is not registered; call "
+            "repro.core.comms.register_collective(name) at module import "
+            "time (trace-time allocation would give different ids on "
+            "different SPMD processes)")
+    return _COLLECTIVE_IDS[name]
+
+
+def registered_collectives() -> dict[str, int]:
+    """Snapshot of the current name -> id assignment (diagnostics/tests)."""
+    return dict(_COLLECTIVE_IDS)
+
+
+for _name in _CANONICAL_KERNELS:
+    register_collective(_name)
+
+
+# ---------------------------------------------------------------------------
+# The op/backend registry. "fused" backends additionally require
+# compat.tpu_kernels_supported() at run time.
+# ---------------------------------------------------------------------------
+
+OP_BACKENDS: dict[str, tuple[str, ...]] = {
+    "all_gather_matmul": ("bulk", "ring", "ring_bidir", "fused"),
+    "matmul_reduce_scatter": ("bulk", "ring", "fused"),
+    "matmul_all_reduce": ("bulk", "ring", "fused"),
+    "all_to_all": ("bulk", "chunked"),
+    "psum": ("bulk", "ring"),
+    "all_gather": ("bulk", "fused"),
+    "reduce_scatter": ("bulk", "fused"),
+    "ring_shift": ("bulk", "fused"),
+}
+
+_FUSED = ("fused",)
+
+_ALL_BACKENDS = {b for bs in OP_BACKENDS.values() for b in bs}
+
+
+@dataclasses.dataclass(frozen=True)
+class CommContext:
+    """One handle for every overlapped collective over a mesh axis.
+
+    Construct once per (mesh, axis); methods are safe to call both at the
+    jit level and inside ``shard_map`` (with ``axis_name`` bound). When
+    ``mesh`` is None the context must be used inside ``shard_map`` so the
+    axis size can be read from the binding.
+
+    ``backend`` set here applies to every call (benchmarks pin "bulk" /
+    "ring" to measure both sides); per-call ``backend=`` overrides even that.
+    ``interpret`` controls Pallas interpret-mode dispatch for the fused
+    kernels: None = interpret everywhere but a real TPU.
+    """
+
+    axis_name: str
+    mesh: Any = None
+    hw: cm.HardwareSpec = cm.TPU_V5E
+    backend: str | None = None
+    interpret: bool | None = None
+    allow_bidir: bool = True
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def axis_size(self) -> int:
+        if self.mesh is not None:
+            return self.mesh.shape[self.axis_name]
+        return compat.axis_size(self.axis_name)
+
+    def available_backends(self, op: str) -> tuple[str, ...]:
+        """Backends of `op` that can actually execute in this process."""
+        names = OP_BACKENDS[op]
+        if compat.tpu_kernels_supported():
+            return names
+        return tuple(b for b in names if b not in _FUSED)
+
+    # -- dispatch plumbing -------------------------------------------------
+
+    def _interpret_mode(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return compat.default_interpret()
+
+    def _resolve(self, op: str, override: str | None, auto) -> str:
+        be = override if override is not None else self.backend
+        if be in (None, "auto"):
+            be = auto()
+        elif override is None and be not in OP_BACKENDS[op]:
+            # A context-wide pin (RunConfig.comm_backend) names a real
+            # backend that this particular op doesn't implement (e.g.
+            # "ring_bidir" pinned, matmul_all_reduce called): fall back to
+            # the policy for this op rather than crashing the whole run.
+            # Unknown names are still an error — a typo'd pin must not
+            # silently run the policy everywhere.
+            if be not in _ALL_BACKENDS:
+                raise ValueError(
+                    f"unknown backend {be!r}; known backends: "
+                    f"{sorted(_ALL_BACKENDS)}")
+            be = auto()
+        if be not in OP_BACKENDS[op]:
+            raise ValueError(
+                f"op {op!r} has no backend {be!r}; "
+                f"available: {OP_BACKENDS[op]}")
+        if be in _FUSED and not compat.tpu_kernels_supported():
+            raise NotImplementedError(
+                f"backend 'fused' for {op!r} needs a TPU backend or a JAX "
+                "with pltpu.InterpretParams (TPU interpret mode)")
+        return be
+
+    def _shape_guard(self, op: str, be: str, override: str | None,
+                     ok: bool, constraint: str, fallback: str = "bulk") -> str:
+        """Ring/fused schedules have shape divisibility requirements the
+        bulk path doesn't. A per-call ``backend=`` that violates one is a
+        caller bug — raise with the constraint spelled out (not the bare
+        ``assert`` inside the impl). A context-pinned backend (e.g.
+        ``RunConfig.comm_backend`` A/B runs) degrades to `fallback` instead,
+        the way the policy does, so decode-shaped calls keep working."""
+        if ok or be == fallback:
+            return be
+        if override is not None:
+            raise ValueError(
+                f"{op}(backend={be!r}) requires {constraint} "
+                f"(axis {self.axis_name!r} has size {self.axis_size})")
+        return fallback
+
+    def _prefer_fused(self, *operands, out_bytes: int) -> bool:
+        """Auto-pick the fused Pallas kernel only on a real TPU and only when
+        the whole-operand VMEM residency the kernels assume actually fits."""
+        if jax.default_backend() != "tpu" or self._interpret_mode():
+            return False
+        footprint = sum(x.size * x.dtype.itemsize for x in operands) + out_bytes
+        return footprint <= self.hw.vmem_bytes
+
+    def gemm_policy(self, m: int, n: int, k: int, *, kind: str,
+                    dtype_bytes: int = 2) -> OverlapPolicy:
+        """The §3.1.3 schedule decision for a fused GEMM×collective of global
+        GEMM shape (m, n, k) over this context's axis. Pure / trace-free.
+
+        Only the AG+GEMM op implements the bidirectional ring, so only the
+        "all_gather" kind may credit the cost model with the second
+        link-pair — otherwise hidden_fraction would be 2x optimistic for
+        RS/AR and the policy would report a strategy no backend implements.
+        """
+        allow_bidir = self.allow_bidir and kind == "all_gather"
+        return choose_gemm_collective(
+            m, n, k, axis_size=self.axis_size, kind=kind,
+            dtype_bytes=dtype_bytes, hw=self.hw, allow_bidir=allow_bidir)
+
+    _GEMM_KIND = {"all_gather_matmul": "all_gather",
+                  "matmul_reduce_scatter": "reduce_scatter",
+                  "matmul_all_reduce": "all_reduce"}
+
+    def auto_gemm_backend(self, op: str, m: int, n: int, k: int, *,
+                          dtype_bytes: int = 2, fused_ok: bool = False,
+                          bidir_ok: bool = True) -> str:
+        """The backend ``backend=None`` resolves to for a GEMM×collective of
+        global shape (m, n, k) — the policy mapping itself, trace-free, so
+        dispatch is unit-testable without running the GEMM. ``fused_ok`` /
+        ``bidir_ok`` carry the operand-level constraints (VMEM fit, even
+        local rows) the real call sites compute from their arrays."""
+        pol = self.gemm_policy(m, n, k, kind=self._GEMM_KIND[op],
+                               dtype_bytes=dtype_bytes)
+        if not pol.enabled:
+            return "bulk"
+        if fused_ok:
+            return "fused"
+        if (op == "all_gather_matmul" and pol.strategy == "ring_bidir"
+                and bidir_ok):
+            return "ring_bidir"
+        return "ring"
+
+    # -- GEMM × collective ops --------------------------------------------
+
+    def all_gather_matmul(self, x, w, *, backend: str | None = None,
+                          preferred=jnp.float32):
+        """x: (m_loc, k) row-sharded; w: (k, n_loc) local. -> (m, n_loc)."""
+        n_dev = self.axis_size
+        m_loc, k = x.shape
+        n_out = w.shape[1]
+
+        def auto() -> str:
+            return self.auto_gemm_backend(
+                "all_gather_matmul", m_loc * n_dev, n_out, k,
+                dtype_bytes=x.dtype.itemsize,
+                fused_ok=self._prefer_fused(
+                    x, w, out_bytes=m_loc * n_dev * n_out * 4),
+                bidir_ok=(m_loc % 2 == 0))
+
+        be = self._resolve("all_gather_matmul", backend, auto)
+        if be == "ring_bidir":
+            be = self._shape_guard(
+                "all_gather_matmul", be, backend,
+                ok=(m_loc % 2 == 0 or n_dev % 2 != 0),
+                constraint="an even local row count (m_loc % 2 == 0)",
+                fallback="ring")
+        if be == "bulk":
+            return all_gather_matmul_baseline(x, w, self.axis_name,
+                                              preferred=preferred)
+        if be in ("ring", "ring_bidir"):
+            return pk_all_gather_matmul(x, w, self.axis_name,
+                                        bidirectional=(be == "ring_bidir"),
+                                        preferred=preferred)
+        from repro.kernels import ops
+        return ops.pk_ag_matmul(x, w, self.axis_name,
+                                interpret=self._interpret_mode()
+                                ).astype(x.dtype)
+
+    def matmul_reduce_scatter(self, x, w, *, backend: str | None = None,
+                              preferred=jnp.float32):
+        """x: (m, k_loc); w: (k_loc, n). -> (m_loc, n) = RS(x @ w)."""
+        n_dev = self.axis_size
+        m, k_loc = x.shape
+        n_out = w.shape[1]
+
+        def auto() -> str:
+            if m % n_dev != 0:
+                return "bulk"            # ring needs m divisible by the axis
+            return self.auto_gemm_backend(
+                "matmul_reduce_scatter", m, n_out, k_loc,
+                dtype_bytes=x.dtype.itemsize,
+                fused_ok=self._prefer_fused(
+                    x, w, out_bytes=(m // n_dev) * n_out * 4))
+
+        be = self._resolve("matmul_reduce_scatter", backend, auto)
+        if be != "bulk":
+            be = self._shape_guard(
+                "matmul_reduce_scatter", be, backend, ok=(m % n_dev == 0),
+                constraint="m divisible by the axis size")
+        if be == "bulk":
+            return matmul_reduce_scatter_baseline(x, w, self.axis_name,
+                                                  preferred=preferred)
+        if be == "ring":
+            return pk_matmul_reduce_scatter(x, w, self.axis_name,
+                                            preferred=preferred)
+        from repro.kernels import ops
+        return ops.pk_matmul_rs(x, w, self.axis_name,
+                                interpret=self._interpret_mode()
+                                ).astype(x.dtype)
+
+    def matmul_all_reduce(self, x, w, *, backend: str | None = None,
+                          preferred=jnp.float32):
+        """x: (m, k_loc); w: (k_loc, n). -> (m, n) = AR(x @ w)."""
+        n_dev = self.axis_size
+        m, k_loc = x.shape
+        n_out = w.shape[1]
+
+        def auto() -> str:
+            if m % n_dev != 0:
+                return "bulk"
+            return self.auto_gemm_backend(
+                "matmul_all_reduce", m, n_out, k_loc,
+                dtype_bytes=x.dtype.itemsize,
+                fused_ok=self._prefer_fused(
+                    x, w, out_bytes=(m // n_dev) * n_out * 4))
+
+        be = self._resolve("matmul_all_reduce", backend, auto)
+        if be != "bulk":
+            be = self._shape_guard(
+                "matmul_all_reduce", be, backend, ok=(m % n_dev == 0),
+                constraint="m divisible by the axis size")
+        if be == "bulk":
+            return matmul_all_reduce_baseline(x, w, self.axis_name,
+                                              preferred=preferred)
+        if be == "ring":
+            return pk_matmul_all_reduce(x, w, self.axis_name,
+                                        preferred=preferred)
+        from repro.kernels import ops
+        rs = ops.pk_matmul_rs(x, w, self.axis_name,
+                              interpret=self._interpret_mode()).astype(x.dtype)
+        return lax.all_gather(rs, self.axis_name, axis=0, tiled=True)
+
+    # -- data-movement ops -------------------------------------------------
+
+    def all_to_all(self, x, *, split_axis: int, concat_axis: int,
+                   backend: str | None = None, n_chunks: int | None = None,
+                   downstream_compute_s: float = 0.0):
+        """Re-sharding all-to-all; "chunked" overlaps downstream compute."""
+
+        def auto() -> str:
+            if n_chunks is not None:
+                return "chunked" if n_chunks > 1 else "bulk"
+            c = choose_a2a_chunks(
+                x.size * x.dtype.itemsize, axis_size=self.axis_size,
+                downstream_compute_s=downstream_compute_s, hw=self.hw)
+            return "chunked" if c > 1 else "bulk"
+
+        be = self._resolve("all_to_all", backend, auto)
+        if be == "bulk":
+            return all_to_all_baseline(x, self.axis_name,
+                                       split_axis=split_axis,
+                                       concat_axis=concat_axis)
+        c = n_chunks if n_chunks is not None else choose_a2a_chunks(
+            x.size * x.dtype.itemsize, axis_size=self.axis_size,
+            downstream_compute_s=downstream_compute_s, hw=self.hw)
+        return pk_all_to_all(x, self.axis_name, split_axis=split_axis,
+                             concat_axis=concat_axis, n_chunks=max(c, 2))
+
+    def psum(self, x, *, backend: str | None = None):
+        """All-reduce. "ring" keeps the payload in its dtype (bf16 halves the
+        bytes vs XLA's f32-promoted psum) and each hop overlaps compute."""
+
+        def auto() -> str:
+            if (x.ndim >= 1 and x.shape[0] % self.axis_size == 0
+                    and x.dtype == jnp.bfloat16):
+                return "ring"
+            return "bulk"
+
+        be = self._resolve("psum", backend, auto)
+        if be == "ring":
+            be = self._shape_guard(
+                "psum", be, backend,
+                ok=(x.ndim >= 1 and x.shape[0] % self.axis_size == 0),
+                constraint="shape[0] divisible by the axis size")
+        if be == "bulk":
+            return lax.psum(x, self.axis_name)
+        return pk_psum_ring(x, self.axis_name)
+
+    def all_gather(self, x, *, axis: int = 0, backend: str | None = None):
+        """Tiled all-gather along `axis`."""
+        be = self._resolve("all_gather", backend, lambda: "bulk")
+        if be == "bulk":
+            return lax.all_gather(x, self.axis_name, axis=axis, tiled=True)
+        from repro.kernels import ops
+        stacked = ops.pk_all_gather(x, self.axis_name,
+                                    interpret=self._interpret_mode())
+        return jnp.concatenate([stacked[i] for i in range(self.axis_size)],
+                               axis=axis)
+
+    def reduce_scatter(self, x, *, axis: int = 0,
+                       backend: str | None = None):
+        """Tiled reduce-scatter along `axis`."""
+        be = self._resolve("reduce_scatter", backend, lambda: "bulk")
+        if be == "bulk":
+            return lax.psum_scatter(x, self.axis_name,
+                                    scatter_dimension=axis, tiled=True)
+        if axis != 0:
+            raise ValueError("fused reduce_scatter supports axis=0 only")
+        n_dev = self.axis_size
+        from repro.kernels import ops
+        parts = x.reshape(n_dev, x.shape[0] // n_dev, *x.shape[1:])
+        return ops.pk_reduce_scatter(parts, self.axis_name,
+                                     interpret=self._interpret_mode())
+
+    def ring_shift(self, x, *, reverse: bool = False,
+                   backend: str | None = None):
+        """One-hop ring rotation of a pytree."""
+        be = self._resolve("ring_shift", backend, lambda: "bulk")
+        if be == "bulk":
+            return ring_shift(x, self.axis_name, reverse=reverse)
+        if reverse:
+            raise ValueError("fused ring_shift sends right only")
+        from repro.kernels import ops
+        return jax.tree_util.tree_map(
+            lambda t: ops.pk_ring_shift(t, self.axis_name,
+                                        interpret=self._interpret_mode()), x)
+
+
+# ---------------------------------------------------------------------------
+# jax-level implementations (paper §4.1), moved here from core/collectives.
+# Each pk_* function MUST be called inside shard_map with `axis_name` bound.
+# Ring direction conventions:
+#   "send right": perm (j -> j+1); after i hops device d holds shard (d-i)%n.
+#   "send left":  perm (j -> j-1); after i hops device d holds shard (d+i)%n.
+# ---------------------------------------------------------------------------
+
+
+def _perm_right(n: int):
+    return [(j, (j + 1) % n) for j in range(n)]
+
+
+def _perm_left(n: int):
+    return [(j, (j - 1) % n) for j in range(n)]
+
+
+def _axis_info(axis_name):
+    n = compat.axis_size(axis_name)
+    d = lax.axis_index(axis_name)
+    return n, d
+
+
+# -- AG + GEMM (paper Fig. 7) — tensor-parallel first projection. -----------
+
+def all_gather_matmul_baseline(x: jax.Array, w: jax.Array, axis_name: str,
+                               *, preferred=jnp.float32) -> jax.Array:
+    """x: (m_loc, k) row-sharded over axis; w: (k, n_loc) local TP shard.
+    Returns (m, n_loc): bulk all-gather then a single GEMM."""
+    x_full = lax.all_gather(x, axis_name, axis=0, tiled=True)
+    return jnp.dot(x_full, w, preferred_element_type=preferred).astype(x.dtype)
+
+
+def pk_all_gather_matmul(x: jax.Array, w: jax.Array, axis_name: str, *,
+                         bidirectional: bool = False,
+                         preferred=jnp.float32) -> jax.Array:
+    """Overlapped AG+GEMM: rotate x shards around the ring; GEMM each shard on
+    arrival. The ppermute for step i+1 is independent of step i's GEMM, so the
+    transfer hides under compute (paper §3.1.3 intra-/inter-SM overlap)."""
+    n, d = _axis_info(axis_name)
+    m_loc, _ = x.shape
+    n_out = w.shape[1]
+    out = jnp.zeros((n * m_loc, n_out), dtype=x.dtype)
+
+    if not bidirectional or n % 2 != 0:
+        cur = x
+        for i in range(n):
+            src = (d - i) % n  # owner of the shard currently held
+            y = jnp.dot(cur, w, preferred_element_type=preferred).astype(x.dtype)
+            out = lax.dynamic_update_slice(out, y, (src * m_loc, 0))
+            if i < n - 1:
+                cur = lax.ppermute(cur, axis_name, _perm_right(n))
+        return out
+
+    # Bidirectional: each device's shard is split in half; the top halves
+    # travel the right-going ring, the bottom halves the left-going ring.
+    # Each of the n-1 hops moves half a shard per direction over two
+    # link-pairs, halving T_comm versus the unidirectional ring.
+    assert m_loc % 2 == 0, m_loc
+    half = m_loc // 2
+    cur_r, cur_l = jnp.split(x, 2, axis=0)
+    for i in range(n):
+        src_r = (d - i) % n  # right-ring: after i hops we hold (d-i)'s half
+        src_l = (d + i) % n
+        y_r = jnp.dot(cur_r, w, preferred_element_type=preferred).astype(x.dtype)
+        out = lax.dynamic_update_slice(out, y_r, (src_r * m_loc, 0))
+        y_l = jnp.dot(cur_l, w, preferred_element_type=preferred).astype(x.dtype)
+        out = lax.dynamic_update_slice(out, y_l, (src_l * m_loc + half, 0))
+        if i < n - 1:
+            cur_r = lax.ppermute(cur_r, axis_name, _perm_right(n))
+            cur_l = lax.ppermute(cur_l, axis_name, _perm_left(n))
+    return out
+
+
+# -- GEMM + reduce-scatter (paper Fig. 8 / Table 3) — TP second projection. --
+
+def matmul_reduce_scatter_baseline(x: jax.Array, w: jax.Array, axis_name: str,
+                                   *, preferred=jnp.float32) -> jax.Array:
+    """x: (m, k_loc); w: (k_loc, n). Returns (m_loc, n) = RS(x @ w).
+    Bulk: full partial GEMM then one reduce-scatter."""
+    partial = jnp.dot(x, w, preferred_element_type=preferred)
+    out = lax.psum_scatter(partial, axis_name, scatter_dimension=0, tiled=True)
+    return out.astype(x.dtype)
+
+
+def pk_matmul_reduce_scatter(x: jax.Array, w: jax.Array, axis_name: str, *,
+                             preferred=jnp.float32) -> jax.Array:
+    """Overlapped GEMM+RS (accumulate-and-forward ring).
+
+    At step i, device d computes the partial block destined for device
+    (d+1+i) % n, adds the accumulator arriving from the right, and forwards
+    left. The final step computes d's own block — no trailing permute. The
+    per-step GEMM hides the per-step transfer whenever K >= s*R/(2*B)
+    (costmodel.hiding_threshold_k)."""
+    n, d = _axis_info(axis_name)
+    m = x.shape[0]
+    assert m % n == 0, (m, n)
+    m_blk = m // n
+
+    def partial_block(b):
+        xb = lax.dynamic_slice_in_dim(x, b * m_blk, m_blk, axis=0)
+        return jnp.dot(xb, w, preferred_element_type=preferred)
+
+    # the ring payload travels in the activation dtype (bf16): half the ICI
+    # bytes of an f32 accumulator; each hop's add still runs in f32
+    acc = partial_block((d + 1) % n).astype(x.dtype)
+    for i in range(1, n):
+        acc = lax.ppermute(acc, axis_name, _perm_left(n))
+        acc = (acc.astype(preferred)
+               + partial_block((d + 1 + i) % n)).astype(x.dtype)
+    return acc
+
+
+# -- GEMM + all-reduce (paper Fig. 9). ---------------------------------------
+
+def matmul_all_reduce_baseline(x: jax.Array, w: jax.Array, axis_name: str,
+                               *, preferred=jnp.float32) -> jax.Array:
+    partial = jnp.dot(x, w, preferred_element_type=preferred)
+    return lax.psum(partial, axis_name).astype(x.dtype)
+
+
+def pk_matmul_all_reduce(x: jax.Array, w: jax.Array, axis_name: str, *,
+                         preferred=jnp.float32) -> jax.Array:
+    """Overlapped GEMM+AR. TPU ICI has no in-network reduction (DESIGN §2.1),
+    so the paper's switch-offloaded AR is re-derived as overlapped
+    RS(accumulate-on-arrival) + AG: same 2*(N-1)/N per-device traffic, and the
+    RS half hides under the GEMM."""
+    n, _ = _axis_info(axis_name)
+    rs = pk_matmul_reduce_scatter(x, w, axis_name, preferred=preferred)
+    return lax.all_gather(rs, axis_name, axis=0, tiled=True)
+
+
+# -- Fine-grained all-to-all (paper Fig. 11 / 17). ----------------------------
+
+def all_to_all_baseline(x: jax.Array, axis_name: str, *, split_axis: int,
+                        concat_axis: int) -> jax.Array:
+    return lax.all_to_all(x, axis_name, split_axis=split_axis,
+                          concat_axis=concat_axis, tiled=True)
+
+
+def pk_all_to_all(x: jax.Array, axis_name: str, *, split_axis: int,
+                  concat_axis: int, n_chunks: int = 1) -> jax.Array:
+    """Chunked a2a: splitting the payload lets downstream compute start on the
+    first chunk while later chunks are still in flight (inter-SM analogue).
+    With n_chunks=1 this is the native tiled all-to-all, which — unlike NCCL
+    (paper §4.2) — already operates on the strided layout with no reshape.
+
+    Chunks are cut along a *bystander* dim (neither split nor concat) so the
+    chunked result is bit-identical to the bulk op."""
+    if n_chunks == 1:
+        return all_to_all_baseline(x, axis_name, split_axis=split_axis,
+                                   concat_axis=concat_axis)
+    chunk_axis = next((d for d in range(x.ndim)
+                       if d not in (split_axis, concat_axis)
+                       and x.shape[d] % n_chunks == 0 and x.shape[d] > 1),
+                      None)
+    if chunk_axis is None:
+        return all_to_all_baseline(x, axis_name, split_axis=split_axis,
+                                   concat_axis=concat_axis)
+    chunks = jnp.split(x, n_chunks, axis=chunk_axis)
+    outs = [lax.all_to_all(c, axis_name, split_axis=split_axis,
+                           concat_axis=concat_axis, tiled=True) for c in chunks]
+    return jnp.concatenate(outs, axis=chunk_axis)
+
+
+def pk_psum_ring(y: jax.Array, axis_name: str) -> jax.Array:
+    """all-reduce as an explicit accumulate-and-forward ring (RS) + ring AG,
+    built from ppermutes — the TPU re-derivation of the paper's in-network
+    AR (DESIGN §2.1): same 2(N-1)/N per-device traffic, but the payload
+    keeps its dtype (XLA:CPU promotes bf16 all-reduce to f32 — 2x bytes)
+    and each hop is independently overlappable with compute."""
+    n, d = _axis_info(axis_name)
+    lead = y.shape[0]
+    if n == 1:
+        return y
+    if lead % n != 0:
+        return lax.psum(y, axis_name)
+    blk = lead // n
+    parts = y.reshape(n, blk, *y.shape[1:])
+    acc = parts[(d + 1) % n]
+    for i in range(1, n):
+        acc = lax.ppermute(acc, axis_name, _perm_left(n))
+        acc = acc + parts[(d + 1 + i) % n]
+    out = lax.all_gather(acc, axis_name, axis=0, tiled=True)
+    return out.reshape(y.shape)
+
+
+# -- Ring shift — the PK `store_async`-to-neighbor pattern at jax level. -----
+
+def ring_shift(x, axis_name: str, *, reverse: bool = False):
+    """One-hop ring rotation of a pytree (KV blocks in ring attention, SSM
+    states in sequence-parallel Mamba)."""
+    n = compat.axis_size(axis_name)
+    perm = _perm_left(n) if reverse else _perm_right(n)
+    return jax.tree_util.tree_map(
+        lambda t: lax.ppermute(t, axis_name, perm), x)

@@ -28,6 +28,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
+from repro.core.comms import CommContext
+
 
 def ep_tp_split(n_experts: int, model_size: int) -> tuple[int, int]:
     """(ep, tp_ff): expert-parallel degree and per-expert FFN TP degree."""
@@ -90,14 +94,15 @@ def _expert_ffn(x_sel, w1, w3, w2, *, act=jax.nn.silu):
 def pk_moe_replicated(x, router_w, w1, w3, w2, *, axis_name: str,
                       n_experts: int, top_k: int,
                       capacity_factor: float = 1.25, norm_topk: bool = True,
-                      n_chunks: int = 1, ring_combine: bool = False):
+                      n_chunks: int = 1, ring_combine: bool = False,
+                      ctx: CommContext | None = None):
     """Replicated-dispatch MoE. Call INSIDE shard_map with `axis_name` bound.
 
     x: (T, d) tokens (replicated over axis). w1/w3: (E_loc, d, ff_loc),
     w2: (E_loc, ff_loc, d) — this rank's device-major slice. Returns
     ((T, d) output, aux_loss).
     """
-    model_size = lax.axis_size(axis_name)
+    model_size = compat.axis_size(axis_name)
     r_idx = lax.axis_index(axis_name)
     ep, tp_ff = ep_tp_split(n_experts, model_size)
     e_loc = n_experts // ep
@@ -126,17 +131,16 @@ def pk_moe_replicated(x, router_w, w1, w3, w2, *, axis_name: str,
     # One psum folds together both the E_loc partition across ep groups and
     # the ff_loc partial sums across the tp_ff subgroups. Reduce in the
     # activation dtype (bf16): halves the dominant EP collective vs f32.
-    if ring_combine:
-        from repro.core.collectives import pk_psum_ring
-        y = pk_psum_ring(y.astype(x.dtype), axis_name)
-    else:
-        y = lax.psum(y.astype(x.dtype), axis_name)
+    ctx = ctx if ctx is not None else CommContext(axis_name=axis_name)
+    y = ctx.psum(y.astype(x.dtype),
+                 backend="ring" if ring_combine else "bulk")
     return y, aux_load_balance_loss(r, n_experts)
 
 
 def pk_moe_a2a(x, router_w, w1, w3, w2, *, axis_name: str, n_experts: int,
                top_k: int, capacity_factor: float = 1.25,
-               norm_topk: bool = True, n_chunks: int = 1):
+               norm_topk: bool = True, n_chunks: int = 1,
+               ctx: CommContext | None = None):
     """Paper-faithful a2a-dispatch MoE (GShard schedule) over `axis_name`
     (typically the data axis). Experts sharded E_loc = E / axis_size; w1/w3:
     (E_loc, d, ff), w2: (E_loc, ff, d). Tokens x: (T, d) local to this rank.
@@ -144,7 +148,8 @@ def pk_moe_a2a(x, router_w, w1, w3, w2, *, axis_name: str, n_experts: int,
     n_chunks > 1 splits the capacity dim so chunk i's expert GEMM overlaps
     chunk i+1's all-to-all (the PK schedule; n_chunks=1 is the bulk baseline).
     """
-    n = lax.axis_size(axis_name)
+    ctx = ctx if ctx is not None else CommContext(axis_name=axis_name)
+    n = compat.axis_size(axis_name)
     assert n_experts % n == 0, (n_experts, n)
     e_loc = n_experts // n
     t, d = x.shape
@@ -163,14 +168,15 @@ def pk_moe_a2a(x, router_w, w1, w3, w2, *, axis_name: str, n_experts: int,
             n, e_loc, cc, d)
         # tiled a2a with split==concat==0 is the "transpose" collective:
         # dim0 becomes the SOURCE rank, payload = tokens for MY experts.
-        x_recv = lax.all_to_all(x_send, axis_name, split_axis=0,
-                                concat_axis=0, tiled=True)
+        # (bulk per chunk: the overlap granularity is the capacity loop)
+        x_recv = ctx.all_to_all(x_send, split_axis=0, concat_axis=0,
+                                backend="bulk")
         x_mine = x_recv.transpose(1, 0, 2, 3).reshape(e_loc, n * cc, d)
         out = _expert_ffn(x_mine.astype(x.dtype), w1, w3, w2)  # (E_loc,n*Cc,d)
         out = (out.astype(x.dtype).reshape(e_loc, n, cc, d)
                .transpose(1, 0, 2, 3))                  # back to [src, j, c]
-        back = lax.all_to_all(out, axis_name, split_axis=0, concat_axis=0,
-                              tiled=True)               # [owner_rank, j, c]
+        back = ctx.all_to_all(out, split_axis=0, concat_axis=0,
+                              backend="bulk")           # [owner_rank, j, c]
         y_back = back.reshape(n_experts, cc, d)         # e = r*e_loc + j ✓
         wgt = (sel_gate[:, sl] * valid[:, sl].astype(jnp.float32))[..., None]
         return idx_c, y_back.astype(jnp.float32) * wgt

@@ -23,7 +23,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.collectives import ring_shift
+from repro import compat
+
+from repro.core.comms import CommContext
 
 NEG_INF = -1e30
 
@@ -65,7 +67,8 @@ def _causal_block_mask(sq: int, skv: int, q_offset, kv_offset,
 
 
 def pk_ring_attention(q, k, v, axis_name: str, *, causal: bool = True,
-                      window: int | None = None, scale: float | None = None):
+                      window: int | None = None, scale: float | None = None,
+                      ctx: CommContext | None = None):
     """q: (B, Hq, S_loc, D); k, v: (B, Hkv, S_loc, D), sequence sharded over
     `axis_name`. Returns (B, Hq, S_loc, D) in q.dtype.
 
@@ -76,7 +79,8 @@ def pk_ring_attention(q, k, v, axis_name: str, *, causal: bool = True,
     skipped *compute*; transfers still go all the way around to keep the ring
     uniform).
     """
-    n = lax.axis_size(axis_name)
+    ctx = ctx if ctx is not None else CommContext(axis_name=axis_name)
+    n = compat.axis_size(axis_name)
     d = lax.axis_index(axis_name)
     b, hq, s_loc, dim = q.shape
     hkv = k.shape[1]
@@ -96,7 +100,7 @@ def pk_ring_attention(q, k, v, axis_name: str, *, causal: bool = True,
         # Start the next hop before consuming the current block so the
         # transfer overlaps this step's attention compute.
         if i < n - 1:
-            kv = ring_shift(kv, axis_name)
+            kv = ctx.ring_shift(kv)
 
         def full_block(args):
             m_, l_, o_ = args
@@ -161,7 +165,8 @@ def ring_attention_baseline(q, k, v, axis_name: str, *, causal: bool = True,
 # attention-free layers; DESIGN §6, falcon-mamba row).
 # ---------------------------------------------------------------------------
 
-def ssm_entry_states(chunk_decay, chunk_exit, axis_name: str):
+def ssm_entry_states(chunk_decay, chunk_exit, axis_name: str,
+                     ctx: CommContext | None = None):
     """Sequence-parallel linear-SSM state exchange.
 
     For a diagonal SSM ``h_t = a_t * h_{t-1} + b_t``, a sequence chunk acts on
@@ -176,12 +181,13 @@ def ssm_entry_states(chunk_decay, chunk_exit, axis_name: str):
     one (..., D, N) state pair — negligible ICI traffic, so all heavy chunk
     compute stays fully parallel (the SSM analogue of Ring Attention).
     """
-    n = lax.axis_size(axis_name)
+    ctx = ctx if ctx is not None else CommContext(axis_name=axis_name)
+    n = compat.axis_size(axis_name)
     d = lax.axis_index(axis_name)
     h_entry = jnp.zeros_like(chunk_exit)
     cA, cS = chunk_decay, chunk_exit          # window [d, d]
     for i in range(1, n):
-        cA_in, cS_in = ring_shift((cA, cS), axis_name)  # window [d-i .. d-1]
+        cA_in, cS_in = ctx.ring_shift((cA, cS))  # window [d-i .. d-1]
         h_entry = jnp.where(d == i, cS_in, h_entry)
         # compose: incoming window first, then our chunk -> window [d-i .. d]
         cA, cS = chunk_decay * cA_in, chunk_decay * cS_in + chunk_exit

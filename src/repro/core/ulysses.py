@@ -15,7 +15,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.collectives import pk_all_to_all
+from repro import compat
+
+from repro.core.comms import CommContext
 from repro.core.ring_attention import _block_update, _causal_block_mask, NEG_INF
 
 
@@ -46,30 +48,30 @@ def _repeat_kv_to(k, n_target_heads):
 
 def pk_ulysses_attention(q, k, v, axis_name: str, *, causal: bool = True,
                          window: int | None = None, scale: float | None = None,
-                         n_chunks: int = 1):
+                         n_chunks: int = 1, ctx: CommContext | None = None):
     """q: (B, Hq, S_loc, D); k, v: (B, Hkv, S_loc, D), sequence sharded.
 
     a2a reshards to head-sharded full-sequence, attends, reshards back. If
     Hkv < axis size (GQA), KV heads are repeated to the axis size first
-    (Megatron-style replication; DESIGN §4).
+    (Megatron-style replication; DESIGN §4). The a2a goes through
+    ``CommContext.all_to_all`` — chunked when `n_chunks` > 1 so attention on
+    early head chunks overlaps the transfer of later ones.
     """
-    n = lax.axis_size(axis_name)
+    ctx = ctx if ctx is not None else CommContext(axis_name=axis_name)
+    n = compat.axis_size(axis_name)
     b, hq, s_loc, dim = q.shape
     assert hq % n == 0, (hq, n)
     kr = _repeat_kv_to(k, max(k.shape[1], n))
     vr = _repeat_kv_to(v, max(v.shape[1], n))
     # (B, H, S_loc, D): split head dim across axis, gather sequence.
-    q_h = pk_all_to_all(q, axis_name, split_axis=1, concat_axis=2,
-                        n_chunks=n_chunks)
-    k_h = pk_all_to_all(kr, axis_name, split_axis=1, concat_axis=2,
-                        n_chunks=n_chunks)
-    v_h = pk_all_to_all(vr, axis_name, split_axis=1, concat_axis=2,
-                        n_chunks=n_chunks)
+    q_h = ctx.all_to_all(q, split_axis=1, concat_axis=2, n_chunks=n_chunks)
+    k_h = ctx.all_to_all(kr, split_axis=1, concat_axis=2, n_chunks=n_chunks)
+    v_h = ctx.all_to_all(vr, split_axis=1, concat_axis=2, n_chunks=n_chunks)
     out_h = _local_attention(q_h, k_h, v_h, causal=causal, window=window,
                              scale=scale)
     # Back: split sequence, gather heads.
-    return pk_all_to_all(out_h, axis_name, split_axis=2, concat_axis=1,
-                         n_chunks=n_chunks)
+    return ctx.all_to_all(out_h, split_axis=2, concat_axis=1,
+                          n_chunks=n_chunks)
 
 
 def ulysses_attention_baseline(q, k, v, axis_name: str, *, causal: bool = True,

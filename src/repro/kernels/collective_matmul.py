@@ -24,6 +24,9 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+from repro.core.comms import collective_id
+
 from repro.kernels.pk_comm import (pk_neighbor_barrier, pk_signal,
                                    pk_store_async, pk_wait)
 
@@ -90,14 +93,14 @@ def ag_matmul_fused(x, w, axis_name: str, *, interpret=True):
     (n_dev*m_loc, n) — all-gather fused into the GEMM. Call inside shard_map.
     Whole-operand VMEM residency: sized for benchmark/validation shapes; the
     production path tiles K via kernels/matmul.py blocking (DESIGN §5)."""
-    n_dev = lax.axis_size(axis_name)
+    n_dev = compat.axis_size(axis_name)
     m_loc, k = x.shape
     n = w.shape[1]
     return pl.pallas_call(
         functools.partial(_ag_mm_kernel, axis_name=axis_name, n_dev=n_dev),
-        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
-                  pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)],
-        out_specs=pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        in_specs=[pl.BlockSpec(memory_space=compat.ANY),
+                  pl.BlockSpec(memory_space=compat.ANY)],
+        out_specs=pl.BlockSpec(memory_space=compat.ANY),
         out_shape=jax.ShapeDtypeStruct((n_dev, m_loc, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((2, m_loc, k), x.dtype),
                         pltpu.VMEM((k, n), w.dtype),
@@ -106,8 +109,8 @@ def ag_matmul_fused(x, w, axis_name: str, *, interpret=True):
                         pltpu.SemaphoreType.DMA((n_dev - 1,)),
                         pltpu.SemaphoreType.REGULAR((2,)),
                         pltpu.SemaphoreType.DMA],
-        compiler_params=pltpu.CompilerParams(collective_id=3),
-        interpret=pltpu.InterpretParams() if interpret else False,
+        compiler_params=compat.CompilerParams(collective_id=collective_id("ag_matmul_fused")),
+        interpret=compat.interpret_params() if interpret else False,
     )(x, w)
 
 
@@ -175,7 +178,7 @@ def _mm_rs_kernel(x_ref, w_ref, out_ref, landing, acc_v, p_v, l_v, x_v, w_v,
 def matmul_rs_fused(x, w, axis_name: str, *, interpret=True):
     """x: (m, k_loc); w: (k_loc, n) (K sharded over the axis). Returns the
     reduce-scattered (m/n_dev, n) fp32 shard. Call inside shard_map."""
-    n_dev = lax.axis_size(axis_name)
+    n_dev = compat.axis_size(axis_name)
     m, k_loc = x.shape
     n = w.shape[1]
     assert m % n_dev == 0
@@ -183,12 +186,11 @@ def matmul_rs_fused(x, w, axis_name: str, *, interpret=True):
     return pl.pallas_call(
         functools.partial(_mm_rs_kernel, axis_name=axis_name, n_dev=n_dev,
                           m_blk=m_blk),
-        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
-                  pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)],
-        out_specs=pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        in_specs=[pl.BlockSpec(memory_space=compat.ANY),
+                  pl.BlockSpec(memory_space=compat.ANY)],
+        out_specs=pl.BlockSpec(memory_space=compat.ANY),
         out_shape=jax.ShapeDtypeStruct((m_blk, n), jnp.float32),
-        scratch_shapes=[pltpu.MemorySpace.HBM(shape=(2, m_blk, n),
-                                              dtype=jnp.float32),
+        scratch_shapes=[compat.hbm_scratch((2, m_blk, n), jnp.float32),
                         pltpu.VMEM((m_blk, n), jnp.float32),
                         pltpu.VMEM((m_blk, n), jnp.float32),
                         pltpu.VMEM((m_blk, n), jnp.float32),
@@ -198,6 +200,6 @@ def matmul_rs_fused(x, w, axis_name: str, *, interpret=True):
                         pltpu.SemaphoreType.DMA((n_dev - 1,)),
                         pltpu.SemaphoreType.REGULAR((2,)),
                         pltpu.SemaphoreType.DMA],
-        compiler_params=pltpu.CompilerParams(collective_id=4),
-        interpret=pltpu.InterpretParams() if interpret else False,
+        compiler_params=compat.CompilerParams(collective_id=collective_id("matmul_rs_fused")),
+        interpret=compat.interpret_params() if interpret else False,
     )(x, w)

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
@@ -93,7 +95,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
         scratch_shapes=[pltpu.VMEM((blq, 1), jnp.float32),
                         pltpu.VMEM((blq, 1), jnp.float32),
                         pltpu.VMEM((blq, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kf, vf)

@@ -31,6 +31,9 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+from repro.core.comms import collective_id
+
 from repro.kernels.pk_comm import pk_neighbor_barrier, pk_store_async
 
 
@@ -106,7 +109,7 @@ def lcsc_kernel(*, n_steps_from_ndev: Callable[[int], int],
 # ---------------------------------------------------------------------------
 
 def lcsc_ring_all_gather(x, axis_name: str, *, interpret=True):
-    n_dev = lax.axis_size(axis_name)
+    n_dev = compat.axis_size(axis_name)
 
     def prologue(c):             # stage the local shard into my PGL slot
         c.local_copy(c.in_refs[0], c.out_ref.at[c.my_id])
@@ -125,12 +128,12 @@ def lcsc_ring_all_gather(x, axis_name: str, *, interpret=True):
 
     return pl.pallas_call(
         kernel,
-        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)],
-        out_specs=pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        in_specs=[pl.BlockSpec(memory_space=compat.ANY)],
+        out_specs=pl.BlockSpec(memory_space=compat.ANY),
         out_shape=jax.ShapeDtypeStruct((n_dev, *x.shape), x.dtype),
         scratch_shapes=[pltpu.SemaphoreType.DMA((n_dev - 1,)),
                         pltpu.SemaphoreType.DMA((n_dev - 1,)),
                         pltpu.SemaphoreType.DMA],
-        compiler_params=pltpu.CompilerParams(collective_id=5),
-        interpret=pltpu.InterpretParams() if interpret else False,
+        compiler_params=compat.CompilerParams(collective_id=collective_id("lcsc_ring_all_gather")),
+        interpret=compat.interpret_params() if interpret else False,
     )(x)

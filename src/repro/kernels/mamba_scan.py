@@ -13,6 +13,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _scan_kernel(dt_ref, b_ref, c_ref, x_ref, a_ref, h0_ref, y_ref,
                  hlast_ref, h_ref, *, cs: int, n_chunks: int):
@@ -75,7 +77,7 @@ def mamba_scan(dt, b_ssm, c_ssm, x, a, h0, *, chunk: int = 128,
         out_shape=[jax.ShapeDtypeStruct((bsz, s, d), jnp.float32),
                    jax.ShapeDtypeStruct((bsz, d, n), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((d, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(dt, b_ssm, c_ssm, x, a, h0)

@@ -10,6 +10,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.kernels import ref
 from repro.kernels.collective_matmul import ag_matmul_fused, matmul_rs_fused
 from repro.kernels.flash_attention import flash_attention as _flash
@@ -21,7 +22,7 @@ from repro.kernels.pk_comm import (p2p_ring_shift, ring_all_gather,
 
 
 def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+    return not compat.default_interpret()
 
 
 def _pad_to(x, mult: int, axis: int):
@@ -105,7 +106,7 @@ def pk_all_reduce(x, axis_name, *, interpret=None):
     """all_reduce = reduce_scatter ∘ all_gather (no in-network reduction on
     ICI — DESIGN §2.1; same 2(N-1)/N per-device traffic as switch-offload)."""
     import jax.lax as lax
-    n = lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     blk, rem = divmod(x.shape[0], n)
     if rem != 0:  # pad leading dim to a multiple of n
         x = jnp.pad(x, [(0, n - rem)] + [(0, 0)] * (x.ndim - 1))

@@ -36,6 +36,9 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+from repro.core.comms import collective_id
+
 
 # ---------------------------------------------------------------------------
 # Primitives (used inside Pallas kernels)
@@ -75,7 +78,7 @@ def pk_wait(sem, expected: int = 1):
 def pk_neighbor_barrier(axis_name: str, sem=None):
     """barrier with both ring neighbors — required before the first RDMA of a
     ring schedule so landing buffers are live (paper's barrier primitive)."""
-    n = lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     my = lax.axis_index(axis_name)
     left = lax.rem(my + n - 1, jnp.int32(n))
     right = lax.rem(my + 1, jnp.int32(n))
@@ -122,18 +125,18 @@ def _ag_kernel(x_ref, out_ref, send_sem, recv_sem, copy_sem, *,
 def ring_all_gather(x, axis_name: str, *, mesh=None, interpret=True):
     """x: (blk, ...) local shard -> (n_dev, blk, ...) full array, via one-way
     RDMA hops into pre-allocated slots. Call inside shard_map."""
-    n_dev = lax.axis_size(axis_name)
+    n_dev = compat.axis_size(axis_name)
     out_shape = jax.ShapeDtypeStruct((n_dev, *x.shape), x.dtype)
     return pl.pallas_call(
         functools.partial(_ag_kernel, axis_name=axis_name, n_dev=n_dev),
-        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)],
-        out_specs=pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        in_specs=[pl.BlockSpec(memory_space=compat.ANY)],
+        out_specs=pl.BlockSpec(memory_space=compat.ANY),
         out_shape=out_shape,
         scratch_shapes=[pltpu.SemaphoreType.DMA((n_dev - 1,)),
                         pltpu.SemaphoreType.DMA((n_dev - 1,)),
                         pltpu.SemaphoreType.DMA],
-        compiler_params=pltpu.CompilerParams(collective_id=0),
-        interpret=pltpu.InterpretParams() if interpret else False,
+        compiler_params=compat.CompilerParams(collective_id=collective_id("ring_all_gather")),
+        interpret=compat.interpret_params() if interpret else False,
     )(x)
 
 
@@ -201,22 +204,22 @@ def ring_reduce_scatter(x, axis_name: str, *, interpret=True):
     """x: (n_dev, blk, ...) per-destination partials -> (blk, ...) reduced
     shard for this device. Accumulate-and-forward ring; landing buffers are
     double-buffered PGL scratch slots (no staging copies)."""
-    n_dev = lax.axis_size(axis_name)
+    n_dev = compat.axis_size(axis_name)
     blk_shape = x.shape[1:]
     return pl.pallas_call(
         functools.partial(_rs_kernel, axis_name=axis_name, n_dev=n_dev),
-        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)],
-        out_specs=pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        in_specs=[pl.BlockSpec(memory_space=compat.ANY)],
+        out_specs=pl.BlockSpec(memory_space=compat.ANY),
         out_shape=jax.ShapeDtypeStruct(blk_shape, x.dtype),
-        scratch_shapes=[pltpu.MemorySpace.HBM(shape=(2, *blk_shape), dtype=x.dtype),
+        scratch_shapes=[compat.hbm_scratch((2, *blk_shape), x.dtype),
                         pltpu.VMEM(blk_shape, x.dtype),
                         pltpu.VMEM(blk_shape, x.dtype),
                         pltpu.SemaphoreType.DMA((n_dev - 1,)),
                         pltpu.SemaphoreType.DMA((n_dev - 1,)),
                         pltpu.SemaphoreType.REGULAR((2,)),
                         pltpu.SemaphoreType.DMA],
-        compiler_params=pltpu.CompilerParams(collective_id=1),
-        interpret=pltpu.InterpretParams() if interpret else False,
+        compiler_params=compat.CompilerParams(collective_id=collective_id("ring_reduce_scatter")),
+        interpret=compat.interpret_params() if interpret else False,
     )(x)
 
 
@@ -234,13 +237,13 @@ def _p2p_kernel(x_ref, out_ref, send_sem, recv_sem, *, axis_name, n_dev):
 
 def p2p_ring_shift(x, axis_name: str, *, interpret=True):
     """Single-hop one-way RDMA (store_async) to the right neighbor."""
-    n_dev = lax.axis_size(axis_name)
+    n_dev = compat.axis_size(axis_name)
     return pl.pallas_call(
         functools.partial(_p2p_kernel, axis_name=axis_name, n_dev=n_dev),
-        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)],
-        out_specs=pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        in_specs=[pl.BlockSpec(memory_space=compat.ANY)],
+        out_specs=pl.BlockSpec(memory_space=compat.ANY),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         scratch_shapes=[pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA],
-        compiler_params=pltpu.CompilerParams(collective_id=2),
-        interpret=pltpu.InterpretParams() if interpret else False,
+        compiler_params=compat.CompilerParams(collective_id=collective_id("p2p_ring_shift")),
+        interpret=compat.interpret_params() if interpret else False,
     )(x)

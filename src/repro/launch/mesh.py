@@ -1,22 +1,21 @@
 """Production mesh construction (assignment MULTI-POD DRY-RUN §1).
 
 A FUNCTION, not a module-level constant — importing this module never touches
-jax device state.
+jax device state. Mesh construction goes through ``repro.compat.make_mesh``
+so the ``axis_types`` kwarg is only passed on JAX versions that have it.
 """
 
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests, examples, elastic reshapes)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)

@@ -17,10 +17,11 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ArchConfig, RunConfig
 from repro.core import moe as pk_moe
-from repro.core import (pk_ring_attention, pk_ulysses_attention,
-                        pk_matmul_all_reduce, pk_all_gather_matmul)
+from repro.core import pk_ring_attention, pk_ulysses_attention
+from repro.core.comms import CommContext
 from repro.models.sharding import ShardingRules
 
 NEG_INF = -1e30
@@ -30,6 +31,14 @@ def constrain(x, rules: ShardingRules | None, spec: P):
     if rules is None:
         return x
     return lax.with_sharding_constraint(x, rules.named(spec))
+
+
+def _comm_ctx(run: RunConfig, rules: ShardingRules) -> CommContext:
+    """The single communication entry point for every PK island in this
+    module (DESIGN §3): collectives are policy-routed by the cost model;
+    ``run.comm_backend`` pins one backend for A/B runs."""
+    return CommContext(axis_name=rules.tp, backend=run.comm_backend,
+                       allow_bidir=run.pk_bidirectional)
 
 
 # ---------------------------------------------------------------------------
@@ -200,7 +209,7 @@ def attention_block(p, x, cfg: ArchConfig, run: RunConfig,
         fn = {"ring": pk_ring_attention, "ulysses": pk_ulysses_attention,
               }.get(run.sp_attention, pk_ring_attention)
         bspec = rules.dim(b, rules.dp)
-        attn = jax.shard_map(
+        attn = compat.shard_map(
             lambda q_, k_, v_: fn(q_, k_, v_, axis, causal=causal,
                                   window=cfg.sliding_window),
             mesh=rules.mesh,
@@ -235,17 +244,18 @@ def _pk_attn_out_island(wo, o, cfg, run, rules, b, s):
     f = rules.fsdp_axes
     d = cfg.d_model
     h_full = o.shape[-1]
+    ctx = _comm_ctx(run, rules)
 
     def island(o_, wo_):
         if f is not None:
             wo_ = _maybe_allgather(wo_, f, 1, d)
         t = o_.reshape(-1, o_.shape[-1])
-        out = pk_matmul_all_reduce(t, wo_, tp)
+        out = ctx.matmul_all_reduce(t, wo_)
         return out.reshape(o_.shape[0], s, d)
 
     bspec = rules.dim(b, rules.dp)
     wspec = rules.w2d(h_full, d, tp_dim=0)
-    return jax.shard_map(
+    return compat.shard_map(
         island, mesh=rules.mesh,
         in_specs=(P(bspec, None, rules.dim(h_full, tp)), wspec),
         out_specs=P(bspec, None, None), check_vma=False)(o, wo)
@@ -323,7 +333,7 @@ def decode_attention(p, x, cache_k, cache_v, pos, cfg: ArchConfig,
                     k_, v_)
 
         qspec = P(bspec, None, None, None)
-        o, cache_k, cache_v = jax.shard_map(
+        o, cache_k, cache_v = compat.shard_map(
             island, mesh=rules.mesh,
             in_specs=(qspec, cache_spec, cache_spec, qspec, qspec),
             out_specs=(qspec, cache_spec, cache_spec),
@@ -376,14 +386,14 @@ def _tp_divides(cfg: ArchConfig, rules: ShardingRules) -> bool:
 def _pk_mlp_island(p, x, cfg: ArchConfig, run: RunConfig, rules: ShardingRules):
     """Megatron MLP as explicit PK collectives: x (replicated over tp)
     × w1 (col-shard) -> h (ff-sharded, local) -> act -> × w2 (row-shard)
-    -> pk overlapped GEMM+AR. FSDP gathers of weights happen inside so XLA
-    overlaps them with the previous chunk's compute."""
-    from repro.core import matmul_all_reduce_baseline
+    -> overlapped GEMM+AR via CommContext (the policy picks bulk for tiny
+    token counts — decode — and the ring schedule otherwise). FSDP gathers
+    of weights happen inside so XLA overlaps them with the previous chunk's
+    compute."""
     act = get_act(cfg.act)
-    tp = rules.tp
-    tp_size = rules.mesh.shape[tp]
     b, s, d = x.shape
     f = rules.fsdp_axes
+    ctx = _comm_ctx(run, rules)
 
     def island(x_, w1, w3, w2):
         if f is not None:  # FSDP all-gather (ZeRO-3) of the weight shards
@@ -396,11 +406,7 @@ def _pk_mlp_island(p, x, cfg: ArchConfig, run: RunConfig, rules: ShardingRules):
             h = act(h) * jnp.einsum("td,df->tf", t, w3)
         else:
             h = act(h)
-        m = h.shape[0]
-        if m % tp_size == 0 and m // tp_size > 0:
-            out = pk_matmul_all_reduce(h.astype(x_.dtype), w2, tp)
-        else:  # tiny token counts (decode): ring schedule not worth it
-            out = matmul_all_reduce_baseline(h.astype(x_.dtype), w2, tp)
+        out = ctx.matmul_all_reduce(h.astype(x_.dtype), w2)
         return out.reshape(x_.shape[0], s, d)
 
     w1s = rules.w2d(cfg.d_model, cfg.d_ff, tp_dim=1)
@@ -409,9 +415,9 @@ def _pk_mlp_island(p, x, cfg: ArchConfig, run: RunConfig, rules: ShardingRules):
     bspec = rules.dim(b, rules.dp)
     in_specs = (P(bspec, None, None), w1s, w1s if cfg.gated_mlp else P(),
                 w2s)
-    out = jax.shard_map(island, mesh=rules.mesh, in_specs=in_specs,
-                        out_specs=P(bspec, None, None),
-                        check_vma=False)(x, p["w1"], w3, p["w2"])
+    out = compat.shard_map(island, mesh=rules.mesh, in_specs=in_specs,
+                           out_specs=P(bspec, None, None),
+                           check_vma=False)(x, p["w1"], w3, p["w2"])
     return out
 
 
@@ -494,7 +500,7 @@ def moe_block(p, x, cfg: ArchConfig, run: RunConfig,
         wspec = P(tp, None, rules.dim(cfg.d_model, f), None)
         w2spec = P(tp, None, None, rules.dim(cfg.d_model, f))
 
-    out, aux = jax.shard_map(
+    out, aux = compat.shard_map(
         island, mesh=rules.mesh,
         in_specs=(P(bspec, None, None), P(), wspec,
                   wspec if cfg.gated_mlp else P(), w2spec),
@@ -539,7 +545,7 @@ def embed_tokens(p, tokens, rules: ShardingRules | None):
         return x
 
     bspec = rules.dim(tokens.shape[0], rules.dp)
-    return jax.shard_map(
+    return compat.shard_map(
         island, mesh=rules.mesh,
         in_specs=(P(tp, rules.dim(emb.shape[1], rules.fsdp_axes)),
                   P(bspec, None)),
@@ -594,15 +600,17 @@ def lm_loss(p, x, targets, weights, cfg: ArchConfig, run: RunConfig,
             tgt = jnp.take_along_axis(logits, jnp.clip(loc, 0, v_loc - 1)[..., None],
                                       axis=-1)[..., 0]
             tgt = lax.psum(jnp.where(ok, tgt, 0.0), tp)
-            return (carry[0] + jnp.sum((lse - tgt) * wi),
-                    carry[1] + jnp.sum(wi)), None
+            # rank-1 carries: legacy shard_map cannot transpose rank-0
+            # residuals crossing the island boundary
+            return (carry[0] + jnp.sum((lse - tgt) * wi)[None],
+                    carry[1] + jnp.sum(wi)[None]), None
 
-        (tot, cnt), _ = lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+        (tot, cnt), _ = lax.scan(body, (jnp.zeros((1,)), jnp.zeros((1,))),
                                  (xc_, tc_, wc_))
-        return tot[None], cnt[None]
+        return tot, cnt
 
     bspec = rules.dim(b, rules.dp)
-    tot, cnt = jax.shard_map(
+    tot, cnt = compat.shard_map(
         island, mesh=rules.mesh,
         in_specs=(P(None, bspec, None, None), P(None, bspec),
                   P(None, bspec), hspec),

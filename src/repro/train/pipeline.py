@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
 
 def gpipe_apply(stage_fn: Callable, stage_params, x_mb, axis_name: str):
     """Run `stage_fn(params_stage, x) -> y` over all pipeline stages.
@@ -31,7 +33,7 @@ def gpipe_apply(stage_fn: Callable, stage_params, x_mb, axis_name: str):
     valid on the LAST stage (replicate/collect at the caller).
     Activations must keep a constant shape across stages (residual-stream
     models do)."""
-    n = lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     idx = lax.axis_index(axis_name)
     m = x_mb.shape[0]
     perm = [(j, (j + 1) % n) for j in range(n)]
@@ -59,7 +61,7 @@ def gpipe_loss(stage_fn, loss_fn, stage_params, x_mb, targets_mb,
     """Forward through the pipe + loss on the last stage, broadcast to all
     ranks (differentiable; the backward flows the pipe in reverse via the
     ppermute transposes)."""
-    n = lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     idx = lax.axis_index(axis_name)
     outs = gpipe_apply(stage_fn, stage_params, x_mb, axis_name)
     per_mb = loss_fn(outs, targets_mb)

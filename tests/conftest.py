@@ -8,23 +8,21 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
 import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
 import pytest
+
+from repro import compat
 
 
 @pytest.fixture(scope="session")
 def mesh22():
-    return jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((2, 2), ("data", "model"))
 
 
 @pytest.fixture(scope="session")
 def mesh4():
-    return jax.make_mesh((4,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((4,), ("x",))
 
 
 @pytest.fixture(scope="session")
 def mesh8():
-    return jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((2, 4), ("data", "model"))

@@ -122,9 +122,9 @@ def test_elastic_restore_across_meshes(tmp_path):
     restored, _ = elastic_restore(str(tmp_path), cfg, run, mesh2,
                                   old_model_size=2)
     # logical equality of MoE weights across layouts
-    p1 = jax.tree.leaves_with_path(params1)
+    p1 = jax.tree_util.tree_leaves_with_path(params1)
     flat2 = {"/".join(str(getattr(q, 'key', q)) for q in path): leaf
-             for path, leaf in jax.tree.leaves_with_path(restored)}
+             for path, leaf in jax.tree_util.tree_leaves_with_path(restored)}
     for path, leaf in p1:
         key = "/".join(str(getattr(q, 'key', q)) for q in path)
         a, b = np.asarray(leaf, np.float32), np.asarray(flat2[key], np.float32)

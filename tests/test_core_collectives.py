@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from repro import compat
 from jax.sharding import PartitionSpec as P
 
 from repro.core import (all_gather_matmul_baseline, matmul_all_reduce_baseline,
@@ -18,7 +20,7 @@ N = 4
 
 @pytest.fixture(scope="module")
 def sm(mesh4):
-    return partial(jax.shard_map, mesh=mesh4, check_vma=False)
+    return partial(compat.shard_map, mesh=mesh4, check_vma=False)
 
 
 @pytest.mark.parametrize("fn,bidir", [

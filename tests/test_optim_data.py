@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from repro import compat
 from jax.sharding import PartitionSpec as P
 
 from repro.data.pipeline import DataConfig, SyntheticLM
@@ -74,7 +76,7 @@ def test_error_feedback_unbiased_over_time():
 
 
 def test_compressed_psum(mesh4):
-    sm = partial(jax.shard_map, mesh=mesh4, check_vma=False)
+    sm = partial(compat.shard_map, mesh=mesh4, check_vma=False)
     x = jax.random.normal(jax.random.PRNGKey(0), (4, 256))
     want = np.asarray(x.sum(axis=0))
     f = jax.jit(sm(lambda x: compressed_psum(x[0], "x")[None],

@@ -5,6 +5,10 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import costmodel as cm

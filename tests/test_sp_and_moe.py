@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from repro import compat
 from jax.sharding import PartitionSpec as P
 
 from repro.core import (moe_reference_dense, pk_moe_a2a, pk_moe_replicated,
@@ -18,7 +20,7 @@ N = 4
 
 @pytest.fixture(scope="module")
 def sm(mesh4):
-    return partial(jax.shard_map, mesh=mesh4, check_vma=False)
+    return partial(compat.shard_map, mesh=mesh4, check_vma=False)
 
 
 def _ref_attn(q, k, v, causal=True, window=None):
