@@ -1,7 +1,7 @@
 # Developer entry points. `make test` is the tier-1 gate from ROADMAP.md.
 PY ?= python
 
-.PHONY: test test-full bench quickstart deps
+.PHONY: test test-full bench bench-baseline calibrate quickstart deps
 
 deps:
 	$(PY) -m pip install -r requirements.txt
@@ -12,8 +12,16 @@ test:
 test-full:          # no -x: full failure report
 	PYTHONPATH=src $(PY) -m pytest -q
 
-bench:
-	PYTHONPATH=src $(PY) -m benchmarks.run
+bench:              # harness (CSV + BENCH_comms.json) then schema/regression gate
+	PYTHONPATH=src $(PY) -m benchmarks.run --json BENCH_comms.json
+	PYTHONPATH=src $(PY) scripts/check_bench.py BENCH_comms.json \
+	    --baseline benchmarks/BENCH_baseline.json
+
+bench-baseline:     # accept the current numbers as the new checked-in baseline
+	PYTHONPATH=src $(PY) -m benchmarks.run --json benchmarks/BENCH_baseline.json
+
+calibrate:          # measure this machine into the autotune cache
+	PYTHONPATH=src $(PY) -m repro.autotune calibrate
 
 quickstart:
 	PYTHONPATH=src $(PY) examples/quickstart.py

@@ -1,9 +1,22 @@
-"""Shared benchmark plumbing: 8 emulated devices, timing, CSV output.
+"""Shared benchmark plumbing: 8 emulated devices, timing, result recording.
 
 CPU wall-times are *relative* indicators (the interconnect is emulated);
 the hardware-grounded numbers live in the roofline analysis
-(results/dryrun + EXPERIMENTS.md). Each bench prints
-``name,us_per_call,derived`` rows per the harness contract.
+(results/dryrun + EXPERIMENTS.md). Two outputs per run:
+
+* CSV on stdout, one row per measurement: ``figure,name,us_per_call,derived``
+  (the figure column appears on every row — including failure rows — so a
+  partial run is diagnosable from the artifact alone);
+* ``BENCH_comms.json`` (schema ``repro-bench/v1``), written by
+  ``benchmarks/run.py`` from the module-level ``RECORDER``: per figure the
+  rows, status, and the predicted-vs-measured error of the §3.1.1 cost model
+  wherever a bench supplies a prediction. ``scripts/check_bench.py``
+  validates it and gates regressions vs ``benchmarks/BENCH_baseline.json``.
+
+Predictions use ``pred_hw()`` — the calibrated spec when a
+``repro.core.autotune`` table matches this machine (the in-repo
+``cpu_emulated`` seed covers the emulated mesh), the analytic v5e constants
+otherwise — so the reported model error is meaningful on CPU too.
 """
 
 import os
@@ -21,6 +34,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P  # noqa: F401
 
 from repro import compat
+
+SCHEMA = "repro-bench/v1"
 
 
 def make_mesh(shape=(8,), axes=("x",)):
@@ -47,5 +62,81 @@ def timeit(fn, *args, reps: int = 5, warmup: int = 2) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def row(name: str, us: float, derived: str = ""):
-    print(f"{name},{us:.1f},{derived}")
+class Recorder:
+    """Collects every ``row(...)`` under the figure currently running."""
+
+    def __init__(self):
+        self.figures: list[dict] = []
+        self._cur: dict | None = None
+
+    def start_figure(self, name: str) -> None:
+        self._cur = {"figure": name, "status": "ok", "error": None,
+                     "rows": []}
+        self.figures.append(self._cur)
+
+    def fail(self, exc: BaseException) -> None:
+        if self._cur is not None:
+            self._cur["status"] = "failed"
+            self._cur["error"] = f"{type(exc).__name__}: {exc}"
+
+    @property
+    def current_figure(self) -> str:
+        return self._cur["figure"] if self._cur else "-"
+
+    def add(self, name: str, us: float, derived: str,
+            predicted_us: float | None) -> None:
+        err = None
+        if predicted_us is not None and us > 0:
+            err = (predicted_us - us) / us
+        if self._cur is None:          # bench module run outside the harness
+            self.start_figure("-")
+        self._cur["rows"].append({
+            "name": name, "us_per_call": us, "derived": derived,
+            "predicted_us": predicted_us, "pred_err": err,
+        })
+
+    def report(self) -> dict:
+        figures = []
+        for fig in self.figures:
+            errs = sorted(abs(r["pred_err"]) for r in fig["rows"]
+                          if r["pred_err"] is not None)
+            figures.append({
+                **fig,
+                "n_rows": len(fig["rows"]),
+                "pred_err_median": errs[len(errs) // 2] if errs else None,
+            })
+        from repro.launch.mesh import device_fingerprint
+        return {
+            "schema": SCHEMA,
+            "created": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "jax_version": jax.__version__,
+            **device_fingerprint(),
+            "pred_hw": pred_hw().name
+            + ("" if _pred_table() is None else " (calibrated)"),
+            "figures": figures,
+        }
+
+
+RECORDER = Recorder()
+
+
+def row(name: str, us: float, derived: str = "",
+        predicted_us: float | None = None):
+    """One measurement: prints the CSV row and records it for the JSON
+    artifact. ``predicted_us`` is the §3.1.1 cost-model prediction for the
+    same configuration (on ``pred_hw()``) when the bench can supply one."""
+    print(f"{RECORDER.current_figure},{name},{us:.1f},{derived}")
+    RECORDER.add(name, us, derived, predicted_us)
+
+
+def _pred_table():
+    from repro.core import autotune
+    return autotune.resolve_table(None, "tpu_v5e", "auto")
+
+
+def pred_hw():
+    """HardwareSpec predictions are priced on: calibrated when a table
+    matches this machine, the analytic v5e constants otherwise."""
+    from repro.core import costmodel as cm
+    table = _pred_table()
+    return table.spec(cm.TPU_V5E) if table is not None else cm.TPU_V5E

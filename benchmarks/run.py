@@ -1,24 +1,73 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
-# CPU wall-times are relative (emulated interconnect); hardware-grounded
-# numbers are in the roofline analysis (EXPERIMENTS.md §Roofline).
+"""Benchmark harness: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--json BENCH_comms.json]
+                                            [--figures fig7,fig8] [--list]
+
+Prints ``figure,name,us_per_call,derived`` CSV to stdout (failure rows
+included, with the figure name, so partial runs are diagnosable) and writes
+the machine-readable ``BENCH_comms.json`` (schema ``repro-bench/v1``:
+per-figure rows, status, predicted-vs-measured cost-model error).
+``scripts/check_bench.py`` validates the artifact and fails on >25%
+regression vs ``benchmarks/BENCH_baseline.json`` (the ``make bench`` gate).
+
+CPU wall-times are relative (emulated interconnect); hardware-grounded
+numbers are in the roofline analysis (EXPERIMENTS.md §Roofline).
+"""
+
+import argparse
+import json
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.run")
+    ap.add_argument("--json", default="BENCH_comms.json",
+                    help="machine-readable artifact path ('' disables)")
+    ap.add_argument("--figures", default="",
+                    help="comma-separated substrings selecting figures")
+    ap.add_argument("--list", action="store_true",
+                    help="list figure names and exit")
+    args = ap.parse_args(argv)
+
     from benchmarks import paper_figures
-    print("name,us_per_call,derived")
+    from benchmarks.common import RECORDER
+
+    wanted = [s for s in args.figures.split(",") if s]
+    figures = [fn for fn in paper_figures.ALL
+               if not wanted or any(w in fn.__name__ for w in wanted)]
+    if args.list:
+        for fn in figures:
+            print(fn.__name__)
+        return 0
+
+    print("figure,name,us_per_call,derived")
     failures = 0
-    for fn in paper_figures.ALL:
+    for fn in figures:
+        RECORDER.start_figure(fn.__name__)
         try:
             fn()
-        except Exception:
+        except Exception as e:
             failures += 1
-            print(f"BENCH_FAILED,{fn.__name__},", file=sys.stderr)
+            RECORDER.fail(e)
+            # the failure lands in the CSV *with* the figure name (and in
+            # the JSON), not just on stderr — a partial run's artifact says
+            # what broke. JAX errors routinely contain commas/newlines;
+            # flatten them so the row stays one parseable CSV record.
+            msg = f"{type(e).__name__}: {e}"
+            msg = " ".join(msg.split()).replace(",", ";")[:160]
+            print(f"{fn.__name__},BENCH_FAILED,,{msg}")
             traceback.print_exc()
-    if failures:
-        raise SystemExit(1)
+
+    if args.json:
+        doc = RECORDER.report()
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        ok = sum(1 for g in doc["figures"] if g["status"] == "ok")
+        print(f"# wrote {args.json}: {ok}/{len(doc['figures'])} figures ok",
+              file=sys.stderr)
+    return 1 if failures else 0
 
 
 if __name__ == '__main__':
-    main()
+    raise SystemExit(main())

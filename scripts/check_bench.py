@@ -1,0 +1,169 @@
+#!/usr/bin/env python
+"""Validate a BENCH_comms.json artifact and gate perf regressions.
+
+    python scripts/check_bench.py BENCH_comms.json \
+        [--baseline benchmarks/BENCH_baseline.json] [--threshold 0.25]
+
+Exit 1 when the artifact is malformed (schema ``repro-bench/v1``), any
+figure failed, or any figure's median per-row slowdown vs the checked-in
+baseline exceeds the threshold (default 25%, per-figure median so one noisy
+row on the emulated mesh cannot fail the gate alone). Figures present in the
+baseline but missing from the run count as regressions — silently dropping a
+figure is how perf trajectories rot.
+
+To accept an intentional change: re-run ``make bench`` and copy the fresh
+artifact over ``benchmarks/BENCH_baseline.json``.
+
+Importable pieces (used by tests): ``validate_schema(doc)``,
+``compare(doc, baseline, threshold)``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+SCHEMA = "repro-bench/v1"
+
+_FIGURE_KEYS = {"figure": str, "status": str, "rows": list}
+_ROW_KEYS = {"name": str, "us_per_call": (int, float)}
+
+
+def validate_schema(doc) -> list[str]:
+    """Schema errors in `doc` ([] when valid)."""
+    errors: list[str] = []
+    if not isinstance(doc, dict):
+        return [f"top level must be an object, got {type(doc).__name__}"]
+    if doc.get("schema") != SCHEMA:
+        errors.append(f"schema must be {SCHEMA!r}, got {doc.get('schema')!r}")
+    for key in ("created", "jax_version", "backend", "figures"):
+        if key not in doc:
+            errors.append(f"missing top-level key {key!r}")
+    figures = doc.get("figures", [])
+    if not isinstance(figures, list):
+        return errors + ["'figures' must be a list"]
+    seen = set()
+    for i, fig in enumerate(figures):
+        where = f"figures[{i}]"
+        if not isinstance(fig, dict):
+            errors.append(f"{where} must be an object")
+            continue
+        for key, typ in _FIGURE_KEYS.items():
+            if not isinstance(fig.get(key), typ):
+                errors.append(f"{where}.{key} must be {typ.__name__}")
+        name = fig.get("figure")
+        if name in seen:
+            errors.append(f"{where}: duplicate figure {name!r}")
+        seen.add(name)
+        if fig.get("status") not in ("ok", "failed"):
+            errors.append(f"{where}.status must be 'ok' or 'failed'")
+        if fig.get("status") == "failed" and not fig.get("error"):
+            errors.append(f"{where}: failed figure must carry 'error'")
+        for j, r in enumerate(fig.get("rows") or []):
+            if not isinstance(r, dict):
+                errors.append(f"{where}.rows[{j}] must be an object")
+                continue
+            for key, typ in _ROW_KEYS.items():
+                if not isinstance(r.get(key), typ):
+                    errors.append(f"{where}.rows[{j}].{key} must be numeric"
+                                  if key == "us_per_call"
+                                  else f"{where}.rows[{j}].{key} missing")
+            pe = r.get("pred_err")
+            if pe is not None and not isinstance(pe, (int, float)):
+                errors.append(f"{where}.rows[{j}].pred_err must be numeric "
+                              "or null")
+    return errors
+
+
+def _by_figure(doc) -> dict[str, dict]:
+    return {f["figure"]: f for f in doc.get("figures", [])}
+
+
+def compare(doc, baseline, threshold: float = 0.25) -> list[str]:
+    """Regressions of `doc` vs `baseline` ([] when clean).
+
+    Per figure: match rows by name, compute each row's us ratio (new/old),
+    regress when the MEDIAN ratio exceeds 1 + threshold. Failed or missing
+    figures that were ok in the baseline always regress.
+    """
+    problems: list[str] = []
+    new = _by_figure(doc)
+    for name, base_fig in _by_figure(baseline).items():
+        if base_fig["status"] != "ok":
+            continue
+        fig = new.get(name)
+        if fig is None:
+            problems.append(f"{name}: present in baseline but not in run")
+            continue
+        if fig["status"] != "ok":
+            problems.append(f"{name}: failed ({fig.get('error')})")
+            continue
+        base_rows = {r["name"]: r["us_per_call"] for r in base_fig["rows"]}
+        ratios = sorted(
+            r["us_per_call"] / base_rows[r["name"]]
+            for r in fig["rows"]
+            if r["name"] in base_rows and base_rows[r["name"]] > 0)
+        if not ratios:
+            continue
+        med = ratios[len(ratios) // 2]
+        if med > 1.0 + threshold:
+            problems.append(
+                f"{name}: median slowdown {med:.2f}x over "
+                f"{len(ratios)} rows (threshold {1.0 + threshold:.2f}x)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifact")
+    ap.add_argument("--baseline", default="benchmarks/BENCH_baseline.json")
+    ap.add_argument("--threshold", type=float, default=0.25)
+    args = ap.parse_args(argv)
+
+    try:
+        doc = json.load(open(args.artifact))
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"MALFORMED: cannot read {args.artifact}: {e}", file=sys.stderr)
+        return 1
+    errors = validate_schema(doc)
+    if errors:
+        print(f"MALFORMED: {args.artifact} fails {SCHEMA} validation:",
+              file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+
+    failed = [f["figure"] for f in doc["figures"] if f["status"] != "ok"]
+    if failed:
+        print(f"FAILED figures: {', '.join(failed)}", file=sys.stderr)
+
+    problems: list[str] = []
+    try:
+        baseline = json.load(open(args.baseline))
+    except OSError:
+        print(f"note: no baseline at {args.baseline}; schema check only",
+              file=sys.stderr)
+        baseline = None
+    if baseline is not None:
+        if errs := validate_schema(baseline):
+            print(f"MALFORMED baseline {args.baseline}: {errs[0]}",
+                  file=sys.stderr)
+            return 1
+        problems = compare(doc, baseline, args.threshold)
+        for p in problems:
+            print(f"REGRESSION: {p}", file=sys.stderr)
+
+    n_fig = len(doc["figures"])
+    errs = [f.get("pred_err_median") for f in doc["figures"]
+            if f.get("pred_err_median") is not None]
+    med = sorted(errs)[len(errs) // 2] if errs else None
+    print(f"bench check: {n_fig - len(failed)}/{n_fig} figures ok, "
+          f"{len(problems)} regression(s)"
+          + (f", median |pred err| {med * 100:.0f}%" if med is not None
+             else ""))
+    return 1 if (failed or problems) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

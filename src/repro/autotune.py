@@ -1,0 +1,189 @@
+"""CLI for the empirical autotuner (``repro.core.autotune``).
+
+    python -m repro.autotune calibrate [--devices N] [--grid tiny|small|full]
+                                       [--out PATH] [--notes TEXT] [--reps R]
+    python -m repro.autotune show [PATH]
+    python -m repro.autotune diff A [B]
+
+``calibrate`` micro-benchmarks every comm backend on the live mesh and saves
+the fitted table (default: the user cache ``CommContext(policy="measured")``
+searches, ``~/.cache/repro/autotune-<hw>-<jax>.json``). ``show`` prints a
+table (the resolved dispatch table when no path is given). ``diff`` compares
+two tables — or, with one argument, a table against the analytic constants —
+so a re-calibration's drift is reviewable before it lands in the cache.
+
+``--devices`` forces the CPU-emulated mesh size and must be handled before
+jax initializes, which is why this module only imports jax inside ``main``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _pct(new: float, old: float) -> str:
+    if old == 0:
+        return "n/a"
+    return f"{(new - old) / old * 100.0:+.1f}%"
+
+
+def _fmt_corrections(corr: dict, base) -> list[str]:
+    analytic = {
+        "ici_bandwidth": base.ici_bandwidth,
+        "remote_sync_s": base.remote_sync_s,
+        "gemm_efficiency": base.gemm_efficiency,
+        "kernel_launch_s": base.kernel_launch_s,
+    }
+    lines = [f"  {'field':<18} {'measured':>12} {'analytic':>12} {'drift':>9}"]
+    for k, v in sorted(corr.items()):
+        a = analytic.get(k)
+        lines.append(f"  {k:<18} {v:>12.4g} "
+                     f"{a if a is None else format(a, '>12.4g')} "
+                     f"{_pct(v, a) if a is not None else '':>9}")
+    return lines
+
+
+def _show(table, base) -> None:
+    fp = table.fingerprint
+    print(f"schema v{table.version}  created {table.created or '?'}  "
+          f"notes: {table.notes or '-'}")
+    print(f"fingerprint: hw={fp.hw} jax={fp.jax_version} "
+          f"backend={fp.backend} kind={fp.device_kind!r} "
+          f"devices={fp.n_devices}")
+    print("corrections:")
+    print("\n".join(_fmt_corrections(table.corrections, base)))
+    cov = table.ops_covered()
+    print(f"measurements: {len(table.measurements)} rows over "
+          f"{len(cov)} ops ({', '.join(f'{k}:{v}' for k, v in sorted(cov.items()))})")
+    for row in table.measurements:
+        print(f"  {row['op']}/{row['backend']}"
+              f"  axis={row['axis_size']} m={row['m']} n={row['n']} "
+              f"k={row['k']}  {row['us']:.1f} us")
+
+
+def cmd_calibrate(args) -> int:
+    from repro.core import autotune, costmodel
+
+    hw = getattr(costmodel, args.hw.upper())
+    table = autotune.calibrate(grid=args.grid, reps=args.reps, hw=hw,
+                               notes=args.notes, verbose=True)
+    out = args.out or autotune.cache_path(table.fingerprint)
+    path = table.save(out)
+    autotune.clear_caches()
+    print(f"\nwrote {path}")
+    print("CommContext(policy='measured') will now dispatch from it on "
+          "this machine.")
+    return 0
+
+
+def cmd_show(args) -> int:
+    from repro.core import autotune, costmodel
+
+    if args.path:
+        table = autotune.CalibrationTable.load(args.path)
+    else:
+        table = autotune.find_table(costmodel.TPU_V5E.name)
+        if table is None:
+            print("no calibration table found (searched "
+                  f"{autotune.cache_path(autotune.live_fingerprint(costmodel.TPU_V5E.name))} "
+                  "and the in-repo seeds); run `python -m repro.autotune "
+                  "calibrate`", file=sys.stderr)
+            return 1
+    _show(table, costmodel.TPU_V5E)
+    return 0
+
+
+def cmd_diff(args) -> int:
+    from repro.core import autotune, costmodel
+
+    a = autotune.CalibrationTable.load(args.a)
+    base = getattr(costmodel, a.fingerprint.hw.upper(), costmodel.TPU_V5E)
+    if args.b is None:
+        # one-sided: measured vs the analytic spec it corrects
+        print(f"{args.a} vs analytic {base.name}:")
+        print("\n".join(_fmt_corrections(a.corrections, base)))
+        return 0
+    b = autotune.CalibrationTable.load(args.b)
+    if not a.fingerprint.compatible(b.fingerprint):
+        print(f"fingerprints are incompatible:\n  A: {a.fingerprint}\n"
+              f"  B: {b.fingerprint}", file=sys.stderr)
+        return 1
+    print(f"{'field':<18} {'A':>12} {'B':>12} {'B vs A':>9}")
+    for k in sorted(set(a.corrections) | set(b.corrections)):
+        va, vb = a.corrections.get(k), b.corrections.get(k)
+        if va is None or vb is None:
+            print(f"{k:<18} {'—' if va is None else format(va, '.4g'):>12} "
+                  f"{'—' if vb is None else format(vb, '.4g'):>12}")
+            continue
+        print(f"{k:<18} {va:>12.4g} {vb:>12.4g} {_pct(vb, va):>9}")
+    shared = 0
+    drifts = []
+    for row in a.measurements:
+        us_b = b.measured_us(row["op"], row["backend"], row["m"], row["n"],
+                             row["k"], axis_size=row["axis_size"],
+                             max_ratio=1.01)
+        if us_b is None:
+            continue
+        shared += 1
+        drifts.append(abs(us_b - row["us"]) / max(row["us"], 1e-9))
+    if shared:
+        print(f"measurements: {shared} shared grid points, median drift "
+              f"{sorted(drifts)[len(drifts) // 2] * 100:.1f}%")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.autotune",
+        description="measure, inspect and compare comm calibration tables")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("calibrate", help="micro-benchmark this machine")
+    p.add_argument("--devices", type=int, default=None,
+                   help="force an emulated CPU mesh of this many devices")
+    p.add_argument("--grid", default="small", choices=_grid_names())
+    p.add_argument("--reps", type=int, default=3)
+    p.add_argument("--hw", default="tpu_v5e",
+                   help="HardwareSpec constant to correct (tpu_v5e/h100_sxm)")
+    p.add_argument("--out", default=None,
+                   help="destination (default: the user cache path)")
+    p.add_argument("--notes", default="")
+    p.set_defaults(fn=cmd_calibrate)
+
+    p = sub.add_parser("show", help="print a table (default: the resolved one)")
+    p.add_argument("path", nargs="?", default=None)
+    p.set_defaults(fn=cmd_show)
+
+    p = sub.add_parser("diff", help="compare two tables (or one vs analytic)")
+    p.add_argument("a")
+    p.add_argument("b", nargs="?", default=None)
+    p.set_defaults(fn=cmd_diff)
+
+    args = ap.parse_args(argv)
+    if getattr(args, "devices", None):
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + f" --xla_force_host_platform_device_count"
+                        f"={args.devices}").strip()
+        if "jax" in sys.modules:
+            import jax
+            if len(jax.devices()) != args.devices:
+                print(f"warning: jax already initialized with "
+                      f"{len(jax.devices())} devices; --devices ignored",
+                      file=sys.stderr)
+    return args.fn(args)
+
+
+def _grid_names():
+    # repro.core.autotune never imports jax at module level, so pulling the
+    # grid names here cannot defeat the --devices XLA_FLAGS handling below.
+    from repro.core.autotune import GRIDS
+    return sorted(GRIDS)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -230,6 +230,12 @@ class RunConfig:
     pk_bidirectional: bool = False           # 2-link bidirectional rings
     comm_backend: str | None = None          # pin one CommContext backend
                                              # ("bulk"/"ring"/...; None=policy)
+    comm_policy: Literal["analytic", "measured", "auto"] = "analytic"
+                                             # cost source for backend=None
+                                             # dispatch (core/autotune.py)
+    calibration_path: str | None = None      # explicit calibration table for
+                                             # comm_policy="measured"; None =
+                                             # user cache then in-repo seeds
     sp_attention: Literal["ring", "ulysses", "none"] = "ring"
     moe_strategy: Literal["replicated", "a2a"] = "replicated"
     moe_chunks: int = 1

@@ -6,6 +6,9 @@
 # ring_attention / ulysses — sequence parallelism (paper §4.2)
 # moe        — expert parallelism (paper §4.3)
 # schedule   — overlap policy search (paper §3.1.3 SM-partitioning analogue)
+# autotune   — empirical calibration: measured correction factors + dispatch
+#              tables for CommContext(policy="measured") (imported lazily by
+#              comms — not re-exported here to keep import time flat)
 #
 # comms      — the unified CommContext entry point (policy-driven dispatch)
 #

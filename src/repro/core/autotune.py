@@ -1,0 +1,633 @@
+"""Empirical autotuner: measured correction factors for the §3.1.1 cost model.
+
+The paper's thesis is that the analytic decomposition
+
+    T_kernel = T_launch + max(T_comp, T_mem, T_comm) + T_non_overlap + T_sync
+
+plus a runtime resource-split search picks the optimal overlap schedule.
+``core/costmodel.py`` supplies the analytic half from datasheet constants;
+this module closes the loop the way chunk-centric autotuners do (Syncopate,
+arXiv 2601.20595): it **micro-benchmarks every registered comm backend on the
+live mesh**, fits the measurements back into per-``HardwareSpec`` correction
+factors, and persists them as a versioned JSON *calibration table* that
+``CommContext(policy="measured")`` dispatches from.
+
+Three layers:
+
+``calibrate(mesh=...)``
+    Runs the micro-benchmarks (link latency/bandwidth sweep, local GEMM
+    efficiency probe, per-op × per-backend × shape-grid timings) and returns
+    a ``CalibrationTable``.
+``CalibrationTable``
+    The persisted artifact: a ``Fingerprint`` of the machine it was measured
+    on, fitted ``corrections`` (achieved ICI bandwidth, real
+    ``remote_sync_s``, sustained GEMM efficiency, launch overhead) and the
+    raw per-shape ``measurements``. ``table.spec(hw)`` yields a corrected
+    ``HardwareSpec`` for the analytic model; ``table.best_backend(...)``
+    answers dispatch queries directly from the measurements.
+``find_table(hw_name)``
+    Resolution used by ``CommContext``: the user cache
+    (``~/.cache/repro/autotune-<hw>-<jax>.json``) first, then the in-repo
+    seed tables under ``core/calibrations/`` (``tpu_v5e`` analytic seed,
+    ``cpu_emulated`` measured on the 8-device emulated mesh). Tables whose
+    fingerprint does not match the live process are ignored — the measured
+    policy then degrades to analytic instead of dispatching from someone
+    else's machine.
+
+CLI (``python -m repro.autotune``): ``calibrate`` / ``show`` / ``diff``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import math
+import os
+import time
+import warnings
+from pathlib import Path
+from typing import Any, Sequence
+
+SCHEMA = "repro-autotune/v1"
+SCHEMA_VERSION = 1
+
+#: ops the calibrator sweeps; mirrors comms.OP_BACKENDS keys it can measure.
+GEMM_OPS = ("all_gather_matmul", "matmul_reduce_scatter", "matmul_all_reduce")
+DEFAULT_OPS = GEMM_OPS + ("psum",)
+
+#: per-device square sizes for the GEMM-op grid. "tiny" keeps test runtime
+#: in check on the emulated mesh; "small" is the CLI default there; "full"
+#: is sized for a real TPU slice.
+GRIDS: dict[str, tuple[int, ...]] = {
+    "tiny": (128,),
+    "small": (128, 256, 512),
+    "full": (256, 512, 1024, 2048, 4096),
+}
+
+_SEED_DIR = Path(__file__).parent / "calibrations"
+
+
+def cache_dir() -> Path:
+    env = os.environ.get("REPRO_CACHE_DIR")
+    if env:
+        return Path(env).expanduser()
+    return Path("~/.cache/repro").expanduser()
+
+
+# ---------------------------------------------------------------------------
+# Fingerprint
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Fingerprint:
+    """Identity of (spec being corrected, software, devices) for one table."""
+
+    hw: str             # HardwareSpec.name the corrections apply to
+    jax_version: str
+    backend: str        # jax.default_backend() at measurement time
+    device_kind: str
+    n_devices: int
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Fingerprint":
+        return cls(hw=d["hw"], jax_version=d["jax_version"],
+                   backend=d["backend"], device_kind=d["device_kind"],
+                   n_devices=int(d["n_devices"]))
+
+    @staticmethod
+    def _jax_mm(v: str) -> str:
+        return ".".join(v.split(".")[:2])
+
+    def compatible(self, live: "Fingerprint", *, strict: bool = False) -> bool:
+        """Can a table stamped `self` serve a process that looks like `live`?
+
+        Non-strict (the dispatch default) requires the same corrected spec,
+        jax backend, device kind and jax major.minor — the quantities the
+        corrections actually depend on. Strict additionally pins the exact
+        jax version and device count (used by ``diff`` to refuse
+        apples-to-oranges comparisons).
+        """
+        base = (self.hw == live.hw and self.backend == live.backend
+                and self.device_kind == live.device_kind
+                and self._jax_mm(self.jax_version)
+                == self._jax_mm(live.jax_version))
+        if not strict:
+            return base
+        return (base and self.jax_version == live.jax_version
+                and self.n_devices == live.n_devices)
+
+
+def live_fingerprint(hw_name: str, mesh=None) -> Fingerprint:
+    """Fingerprint of the current process (and optionally one mesh)."""
+    import jax
+
+    from repro.launch.mesh import device_fingerprint
+
+    d = device_fingerprint(mesh)
+    return Fingerprint(hw=hw_name, jax_version=jax.__version__,
+                       backend=d["backend"], device_kind=d["device_kind"],
+                       n_devices=d["n_devices"])
+
+
+def cache_path(fp: Fingerprint) -> Path:
+    """``~/.cache/repro/autotune-<hw>-<jax>.json`` for this fingerprint."""
+    return cache_dir() / f"autotune-{fp.hw}-{fp.jax_version}.json"
+
+
+# ---------------------------------------------------------------------------
+# CalibrationTable
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(eq=False)
+class CalibrationTable:
+    """Measured corrections + raw micro-benchmark rows for one machine.
+
+    ``corrections`` maps ``HardwareSpec`` field names to fitted values
+    (subset of: ``ici_bandwidth``, ``remote_sync_s``, ``gemm_efficiency``,
+    ``kernel_launch_s``). ``measurements`` rows are
+    ``{op, backend, axis_size, m, n, k, us}`` with (m, n, k) the *global*
+    GEMM shape — the same coordinates ``CommContext.auto_gemm_backend``
+    receives, so dispatch lookups need no shape translation.
+    """
+
+    fingerprint: Fingerprint
+    corrections: dict[str, float]
+    measurements: list[dict] = dataclasses.field(default_factory=list)
+    version: int = SCHEMA_VERSION
+    created: str = ""
+    notes: str = ""
+
+    # -- persistence -------------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {
+            "schema": SCHEMA,
+            "version": self.version,
+            "created": self.created,
+            "notes": self.notes,
+            "fingerprint": self.fingerprint.to_dict(),
+            "corrections": dict(self.corrections),
+            "measurements": list(self.measurements),
+        }
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "CalibrationTable":
+        if doc.get("schema") != SCHEMA:
+            raise ValueError(
+                f"not a {SCHEMA} document (schema={doc.get('schema')!r})")
+        return cls(fingerprint=Fingerprint.from_dict(doc["fingerprint"]),
+                   corrections={k: float(v)
+                                for k, v in doc["corrections"].items()},
+                   measurements=list(doc.get("measurements", [])),
+                   version=int(doc.get("version", SCHEMA_VERSION)),
+                   created=doc.get("created", ""),
+                   notes=doc.get("notes", ""))
+
+    def save(self, path: str | Path) -> Path:
+        path = Path(path).expanduser()
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_json(), indent=1, sort_keys=True))
+        return path
+
+    @classmethod
+    def load(cls, path: str | Path) -> "CalibrationTable":
+        return cls.from_json(json.loads(Path(path).expanduser().read_text()))
+
+    # -- consumption -------------------------------------------------------
+
+    def spec(self, base):
+        """`base` HardwareSpec with this table's corrections applied."""
+        return base.calibrated(**self.corrections)
+
+    def measured_us(self, op: str, backend: str, m: int, n: int, k: int,
+                    *, axis_size: int | None = None,
+                    dtype_bytes: int | None = None,
+                    max_ratio: float = 4.0) -> float | None:
+        """Interpolated measurement for (op, backend) at the nearest grid
+        point, or None when the closest point is further than ``max_ratio``
+        away in every-dimension log distance (extrapolating a microbench
+        across >4x in shape is how analytic models go wrong in the first
+        place — refuse, and let the caller fall back to analytic).
+
+        ``dtype_bytes`` filters to rows measured at that element width: a
+        bf16 ring's measured win (half the bytes of an f32-promoted bulk
+        collective) does not transfer to an f32 payload. Rows without a
+        recorded dtype (older tables) match any width.
+        """
+        best, best_d = None, math.inf
+        for row in self.measurements:
+            if row["op"] != op or row["backend"] != backend:
+                continue
+            if axis_size is not None and row["axis_size"] != axis_size:
+                continue
+            if (dtype_bytes is not None
+                    and row.get("dtype_bytes") is not None
+                    and row["dtype_bytes"] != dtype_bytes):
+                continue
+            d = max(abs(math.log(max(m, 1) / max(row["m"], 1))),
+                    abs(math.log(max(n, 1) / max(row["n"], 1))),
+                    abs(math.log(max(k, 1) / max(row["k"], 1))))
+            if d < best_d:
+                best, best_d = row, d
+        if best is None or best_d > math.log(max_ratio):
+            return None
+        return float(best["us"])
+
+    def best_backend(self, op: str, m: int, n: int, k: int, *,
+                     allowed: Sequence[str],
+                     axis_size: int | None = None,
+                     dtype_bytes: int | None = None) -> str | None:
+        """argmin over measured backends of `op` near (m, n, k), restricted
+        to `allowed` (the caller's shape/VMEM-feasible set). None when fewer
+        than two allowed backends have usable measurements — a one-sided
+        'measurement' would just echo whatever the grid happened to cover."""
+        timed = {}
+        for be in allowed:
+            us = self.measured_us(op, be, m, n, k, axis_size=axis_size,
+                                  dtype_bytes=dtype_bytes)
+            if us is not None:
+                timed[be] = us
+        if len(timed) < 2:
+            return None
+        return min(timed, key=timed.get)
+
+    def ops_covered(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for row in self.measurements:
+            out[row["op"]] = out.get(row["op"], 0) + 1
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Table resolution (cache -> in-repo seeds), used by CommContext.
+# ---------------------------------------------------------------------------
+
+_warned: set[str] = set()
+
+
+def _warn_once(key: str, msg: str) -> None:
+    if key not in _warned:
+        _warned.add(key)
+        warnings.warn(msg, stacklevel=3)
+
+
+def _candidate_paths(fp: Fingerprint) -> list[Path]:
+    paths = [cache_path(fp)]
+    if _SEED_DIR.is_dir():
+        paths.extend(sorted(_SEED_DIR.glob("*.json")))
+    return paths
+
+
+def find_table(hw_name: str) -> CalibrationTable | None:
+    """The calibration table ``policy="measured"|"auto"`` dispatches from.
+
+    Search order: the user cache for this (hw, jax) pair, then the checked-in
+    seed tables. The first table whose fingerprint is compatible with the
+    live process wins; incompatible and unreadable tables are skipped (the
+    latter with a one-shot warning naming the file).
+    """
+    live = live_fingerprint(hw_name)
+    for path in _candidate_paths(live):
+        if not path.is_file():
+            continue
+        try:
+            table = CalibrationTable.load(path)
+        except (ValueError, KeyError, json.JSONDecodeError) as e:
+            _warn_once(f"unreadable:{path}",
+                       f"ignoring unreadable calibration table {path}: {e}")
+            continue
+        if table.fingerprint.compatible(live):
+            return table
+    return None
+
+
+def clear_caches() -> None:
+    """Reset memoized lookups (tests; after writing a new cache table)."""
+    _load_cached.cache_clear()
+    _find_cached.cache_clear()
+    _live_cached.cache_clear()
+    _warned.clear()
+
+
+_load_cached = functools.lru_cache(maxsize=32)(CalibrationTable.load)
+_find_cached = functools.lru_cache(maxsize=8)(find_table)
+# the process-wide fingerprint never changes within a process; memoized so
+# every policy-routed collective doesn't re-read jax.devices() at trace time
+_live_cached = functools.lru_cache(maxsize=8)(live_fingerprint)
+
+
+def resolve_table(calibration: Any, hw_name: str,
+                  policy: str) -> CalibrationTable | None:
+    """Map a ``CommContext`` (policy, calibration) pair to a usable table.
+
+    ``calibration`` may be a ``CalibrationTable``, a path, or None (search
+    cache + seeds). Under ``policy="measured"`` a missing or
+    fingerprint-mismatched table warns once and returns None — the context
+    then runs the analytic policy, which is always available; under
+    ``"auto"`` the same fallback is silent by design.
+    """
+    if policy == "analytic":
+        return None
+    if policy not in ("measured", "auto"):
+        raise ValueError(
+            f"unknown comm policy {policy!r}; expected 'analytic', "
+            "'measured' or 'auto'")
+    table: CalibrationTable | None
+    if isinstance(calibration, CalibrationTable):
+        table = calibration
+    elif calibration is not None:
+        try:
+            table = _load_cached(str(calibration))
+        except (OSError, ValueError, KeyError, json.JSONDecodeError) as e:
+            # an EXPLICITLY configured path that doesn't load warns under
+            # "auto" too — auto's silence covers implicit search misses,
+            # not a broken user-supplied argument
+            _warn_once(f"load:{calibration}",
+                       f"calibration table {calibration!r} could not be "
+                       f"loaded ({e}); falling back to analytic costs")
+            return None
+    else:
+        table = _find_cached(hw_name)
+        if table is None:
+            if policy == "measured":
+                _warn_once(f"missing:{hw_name}",
+                           "policy='measured' but no calibration table found "
+                           f"for hw={hw_name!r} (searched "
+                           f"{cache_path(live_fingerprint(hw_name))} and "
+                           f"{_SEED_DIR}); run `python -m repro.autotune "
+                           "calibrate`; falling back to analytic costs")
+            return None
+    live = _live_cached(hw_name)
+    if not table.fingerprint.compatible(live):
+        # like the unreadable-path case above: an explicitly supplied table
+        # that gets rejected warns under "auto" too — only tables found by
+        # the implicit cache/seed search are silently skipped there
+        if policy == "measured" or calibration is not None:
+            _warn_once(f"fingerprint:{hw_name}:{table.fingerprint}",
+                       f"calibration table fingerprint {table.fingerprint} "
+                       f"does not match this process {live}; falling back "
+                       "to analytic costs")
+        return None
+    return table
+
+
+# ---------------------------------------------------------------------------
+# Micro-benchmarks
+# ---------------------------------------------------------------------------
+
+
+def _timeit(fn, *args, reps: int = 3, warmup: int = 1) -> float:
+    """Median seconds per call (same protocol as benchmarks/common.timeit,
+    duplicated here so `src/` never imports the benchmarks package)."""
+    import jax
+
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _fit_line(xs: Sequence[float], ys: Sequence[float]) -> tuple[float, float]:
+    """Least-squares y = a + b*x; returns (a, b)."""
+    n = len(xs)
+    mx = sum(xs) / n
+    my = sum(ys) / n
+    sxx = sum((x - mx) ** 2 for x in xs)
+    if sxx == 0.0:
+        return my, 0.0
+    b = sum((x - mx) * (y - my) for x, y in zip(xs, ys)) / sxx
+    return my - b * mx, b
+
+
+def _measure_link(mesh, axis_name: str, reps: int) -> tuple[float, float]:
+    """(achieved bytes/s per link-direction, per-hop overhead seconds).
+
+    Times a one-hop ``ppermute`` ring rotation over a payload sweep and fits
+    t = overhead + bytes/B. The intercept is everything the analytic model
+    books under T_launch + T_sync for one remote hop; the slope is the
+    *achieved* link bandwidth, contention included.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.core.comms import ring_shift
+
+    sizes = (2 ** 14, 2 ** 18, 2 ** 22)        # 16 KiB .. 4 MiB per device
+    xs, ys = [], []
+    for nbytes in sizes:
+        n_el = nbytes // 4
+        x = jnp.ones((mesh.shape[axis_name], n_el), jnp.float32)
+        f = jax.jit(compat.shard_map(
+            lambda t: ring_shift(t, axis_name),
+            mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name),
+            check_vma=False))
+        t = _timeit(f, x, reps=reps)
+        xs.append(float(nbytes))
+        ys.append(t)
+    overhead, inv_bw = _fit_line(xs, ys)
+    bw = (1.0 / inv_bw) if inv_bw > 0 else xs[-1] / max(ys[-1], 1e-12)
+    return max(bw, 1.0), max(overhead, 1e-9)
+
+
+def _measure_gemm_efficiency(hw, reps: int) -> float:
+    """Sustained local-GEMM fraction of ``hw.peak_flops_bf16``.
+
+    Probed in bf16 — the dtype the peak is quoted for and the calibrated
+    ops run in; an f32 probe would understate the MXU severalfold on real
+    hardware. On the CPU-emulated mesh the result is far below 1.0 — that
+    is the point: the measured policy then prices compute at what the
+    machine actually delivers instead of the datasheet number.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    n = 512
+    a = jnp.ones((n, n), jnp.bfloat16)
+    f = jax.jit(lambda a: a @ a)
+    t = _timeit(f, a, reps=reps)
+    achieved = 2.0 * n ** 3 / max(t, 1e-12)
+    return min(max(achieved / hw.peak_flops_bf16, 1e-9), 1.0)
+
+
+def _measure_launch(reps: int) -> float:
+    """Dispatch overhead of a trivial jitted op (T_launch analogue)."""
+    import jax
+    import jax.numpy as jnp
+
+    x = jnp.ones((8,), jnp.float32)
+    f = jax.jit(lambda t: t + 1.0)
+    return max(_timeit(f, x, reps=reps), 1e-9)
+
+
+def _gemm_case(op: str, nsz: int, n_dev: int):
+    """(global operand arrays, in_specs, out_specs, (m, n, k)) for one grid
+    point of `op`, mirroring the paper-figure shapes in benchmarks/.
+
+    (m, n, k) MUST be the exact coordinates ``CommContext``'s dispatch
+    queries with (``auto_gemm_backend``'s arguments): for AG+GEMM that is
+    the gathered GEMM's global m (= the sharded array's global rows,
+    m_loc * n_dev); for RS/AR it is (global m, n, local k). Rows stored in
+    any other coordinate system would never be found by ``measured_us``'s
+    4x-log-distance lookup and the measured policy would silently never
+    activate (tests pin this coupling).
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    if op == "all_gather_matmul":
+        x = jax.random.normal(jax.random.PRNGKey(0), (nsz, nsz // 4),
+                              jnp.bfloat16)
+        w = jax.random.normal(jax.random.PRNGKey(1), (nsz // 4, nsz // 4),
+                              jnp.bfloat16)
+        # sharded rows: m_loc = nsz / n_dev, so dispatch sees m = nsz
+        return ((x, w), (P("x"), P()), P(), (nsz, nsz // 4, nsz // 4))
+    x = jax.random.normal(jax.random.PRNGKey(0), (nsz, n_dev * (nsz // 8)),
+                          jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(1),
+                          (n_dev * (nsz // 8), nsz // 4), jnp.bfloat16)
+    out = (P("x", None) if op == "matmul_reduce_scatter" else P())
+    return ((x, w), (P(None, "x"), P("x", None)), out,
+            (nsz, nsz // 4, nsz // 8))
+
+
+def _feasible(op: str, backend: str, n_dev: int, nsz: int,
+              available: Sequence[str]) -> bool:
+    if backend not in available:
+        return False
+    if backend == "ring_bidir":
+        return op == "all_gather_matmul" and nsz % 2 == 0
+    if backend == "fused":
+        # interpret-mode fused kernels are orders of magnitude slower than
+        # the thing they emulate; timing them off-TPU would poison the table
+        import jax
+        return jax.default_backend() == "tpu"
+    return True
+
+
+def _sweep_gemm_ops(ctx, mesh, axis_name: str, sizes: Sequence[int],
+                    reps: int, log) -> list[dict]:
+    import jax
+    from functools import partial
+
+    from repro import compat
+
+    n_dev = mesh.shape[axis_name]
+    rows: list[dict] = []
+    for op in GEMM_OPS:
+        avail = ctx.available_backends(op)
+        for nsz in sizes:
+            args, in_specs, out_specs, (m, n, k) = _gemm_case(op, nsz, n_dev)
+            for be in ("bulk", "ring", "ring_bidir", "fused"):
+                if not _feasible(op, be, n_dev, nsz, avail):
+                    continue
+                fn = jax.jit(compat.shard_map(
+                    partial(getattr(ctx, op), backend=be),
+                    mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_vma=False))
+                try:
+                    t = _timeit(fn, *args, reps=reps)
+                except Exception as e:  # noqa: BLE001 — skip, don't abort
+                    log(f"  {op}/{be}/N={nsz}: SKIPPED ({type(e).__name__})")
+                    continue
+                rows.append({"op": op, "backend": be, "axis_size": n_dev,
+                             "m": m, "n": n, "k": k, "dtype_bytes": 2,
+                             "us": t * 1e6})
+                log(f"  {op}/{be}/N={nsz}: {t * 1e6:.1f} us")
+    return rows
+
+
+def _sweep_psum(ctx, mesh, axis_name: str, sizes: Sequence[int],
+                reps: int, log) -> list[dict]:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+
+    n_dev = mesh.shape[axis_name]
+    rows: list[dict] = []
+    for nsz in sizes:
+        x = jnp.ones((n_dev * n_dev, nsz), jnp.bfloat16)
+        for be in ("bulk", "ring"):
+            fn = jax.jit(compat.shard_map(
+                lambda t, be=be: ctx.psum(t[0], backend=be)[None],
+                mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name),
+                check_vma=False))
+            xs = x.reshape(n_dev, n_dev, nsz)
+            try:
+                t = _timeit(fn, xs, reps=reps)
+            except Exception as e:  # noqa: BLE001
+                log(f"  psum/{be}/N={nsz}: SKIPPED ({type(e).__name__})")
+                continue
+            rows.append({"op": "psum", "backend": be, "axis_size": n_dev,
+                         "m": n_dev, "n": nsz, "k": 1, "dtype_bytes": 2,
+                         "us": t * 1e6})
+            log(f"  psum/{be}/N={nsz}: {t * 1e6:.1f} us")
+    return rows
+
+
+def calibrate(mesh=None, *, axis_name: str = "x", hw=None,
+              grid: str | Sequence[int] = "small", reps: int = 3,
+              notes: str = "", verbose: bool = False) -> CalibrationTable:
+    """Run the full micro-benchmark suite and fit a ``CalibrationTable``.
+
+    With ``mesh=None`` a 1-D mesh over every visible device is built. The
+    returned table is NOT saved; callers pick the destination
+    (``table.save(autotune.cache_path(table.fingerprint))`` for the user
+    cache the measured policy searches).
+    """
+    from repro.core import costmodel as cm
+    from repro.core.comms import CommContext
+    from repro.launch.mesh import make_mesh
+
+    hw = hw if hw is not None else cm.TPU_V5E
+    log = print if verbose else (lambda *_: None)
+    if mesh is None:
+        import jax
+        mesh = make_mesh((len(jax.devices()),), (axis_name,))
+    sizes = GRIDS[grid] if isinstance(grid, str) else tuple(grid)
+    # Pin each microbench's backend explicitly (policy stays analytic here —
+    # a measured policy would consult the very table being built).
+    ctx = CommContext(axis_name=axis_name, mesh=mesh, hw=hw)
+
+    log(f"calibrating on {mesh.shape} mesh, grid={sizes} ...")
+    bw, hop_overhead = _measure_link(mesh, axis_name, reps)
+    log(f"  link: {bw / 1e9:.3f} GB/s achieved, "
+        f"{hop_overhead * 1e6:.1f} us/hop overhead")
+    eff = _measure_gemm_efficiency(hw, reps)
+    log(f"  gemm: {eff:.2e} of {hw.name} peak sustained")
+    launch = _measure_launch(reps)
+    log(f"  launch: {launch * 1e6:.1f} us")
+
+    rows = _sweep_gemm_ops(ctx, mesh, axis_name, sizes, reps, log)
+    rows += _sweep_psum(ctx, mesh, axis_name, sizes, reps, log)
+
+    return CalibrationTable(
+        fingerprint=live_fingerprint(hw.name, mesh),
+        corrections={
+            "ici_bandwidth": bw,
+            "remote_sync_s": hop_overhead,
+            "gemm_efficiency": eff,
+            "kernel_launch_s": launch,
+        },
+        measurements=rows,
+        created=time.strftime("%Y-%m-%dT%H:%M:%S"),
+        notes=notes,
+    )

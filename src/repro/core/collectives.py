@@ -8,6 +8,12 @@ code should use instead of these free functions:
     ctx = CommContext(axis_name="model", mesh=mesh)
     y = ctx.all_gather_matmul(x, w)          # was: pk_all_gather_matmul(...)
 
+The full old-name -> new-call migration table lives in README.md
+("Migrating from the old free functions"); the backend-selection precedence
+rules (per-call override > context pin > cost-model policy) are documented
+in the ``repro.core.comms`` module docstring, and the analytic-vs-measured
+cost sources in docs/ARCHITECTURE.md.
+
 Importing names from here keeps working but emits a DeprecationWarning.
 """
 

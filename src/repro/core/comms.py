@@ -34,13 +34,43 @@ Ops (uniform signature: operands, then ``backend=None`` plus op kwargs):
 ``fused``   — single Pallas kernel with intra-kernel RDMA overlap (LCSC
               template; needs a TPU backend or TPU interpret mode)
 
+Backend-selection precedence (highest to lowest)
+------------------------------------------------
+
+1. **Per-call override** — ``ctx.matmul_reduce_scatter(x, w,
+   backend="ring")``. Always wins. If the named backend's shape constraint
+   is violated (e.g. ``m`` not divisible by the axis for a ring), this is
+   treated as a caller bug and raises ``ValueError`` with the constraint
+   spelled out; it never silently measures a different backend.
+2. **Context pin** — ``CommContext(backend="ring")`` (what
+   ``RunConfig.comm_backend`` sets for A/B runs). Applies to every call on
+   the context, with two deliberate softenings: a pinned backend the called
+   op does not implement (e.g. ``ring_bidir`` pinned, ``matmul_all_reduce``
+   called) falls back to the policy for that op, and a pinned backend whose
+   shape constraint fails (decode-shaped GEMMs) degrades to ``bulk`` the
+   way the policy would — so one pin cannot crash a whole run. A typo'd
+   pin (not a backend of *any* op) still raises.
+3. **Policy** (``backend=None``) — the §3.1.1 cost model decides; see below.
+
 Dispatch rules (``backend=None``): GEMM×collective ops go through
 ``schedule.choose_gemm_collective`` — bulk when the GEMM is too small to
 cover the ring's sync overhead, ``ring_bidir`` when the axis is even and
 bidirectional rings are allowed, ``ring`` otherwise, ``fused`` on a real TPU
 when the operands fit VMEM. ``all_to_all`` picks its chunk count from
-``schedule.choose_a2a_chunks``. A ``backend=`` argument (per call) or
-``CommContext(backend=...)`` (per context) always wins over the policy.
+``schedule.choose_a2a_chunks``.
+
+Analytic vs measured costs (``policy=``)
+----------------------------------------
+
+The policy's cost source is itself a knob. ``policy="analytic"`` (default)
+prices schedules from ``hw``'s datasheet constants. ``policy="measured"``
+dispatches from a ``repro.core.autotune`` calibration table — micro-bench
+measurements of every backend on *this* machine — and only falls back to
+the analytic model (with a warning) when no table matches the machine's
+fingerprint or the requested shape is too far off the calibrated grid.
+``policy="auto"`` is the same fallback, silent. Produce a table with
+``python -m repro.autotune calibrate``; see docs/ARCHITECTURE.md for the
+full calibration loop.
 
 This module also owns the **collective-id allocator**: every Pallas
 communication kernel gets its ``CompilerParams(collective_id=...)`` from
@@ -175,6 +205,15 @@ class CommContext:
     backend: str | None = None
     interpret: bool | None = None
     allow_bidir: bool = True
+    #: "analytic" prices schedules from ``hw``'s datasheet constants;
+    #: "measured" dispatches from a ``repro.core.autotune`` calibration
+    #: table (falling back to analytic, with a warning, when none matches
+    #: this machine); "auto" is "measured when a matching table exists,
+    #: analytic otherwise", silently.
+    policy: str = "analytic"
+    #: a ``CalibrationTable``, a path to one, or None (= search the user
+    #: cache then the in-repo seed tables). Ignored under policy="analytic".
+    calibration: Any = None
 
     # -- introspection -----------------------------------------------------
 
@@ -185,11 +224,31 @@ class CommContext:
         return compat.axis_size(self.axis_name)
 
     def available_backends(self, op: str) -> tuple[str, ...]:
-        """Backends of `op` that can actually execute in this process."""
+        """Backends of `op` that can actually execute in this process.
+
+        Example::
+
+            >>> CommContext(axis_name="x").available_backends("psum")
+            ('bulk', 'ring')
+        """
         names = OP_BACKENDS[op]
         if compat.tpu_kernels_supported():
             return names
         return tuple(b for b in names if b not in _FUSED)
+
+    def active_calibration(self):
+        """The ``CalibrationTable`` this context's policy dispatches from,
+        or None when the policy is analytic (explicitly, or by fallback
+        because no table matches this machine's fingerprint)."""
+        from repro.core import autotune
+        return autotune.resolve_table(self.calibration, self.hw.name,
+                                      self.policy)
+
+    def effective_hw(self) -> cm.HardwareSpec:
+        """``hw`` with measured correction factors applied when the measured
+        policy is active — the spec every cost-model query below runs on."""
+        table = self.active_calibration()
+        return table.spec(self.hw) if table is not None else self.hw
 
     # -- dispatch plumbing -------------------------------------------------
 
@@ -249,9 +308,14 @@ class CommContext:
         return footprint <= self.hw.vmem_bytes
 
     def gemm_policy(self, m: int, n: int, k: int, *, kind: str,
-                    dtype_bytes: int = 2) -> OverlapPolicy:
+                    dtype_bytes: int = 2, hw: cm.HardwareSpec | None = None
+                    ) -> OverlapPolicy:
         """The §3.1.3 schedule decision for a fused GEMM×collective of global
         GEMM shape (m, n, k) over this context's axis. Pure / trace-free.
+
+        ``hw=None`` prices on ``effective_hw()``; callers that already hold
+        the resolved spec (``auto_gemm_backend``) pass it to avoid resolving
+        the calibration table twice per dispatch.
 
         Only the AG+GEMM op implements the bidirectional ring, so only the
         "all_gather" kind may credit the cost model with the second
@@ -261,7 +325,9 @@ class CommContext:
         allow_bidir = self.allow_bidir and kind == "all_gather"
         return choose_gemm_collective(
             m, n, k, axis_size=self.axis_size, kind=kind,
-            dtype_bytes=dtype_bytes, hw=self.hw, allow_bidir=allow_bidir)
+            dtype_bytes=dtype_bytes,
+            hw=hw if hw is not None else self.effective_hw(),
+            allow_bidir=allow_bidir)
 
     _GEMM_KIND = {"all_gather_matmul": "all_gather",
                   "matmul_reduce_scatter": "reduce_scatter",
@@ -274,9 +340,29 @@ class CommContext:
         global shape (m, n, k) — the policy mapping itself, trace-free, so
         dispatch is unit-testable without running the GEMM. ``fused_ok`` /
         ``bidir_ok`` carry the operand-level constraints (VMEM fit, even
-        local rows) the real call sites compute from their arrays."""
-        pol = self.gemm_policy(m, n, k, kind=self._GEMM_KIND[op],
-                               dtype_bytes=dtype_bytes)
+        local rows) the real call sites compute from their arrays.
+
+        Under the measured policy, backends with calibration measurements
+        near (m, n, k) are compared on *measured* microseconds and the
+        analytic model is only consulted when the table has no usable
+        coverage (shape too far off the calibrated grid, or fewer than two
+        feasible backends measured)."""
+        table = self.active_calibration()
+        if table is not None:
+            allowed = ["bulk", "ring"]
+            if (op == "all_gather_matmul" and bidir_ok and self.allow_bidir
+                    and self.axis_size % 2 == 0):
+                allowed.append("ring_bidir")
+            if fused_ok:
+                allowed.append("fused")
+            best = table.best_backend(op, m, n, k, allowed=allowed,
+                                      axis_size=self.axis_size,
+                                      dtype_bytes=dtype_bytes)
+            if best is not None:
+                return best
+        pol = self.gemm_policy(
+            m, n, k, kind=self._GEMM_KIND[op], dtype_bytes=dtype_bytes,
+            hw=table.spec(self.hw) if table is not None else self.hw)
         if not pol.enabled:
             return "bulk"
         if fused_ok:
@@ -290,7 +376,20 @@ class CommContext:
 
     def all_gather_matmul(self, x, w, *, backend: str | None = None,
                           preferred=jnp.float32):
-        """x: (m_loc, k) row-sharded; w: (k, n_loc) local. -> (m, n_loc)."""
+        """x: (m_loc, k) row-sharded; w: (k, n_loc) local. -> (m, n_loc).
+
+        The tensor-parallel first projection (paper Fig. 7): gather the
+        row-sharded activations while the GEMM consumes already-arrived
+        shards. ``backend="ring_bidir"`` additionally needs an even
+        ``m_loc`` (the shard is split across the two ring directions).
+
+        Example (inside ``shard_map`` with axis ``"model"`` bound)::
+
+            ctx = CommContext(axis_name="model", mesh=mesh)
+            # x: (seq/n_dev, d_model) per device; w: (d_model, d_ff/n_dev)
+            y = ctx.all_gather_matmul(x, w)          # policy-routed
+            y = ctx.all_gather_matmul(x, w, backend="ring_bidir")
+        """
         n_dev = self.axis_size
         m_loc, k = x.shape
         n_out = w.shape[1]
@@ -324,7 +423,20 @@ class CommContext:
 
     def matmul_reduce_scatter(self, x, w, *, backend: str | None = None,
                               preferred=jnp.float32):
-        """x: (m, k_loc); w: (k_loc, n). -> (m_loc, n) = RS(x @ w)."""
+        """x: (m, k_loc); w: (k_loc, n). -> (m_loc, n) = RS(x @ w).
+
+        The tensor-parallel second projection (paper Fig. 8): each device
+        holds a K-shard, partial products are reduce-scattered. The ring
+        backend computes per-destination blocks and accumulates them around
+        the ring, hiding each hop under the next block's GEMM; it requires
+        ``m`` divisible by the axis size.
+
+        Example::
+
+            ctx = CommContext(axis_name="model", mesh=mesh)
+            # x: (seq, d_ff/n_dev); w: (d_ff/n_dev, d_model)
+            y = ctx.matmul_reduce_scatter(x, w)      # -> (seq/n_dev, d_model)
+        """
         n_dev = self.axis_size
         m, k_loc = x.shape
         n_out = w.shape[1]
@@ -356,7 +468,18 @@ class CommContext:
 
     def matmul_all_reduce(self, x, w, *, backend: str | None = None,
                           preferred=jnp.float32):
-        """x: (m, k_loc); w: (k_loc, n). -> (m, n) = AR(x @ w)."""
+        """x: (m, k_loc); w: (k_loc, n). -> (m, n) = AR(x @ w).
+
+        Paper Fig. 9. ICI has no in-network reduction, so the overlapped
+        backends realize AR as RS (hidden under the GEMM) + AG — same
+        2(N-1)/N per-device bytes. Ring needs ``m`` divisible by the axis.
+
+        Example::
+
+            ctx = CommContext(axis_name="model", mesh=mesh)
+            y = ctx.matmul_all_reduce(x, w)              # replicated (m, n)
+            y = ctx.matmul_all_reduce(x, w, backend="bulk")  # A/B baseline
+        """
         n_dev = self.axis_size
         m, k_loc = x.shape
         n_out = w.shape[1]
@@ -391,14 +514,28 @@ class CommContext:
     def all_to_all(self, x, *, split_axis: int, concat_axis: int,
                    backend: str | None = None, n_chunks: int | None = None,
                    downstream_compute_s: float = 0.0):
-        """Re-sharding all-to-all; "chunked" overlaps downstream compute."""
+        """Re-sharding all-to-all; "chunked" overlaps downstream compute.
+
+        Paper Fig. 11/17 (Ulysses head↔sequence re-sharding, MoE dispatch).
+        ``downstream_compute_s`` tells the chunk policy how much compute is
+        available to hide later chunks under; ``n_chunks`` forces the count.
+        Chunks are cut along a bystander dim, so results are bit-identical
+        to bulk.
+
+        Example (Ulysses: seq-sharded -> head-sharded)::
+
+            ctx = CommContext(axis_name="sp", mesh=mesh)
+            # q: (b, heads, seq/n_dev, hd) -> (b, heads/n_dev, seq, hd)
+            q = ctx.all_to_all(q, split_axis=1, concat_axis=2)
+        """
 
         def auto() -> str:
             if n_chunks is not None:
                 return "chunked" if n_chunks > 1 else "bulk"
             c = choose_a2a_chunks(
                 x.size * x.dtype.itemsize, axis_size=self.axis_size,
-                downstream_compute_s=downstream_compute_s, hw=self.hw)
+                downstream_compute_s=downstream_compute_s,
+                hw=self.effective_hw())
             return "chunked" if c > 1 else "bulk"
 
         be = self._resolve("all_to_all", backend, auto)
@@ -408,17 +545,35 @@ class CommContext:
                                        concat_axis=concat_axis)
         c = n_chunks if n_chunks is not None else choose_a2a_chunks(
             x.size * x.dtype.itemsize, axis_size=self.axis_size,
-            downstream_compute_s=downstream_compute_s, hw=self.hw)
+            downstream_compute_s=downstream_compute_s,
+            hw=self.effective_hw())
         return pk_all_to_all(x, self.axis_name, split_axis=split_axis,
                              concat_axis=concat_axis, n_chunks=max(c, 2))
 
     def psum(self, x, *, backend: str | None = None):
         """All-reduce. "ring" keeps the payload in its dtype (bf16 halves the
-        bytes vs XLA's f32-promoted psum) and each hop overlaps compute."""
+        bytes vs XLA's f32-promoted psum) and each hop overlaps compute;
+        it requires ``x.shape[0]`` divisible by the axis size.
+
+        Example (MoE combine across experts)::
+
+            ctx = CommContext(axis_name="expert", mesh=mesh)
+            y = ctx.psum(partial_outputs)            # policy-routed
+            y = ctx.psum(partial_outputs, backend="ring")
+        """
 
         def auto() -> str:
-            if (x.ndim >= 1 and x.shape[0] % self.axis_size == 0
-                    and x.dtype == jnp.bfloat16):
+            ring_ok = x.ndim >= 1 and x.shape[0] % self.axis_size == 0
+            table = self.active_calibration()
+            if table is not None and ring_ok:
+                best = table.best_backend(
+                    "psum", x.shape[0],
+                    max(x.size // max(x.shape[0], 1), 1), 1,
+                    allowed=("bulk", "ring"), axis_size=self.axis_size,
+                    dtype_bytes=x.dtype.itemsize)
+                if best is not None:
+                    return best
+            if ring_ok and x.dtype == jnp.bfloat16:
                 return "ring"
             return "bulk"
 
@@ -433,7 +588,14 @@ class CommContext:
         return pk_psum_ring(x, self.axis_name)
 
     def all_gather(self, x, *, axis: int = 0, backend: str | None = None):
-        """Tiled all-gather along `axis`."""
+        """Tiled all-gather along `axis`.
+
+        Example (FSDP param gather before a block)::
+
+            ctx = CommContext(axis_name="data", mesh=mesh)
+            w_full = ctx.all_gather(w_shard)                  # axis 0
+            w_full = ctx.all_gather(w_shard, backend="fused") # Pallas kernel
+        """
         be = self._resolve("all_gather", backend, lambda: "bulk")
         if be == "bulk":
             return lax.all_gather(x, self.axis_name, axis=axis, tiled=True)
@@ -445,7 +607,13 @@ class CommContext:
 
     def reduce_scatter(self, x, *, axis: int = 0,
                        backend: str | None = None):
-        """Tiled reduce-scatter along `axis`."""
+        """Tiled reduce-scatter along `axis`.
+
+        Example (FSDP gradient shard-reduce)::
+
+            ctx = CommContext(axis_name="data", mesh=mesh)
+            g_shard = ctx.reduce_scatter(grads)   # (n*d, ...) -> (d, ...)
+        """
         be = self._resolve("reduce_scatter", backend, lambda: "bulk")
         if be == "bulk":
             return lax.psum_scatter(x, self.axis_name,
@@ -460,7 +628,14 @@ class CommContext:
 
     def ring_shift(self, x, *, reverse: bool = False,
                    backend: str | None = None):
-        """One-hop ring rotation of a pytree."""
+        """One-hop ring rotation of a pytree (KV blocks in ring attention,
+        SSM boundary states in sequence-parallel Mamba).
+
+        Example (ring attention inner loop)::
+
+            ctx = CommContext(axis_name="sp", mesh=mesh)
+            kv = ctx.ring_shift({"k": k, "v": v})    # device d -> d+1
+        """
         be = self._resolve("ring_shift", backend, lambda: "bulk")
         if be == "bulk":
             return ring_shift(x, self.axis_name, reverse=reverse)

@@ -19,3 +19,22 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests, examples, elastic reshapes)."""
     return compat.make_mesh(shape, axes)
+
+
+def device_fingerprint(mesh=None) -> dict:
+    """Identity of the devices a calibration was (or would be) taken on.
+
+    ``repro.core.autotune`` stamps every calibration table with this so a
+    table measured on one machine is never silently applied to another
+    (e.g. a CPU-emulated-mesh table on a real v5e slice). With ``mesh``
+    the count reflects that mesh; otherwise the whole process.
+    """
+    import jax
+
+    devices = list(mesh.devices.flat) if mesh is not None else jax.devices()
+    kind = devices[0].device_kind if devices else "unknown"
+    return {
+        "backend": jax.default_backend(),
+        "device_kind": kind,
+        "n_devices": len(devices),
+    }

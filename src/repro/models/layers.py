@@ -36,9 +36,14 @@ def constrain(x, rules: ShardingRules | None, spec: P):
 def _comm_ctx(run: RunConfig, rules: ShardingRules) -> CommContext:
     """The single communication entry point for every PK island in this
     module (DESIGN §3): collectives are policy-routed by the cost model;
-    ``run.comm_backend`` pins one backend for A/B runs."""
+    ``run.comm_backend`` pins one backend for A/B runs, and
+    ``run.comm_policy="measured"`` prices the routed schedules from a
+    ``repro.core.autotune`` calibration table instead of the analytic
+    datasheet constants."""
     return CommContext(axis_name=rules.tp, backend=run.comm_backend,
-                       allow_bidir=run.pk_bidirectional)
+                       allow_bidir=run.pk_bidirectional,
+                       policy=run.comm_policy,
+                       calibration=run.calibration_path)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,477 @@
+"""Empirical autotuner: calibration round-trip, measured-policy dispatch,
+graceful analytic fallback, CLI, and the bench-artifact schema."""
+
+import dataclasses
+import importlib.util
+import json
+import sys
+import warnings
+from pathlib import Path
+
+import pytest
+
+# the harness (benchmarks/) lives next to src/, not inside it
+sys.path.insert(0, str(Path(__file__).parent.parent))
+
+from repro.core import autotune
+from repro.core import costmodel as cm
+from repro.core.comms import CommContext
+
+N = 4
+
+
+@pytest.fixture(scope="module")
+def table(mesh4):
+    """One real (tiny-grid) calibration of the 4-device CPU mesh."""
+    return autotune.calibrate(mesh=mesh4, grid="tiny", reps=1)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    autotune.clear_caches()
+    yield
+    autotune.clear_caches()
+
+
+def _synthetic(fingerprint, rows, **corr):
+    corrections = {"ici_bandwidth": 1e8, "remote_sync_s": 1e-4,
+                   "gemm_efficiency": 1e-4, "kernel_launch_s": 1e-5}
+    corrections.update(corr)
+    return autotune.CalibrationTable(fingerprint=fingerprint,
+                                     corrections=corrections,
+                                     measurements=rows)
+
+
+def _rows(op, us_by_backend, m, n, k, axis_size=N):
+    return [{"op": op, "backend": be, "axis_size": axis_size,
+             "m": m, "n": n, "k": k, "us": us}
+            for be, us in us_by_backend.items()]
+
+
+# ---------------------------------------------------------------------------
+# Calibration + persistence
+# ---------------------------------------------------------------------------
+
+def test_calibrate_covers_registered_backends(table, mesh4):
+    cov = table.ops_covered()
+    for op in ("all_gather_matmul", "matmul_reduce_scatter",
+               "matmul_all_reduce", "psum"):
+        assert cov.get(op), f"no measurements for {op}"
+    backends = {(r["op"], r["backend"]) for r in table.measurements}
+    assert ("all_gather_matmul", "bulk") in backends
+    assert ("all_gather_matmul", "ring") in backends
+    assert ("all_gather_matmul", "ring_bidir") in backends
+    assert ("psum", "ring") in backends
+    for key in ("ici_bandwidth", "remote_sync_s", "gemm_efficiency",
+                "kernel_launch_s"):
+        assert table.corrections[key] > 0, key
+    live = autotune.live_fingerprint("tpu_v5e", mesh4)
+    assert table.fingerprint.compatible(live, strict=True)
+
+
+def test_round_trip_through_json(table, tmp_path, mesh4):
+    path = table.save(tmp_path / "cal.json")
+    loaded = autotune.CalibrationTable.load(path)
+    assert loaded.to_json() == table.to_json()
+
+    # the loaded table drives a measured context exactly like the original
+    for cal in (loaded, str(path)):
+        ctx = CommContext(axis_name="x", mesh=mesh4, policy="measured",
+                          calibration=cal)
+        active = ctx.active_calibration()
+        assert active is not None
+        assert active.corrections == table.corrections
+        hw = ctx.effective_hw()
+        assert hw.ici_bandwidth == pytest.approx(
+            table.corrections["ici_bandwidth"])
+        assert hw.gemm_efficiency < 1.0
+        assert hw is not ctx.hw
+
+
+def test_rejects_foreign_schema(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps({"schema": "something-else/v9"}))
+    with pytest.raises(ValueError, match="repro-autotune"):
+        autotune.CalibrationTable.load(p)
+
+
+def test_measured_us_refuses_far_extrapolation(table):
+    row = next(r for r in table.measurements if r["op"] == "psum")
+    near = table.measured_us("psum", row["backend"], row["m"], row["n"],
+                             row["k"])
+    assert near == pytest.approx(row["us"])
+    far = table.measured_us("psum", row["backend"], row["m"] * 100,
+                            row["n"] * 100, max(row["k"] * 100, 1))
+    assert far is None
+
+
+def test_calibration_rows_match_dispatch_coordinates(mesh4, table):
+    """The (m, n, k) calibrate() stores must be the exact coordinates
+    auto_gemm_backend queries with — a systematic offset (e.g. recording
+    AG rows at m * n_dev) would put every row past the 4x lookup cutoff
+    and measured dispatch would silently never activate."""
+    for op in ("all_gather_matmul", "matmul_reduce_scatter",
+               "matmul_all_reduce"):
+        r = next(r for r in table.measurements if r["op"] == op)
+        assert table.best_backend(op, r["m"], r["n"], r["k"],
+                                  allowed=("bulk", "ring"),
+                                  axis_size=N) is not None, op
+
+    # AG end-to-end: a (nsz, nsz//4) global operand sharded over the axis
+    # dispatches at m = m_loc * n_dev = nsz — the grid point itself, so the
+    # measured argmin (not the analytic policy) must decide
+    nsz = 128
+    measured = {r["backend"]: r["us"] for r in table.measurements
+                if r["op"] == "all_gather_matmul" and r["m"] == nsz}
+    assert measured, "tiny grid did not store AG rows at dispatch m"
+    ctx = CommContext(axis_name="x", mesh=mesh4, policy="measured",
+                      calibration=table)
+    assert ctx.auto_gemm_backend("all_gather_matmul", nsz, nsz // 4,
+                                 nsz // 4) == min(measured, key=measured.get)
+
+
+# ---------------------------------------------------------------------------
+# Measured-policy dispatch
+# ---------------------------------------------------------------------------
+
+def test_measured_policy_overrides_analytic_choice(mesh4):
+    """Shapes where the analytic model says bulk (tiny GEMM) dispatch to
+    ring when the measurements say ring is faster — and vice versa."""
+    live = autotune.live_fingerprint("tpu_v5e", mesh4)
+    analytic = CommContext(axis_name="x", mesh=mesh4)
+
+    # analytic: tiny GEMM -> bulk. measured: ring 10x faster -> ring.
+    t = _synthetic(live, _rows("matmul_reduce_scatter",
+                               {"bulk": 1000.0, "ring": 100.0}, 64, 16, 8))
+    ctx = CommContext(axis_name="x", mesh=mesh4, policy="measured",
+                      calibration=t)
+    assert analytic.auto_gemm_backend("matmul_reduce_scatter", 64, 16, 8) \
+        == "bulk"
+    assert ctx.auto_gemm_backend("matmul_reduce_scatter", 64, 16, 8) == "ring"
+
+    # analytic: big GEMM -> ring. measured: bulk faster -> bulk.
+    big = 8192
+    t2 = _synthetic(live, _rows("matmul_reduce_scatter",
+                                {"bulk": 50.0, "ring": 500.0}, big, big, big))
+    ctx2 = CommContext(axis_name="x", mesh=mesh4, policy="measured",
+                       calibration=t2)
+    assert analytic.auto_gemm_backend("matmul_reduce_scatter", big, big, big) \
+        == "ring"
+    assert ctx2.auto_gemm_backend("matmul_reduce_scatter", big, big, big) \
+        == "bulk"
+
+
+def test_measured_dispatch_respects_feasibility(mesh4):
+    """A measured win for ring_bidir must not leak to calls whose operands
+    cannot split across the two rings (bidir_ok=False)."""
+    live = autotune.live_fingerprint("tpu_v5e", mesh4)
+    rows = _rows("all_gather_matmul",
+                 {"bulk": 900.0, "ring": 500.0, "ring_bidir": 100.0},
+                 512, 128, 128)
+    ctx = CommContext(axis_name="x", mesh=mesh4, policy="measured",
+                      calibration=_synthetic(live, rows))
+    assert ctx.auto_gemm_backend("all_gather_matmul", 512, 128, 128) \
+        == "ring_bidir"
+    assert ctx.auto_gemm_backend("all_gather_matmul", 512, 128, 128,
+                                 bidir_ok=False) == "ring"
+
+
+def test_measured_needs_two_backends(mesh4):
+    """One-sided coverage is not a comparison: dispatch falls back to the
+    analytic policy rather than echoing the only measured backend."""
+    live = autotune.live_fingerprint("tpu_v5e", mesh4)
+    t = _synthetic(live, _rows("matmul_reduce_scatter", {"ring": 1.0},
+                               64, 16, 8))
+    ctx = CommContext(axis_name="x", mesh=mesh4, policy="measured",
+                      calibration=t)
+    assert ctx.auto_gemm_backend("matmul_reduce_scatter", 64, 16, 8) == "bulk"
+
+
+def test_measured_dispatch_is_dtype_aware(mesh4):
+    """bf16-measured rows must not decide for f32 payloads: ring's measured
+    win comes from halving the bytes, which an f32 payload doesn't get."""
+    live = autotune.live_fingerprint("tpu_v5e", mesh4)
+    rows = _rows("psum", {"bulk": 999.0, "ring": 1.0}, N, 64, 1)
+    for r in rows:
+        r["dtype_bytes"] = 2
+    t = _synthetic(live, rows)
+    assert t.best_backend("psum", N, 64, 1, allowed=("bulk", "ring"),
+                          axis_size=N, dtype_bytes=2) == "ring"
+    assert t.best_backend("psum", N, 64, 1, allowed=("bulk", "ring"),
+                          axis_size=N, dtype_bytes=4) is None
+    # rows without a recorded dtype (older tables) stay dtype-agnostic
+    for r in rows:
+        del r["dtype_bytes"]
+    assert t.best_backend("psum", N, 64, 1, allowed=("bulk", "ring"),
+                          axis_size=N, dtype_bytes=4) == "ring"
+
+
+def test_measured_psum_dispatch(mesh4, table, monkeypatch):
+    """psum's auto backend consults the table: with ring measured 999x
+    faster (dtype-agnostic synthetic rows), a f32 payload — which the
+    analytic heuristic sends to bulk — dispatches to the ring impl."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    import repro.core.comms as comms
+    from repro import compat
+
+    nsz = 64
+    live = autotune.live_fingerprint("tpu_v5e", mesh4)
+    t = _synthetic(live, _rows("psum", {"bulk": 999.0, "ring": 1.0},
+                               N, nsz, 1))
+    ctx = CommContext(axis_name="x", mesh=mesh4, policy="measured",
+                      calibration=t)
+
+    calls = []
+    orig = comms.pk_psum_ring
+    monkeypatch.setattr(comms, "pk_psum_ring",
+                        lambda *a, **k: calls.append(1) or orig(*a, **k))
+    x = jnp.ones((N, N, nsz), jnp.float32)   # per-device payload: (N, nsz)
+    compat.shard_map(lambda v: ctx.psum(v[0])[None], mesh=mesh4,
+                     in_specs=P("x"), out_specs=P("x"), check_vma=False)(x)
+    assert calls, "measured policy did not route psum to the ring impl"
+
+
+# ---------------------------------------------------------------------------
+# Graceful fallback
+# ---------------------------------------------------------------------------
+
+def test_measured_without_table_warns_and_falls_back(mesh4, tmp_path,
+                                                     monkeypatch):
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "empty"))
+    monkeypatch.setattr(autotune, "_SEED_DIR", tmp_path / "no-seeds")
+    autotune.clear_caches()
+    ctx = CommContext(axis_name="x", mesh=mesh4, policy="measured")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        assert ctx.active_calibration() is None
+        be = ctx.auto_gemm_backend("matmul_reduce_scatter", 16, 12, 32)
+    assert be == "bulk"        # identical to the analytic policy
+    assert any("falling back to analytic" in str(w.message) for w in rec)
+
+
+def test_unreadable_explicit_path_warns_and_falls_back(mesh4, tmp_path):
+    ctx = CommContext(axis_name="x", mesh=mesh4, policy="measured",
+                      calibration=str(tmp_path / "missing.json"))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        assert ctx.active_calibration() is None
+    assert any("could not be loaded" in str(w.message) for w in rec)
+
+
+def test_fingerprint_mismatch_falls_back(mesh4, table):
+    foreign = dataclasses.replace(table.fingerprint, backend="tpu",
+                                  device_kind="TPU v5 lite")
+    t = autotune.CalibrationTable(fingerprint=foreign,
+                                  corrections=dict(table.corrections),
+                                  measurements=list(table.measurements))
+    ctx = CommContext(axis_name="x", mesh=mesh4, policy="measured",
+                      calibration=t)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        assert ctx.active_calibration() is None
+        assert ctx.effective_hw() is ctx.hw
+    assert any("does not match" in str(w.message) for w in rec)
+    # an EXPLICITLY supplied table that is rejected warns under "auto" too
+    auto_ctx = CommContext(axis_name="x", mesh=mesh4, policy="auto",
+                           calibration=t)
+    autotune.clear_caches()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        assert auto_ctx.active_calibration() is None
+    assert any("does not match" in str(w.message) for w in rec)
+
+
+def test_auto_policy_silent_on_implicit_miss(mesh4, tmp_path, monkeypatch):
+    """auto's silence is reserved for the implicit cache/seed search
+    finding nothing — no tables anywhere, no warning."""
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "empty"))
+    monkeypatch.setattr(autotune, "_SEED_DIR", tmp_path / "no-seeds")
+    autotune.clear_caches()
+    ctx = CommContext(axis_name="x", mesh=mesh4, policy="auto")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        assert ctx.active_calibration() is None
+    assert not rec
+
+
+def test_unknown_policy_rejected(mesh4):
+    ctx = CommContext(axis_name="x", mesh=mesh4, policy="vibes")
+    with pytest.raises(ValueError, match="unknown comm policy"):
+        ctx.active_calibration()
+
+
+def test_auto_policy_finds_cached_table(mesh4, table, tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    autotune.clear_caches()
+    marked = autotune.CalibrationTable(
+        fingerprint=table.fingerprint,
+        corrections={**table.corrections, "gemm_efficiency": 0.123},
+        measurements=[], notes="from-the-cache")
+    marked.save(autotune.cache_path(table.fingerprint))
+    ctx = CommContext(axis_name="x", mesh=mesh4, policy="auto")
+    active = ctx.active_calibration()
+    assert active is not None
+    # the user cache wins over any in-repo seed
+    assert active.notes == "from-the-cache"
+    assert ctx.effective_hw().gemm_efficiency == pytest.approx(0.123)
+
+
+def test_shipped_seed_matches_emulated_mesh():
+    """The checked-in cpu_emulated seed must keep fingerprint-matching a
+    CPU process on the pinned jax version (else the measured policy can
+    never activate from a clean checkout)."""
+    seed = autotune.CalibrationTable.load(
+        Path(autotune._SEED_DIR) / "cpu_emulated.json")
+    live = autotune.live_fingerprint("tpu_v5e")
+    if live.backend != "cpu":
+        pytest.skip("seed table targets the CPU-emulated mesh")
+    assert seed.fingerprint.compatible(live)
+    assert autotune.find_table("tpu_v5e") is not None
+
+
+def test_analytic_policy_ignores_tables(mesh4, table):
+    ctx = CommContext(axis_name="x", mesh=mesh4, policy="analytic",
+                      calibration=table)
+    assert ctx.active_calibration() is None
+    assert ctx.effective_hw() is ctx.hw
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_show_and_diff(table, tmp_path, capsys):
+    from repro.autotune import main
+
+    a = table.save(tmp_path / "a.json")
+    b_table = autotune.CalibrationTable(
+        fingerprint=table.fingerprint,
+        corrections={**table.corrections,
+                     "ici_bandwidth": table.corrections["ici_bandwidth"] * 2},
+        measurements=list(table.measurements))
+    b = b_table.save(tmp_path / "b.json")
+
+    assert main(["show", str(a)]) == 0
+    out = capsys.readouterr().out
+    assert "fingerprint:" in out and "ici_bandwidth" in out
+
+    assert main(["diff", str(a), str(b)]) == 0
+    out = capsys.readouterr().out
+    assert "+100.0%" in out
+
+    assert main(["diff", str(a)]) == 0          # one-sided: vs analytic
+    assert "analytic" in capsys.readouterr().out
+
+
+def test_cli_diff_refuses_incompatible(table, tmp_path, capsys):
+    from repro.autotune import main
+
+    a = table.save(tmp_path / "a.json")
+    foreign = autotune.CalibrationTable(
+        fingerprint=dataclasses.replace(table.fingerprint, backend="tpu"),
+        corrections=dict(table.corrections))
+    b = foreign.save(tmp_path / "b.json")
+    assert main(["diff", str(a), str(b)]) == 1
+    assert "incompatible" in capsys.readouterr().err
+
+
+def test_cli_calibrate_writes_cache(tmp_path, monkeypatch, capsys):
+    from repro.autotune import main
+
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    out = tmp_path / "fresh.json"
+    assert main(["calibrate", "--grid", "tiny", "--reps", "1",
+                 "--out", str(out)]) == 0
+    t = autotune.CalibrationTable.load(out)
+    assert t.ops_covered()
+    assert t.corrections["ici_bandwidth"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Bench artifact schema (scripts/check_bench.py)
+# ---------------------------------------------------------------------------
+
+def _load_check_bench():
+    path = Path(__file__).parent.parent / "scripts" / "check_bench.py"
+    spec = importlib.util.spec_from_file_location("check_bench", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _bench_doc(**overrides):
+    doc = {
+        "schema": "repro-bench/v1", "created": "2026-01-01T00:00:00",
+        "jax_version": "0", "backend": "cpu", "device_kind": "cpu",
+        "n_devices": 8, "pred_hw": "tpu_v5e",
+        "figures": [
+            {"figure": "fig7", "status": "ok", "error": None, "n_rows": 2,
+             "pred_err_median": 0.5,
+             "rows": [
+                 {"name": "fig7/pk/N=512", "us_per_call": 100.0,
+                  "derived": "", "predicted_us": 50.0, "pred_err": -0.5},
+                 {"name": "fig7/baseline/N=512", "us_per_call": 200.0,
+                  "derived": "", "predicted_us": None, "pred_err": None},
+             ]},
+        ],
+    }
+    doc.update(overrides)
+    return doc
+
+
+def test_bench_schema_validation():
+    cb = _load_check_bench()
+    assert cb.validate_schema(_bench_doc()) == []
+    assert cb.validate_schema({"schema": "nope"})
+    assert cb.validate_schema(_bench_doc(figures=[{"figure": "x"}]))
+    bad_row = _bench_doc()
+    bad_row["figures"][0]["rows"][0]["us_per_call"] = "fast"
+    assert any("us_per_call" in e for e in cb.validate_schema(bad_row))
+    failed = _bench_doc()
+    failed["figures"][0]["status"] = "failed"
+    assert any("error" in e for e in cb.validate_schema(failed))
+
+
+def test_bench_regression_gate():
+    cb = _load_check_bench()
+    base = _bench_doc()
+    ok = _bench_doc()
+    assert cb.compare(ok, base, 0.25) == []
+    slow = _bench_doc()
+    for r in slow["figures"][0]["rows"]:
+        r["us_per_call"] *= 1.5
+    assert any("slowdown" in p for p in cb.compare(slow, base, 0.25))
+    gone = _bench_doc(figures=[])
+    assert any("not in run" in p for p in cb.compare(gone, base, 0.25))
+    broke = _bench_doc()
+    broke["figures"][0]["status"] = "failed"
+    broke["figures"][0]["error"] = "boom"
+    assert any("failed" in p for p in cb.compare(broke, base, 0.25))
+
+
+def test_recorder_emits_valid_schema():
+    cb = _load_check_bench()
+    from benchmarks.common import Recorder
+
+    rec = Recorder()
+    rec.start_figure("figX")
+    rec.add("figX/a", 10.0, "", 12.0)
+    rec.add("figX/b", 20.0, "", None)
+    rec.start_figure("figY")
+    rec.fail(RuntimeError("exploded"))
+    doc = rec.report()
+    assert cb.validate_schema(doc) == []
+    figy = doc["figures"][1]
+    assert figy["status"] == "failed" and "exploded" in figy["error"]
+    figx = doc["figures"][0]
+    assert figx["pred_err_median"] == pytest.approx(0.2)
+
+
+def test_checked_in_baseline_is_valid():
+    cb = _load_check_bench()
+    path = Path(__file__).parent.parent / "benchmarks" / "BENCH_baseline.json"
+    doc = json.loads(path.read_text())
+    assert cb.validate_schema(doc) == []
+    assert all(f["status"] == "ok" for f in doc["figures"])
