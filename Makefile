@@ -1,10 +1,17 @@
 # Developer entry points. `make test` is the tier-1 gate from ROADMAP.md.
 PY ?= python
 
-.PHONY: test test-full bench bench-baseline calibrate quickstart deps
+.PHONY: test test-full lint bench bench-baseline calibrate quickstart deps
 
 deps:
 	$(PY) -m pip install -r requirements.txt
+
+lint:               # ruff gate (config in pyproject.toml); skips when ruff
+	@if $(PY) -m ruff --version >/dev/null 2>&1; then \
+	    $(PY) -m ruff check src tests benchmarks scripts examples; \
+	else \
+	    echo "lint: ruff not installed — skipping (pip install ruff)"; \
+	fi
 
 test:
 	./scripts/test.sh

@@ -7,7 +7,7 @@ are reproduced analytically from the cost model with the v5e constants
 emulated-relative timings.
 """
 
-from functools import partial
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -17,13 +17,16 @@ from benchmarks.common import make_mesh, pred_hw, row, smap, timeit
 from repro.core import costmodel as cm
 from repro.core import (pk_moe_a2a, pk_ring_attention, pk_ulysses_attention,
                         ring_attention_baseline)
-from repro.core.comms import CommContext
+from repro.core.comms import CommContext, GEMM_OP_KIND
+from repro.core.template import Comm, Island
 
 N = 8
 
 # All collectives go through the unified CommContext; benchmarks pin the
 # backend explicitly (backend="ring" vs "bulk") to measure both sides of
-# each paper figure instead of letting the cost-model policy decide.
+# each paper figure instead of letting the cost-model policy decide. The
+# GEMM×collective figures are declared as core.template Islands — the same
+# scaffold the model stack runs through.
 CTX = CommContext(axis_name="x")
 
 
@@ -89,9 +92,7 @@ def fig6_allreduce_design_overhead():
     row("fig6_sync/remote_ns", cm.TPU_V5E.remote_sync_s * 1e6, "per_sync")
 
 
-_OP_KIND = {"all_gather_matmul": "all_gather",
-            "matmul_reduce_scatter": "reduce_scatter",
-            "matmul_all_reduce": "all_reduce"}
+_OP_KIND = GEMM_OP_KIND           # op -> cost-model kind, shared with comms
 
 
 def _gemm_shape(op, x, w):
@@ -101,6 +102,18 @@ def _gemm_shape(op, x, w):
     if op == "all_gather_matmul":
         return x.shape[0], w.shape[1], x.shape[1]
     return x.shape[0], w.shape[1], x.shape[1] // N   # local K shard
+
+
+def _gemm_island(mesh, tag, op, backend, in_specs, out_specs, m, n, k):
+    """One GEMM×collective figure side as a declared unified-template
+    Island — the same scaffold the model stack runs through — with the
+    backend pinned per call (measuring both sides of the paper figure)."""
+    island = Island(
+        f"{tag}/{backend}", mesh=mesh, axis="x",
+        inputs={"x": in_specs[0], "w": in_specs[1]}, out_specs=out_specs,
+        body=lambda ctx, x, w: getattr(ctx, op)(x, w, backend=backend),
+        comm=Comm(op, m=m, n=n, k=k, backend=backend))
+    return jax.jit(lambda x, w: island(x=x, w=w))
 
 
 def _gemm_overlap_bench(tag, op, in_specs, out_specs, make_args, *,
@@ -115,10 +128,10 @@ def _gemm_overlap_bench(tag, op, in_specs, out_specs, make_args, *,
             m, n, k, axis_size=N, kind=kind, n_chunks=N, hw=hw).total
         pred_b = cm.bulk_gemm_collective_cost(
             m, n, k, axis_size=N, kind=kind, hw=hw).total
-        f_pk = smap(mesh, partial(getattr(CTX, op), backend=overlap_backend),
-                    in_specs, out_specs)
-        f_b = smap(mesh, partial(getattr(CTX, op), backend="bulk"),
-                   in_specs, out_specs)
+        f_pk = _gemm_island(mesh, tag, op, overlap_backend, in_specs,
+                            out_specs, m, n, k)
+        f_b = _gemm_island(mesh, tag, op, "bulk", in_specs, out_specs,
+                           m, n, k)
         us_pk = timeit(f_pk, *args)
         us_b = timeit(f_b, *args)
         row(f"{tag}/pk/N={nsz}", us_pk, f"speedup={us_b/max(us_pk,1e-9):.2f}x",
@@ -246,7 +259,43 @@ def fig15_17_strided_collectives():
         row(f"fig17_4d_a2a/S={nsz}", timeit(f_a2a, xa), "")
 
 
+def fig_unified_template():
+    """Paper §3.2 (the unified template claim): the model stack's MLP island
+    declared through core.template vs its dense reference, plus the
+    trace-free plan() line for every island of a forward pass (backend /
+    chunks / predicted hidden fraction)."""
+    from repro.configs import get_config
+    from repro.configs.base import RunConfig
+    from repro.models import layers as L
+    from repro.models.sharding import ShardingRules
+
+    mesh = make_mesh((1, 8), ("data", "x"))
+    cfg = get_config("tinyllama-1.1b").reduced()
+    run = RunConfig(dp_axes=("data",), tp_axis="x", fsdp=False)
+    rules = ShardingRules(mesh, run)
+    b, s, d, ff = 8, 64, cfg.d_model, cfg.d_ff
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (b, s, d), jnp.bfloat16)
+    p = {"w1": jax.random.normal(jax.random.PRNGKey(1), (d, ff), jnp.bfloat16),
+         "w3": jax.random.normal(jax.random.PRNGKey(2), (d, ff), jnp.bfloat16),
+         "w2": jax.random.normal(jax.random.PRNGKey(3), (ff, d), jnp.bfloat16)}
+
+    f_pk = jax.jit(lambda x, p: L.mlp_block(p, x, cfg, run, rules))
+    ref_run = dataclasses.replace(run, reference_mode=True)
+    f_ref = jax.jit(lambda x, p: L.mlp_block(p, x, cfg, ref_run, rules))
+    us_pk = timeit(f_pk, x, p)
+    us_ref = timeit(f_ref, x, p)
+    row("template_mlp_island/pk", us_pk,
+        f"vs_reference={us_ref/max(us_pk,1e-9):.2f}x")
+    row("template_mlp_island/reference", us_ref, "")
+    for plan in L.island_plans(cfg, run, rules, batch=b, seq=s):
+        row(f"template_plan/{plan.island}", 0.0,
+            ("fallback:" + plan.reason) if plan.fallback else
+            f"backend={plan.backend} chunks={plan.n_chunks} "
+            f"hidden={plan.hidden_fraction}")
+
+
 ALL = [fig2_3_transfer_granularity, table3_hiding_threshold,
        fig6_allreduce_design_overhead, fig7_ag_gemm, fig8_gemm_rs,
        fig9_gemm_ar, fig10_ring_attention, fig11_ulysses, fig12_moe_dispatch,
-       fig15_17_strided_collectives]
+       fig15_17_strided_collectives, fig_unified_template]

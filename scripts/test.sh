@@ -1,10 +1,17 @@
 #!/usr/bin/env sh
-# Tier-1 gate (ROADMAP.md): every PR runs exactly this pytest line.
+# Tier-1 gate (ROADMAP.md): every PR runs exactly the pytest line below.
 set -eu
 cd "$(dirname "$0")/.."
+
+# Stage 0: lint (`make lint`, ruff config in pyproject.toml). Blocking when
+# ruff is installed; `make lint` itself skips gracefully when it is not
+# (the container has no network for installs).
+make lint
+
+# Stage 1 (blocking): the tier-1 pytest gate.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
-# Second stage (non-blocking): the benchmark harness + regression check
+# Stage 2 (non-blocking): the benchmark harness + regression check
 # (`make bench`). A perf regression or harness breakage warns loudly but
 # does not fail the gate — the blocking regression gate is `make bench`
 # itself. Skip with REPRO_BENCH=0 (e.g. quick local iterations).

@@ -227,6 +227,12 @@ class RunConfig:
 
     # PK overlap features (paper technique on/off per site)
     pk_overlap: bool = True                  # use pk_* overlapped collectives
+    reference_mode: bool = False             # force EVERY core.template
+                                             # Island to its dense reference
+                                             # path (stronger than
+                                             # pk_overlap=False: also covers
+                                             # embed/loss/decode/gpipe
+                                             # islands) — debugging oracle
     pk_bidirectional: bool = False           # 2-link bidirectional rings
     comm_backend: str | None = None          # pin one CommContext backend
                                              # ("bulk"/"ring"/...; None=policy)

@@ -11,6 +11,9 @@
 #              comms — not re-exported here to keep import time flat)
 #
 # comms      — the unified CommContext entry point (policy-driven dispatch)
+# template   — the unified Island template (paper §3.2): declarative
+#              shard_map islands with derived specs, FSDP gathers, fallback
+#              predicate and trace-free plan() reports
 #
 # The Pallas-level twins of these (device-initiated RDMA, semaphores, the
 # LCSC template) live in repro.kernels.pk_comm / repro.kernels.collective_matmul.
@@ -30,6 +33,9 @@ from repro.core.ring_attention import (
 from repro.core.ulysses import pk_ulysses_attention, ulysses_attention_baseline
 from repro.core.moe import (
     pk_moe_replicated, pk_moe_a2a, moe_reference_dense, ep_tp_split, capacity,
+    DispatchPlan, dispatch_plan,
 )
 from repro.core.schedule import (OverlapPolicy, choose_a2a_chunks,
                                  choose_gemm_collective)
+from repro.core.template import (Comm, Gather, Island, IslandPlan,
+                                 comm_context, render_plans)

@@ -242,19 +242,44 @@ class CalibrationTable:
     def best_backend(self, op: str, m: int, n: int, k: int, *,
                      allowed: Sequence[str],
                      axis_size: int | None = None,
-                     dtype_bytes: int | None = None) -> str | None:
+                     dtype_bytes: int | None = None,
+                     max_ratio: float = 4.0) -> str | None:
         """argmin over measured backends of `op` near (m, n, k), restricted
-        to `allowed` (the caller's shape/VMEM-feasible set). None when fewer
-        than two allowed backends have usable measurements — a one-sided
-        'measurement' would just echo whatever the grid happened to cover."""
-        timed = {}
-        for be in allowed:
-            us = self.measured_us(op, be, m, n, k, axis_size=axis_size,
-                                  dtype_bytes=dtype_bytes)
-            if us is not None:
-                timed[be] = us
-        if len(timed) < 2:
+        to `allowed` (the caller's shape/VMEM-feasible set).
+
+        Backends are only compared **at a single shared grid point** — the
+        nearest (m, n, k) where at least two allowed backends were measured.
+        Comparing each backend's own nearest point would let a backend the
+        sweep only captured at a much smaller shape "win" on shape size
+        rather than speed (a skipped grid point would then pin the slower
+        backend). None when no shared point is within ``max_ratio`` log
+        distance — the caller falls back to the analytic policy."""
+        pts: dict[tuple, dict[str, float]] = {}
+        for row in self.measurements:
+            if row["op"] != op or row["backend"] not in allowed:
+                continue
+            if axis_size is not None and row["axis_size"] != axis_size:
+                continue
+            if (dtype_bytes is not None
+                    and row.get("dtype_bytes") is not None
+                    and row["dtype_bytes"] != dtype_bytes):
+                continue
+            key = (row["m"], row["n"], row["k"])
+            timed = pts.setdefault(key, {})
+            be = row["backend"]
+            timed[be] = min(timed.get(be, math.inf), float(row["us"]))
+        best_key, best_d = None, math.inf
+        for key, timed in pts.items():
+            if len(timed) < 2:    # one-sided point: nothing to compare
+                continue
+            d = max(abs(math.log(max(m, 1) / max(key[0], 1))),
+                    abs(math.log(max(n, 1) / max(key[1], 1))),
+                    abs(math.log(max(k, 1) / max(key[2], 1))))
+            if d < best_d:
+                best_key, best_d = key, d
+        if best_key is None or best_d > math.log(max_ratio):
             return None
+        timed = pts[best_key]
         return min(timed, key=timed.get)
 
     def ops_covered(self) -> dict[str, int]:

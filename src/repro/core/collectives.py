@@ -1,27 +1,25 @@
-"""DEPRECATED module kept for import compatibility.
+"""REMOVED module — ``repro.core.collectives`` has no members anymore.
 
-The overlapped collective×compute operators moved to ``repro.core.comms``,
-which also provides the policy-driven ``CommContext`` entry point that new
-code should use instead of these free functions:
+The overlapped collective×compute operators moved to ``repro.core.comms`` two
+releases ago (with a DeprecationWarning shim for one release); the shim is
+now gone. New code should use the policy-driven context, or — for whole
+overlapped workloads — declare a ``repro.core.template.Island``:
 
     from repro.core.comms import CommContext
     ctx = CommContext(axis_name="model", mesh=mesh)
     y = ctx.all_gather_matmul(x, w)          # was: pk_all_gather_matmul(...)
 
-The full old-name -> new-call migration table lives in README.md
-("Migrating from the old free functions"); the backend-selection precedence
-rules (per-call override > context pin > cost-model policy) are documented
-in the ``repro.core.comms`` module docstring, and the analytic-vs-measured
-cost sources in docs/ARCHITECTURE.md.
+The free functions remain importable from their canonical home
+(``repro.core.comms`` / ``repro.core``); backend-selection precedence is
+documented in the ``repro.core.comms`` module docstring, and the island
+template in ``repro.core.template`` / docs/ARCHITECTURE.md.
 
-Importing names from here keeps working but emits a DeprecationWarning.
+This stub raises ``ImportError`` with that migration message for one release
+so stale imports fail loudly instead of with a bare AttributeError; the
+module itself will be deleted next release.
 """
 
 from __future__ import annotations
-
-import warnings
-
-from repro.core import comms as _comms
 
 _MOVED = (
     "all_gather_matmul_baseline", "pk_all_gather_matmul",
@@ -32,14 +30,16 @@ _MOVED = (
     "_perm_right", "_perm_left", "_axis_info",
 )
 
-__all__ = list(_MOVED)
+_MSG = ("repro.core.collectives was removed: import {name!r} from "
+        "repro.core.comms (or use repro.core.comms.CommContext / "
+        "repro.core.template.Island — see README.md 'The CommContext API')")
 
 
 def __getattr__(name: str):
     if name in _MOVED:
-        warnings.warn(
-            f"repro.core.collectives.{name} moved to repro.core.comms; "
-            "prefer the CommContext API (repro.core.comms.CommContext)",
-            DeprecationWarning, stacklevel=2)
-        return getattr(_comms, name)
+        # ImportError (not AttributeError) so `from ... import name` shows
+        # the migration message at the import site.
+        raise ImportError(_MSG.format(name=name))
+    # Unknown / protocol attributes (__path__, hasattr probes, import-star
+    # machinery) get the normal missing-attribute behavior.
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

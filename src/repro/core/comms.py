@@ -77,9 +77,12 @@ communication kernel gets its ``CompilerParams(collective_id=...)`` from
 ``collective_id(name)`` instead of a hand-numbered constant, so two kernels
 can never collide on a barrier-semaphore id.
 
-The jax-level implementations (formerly ``repro.core.collectives``) live at
-the bottom of this module and remain importable under their old names from
-``repro.core.collectives`` (deprecated shim) and ``repro.core``.
+The jax-level implementations (formerly ``repro.core.collectives``; that
+module is now a removed stub raising ImportError) live at the bottom of this
+module and are re-exported from ``repro.core``. Whole overlapped workloads
+should be declared through the unified island template
+(``repro.core.template.Island``), which threads a ready ``CommContext`` into
+the island body.
 """
 
 from __future__ import annotations
@@ -98,6 +101,7 @@ from repro.core.schedule import (OverlapPolicy, choose_a2a_chunks,
 
 __all__ = [
     "CommContext", "collective_id", "register_collective", "OP_BACKENDS",
+    "GEMM_OP_KIND",
     # jax-level implementations (canonical home since the comms redesign)
     "all_gather_matmul_baseline", "pk_all_gather_matmul",
     "matmul_reduce_scatter_baseline", "pk_matmul_reduce_scatter",
@@ -182,6 +186,12 @@ OP_BACKENDS: dict[str, tuple[str, ...]] = {
 _FUSED = ("fused",)
 
 _ALL_BACKENDS = {b for bs in OP_BACKENDS.values() for b in bs}
+
+#: GEMM×collective op -> cost-model "kind" (the §3.1.3 schedule coordinate).
+#: Single source for dispatch here, Island.plan() and the benchmarks.
+GEMM_OP_KIND = {"all_gather_matmul": "all_gather",
+                "matmul_reduce_scatter": "reduce_scatter",
+                "matmul_all_reduce": "all_reduce"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -329,9 +339,7 @@ class CommContext:
             hw=hw if hw is not None else self.effective_hw(),
             allow_bidir=allow_bidir)
 
-    _GEMM_KIND = {"all_gather_matmul": "all_gather",
-                  "matmul_reduce_scatter": "reduce_scatter",
-                  "matmul_all_reduce": "all_reduce"}
+    _GEMM_KIND = GEMM_OP_KIND
 
     def auto_gemm_backend(self, op: str, m: int, n: int, k: int, *,
                           dtype_bytes: int = 2, fused_ok: bool = False,

@@ -44,6 +44,28 @@ def capacity(n_tokens: int, n_experts: int, top_k: int,
     return max(1, math.ceil(n_tokens * top_k / n_experts * capacity_factor))
 
 
+class DispatchPlan(NamedTuple):
+    """The gating/capacity decision shared by every MoE variant.
+
+    One computation (here) instead of one per dispatch branch: the
+    replicated, resident-2D-TP (serve) and a2a paths all chunk their
+    capacity loop from the same plan, so a `run.moe_chunks` change can never
+    make the trace- and serve-path chunking diverge."""
+    cap: int          # per-expert capacity (tokens), clamped to n_tokens
+    chunk: int        # tokens per overlap chunk of the capacity loop
+    n_chunks: int     # cap // chunk (1 when cap is not chunkable)
+
+
+def dispatch_plan(n_tokens: int, *, n_experts: int, top_k: int,
+                  capacity_factor: float, n_chunks: int = 1) -> DispatchPlan:
+    """Capacity + chunking for `n_tokens` routed tokens. `n_chunks` > 1 is
+    honored only when it divides the capacity (otherwise one bulk chunk —
+    a ragged tail chunk would change the top-k tie-breaking order)."""
+    cap = min(capacity(n_tokens, n_experts, top_k, capacity_factor), n_tokens)
+    chunk = cap // n_chunks if n_chunks > 1 and cap % n_chunks == 0 else cap
+    return DispatchPlan(cap=cap, chunk=chunk, n_chunks=cap // chunk)
+
+
 class RouterOut(NamedTuple):
     probs: jax.Array      # (T, E) f32
     top_vals: jax.Array   # (T, K) f32
@@ -95,12 +117,15 @@ def pk_moe_replicated(x, router_w, w1, w3, w2, *, axis_name: str,
                       n_experts: int, top_k: int,
                       capacity_factor: float = 1.25, norm_topk: bool = True,
                       n_chunks: int = 1, ring_combine: bool = False,
+                      plan: DispatchPlan | None = None,
                       ctx: CommContext | None = None):
     """Replicated-dispatch MoE. Call INSIDE shard_map with `axis_name` bound.
 
     x: (T, d) tokens (replicated over axis). w1/w3: (E_loc, d, ff_loc),
     w2: (E_loc, ff_loc, d) — this rank's device-major slice. Returns
-    ((T, d) output, aux_loss).
+    ((T, d) output, aux_loss). `plan` carries the shared gating/capacity
+    decision (repro.models.layers.moe_island computes it once for all
+    variants); when None it is derived here from `n_chunks`.
     """
     model_size = compat.axis_size(axis_name)
     r_idx = lax.axis_index(axis_name)
@@ -108,7 +133,12 @@ def pk_moe_replicated(x, router_w, w1, w3, w2, *, axis_name: str,
     e_loc = n_experts // ep
     assert w1.shape[0] == e_loc, (w1.shape, e_loc)
     t = x.shape[0]
-    cap = min(capacity(t, n_experts, top_k, capacity_factor), t)
+    if plan is None:
+        plan = dispatch_plan(t, n_experts=n_experts, top_k=top_k,
+                             capacity_factor=capacity_factor,
+                             n_chunks=n_chunks)
+    assert plan.cap <= t, (plan, t)
+    cap = plan.cap
 
     r = route(x, router_w, top_k=top_k, norm_topk=norm_topk)
     e0 = (r_idx // tp_ff) * e_loc
@@ -117,9 +147,8 @@ def pk_moe_replicated(x, router_w, w1, w3, w2, *, axis_name: str,
     valid = (sel_gate > 0).astype(jnp.float32)
 
     y = jnp.zeros((t, x.shape[1]), jnp.float32)
-    c_chunk = cap // n_chunks if n_chunks > 1 and cap % n_chunks == 0 else cap
-    n_eff = cap // c_chunk
-    for ci in range(n_eff):
+    c_chunk = plan.chunk
+    for ci in range(plan.n_chunks):
         sl = slice(ci * c_chunk, (ci + 1) * c_chunk)
         idx_c = sel_idx[:, sl]
         x_sel = jnp.take(x, idx_c.reshape(-1), axis=0).reshape(
@@ -140,6 +169,7 @@ def pk_moe_replicated(x, router_w, w1, w3, w2, *, axis_name: str,
 def pk_moe_a2a(x, router_w, w1, w3, w2, *, axis_name: str, n_experts: int,
                top_k: int, capacity_factor: float = 1.25,
                norm_topk: bool = True, n_chunks: int = 1,
+               plan: DispatchPlan | None = None,
                ctx: CommContext | None = None):
     """Paper-faithful a2a-dispatch MoE (GShard schedule) over `axis_name`
     (typically the data axis). Experts sharded E_loc = E / axis_size; w1/w3:
@@ -147,13 +177,19 @@ def pk_moe_a2a(x, router_w, w1, w3, w2, *, axis_name: str, n_experts: int,
 
     n_chunks > 1 splits the capacity dim so chunk i's expert GEMM overlaps
     chunk i+1's all-to-all (the PK schedule; n_chunks=1 is the bulk baseline).
+    Chunking comes from the same shared `DispatchPlan` as the replicated
+    strategy.
     """
     ctx = ctx if ctx is not None else CommContext(axis_name=axis_name)
     n = compat.axis_size(axis_name)
     assert n_experts % n == 0, (n_experts, n)
     e_loc = n_experts // n
     t, d = x.shape
-    c_send = min(capacity(t, n_experts, top_k, capacity_factor), t)
+    if plan is None:
+        plan = dispatch_plan(t, n_experts=n_experts, top_k=top_k,
+                             capacity_factor=capacity_factor,
+                             n_chunks=n_chunks)
+    c_send = plan.cap
 
     r = route(x, router_w, top_k=top_k, norm_topk=norm_topk)
     gates = _local_gates(r, 0, n_experts)               # (E, T)
@@ -182,9 +218,8 @@ def pk_moe_a2a(x, router_w, w1, w3, w2, *, axis_name: str, n_experts: int,
         return idx_c, y_back.astype(jnp.float32) * wgt
 
     y = jnp.zeros((t, d), jnp.float32)
-    c_chunk = c_send // n_chunks if n_chunks > 1 and c_send % n_chunks == 0 \
-        else c_send
-    for ci in range(c_send // c_chunk):
+    c_chunk = plan.chunk
+    for ci in range(plan.n_chunks):
         idx_c, contrib = chunk_fwd(slice(ci * c_chunk, (ci + 1) * c_chunk))
         y = y.at[idx_c.reshape(-1)].add(contrib.reshape(-1, d))
     return y.astype(x.dtype), aux_load_balance_loss(r, n_experts)

@@ -1,0 +1,366 @@
+"""Unified PK island template — the paper's §3.2 programming template as a
+declarative JAX object.
+
+The paper's headline claim is that eight communication primitives plus **one
+load/compute/store/comm scaffold** suffice for peak multi-GPU kernels, making
+each overlapped workload <50 LoC. ``CommContext`` (repro.core.comms) is the
+comm half of that claim; this module is the scaffold half: every overlapped
+``shard_map`` island in the model stack — MLP, attention out-projection,
+ring/Ulysses attention, MoE, sharded decode, GPipe — is *declared* as an
+:class:`Island` instead of hand-rolling spec construction, FSDP weight
+gathering, CommContext injection, fallback switching and ``shard_map``
+wrapping at each site.
+
+An ``Island`` is declared with:
+
+* **named inputs** (``{"x": P(...), "w": P(...)}``) and **out_specs** — the
+  logical shardings, derived from ``ShardingRules`` at the call site, never
+  hand-threaded through a ``shard_map`` call;
+* an optional **FSDP-gather set** (``gathers={"w1": Gather(dim=0, size=d)}``)
+  — weights all-gathered *inside* the island so XLA overlaps the gather with
+  the previous chunk's compute (ZeRO-3), one implementation instead of six;
+* a **body** ``body(ctx, **inputs)`` that receives a ready
+  :class:`~repro.core.comms.CommContext` whose backend pin / policy /
+  calibration are threaded from ``RunConfig``;
+* a **fallback predicate** (single-device mesh, tp-divisibility constraints,
+  ``pk_overlap=False`` / ``reference_mode``) routing to a dense **reference**
+  implementation with identical semantics;
+* an optional :class:`Comm` descriptor naming the island's dominant
+  collective, from which :meth:`Island.plan` derives a trace-free report —
+  chosen backend, chunk count, predicted hidden fraction — so a whole forward
+  pass's overlap schedule is inspectable before anything runs.
+
+Adding a new overlapped workload is declaring one Island (README has the
+walkthrough)::
+
+    island = Island(
+        "my_op", rules=rules, run=run,
+        inputs={"x": P(bspec, None), "w": rules.w2d(k, n, tp_dim=0)},
+        out_specs=P(bspec, None),
+        gathers={"w": Gather(dim=1, size=n)},
+        body=lambda ctx, x, w: ctx.matmul_all_reduce(x, w),
+        reference=lambda x, w: x @ w,
+        divisible=((n, rules.tp),),
+        comm=Comm("matmul_all_reduce", m=m, n=n, k=k))
+    y = island(x=x, w=w)          # shard_map island, or dense fallback
+    print(island.plan())          # backend/chunks/hidden fraction, trace-free
+
+This module is the **only** place in the PK-overlap paths allowed to call
+``compat.shard_map`` directly (guarded by tests/test_template.py; the
+calibration micro-bench harness in core/autotune.py is the one documented
+exception).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P  # noqa: F401  (re-export for call sites)
+
+from repro import compat
+from repro.core import costmodel as cm
+from repro.core.comms import GEMM_OP_KIND, OP_BACKENDS, CommContext
+from repro.core.schedule import choose_a2a_chunks
+
+__all__ = ["Island", "Gather", "Comm", "IslandPlan", "comm_context",
+           "maybe_allgather", "render_plans"]
+
+
+def _axes_size(mesh, axes) -> int:
+    """Product of the named mesh axes (1 for None/empty)."""
+    if mesh is None or axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def comm_context(run, axis: str, mesh=None, **overrides) -> CommContext:
+    """The single CommContext construction point for every island (DESIGN §3):
+    ``run.comm_backend`` pins one backend for A/B runs, ``run.comm_policy`` /
+    ``run.calibration_path`` select the analytic vs measured cost source.
+    ``run=None`` gives the default policy context (benchmarks, tests)."""
+    kw: dict[str, Any] = {"axis_name": axis, "mesh": mesh}
+    if run is not None:
+        kw.update(backend=run.comm_backend, allow_bidir=run.pk_bidirectional,
+                  policy=run.comm_policy, calibration=run.calibration_path)
+    kw.update(overrides)
+    return CommContext(**kw)
+
+
+def maybe_allgather(w, axes, dim: int, full_size: int):
+    """FSDP (ZeRO-3) weight gather inside an island: all-gather `dim` of `w`
+    up to `full_size` over the fsdp axes. No-op for ``axes=None`` / ``w=None``
+    / already-full weights — safe to declare unconditionally."""
+    if w is None or axes is None:
+        return w
+    names = (axes,) if isinstance(axes, str) else tuple(axes)
+    for a in names:
+        if w.ndim > dim and w.shape[dim] < full_size:
+            w = jax.lax.all_gather(w, a, axis=dim, tiled=True)
+    return w
+
+
+@dataclasses.dataclass(frozen=True)
+class Gather:
+    """FSDP all-gather instruction for one island input: gather `dim` back to
+    `size` over the rules' fsdp axes before the body runs."""
+    dim: int
+    size: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Comm:
+    """Declaration of an island's dominant collective, for :meth:`Island.plan`.
+
+    GEMM×collective ops carry the global GEMM coordinates (m, n, k) the
+    §3.1.1 cost model dispatches on; ``all_to_all`` carries the payload bytes
+    the chunk policy needs; ``backend`` records a call-site pin (e.g. the MoE
+    ring combine) so the plan reports what actually runs.
+    """
+    op: str
+    m: int = 0
+    n: int = 0
+    k: int = 0
+    payload_bytes: float = 0.0
+    dtype_bytes: int = 2
+    n_chunks: int | None = None
+    backend: str | None = None
+    downstream_compute_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class IslandPlan:
+    """Trace-free overlap report for one island (paper §3.1.3 decision)."""
+    island: str
+    axis: Any
+    axis_size: int
+    fallback: bool
+    reason: str
+    op: str | None = None
+    backend: str | None = None
+    n_chunks: int | None = None
+    hidden_fraction: float | None = None
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        if self.fallback:
+            return f"{self.island:<14} -> dense fallback ({self.reason})"
+        hf = ("-" if self.hidden_fraction is None
+              else f"{self.hidden_fraction:.2f}")
+        return (f"{self.island:<14} op={self.op or '-':<22} "
+                f"backend={self.backend or '-':<10} "
+                f"chunks={self.n_chunks or 1:<3} hidden={hf}")
+
+
+def render_plans(plans: Sequence[IslandPlan]) -> str:
+    """One-line-per-island overlap schedule table (launchers print this)."""
+    head = "island         overlap schedule (backend / chunks / hidden frac)"
+    return "\n".join([head, "-" * len(head)] + [str(p) for p in plans])
+
+
+class Island:
+    """One declarative overlapped shard_map island (see module docstring).
+
+    Construction is cheap and trace-free; ``__call__(**arrays)`` compiles the
+    ``shard_map`` (or routes to the dense reference), ``plan()`` reports the
+    overlap schedule without tracing anything.
+    """
+
+    def __init__(self, name: str, *, body: Callable | None = None,
+                 inputs: Mapping[str, Any] | None = None,
+                 out_specs: Any = None,
+                 rules=None, mesh=None, axis=None, run=None,
+                 reference: Callable | None = None,
+                 gathers: Mapping[str, Gather] | None = None,
+                 enable: bool = True,
+                 gather_axes: Any = None,
+                 divisible: Sequence[tuple[int, Any]] = (),
+                 fallback_axes: Any = None,
+                 comm: Comm | None = None,
+                 hw: cm.HardwareSpec | None = None,
+                 ctx_kwargs: Mapping[str, Any] | None = None):
+        self.name = name
+        self.rules = rules
+        self.mesh = mesh if mesh is not None else (
+            rules.mesh if rules is not None else None)
+        self.axis = axis if axis is not None else (
+            rules.tp if rules is not None else None)
+        self.run = run
+        self.body = body
+        self.inputs = dict(inputs or {})
+        self.out_specs = out_specs
+        self.reference = reference
+        self.gathers = dict(gathers or {})
+        self.gather_axes = gather_axes if gather_axes is not None else (
+            rules.fsdp_axes if rules is not None else None)
+        self.enable = enable
+        self.divisible = tuple(divisible)
+        self.fallback_axes = fallback_axes if fallback_axes is not None \
+            else self.axis
+        self.comm = comm
+        self.hw = hw
+        self.ctx_kwargs = dict(ctx_kwargs or {})
+
+    # -- fallback predicate ------------------------------------------------
+
+    @property
+    def axis_size(self) -> int:
+        return _axes_size(self.mesh, self.axis)
+
+    def fallback_reason(self) -> str | None:
+        """Why this island routes to the dense reference (None = it runs as a
+        shard_map island). The paper-template predicate: reference mode,
+        single device, and per-island tp-divisibility constraints."""
+        if self.mesh is None:
+            return "no mesh (single-process reference mode)"
+        if self.run is not None and getattr(self.run, "reference_mode", False):
+            return "RunConfig.reference_mode"
+        if not self.enable:
+            return "disabled by RunConfig"
+        if self.mesh.devices.size == 1:
+            return "single-device mesh"
+        if _axes_size(self.mesh, self.fallback_axes) == 1:
+            return f"axis {self.fallback_axes!r} has size 1"
+        for size, axes in self.divisible:
+            n = _axes_size(self.mesh, axes)
+            if n and size % n != 0:
+                return (f"size {size} not divisible by axis {axes!r} "
+                        f"(= {n})")
+        return None
+
+    # -- execution ---------------------------------------------------------
+
+    def make_context(self) -> CommContext:
+        kw = dict(self.ctx_kwargs)
+        if self.hw is not None:
+            kw.setdefault("hw", self.hw)
+        return comm_context(self.run, self.axis, mesh=self.mesh, **kw)
+
+    def __call__(self, **arrays):
+        if set(arrays) != set(self.inputs) and self.fallback_reason() is None:
+            raise TypeError(
+                f"island {self.name!r} declared inputs "
+                f"{sorted(self.inputs)}, got {sorted(arrays)}")
+        reason = self.fallback_reason()
+        if reason is not None:
+            if self.reference is None:
+                raise ValueError(
+                    f"island {self.name!r} must fall back ({reason}) but "
+                    "declares no dense reference")
+            return self.reference(**arrays)
+        names = list(self.inputs)
+        ctx = self.make_context()
+        gather_axes = self.gather_axes
+
+        def shard_body(*args):
+            kw = dict(zip(names, args))
+            for n, g in self.gathers.items():
+                kw[n] = maybe_allgather(kw[n], gather_axes, g.dim, g.size)
+            return self.body(ctx, **kw)
+
+        f = compat.shard_map(
+            shard_body, mesh=self.mesh,
+            in_specs=tuple(self.inputs[n] for n in names),
+            out_specs=self.out_specs, check_vma=False)
+        return f(*(arrays[n] for n in names))
+
+    # -- introspection -----------------------------------------------------
+
+    def plan(self) -> IslandPlan:
+        """The trace-free §3.1.3 schedule decision this island will make:
+        which backend the policy (or a pin) resolves to, the chunk count and
+        the predicted hidden fraction of T_comm — or the fallback reason."""
+        reason = self.fallback_reason()
+        base = IslandPlan(self.name, self.axis, self.axis_size,
+                          fallback=reason is not None,
+                          reason=reason or "",
+                          op=self.comm.op if self.comm else None)
+        if reason is not None or self.comm is None:
+            return base
+        c = self.comm
+        ctx = self.make_context()
+        if c.op in GEMM_OP_KIND:
+            n_dev = self.axis_size
+            # Mirror the runtime dispatch's shape rules exactly, so the plan
+            # can never report a schedule CommContext would refuse to run:
+            # ring RS/AR needs m divisible by the axis (auto() returns bulk,
+            # context pins degrade via _shape_guard); the bidirectional AG
+            # ring additionally needs an even local row count; the fused
+            # Pallas kernel is auto-picked only on a real TPU with the
+            # (approximate, coordinate-derived) operand footprint in VMEM.
+            ring_ok = c.op == "all_gather_matmul" or c.m % n_dev == 0
+            m_loc = c.m // n_dev if c.m % n_dev == 0 else c.m
+            fused_ok = False
+            if jax.default_backend() == "tpu" and not ctx._interpret_mode():
+                x_rows = m_loc if c.op == "all_gather_matmul" else c.m
+                footprint = ((x_rows + c.n) * c.k * c.dtype_bytes
+                             + max(m_loc, 1) * c.n * 4)
+                fused_ok = footprint <= ctx.hw.vmem_bytes
+            if c.backend is not None:
+                # call-site pin: the body passes backend= explicitly, which
+                # the runtime enforces — a shape violation RAISES there
+                # rather than degrading, so report the pin and say so.
+                backend = c.backend
+                reason = f"pinned backend={c.backend}" if ring_ok or \
+                    backend == "bulk" else (
+                        f"pinned backend={c.backend} violates m % axis == 0 "
+                        "— the runtime raises ValueError for this call")
+            elif ctx.backend in OP_BACKENDS.get(c.op, ()):
+                backend = ctx.backend       # context pin (RunConfig A/B run)
+                if backend != "bulk" and not ring_ok:
+                    backend = "bulk"        # the _shape_guard degradation
+                elif (backend == "ring_bidir" and n_dev % 2 == 0
+                        and m_loc % 2 != 0):
+                    backend = "ring"
+                reason = f"context pin -> {backend}"
+            elif not ring_ok:
+                backend = "bulk"
+                reason = f"m={c.m} not divisible by axis size {n_dev} -> bulk"
+            else:
+                backend = ctx.auto_gemm_backend(
+                    c.op, c.m, c.n, c.k, dtype_bytes=c.dtype_bytes,
+                    fused_ok=fused_ok, bidir_ok=(m_loc % 2 == 0))
+                reason = None
+            pol = ctx.gemm_policy(c.m, c.n, c.k, kind=GEMM_OP_KIND[c.op],
+                                  dtype_bytes=c.dtype_bytes)
+            n_chunks = c.n_chunks if c.n_chunks is not None else (
+                pol.n_chunks if backend != "bulk" else 1)
+            hidden = pol.hidden_fraction if backend != "bulk" else 0.0
+            return dataclasses.replace(
+                base, backend=backend, n_chunks=n_chunks,
+                hidden_fraction=hidden,
+                reason=reason if reason is not None else pol.reason)
+        if c.op == "all_to_all":
+            n_chunks = c.n_chunks if c.n_chunks is not None else \
+                choose_a2a_chunks(c.payload_bytes, axis_size=self.axis_size,
+                                  downstream_compute_s=c.downstream_compute_s,
+                                  hw=ctx.effective_hw())
+            backend = c.backend or ("chunked" if n_chunks > 1 else "bulk")
+            hidden = 1.0 - 1.0 / n_chunks if n_chunks > 1 else 0.0
+            return dataclasses.replace(
+                base, backend=backend, n_chunks=n_chunks,
+                hidden_fraction=hidden,
+                reason=f"a2a chunk policy -> {n_chunks} chunks")
+        # psum / ring_shift / all_gather / reduce_scatter: the backend is
+        # either pinned at the call site or bulk; per-hop overlap of the ring
+        # schedules is structural (n-1 hops hide under per-step compute).
+        backend = c.backend
+        if backend is None and ctx.backend in OP_BACKENDS.get(c.op, ()):
+            backend = ctx.backend
+        backend = backend or "bulk"
+        n_chunks = c.n_chunks if c.n_chunks is not None else (
+            self.axis_size if backend != "bulk" else 1)
+        return dataclasses.replace(
+            base, backend=backend, n_chunks=n_chunks,
+            reason=f"{c.op} via {backend}")
+
+    def __repr__(self) -> str:
+        return (f"Island({self.name!r}, axis={self.axis!r}, "
+                f"inputs={list(self.inputs)}, "
+                f"fallback={self.fallback_reason()!r})")

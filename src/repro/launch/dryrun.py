@@ -22,6 +22,7 @@ from repro.configs import ARCH_IDS, SHAPES, cells_for, get_config  # noqa: E402
 from repro.configs.base import RunConfig  # noqa: E402
 from repro.launch import specs as SP  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.layers import island_plans  # noqa: E402
 from repro.models.sharding import ShardingRules  # noqa: E402
 from repro.optim.adamw import AdamW  # noqa: E402
 from repro.roofline import hlo as HLO  # noqa: E402
@@ -188,6 +189,9 @@ def lower_cell(arch: str, cell_name: str, *, multi_pod: bool,
         "collectives": {k: {"bytes": v, "ops": c}
                         for k, (v, c) in coll.by_kind.items()},
         "collective_bytes_total": coll.total_bytes,
+        # trace-free overlap schedule every PK island picked for this cell
+        "islands": [p.asdict() for p in island_plans(
+            cfg, run, rules, batch=cell.global_batch, seq=cell.seq_len)],
         "roofline": dataclasses.asdict(roof),
     }
     return result

@@ -14,9 +14,11 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.configs.base import RunConfig
+from repro.core.template import render_plans
 from repro.launch import specs as SP
 from repro.launch.mesh import make_mesh
 from repro.models import transformer as T
+from repro.models.layers import island_plans
 from repro.models.sharding import ShardingRules
 from repro.train.step import make_serve_step
 
@@ -38,6 +40,10 @@ def generate(arch: str, *, reduced: bool, batch: int, prompt_len: int,
                               SP.named(mesh, T.param_specs(tmpl)))
 
     s_max = prompt_len + gen_tokens
+    if rules is not None:
+        # the whole serving pass's overlap schedule, before anything traces
+        print(render_plans(island_plans(cfg, run, rules, batch=batch,
+                                        seq=s_max)))
     ct = T.cache_template(cfg, run, rules, batch=batch, s_max=s_max,
                           enc_len=prompt_len if cfg.encoder_decoder else 0)
     cache = T.init_params(ct, jax.random.PRNGKey(1), cfg.d_model)

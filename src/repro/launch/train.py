@@ -15,8 +15,10 @@ import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_config
 from repro.configs.base import RunConfig
+from repro.core.template import render_plans
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch import specs as SP
+from repro.models.layers import island_plans
 from repro.launch.mesh import make_mesh
 from repro.models import transformer as T
 from repro.models.sharding import ShardingRules
@@ -41,6 +43,10 @@ def build_and_train(arch: str, *, steps: int, reduced: bool, mesh_shape,
                     pk_overlap=pk_overlap, microbatches=microbatches,
                     fsdp=mesh is not None)
     rules = ShardingRules(mesh, run) if mesh is not None else None
+    if rules is not None:
+        # the overlap schedule every PK island will pick, before tracing
+        print(render_plans(island_plans(cfg, run, rules, batch=batch,
+                                        seq=seq)))
 
     tmpl = T.param_template(cfg, run, rules)
     params = T.init_params(tmpl, jax.random.PRNGKey(seed), cfg.d_model)

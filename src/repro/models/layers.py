@@ -2,26 +2,27 @@
 MoE wrapper, vocab-parallel embedding and loss.
 
 Everything is functional: `fn(params_subtree, x, ...)`. Activation sharding
-is maintained with with_sharding_constraint (XLA Auto skeleton); the
-PK-overlapped paths are shard_map islands from repro.core, switched by
-RunConfig (DESIGN.md §3).
+is maintained with with_sharding_constraint (XLA Auto skeleton); every
+PK-overlapped path is declared as a ``repro.core.template.Island`` — the
+paper's unified §3.2 template — switched by RunConfig (DESIGN.md §3). The
+``*_island`` builders below are trace-free: constructing one costs nothing,
+so ``island_plans()`` can report the whole forward pass's overlap schedule
+(backend / chunks / hidden fraction per island) without running the model.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro import compat
 from repro.configs.base import ArchConfig, RunConfig
 from repro.core import moe as pk_moe
 from repro.core import pk_ring_attention, pk_ulysses_attention
-from repro.core.comms import CommContext
+from repro.core.template import Comm, Gather, Island, IslandPlan
 from repro.models.sharding import ShardingRules
 
 NEG_INF = -1e30
@@ -33,17 +34,8 @@ def constrain(x, rules: ShardingRules | None, spec: P):
     return lax.with_sharding_constraint(x, rules.named(spec))
 
 
-def _comm_ctx(run: RunConfig, rules: ShardingRules) -> CommContext:
-    """The single communication entry point for every PK island in this
-    module (DESIGN §3): collectives are policy-routed by the cost model;
-    ``run.comm_backend`` pins one backend for A/B runs, and
-    ``run.comm_policy="measured"`` prices the routed schedules from a
-    ``repro.core.autotune`` calibration table instead of the analytic
-    datasheet constants."""
-    return CommContext(axis_name=rules.tp, backend=run.comm_backend,
-                       allow_bidir=run.pk_bidirectional,
-                       policy=run.comm_policy,
-                       calibration=run.calibration_path)
+def _dtype_bytes(cfg: ArchConfig) -> int:
+    return 2 if cfg.dtype == "bfloat16" else 4
 
 
 # ---------------------------------------------------------------------------
@@ -184,13 +176,84 @@ def _chunked_attention(q, k, v, *, causal, window, scale=None,
 XLA_ATTN_CHUNK_THRESHOLD = 8192
 
 
+def sp_attention_island(cfg: ArchConfig, run: RunConfig,
+                        rules: ShardingRules | None, b: int, s: int, *,
+                        causal: bool = True, reference=None) -> Island:
+    """Sequence-parallel attention island: ring attention (paper §4.2) or
+    Ulysses a2a attention over the tp axis, q/k/v seq-sharded on dim 2."""
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    if rules is None:
+        return Island("attn_sp", run=run, reference=reference)
+    axis = rules.tp
+    tp_size = rules.mesh.shape[axis]
+    ulysses = run.sp_attention == "ulysses"
+    fn = pk_ulysses_attention if ulysses else pk_ring_attention
+    bspec = rules.dim(b, rules.dp)
+    spec = P(bspec, None, axis, None)
+    b_loc = rules.local_batch(b)
+    s_loc = max(s // tp_size, 1)
+    dtb = _dtype_bytes(cfg)
+    divisible = [(s, axis)] + ([(hq, axis)] if ulysses else [])
+    if ulysses:
+        comm = Comm("all_to_all", n_chunks=1, backend="bulk",
+                    payload_bytes=b_loc * hq * s_loc * hd * dtb)
+    else:
+        comm = Comm("ring_shift", backend="bulk", n_chunks=tp_size,
+                    payload_bytes=2 * b_loc * hkv * s_loc * hd * dtb)
+
+    def body(ctx, q, k, v):
+        return fn(q, k, v, axis, causal=causal, window=cfg.sliding_window,
+                  ctx=ctx)
+
+    return Island(f"attn_{run.sp_attention}", rules=rules, run=run,
+                  inputs={"q": spec, "k": spec, "v": spec}, out_specs=spec,
+                  body=body, reference=reference, divisible=divisible,
+                  comm=comm)
+
+
+def attn_out_island(cfg: ArchConfig, run: RunConfig,
+                    rules: ShardingRules | None, b: int, s: int) -> Island:
+    """Attention out-projection as the PK GEMM+AR island (paper Fig. 9): the
+    head-sharded context × row-sharded wo, ring-overlapped all-reduce."""
+    hq, hd, d = cfg.n_heads, cfg.hd, cfg.d_model
+    h_full = hq * hd
+
+    def reference(o, wo):
+        return jnp.einsum("bsh,hd->bsd", o, wo)
+
+    if rules is None:
+        return Island("attn_out", run=run, reference=reference)
+    tp = rules.tp
+    tp_size = rules.mesh.shape[tp]
+    bspec = rules.dim(b, rules.dp)
+    b_loc = rules.local_batch(b)
+
+    def body(ctx, o, wo):
+        t = o.reshape(-1, o.shape[-1])
+        out = ctx.matmul_all_reduce(t, wo)
+        return out.reshape(o.shape[0], s, d)
+
+    return Island(
+        "attn_out", rules=rules, run=run,
+        inputs={"o": P(bspec, None, rules.dim(h_full, tp)),
+                "wo": rules.w2d(h_full, d, tp_dim=0)},
+        out_specs=P(bspec, None, None),
+        body=body, reference=reference,
+        gathers={"wo": Gather(dim=1, size=d)},
+        enable=run.pk_attn_out_island,
+        divisible=((h_full, tp), (b * s, tp)),
+        comm=Comm("matmul_all_reduce", m=b_loc * s, n=d,
+                  k=h_full // tp_size if h_full % tp_size == 0 else h_full,
+                  dtype_bytes=_dtype_bytes(cfg)))
+
+
 def attention_block(p, x, cfg: ArchConfig, run: RunConfig,
                     rules: ShardingRules | None, *, causal=True,
                     positions=None, cross_kv=None, seq_sharded=False):
     """Full attention sub-layer (projections + mixing + out-proj).
 
-    p: {"wq","wk","wv","wo"}; x: (B, S, d) [if seq_sharded: S is the local
-    shard and ring/ulysses attention runs over the tp axis].
+    p: {"wq","wk","wv","wo"}; x: (B, S, d) [if seq_sharded: ring/ulysses
+    attention runs over the tp axis via the SP island].
     cross_kv: precomputed (k, v) for cross-attention (enc-dec decoder).
     """
     b, s, d = x.shape
@@ -208,62 +271,102 @@ def attention_block(p, x, cfg: ArchConfig, run: RunConfig,
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
 
-    if seq_sharded and rules is not None:
-        # Sequence parallelism: ring attention over the tp axis (PK §4.2).
-        axis = rules.tp
-        fn = {"ring": pk_ring_attention, "ulysses": pk_ulysses_attention,
-              }.get(run.sp_attention, pk_ring_attention)
-        bspec = rules.dim(b, rules.dp)
-        attn = compat.shard_map(
-            lambda q_, k_, v_: fn(q_, k_, v_, axis, causal=causal,
-                                  window=cfg.sliding_window),
-            mesh=rules.mesh,
-            in_specs=(P(bspec, None, axis, None),) * 3,
-            out_specs=P(bspec, None, axis, None),
-            check_vma=False)
-        o = attn(q, k, v)
-    else:
+    win = cfg.sliding_window if cross_kv is None else None
+
+    def dense_mix(q, k, v):
         if rules is not None:
             q = constrain(q, rules, rules.act_bhsd(hq))
-        win = cfg.sliding_window if cross_kv is None else None
         if k.shape[2] >= XLA_ATTN_CHUNK_THRESHOLD:
-            o = _chunked_attention(q, k, v, causal=causal, window=win)
-        else:
-            o = _full_attention(q, k, v, causal=causal, window=win)
-    o = o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
-    if (rules is not None and run.pk_attn_out_island
-            and (hq * hd) % rules.mesh.shape[rules.tp] == 0
-            and (b * s) % rules.mesh.shape[rules.tp] == 0):
-        # out-projection as the PK GEMM+AR island (paper Fig. 9 position):
-        # ring permutes keep bf16 payloads and overlap with the block GEMMs.
-        out = _pk_attn_out_island(p["wo"], o, cfg, run, rules, b, s)
+            return _chunked_attention(q, k, v, causal=causal, window=win)
+        return _full_attention(q, k, v, causal=causal, window=win)
+
+    if seq_sharded and rules is not None:
+        island = sp_attention_island(cfg, run, rules, b, s, causal=causal,
+                                     reference=dense_mix)
+        o = island(q=q, k=k, v=v)
     else:
-        out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
+        o = dense_mix(q, k, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    out = attn_out_island(cfg, run, rules, b, s)(o=o, wo=p["wo"])
     if rules is not None:
         out = constrain(out, rules, rules.act_btd())
     return out
 
 
-def _pk_attn_out_island(wo, o, cfg, run, rules, b, s):
+def decode_island(cfg: ArchConfig, run: RunConfig,
+                  rules: ShardingRules | None, b: int, s_max: int, *,
+                  long_ctx: bool, pos, kv_len, window) -> Island:
+    """One-token decode over the sequence-sharded KV cache: shard-local slot
+    write + flash-decode logsumexp merge over the tp axis (DESIGN §4). The
+    cache write happens INSIDE the island — a dynamic_update_slice on a
+    seq-sharded array at the jit level would force XLA to all-gather the
+    whole cache (GBs per token)."""
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    def reference(q, cache_k, cache_v, k_new, v_new):
+        ck = lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype),
+                                      (0, 0, pos, 0))
+        cv = lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype),
+                                      (0, 0, pos, 0))
+        o = _full_attention(q, ck, cv, causal=False, window=window,
+                            q_offset=0, kv_len=kv_len)
+        return o, ck, cv
+
+    if rules is None:
+        return Island("decode_attn", run=run, reference=reference)
     tp = rules.tp
-    f = rules.fsdp_axes
-    d = cfg.d_model
-    h_full = o.shape[-1]
-    ctx = _comm_ctx(run, rules)
+    axis = (tuple(run.dp_axes) + (tp,)) if long_ctx else tp
+    cache_spec = rules.kv_cache(hkv, b, long_ctx=long_ctx)
+    bspec = None if long_ctx else rules.dim(b, rules.dp)
+    qspec = P(bspec, None, None, None)
 
-    def island(o_, wo_):
-        if f is not None:
-            wo_ = _maybe_allgather(wo_, f, 1, d)
-        t = o_.reshape(-1, o_.shape[-1])
-        out = ctx.matmul_all_reduce(t, wo_)
-        return out.reshape(o_.shape[0], s, d)
+    def body(ctx, q, cache_k, cache_v, k_new, v_new):
+        ax_idx = lax.axis_index(axis)
+        s_loc = cache_k.shape[2]
+        offset = ax_idx * s_loc
+        # shard-local cache update (one-sided, pre-allocated slot — the
+        # PK §3.1.4 principle applied to the KV cache)
+        local_pos = pos - offset
+        hit = (local_pos >= 0) & (local_pos < s_loc)
+        lp = jnp.clip(local_pos, 0, s_loc - 1)
 
-    bspec = rules.dim(b, rules.dp)
-    wspec = rules.w2d(h_full, d, tp_dim=0)
-    return compat.shard_map(
-        island, mesh=rules.mesh,
-        in_specs=(P(bspec, None, rules.dim(h_full, tp)), wspec),
-        out_specs=P(bspec, None, None), check_vma=False)(o, wo)
+        def upd(c, n):
+            new = lax.dynamic_update_slice(c, n.astype(c.dtype),
+                                           (0, 0, lp, 0))
+            return lax.cond(hit, lambda: new, lambda: c)
+
+        k_ = upd(cache_k, k_new)
+        v_ = upd(cache_v, v_new)
+        # local partial attention + logsumexp merge over the axis
+        g = hq // hkv
+        qg = q.reshape(q.shape[0], hkv, g, 1, hd)
+        s_ = jnp.einsum("bkgqd,bksd->bkgqs", qg, k_,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+        ki = offset + jnp.arange(s_loc)[None, None, None, None, :]
+        keep = ki < kv_len
+        if window is not None:
+            keep &= ki > (kv_len - 1) - window
+        s_ = jnp.where(keep, s_, NEG_INF)
+        m_loc = s_.max(axis=-1)                                # (b,k,g,1)
+        m_glob = lax.pmax(m_loc, axis)
+        p_ = jnp.exp(s_ - m_glob[..., None])
+        l_loc = p_.sum(axis=-1)
+        o_loc = jnp.einsum("bkgqs,bksd->bkgqd", p_, v_.astype(jnp.float32))
+        l_glob = lax.psum(l_loc, axis)
+        o_glob = lax.psum(o_loc, axis)
+        o = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+        return (o.reshape(q.shape[0], hq, 1, hd).astype(q.dtype), k_, v_)
+
+    return Island(
+        "decode_attn", rules=rules, run=run, axis=tp, fallback_axes=axis,
+        inputs={"q": qspec, "cache_k": cache_spec, "cache_v": cache_spec,
+                "k_new": qspec, "v_new": qspec},
+        out_specs=(qspec, cache_spec, cache_spec),
+        body=body, reference=reference,
+        enable=run.decode_seq_shard,
+        divisible=((s_max, axis),),
+        comm=Comm("psum", backend="bulk", n_chunks=1,
+                  payload_bytes=2 * b * hq * hd * 4))
 
 
 def decode_attention(p, x, cache_k, cache_v, pos, cfg: ArchConfig,
@@ -273,8 +376,9 @@ def decode_attention(p, x, cache_k, cache_v, pos, cfg: ArchConfig,
 
     x: (B, 1, d); cache_k/v: (B, Hkv, S_max, hd); pos: scalar current index.
     Returns (out (B,1,d), new_k, new_v). If run.decode_seq_shard, attention
-    over the sharded cache uses the flash-decode logsumexp merge over the tp
-    axis (shard_map island) — the SP serving path (DESIGN §4).
+    over the sharded cache runs through the decode Island — the SP serving
+    path (DESIGN §4); the template's fallback predicate routes single-device
+    or indivisible meshes to the dense cache path.
     """
     b, _, d = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -292,57 +396,12 @@ def decode_attention(p, x, cache_k, cache_v, pos, cfg: ArchConfig,
 
     window = cfg.sliding_window if cross_kv is None else None
     if rules is not None and run.decode_seq_shard and cross_kv is None:
-        # The cache slot write happens INSIDE the island, shard-locally:
-        # a dynamic_update_slice on a seq-sharded array at the jit level
-        # would force XLA to all-gather the whole cache (GBs per token).
-        axis = (tuple(run.dp_axes) + (rules.tp,)) if long_ctx else rules.tp
-        cache_spec = rules.kv_cache(hkv, b, long_ctx=long_ctx)
-        bspec = None if long_ctx else rules.dim(b, rules.dp)
-
-        def island(q_, k_old, v_old, kn, vn):
-            ax_idx = lax.axis_index(axis)
-            s_loc = k_old.shape[2]
-            offset = ax_idx * s_loc
-            # shard-local cache update (one-sided, pre-allocated slot — the
-            # PK §3.1.4 principle applied to the KV cache)
-            local_pos = pos - offset
-            hit = (local_pos >= 0) & (local_pos < s_loc)
-            lp = jnp.clip(local_pos, 0, s_loc - 1)
-
-            def upd(c, n):
-                new = lax.dynamic_update_slice(c, n.astype(c.dtype),
-                                               (0, 0, lp, 0))
-                return lax.cond(hit, lambda: new, lambda: c)
-
-            k_ = upd(k_old, kn)
-            v_ = upd(v_old, vn)
-            # local partial attention + logsumexp merge over the axis
-            g = hq // hkv
-            qg = q_.reshape(q_.shape[0], hkv, g, 1, hd)
-            s_ = jnp.einsum("bkgqd,bksd->bkgqs", qg, k_,
-                            preferred_element_type=jnp.float32) * hd ** -0.5
-            ki = offset + jnp.arange(s_loc)[None, None, None, None, :]
-            keep = ki < kv_len
-            if window is not None:
-                keep &= ki > (kv_len - 1) - window
-            s_ = jnp.where(keep, s_, NEG_INF)
-            m_loc = s_.max(axis=-1)                                # (b,k,g,1)
-            m_glob = lax.pmax(m_loc, axis)
-            p_ = jnp.exp(s_ - m_glob[..., None])
-            l_loc = p_.sum(axis=-1)
-            o_loc = jnp.einsum("bkgqs,bksd->bkgqd", p_, v_.astype(jnp.float32))
-            l_glob = lax.psum(l_loc, axis)
-            o_glob = lax.psum(o_loc, axis)
-            o = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
-            return (o.reshape(q_.shape[0], hq, 1, hd).astype(q_.dtype),
-                    k_, v_)
-
-        qspec = P(bspec, None, None, None)
-        o, cache_k, cache_v = compat.shard_map(
-            island, mesh=rules.mesh,
-            in_specs=(qspec, cache_spec, cache_spec, qspec, qspec),
-            out_specs=(qspec, cache_spec, cache_spec),
-            check_vma=False)(q, cache_k_in, cache_v_in, k_new, v_new)
+        island = decode_island(cfg, run, rules, b, cache_k_in.shape[2],
+                               long_ctx=long_ctx, pos=pos, kv_len=kv_len,
+                               window=window)
+        o, cache_k, cache_v = island(q=q, cache_k=cache_k_in,
+                                     cache_v=cache_v_in, k_new=k_new,
+                                     v_new=v_new)
     else:
         if cross_kv is None:
             cache_k = lax.dynamic_update_slice(
@@ -365,103 +424,134 @@ def decode_attention(p, x, cache_k, cache_v, pos, cfg: ArchConfig,
 # MLP / MoE
 # ---------------------------------------------------------------------------
 
-def mlp_block(p, x, cfg: ArchConfig, run: RunConfig,
-              rules: ShardingRules | None):
-    """Dense (optionally gated) MLP with TP. PK mode: the two GEMMs run as a
-    shard_map island with overlapped AG+GEMM / GEMM+AR rings (paper §4.1)."""
-    act = get_act(cfg.act)
-    if rules is not None and run.pk_overlap and _tp_divides(cfg, rules):
-        return _pk_mlp_island(p, x, cfg, run, rules)
-    h = jnp.einsum("bsd,df->bsf", x, p["w1"])
-    if cfg.gated_mlp:
-        h = act(h) * jnp.einsum("bsd,df->bsf", x, p["w3"])
-    else:
-        h = act(h)
-    out = jnp.einsum("bsf,fd->bsd", h, p["w2"])
-    if rules is not None:
-        out = constrain(out, rules, rules.act_btd())
-    return out
-
-
-def _tp_divides(cfg: ArchConfig, rules: ShardingRules) -> bool:
-    tp = rules.mesh.shape[rules.tp]
-    return cfg.d_ff % tp == 0
-
-
-def _pk_mlp_island(p, x, cfg: ArchConfig, run: RunConfig, rules: ShardingRules):
-    """Megatron MLP as explicit PK collectives: x (replicated over tp)
-    × w1 (col-shard) -> h (ff-sharded, local) -> act -> × w2 (row-shard)
-    -> overlapped GEMM+AR via CommContext (the policy picks bulk for tiny
-    token counts — decode — and the ring schedule otherwise). FSDP gathers
-    of weights happen inside so XLA overlaps them with the previous chunk's
+def mlp_island(cfg: ArchConfig, run: RunConfig,
+               rules: ShardingRules | None, b: int, s: int) -> Island:
+    """Megatron MLP as the PK GEMM+AR island (paper §4.1): x (replicated over
+    tp) × w1 (col-shard) -> act -> × w2 (row-shard) -> overlapped GEMM+AR via
+    CommContext (the policy picks bulk for tiny token counts — decode — and
+    the ring schedule otherwise). FSDP gathers of the weight shards run
+    inside the island so XLA overlaps them with the previous chunk's
     compute."""
     act = get_act(cfg.act)
-    b, s, d = x.shape
-    f = rules.fsdp_axes
-    ctx = _comm_ctx(run, rules)
+    d, ff = cfg.d_model, cfg.d_ff
+    gated = cfg.gated_mlp
 
-    def island(x_, w1, w3, w2):
-        if f is not None:  # FSDP all-gather (ZeRO-3) of the weight shards
-            w1 = _maybe_allgather(w1, f, 0, cfg.d_model)
-            w3 = _maybe_allgather(w3, f, 0, cfg.d_model) if cfg.gated_mlp else w3
-            w2 = _maybe_allgather(w2, f, 1, cfg.d_model)
-        t = x_.reshape(-1, d)
+    def reference(x, w1, w3, w2):
+        h = jnp.einsum("bsd,df->bsf", x, w1)
+        if gated:
+            h = act(h) * jnp.einsum("bsd,df->bsf", x, w3)
+        else:
+            h = act(h)
+        out = jnp.einsum("bsf,fd->bsd", h, w2)
+        if rules is not None:
+            out = constrain(out, rules, rules.act_btd())
+        return out
+
+    if rules is None:
+        return Island("mlp", run=run, reference=reference)
+    tp = rules.tp
+    tp_size = rules.mesh.shape[tp]
+    bspec = rules.dim(b, rules.dp)
+    b_loc = rules.local_batch(b)
+    w1s = rules.w2d(d, ff, tp_dim=1)
+    w2s = rules.w2d(ff, d, tp_dim=0)
+
+    def body(ctx, x, w1, w3, w2):
+        t = x.reshape(-1, d)
         h = jnp.einsum("td,df->tf", t, w1)
-        if cfg.gated_mlp:
+        if gated:
             h = act(h) * jnp.einsum("td,df->tf", t, w3)
         else:
             h = act(h)
-        out = ctx.matmul_all_reduce(h.astype(x_.dtype), w2)
-        return out.reshape(x_.shape[0], s, d)
+        out = ctx.matmul_all_reduce(h.astype(x.dtype), w2)
+        return out.reshape(x.shape[0], s, d)
 
-    w1s = rules.w2d(cfg.d_model, cfg.d_ff, tp_dim=1)
-    w2s = rules.w2d(cfg.d_ff, cfg.d_model, tp_dim=0)
-    w3 = p["w3"] if cfg.gated_mlp else jnp.zeros((), x.dtype)
-    bspec = rules.dim(b, rules.dp)
-    in_specs = (P(bspec, None, None), w1s, w1s if cfg.gated_mlp else P(),
-                w2s)
-    out = compat.shard_map(island, mesh=rules.mesh, in_specs=in_specs,
-                           out_specs=P(bspec, None, None),
-                           check_vma=False)(x, p["w1"], w3, p["w2"])
-    return out
-
-
-def _maybe_allgather(w, axes, dim: int, full_size: int):
-    if w is None:
-        return None
-    names = (axes,) if isinstance(axes, str) else tuple(axes)
-    for a in names:
-        if w.shape[dim] < full_size:
-            w = lax.all_gather(w, a, axis=dim, tiled=True)
-    return w
+    gathers = {"w1": Gather(dim=0, size=d), "w2": Gather(dim=1, size=d)}
+    if gated:
+        gathers["w3"] = Gather(dim=0, size=d)
+    return Island(
+        "mlp", rules=rules, run=run,
+        inputs={"x": P(bspec, None, None), "w1": w1s,
+                "w3": w1s if gated else P(), "w2": w2s},
+        out_specs=P(bspec, None, None),
+        body=body, reference=reference, gathers=gathers,
+        enable=run.pk_overlap,
+        divisible=((ff, tp),),
+        comm=Comm("matmul_all_reduce", m=b_loc * s, n=d,
+                  k=ff // tp_size if ff % tp_size == 0 else ff,
+                  dtype_bytes=_dtype_bytes(cfg)))
 
 
-def moe_block(p, x, cfg: ArchConfig, run: RunConfig,
+def mlp_block(p, x, cfg: ArchConfig, run: RunConfig,
               rules: ShardingRules | None):
-    """MoE sub-layer; returns (out, aux_loss). shard_map island over the tp
-    axis with device-major expert weights (core/moe.py)."""
-    b, s, d = x.shape
-    if rules is None:
-        # single-device reference path (smoke tests): dense oracle
-        y, aux = pk_moe.moe_reference_dense(
-            x.reshape(-1, d), p["router"], p["w1"].reshape(-1, *p["w1"].shape[2:]),
-            p["w3"].reshape(-1, *p["w3"].shape[2:]) if cfg.gated_mlp else None,
-            p["w2"].reshape(-1, *p["w2"].shape[2:]),
-            n_experts=cfg.n_experts, top_k=cfg.top_k)
-        return y.reshape(b, s, d), aux
+    """Dense (optionally gated) MLP with TP. PK mode: the two GEMMs run as
+    one Island with overlapped AG+GEMM / GEMM+AR rings (paper §4.1)."""
+    b, s, _ = x.shape
+    island = mlp_island(cfg, run, rules, b, s)
+    w3 = p["w3"] if cfg.gated_mlp else jnp.zeros((), x.dtype)
+    return island(x=x, w1=p["w1"], w3=w3, w2=p["w2"])
 
+
+def moe_island(cfg: ArchConfig, run: RunConfig,
+               rules: ShardingRules | None, b: int, s: int) -> Island:
+    """MoE island over the tp axis with device-major expert weights
+    (core/moe.py). Both variants — resident 2D-TP serving and the default
+    EP×TP — share one gating/capacity plan (``pk_moe.dispatch_plan``), so
+    trace- and serve-path chunking can never diverge."""
+    d = cfg.d_model
+    gated = cfg.gated_mlp
+
+    def _undo_device_major(w, *, ff_axis):
+        # (M, E_loc, ...) device-major PGL -> (E, ...) with the full ff:
+        # rank r = g*tp_ff + j holds expert group g's ff slice j, so regroup
+        # to (ep, tp_ff, E_loc, ...), move the tp_ff axis next to its ff_loc
+        # slice (`ff_axis` is ff_loc's absolute axis in w) and merge both
+        # pairs. tp_ff == 1 (the common case) reduces to a plain reshape.
+        m_dev, e_loc = w.shape[0], w.shape[1]
+        ep = cfg.n_experts // e_loc
+        tp_ff = m_dev // ep
+        assert ep * e_loc == cfg.n_experts and tp_ff * ep == m_dev, w.shape
+        w = w.reshape(ep, tp_ff, e_loc, *w.shape[2:])
+        w = jnp.moveaxis(w, 1, ff_axis)    # -> (ep, e_loc, ..., tp_ff, ff_loc, ...)
+        shape = [ep * e_loc] + list(w.shape[2:])
+        shape[ff_axis - 1:ff_axis + 1] = [shape[ff_axis - 1] * shape[ff_axis]]
+        return w.reshape(shape)
+
+    def reference(x, router, w1, w3, w2):
+        # dense oracle: every expert on every token, no capacity drop; the
+        # device-major (M, E_loc, d, ff/tp_ff) layout is reconstructed to
+        # (E, d, ff) exactly (elementwise act + ff-sliced GEMMs commute with
+        # the concat), so reference_mode works for every EP×TP split
+        y, aux = pk_moe.moe_reference_dense(
+            x.reshape(-1, d), router, _undo_device_major(w1, ff_axis=3),
+            _undo_device_major(w3, ff_axis=3) if gated else None,
+            _undo_device_major(w2, ff_axis=2),
+            n_experts=cfg.n_experts, top_k=cfg.top_k)
+        return y.reshape(x.shape), jnp.asarray(aux)[None]
+
+    if rules is None:
+        return Island("moe", run=run, reference=reference)
     tp = rules.tp
     f = rules.fsdp_axes
     bspec = rules.dim(b, rules.dp)
+    b_loc = rules.local_batch(b)
+    # ONE gating/capacity plan for every variant: the serve path sees the
+    # dp-gathered token count, the train path the local count.
+    n_tok = b * s if run.serve_moe_tp_data else b_loc * s
+    plan = pk_moe.dispatch_plan(n_tok, n_experts=cfg.n_experts,
+                                top_k=cfg.top_k,
+                                capacity_factor=cfg.capacity_factor,
+                                n_chunks=run.moe_chunks)
+    gathers: dict[str, Gather] = {}
 
     if run.serve_moe_tp_data:
         # resident 2D-TP: weights stay put (ff sliced over dp); tokens are
         # all-gathered over dp (activation-sized), expert partials are
         # psum_scatter'd back — O(T*d) traffic instead of O(W) per step.
-        def island(x_, router, w1, w3, w2):
+        def body(ctx, x, router, w1, w3, w2):
             w1, w2 = w1[0], w2[0]
-            w3 = w3[0] if cfg.gated_mlp else None
-            t = x_.reshape(-1, d)
+            w3 = w3[0] if gated else None
+            t = x.reshape(-1, d)
             if bspec is not None:
                 names = (rules.dp,) if isinstance(rules.dp, str) \
                     else tuple(rules.dp)
@@ -470,14 +560,13 @@ def moe_block(p, x, cfg: ArchConfig, run: RunConfig,
             y, aux = pk_moe.pk_moe_replicated(
                 t, router, w1, w3, w2, axis_name=tp,
                 n_experts=cfg.n_experts, top_k=cfg.top_k,
-                capacity_factor=cfg.capacity_factor,
-                n_chunks=run.moe_chunks)
+                capacity_factor=cfg.capacity_factor, plan=plan, ctx=ctx)
             if bspec is not None:
                 y = lax.psum_scatter(y.astype(jnp.float32), rules.dp,
                                      scatter_dimension=0, tiled=True)
             else:
                 y = lax.psum(y.astype(jnp.float32), rules.dp)
-            return y.astype(x_.dtype).reshape(x_.shape), \
+            return y.astype(x.dtype).reshape(x.shape), \
                 lax.pmean(aux, tp)[None]
 
         dpff = rules.dim(cfg.d_ff // (rules.mesh.shape[tp] //
@@ -487,32 +576,41 @@ def moe_block(p, x, cfg: ArchConfig, run: RunConfig,
         wspec = P(tp, None, None, dpff)
         w2spec = P(tp, None, dpff, None)
     else:
-        def island(x_, router, w1, w3, w2):
+        def body(ctx, x, router, w1, w3, w2):
             w1, w2 = w1[0], w2[0]
-            w3 = w3[0] if cfg.gated_mlp else None
-            if f is not None:
-                w1 = _maybe_allgather(w1, f, 1, cfg.d_model)
-                w3 = _maybe_allgather(w3, f, 1, cfg.d_model)
-                w2 = _maybe_allgather(w2, f, 2, cfg.d_model)
-            t = x_.reshape(-1, d)
+            w3 = w3[0] if gated else None
+            t = x.reshape(-1, d)
             y, aux = pk_moe.pk_moe_replicated(
                 t, router, w1, w3, w2, axis_name=tp, n_experts=cfg.n_experts,
                 top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
-                n_chunks=run.moe_chunks, ring_combine=run.pk_ring_psum)
-            return y.reshape(x_.shape), lax.pmean(aux, tp)[None]
+                plan=plan, ring_combine=run.pk_ring_psum, ctx=ctx)
+            return y.reshape(x.shape), lax.pmean(aux, tp)[None]
 
         # device-major PGL weights: (M, E_loc, d[, /fsdp], ff_loc)
-        wspec = P(tp, None, rules.dim(cfg.d_model, f), None)
-        w2spec = P(tp, None, None, rules.dim(cfg.d_model, f))
+        wspec = P(tp, None, rules.dim(d, f), None)
+        w2spec = P(tp, None, None, rules.dim(d, f))
+        gathers = {"w1": Gather(dim=2, size=d), "w2": Gather(dim=3, size=d)}
+        if gated:
+            gathers["w3"] = Gather(dim=2, size=d)
 
-    out, aux = compat.shard_map(
-        island, mesh=rules.mesh,
-        in_specs=(P(bspec, None, None), P(), wspec,
-                  wspec if cfg.gated_mlp else P(), w2spec),
+    return Island(
+        "moe", rules=rules, run=run,
+        inputs={"x": P(bspec, None, None), "router": P(), "w1": wspec,
+                "w3": wspec if gated else P(), "w2": w2spec},
         out_specs=(P(bspec, None, None), P(bspec)),
-        check_vma=False)(x, p["router"], p["w1"],
-                         p["w3"] if cfg.gated_mlp else jnp.zeros((), x.dtype),
-                         p["w2"])
+        body=body, reference=reference, gathers=gathers,
+        comm=Comm("psum", backend="ring" if run.pk_ring_psum else "bulk",
+                  n_chunks=plan.n_chunks,
+                  payload_bytes=n_tok * d * _dtype_bytes(cfg)))
+
+
+def moe_block(p, x, cfg: ArchConfig, run: RunConfig,
+              rules: ShardingRules | None):
+    """MoE sub-layer; returns (out, aux_loss)."""
+    b, s, _ = x.shape
+    island = moe_island(cfg, run, rules, b, s)
+    w3 = p["w3"] if cfg.gated_mlp else jnp.zeros((), x.dtype)
+    out, aux = island(x=x, router=p["router"], w1=p["w1"], w3=w3, w2=p["w2"])
     return out, jnp.mean(aux.astype(jnp.float32))
 
 
@@ -520,27 +618,27 @@ def moe_block(p, x, cfg: ArchConfig, run: RunConfig,
 # Vocab-parallel embedding + loss
 # ---------------------------------------------------------------------------
 
-def embed_tokens(p, tokens, rules: ShardingRules | None):
-    """tokens (B, S) -> (B, S, d). Megatron vocab-parallel gather+psum island
-    when sharded; plain take otherwise."""
-    emb = p["embed"]
+def embed_island(run: RunConfig, rules: ShardingRules | None, v: int,
+                 d_model: int, b: int) -> Island:
+    """Megatron vocab-parallel embedding island: gather from the LOCAL
+    (V_loc, d_loc) shard, combine with activation-sized collectives — never
+    all-gather the table itself (a (B,S)-token lookup must move O(B·S·d),
+    not O(V·d))."""
+
+    def reference(emb, tok):
+        return jnp.take(emb, tok, axis=0)
+
     if rules is None:
-        return jnp.take(emb, tokens, axis=0)
-    v, d_model = emb.shape
+        return Island("embed", run=run, reference=reference)
     tp = rules.tp
     f = rules.fsdp_axes
-    if v % rules.mesh.shape[tp] != 0:
-        return jnp.take(emb, tokens, axis=0)
 
-    def island(emb_, tok):
-        # gather from the LOCAL (V_loc, d_loc) shard, then combine with
-        # activation-sized collectives — never all-gather the table itself
-        # (a (B,S)-token lookup must move O(B·S·d), not O(V·d)).
-        v_loc = emb_.shape[0]
+    def body(ctx, emb, tok):
+        v_loc = emb.shape[0]
         v0 = lax.axis_index(tp) * v_loc
         local = tok - v0
         ok = (local >= 0) & (local < v_loc)
-        x = jnp.take(emb_, jnp.clip(local, 0, v_loc - 1), axis=0)
+        x = jnp.take(emb, jnp.clip(local, 0, v_loc - 1), axis=0)
         x = jnp.where(ok[..., None], x, 0)
         x = lax.psum(x, tp)                      # combine vocab shards
         if f is not None and x.shape[-1] < d_model:
@@ -549,30 +647,34 @@ def embed_tokens(p, tokens, rules: ShardingRules | None):
                 x = lax.all_gather(x, a, axis=-1, tiled=True)
         return x
 
-    bspec = rules.dim(tokens.shape[0], rules.dp)
-    return compat.shard_map(
-        island, mesh=rules.mesh,
-        in_specs=(P(tp, rules.dim(emb.shape[1], rules.fsdp_axes)),
-                  P(bspec, None)),
-        out_specs=P(bspec, None, None), check_vma=False)(emb, tokens)
+    bspec = rules.dim(b, rules.dp)
+    return Island(
+        "embed", rules=rules, run=run,
+        inputs={"emb": P(tp, rules.dim(d_model, f)), "tok": P(bspec, None)},
+        out_specs=P(bspec, None, None),
+        body=body, reference=reference,
+        divisible=((v, tp),),
+        comm=Comm("psum", backend="bulk", n_chunks=1))
 
 
-def lm_loss(p, x, targets, weights, cfg: ArchConfig, run: RunConfig,
-            rules: ShardingRules | None, *, chunk: int = 512):
-    """Chunked vocab-parallel cross-entropy. x: (B,S,d); targets (B,S).
-    Never materializes the full (B,S,V) logits: sequence is chunked and the
-    softmax statistics are psum-merged over the vocab (tp) shard."""
-    head = p["lm_head"]
-    b, s, d = x.shape
-    v = head.shape[1]
-    tp = rules.tp if rules is not None else None
-    sharded = rules is not None and v % rules.mesh.shape[tp] == 0
-    n_chunks = max(1, s // chunk) if s % chunk == 0 else 1
-    xc = x.reshape(b, n_chunks, s // n_chunks, d).transpose(1, 0, 2, 3)
-    tc = targets.reshape(b, n_chunks, s // n_chunks).transpose(1, 0, 2)
-    wc = weights.reshape(b, n_chunks, s // n_chunks).transpose(1, 0, 2)
+def embed_tokens(p, tokens, rules: ShardingRules | None,
+                 run: RunConfig | None = None):
+    """tokens (B, S) -> (B, S, d). Vocab-parallel island when sharded;
+    plain take otherwise (the island's fallback)."""
+    emb = p["embed"]
+    v, d_model = emb.shape
+    b = tokens.shape[0]
+    island = embed_island(run if run is not None else RunConfig(),
+                          rules, v, d_model, b)
+    return island(emb=emb, tok=tokens)
 
-    if not sharded:
+
+def lm_loss_island(run: RunConfig, rules: ShardingRules | None, b: int,
+                   d: int, v: int) -> Island:
+    """Chunked vocab-parallel cross-entropy island: softmax statistics are
+    psum-merged over the vocab (tp) shard; never materializes (B,S,V)."""
+
+    def scan_body_dense(head):
         def body(carry, args):
             xi, ti, wi = args
             logits = jnp.einsum("bsd,dv->bsv", xi, head).astype(jnp.float32)
@@ -580,21 +682,26 @@ def lm_loss(p, x, targets, weights, cfg: ArchConfig, run: RunConfig,
             tgt = jnp.take_along_axis(logits, ti[..., None], axis=-1)[..., 0]
             return (carry[0] + jnp.sum((lse - tgt) * wi),
                     carry[1] + jnp.sum(wi)), None
-        (tot, cnt), _ = lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+        return body
+
+    def reference(xc, tc, wc, head):
+        (tot, cnt), _ = lax.scan(scan_body_dense(head),
+                                 (jnp.zeros(()), jnp.zeros(())),
                                  (xc, tc, wc))
-        return tot / jnp.maximum(cnt, 1.0)
+        return tot, cnt
 
+    if rules is None:
+        return Island("lm_loss", run=run, reference=reference)
+    tp = rules.tp
     hspec = rules.w2d(d, v, tp_dim=1)
-    f = rules.fsdp_axes
 
-    def island(xc_, tc_, wc_, head_):
-        head_ = _maybe_allgather(head_, f, 0, d)      # FSDP gather of d
-        v_loc = head_.shape[1]
+    def body(ctx, xc, tc, wc, head):
+        v_loc = head.shape[1]
         v0 = lax.axis_index(tp) * v_loc
 
-        def body(carry, args):
+        def step(carry, args):
             xi, ti, wi = args
-            logits = jnp.einsum("bsd,dv->bsv", xi, head_).astype(jnp.float32)
+            logits = jnp.einsum("bsd,dv->bsv", xi, head).astype(jnp.float32)
             # global max is for numerical stability only — no gradient needed
             m_loc = lax.stop_gradient(logits).max(axis=-1)
             m = lax.pmax(m_loc, tp)
@@ -610,16 +717,34 @@ def lm_loss(p, x, targets, weights, cfg: ArchConfig, run: RunConfig,
             return (carry[0] + jnp.sum((lse - tgt) * wi)[None],
                     carry[1] + jnp.sum(wi)[None]), None
 
-        (tot, cnt), _ = lax.scan(body, (jnp.zeros((1,)), jnp.zeros((1,))),
-                                 (xc_, tc_, wc_))
+        (tot, cnt), _ = lax.scan(step, (jnp.zeros((1,)), jnp.zeros((1,))),
+                                 (xc, tc, wc))
         return tot, cnt
 
     bspec = rules.dim(b, rules.dp)
-    tot, cnt = compat.shard_map(
-        island, mesh=rules.mesh,
-        in_specs=(P(None, bspec, None, None), P(None, bspec),
-                  P(None, bspec), hspec),
-        out_specs=(P(bspec), P(bspec)), check_vma=False)(xc, tc, wc, head)
+    return Island(
+        "lm_loss", rules=rules, run=run,
+        inputs={"xc": P(None, bspec, None, None), "tc": P(None, bspec),
+                "wc": P(None, bspec), "head": hspec},
+        out_specs=(P(bspec), P(bspec)),
+        body=body, reference=reference,
+        gathers={"head": Gather(dim=0, size=d)},
+        divisible=((v, tp),),
+        comm=Comm("psum", backend="bulk", n_chunks=1))
+
+
+def lm_loss(p, x, targets, weights, cfg: ArchConfig, run: RunConfig,
+            rules: ShardingRules | None, *, chunk: int = 512):
+    """Chunked vocab-parallel cross-entropy. x: (B,S,d); targets (B,S)."""
+    head = p["lm_head"]
+    b, s, d = x.shape
+    v = head.shape[1]
+    n_chunks = max(1, s // chunk) if s % chunk == 0 else 1
+    xc = x.reshape(b, n_chunks, s // n_chunks, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, n_chunks, s // n_chunks).transpose(1, 0, 2)
+    wc = weights.reshape(b, n_chunks, s // n_chunks).transpose(1, 0, 2)
+    island = lm_loss_island(run, rules, b, d, v)
+    tot, cnt = island(xc=xc, tc=tc, wc=wc, head=head)
     return jnp.sum(tot) / jnp.maximum(jnp.sum(cnt), 1.0)
 
 
@@ -631,3 +756,35 @@ def lm_logits(p, x, rules: ShardingRules | None):
                            P(rules.dp, None,
                              rules.dim(logits.shape[-1], rules.tp)))
     return logits
+
+
+# ---------------------------------------------------------------------------
+# Plan report: the whole forward pass's overlap schedule from one object
+# ---------------------------------------------------------------------------
+
+def island_plans(cfg: ArchConfig, run: RunConfig,
+                 rules: ShardingRules | None, *, batch: int = 8,
+                 seq: int = 128) -> list[IslandPlan]:
+    """Trace-free overlap schedule for every PK island a forward pass (and a
+    decode step) of this (cfg, run, mesh) will build: chosen backend, chunk
+    count, predicted hidden fraction — or the fallback reason. Launchers
+    print this via ``repro.core.template.render_plans``; the dry-run records
+    it in its JSON artifact."""
+    b, s = batch, seq
+    pattern = cfg.layer_pattern()
+    v = cfg.padded_vocab(rules.mesh.shape[rules.tp] if rules else 16)
+    plans = [embed_island(run, rules, v, cfg.d_model, b).plan()]
+    if any(sp.mixer == "attn" for sp in pattern):
+        if run.sp_attention != "none":
+            plans.append(
+                sp_attention_island(cfg, run, rules, b, s, causal=True).plan())
+        plans.append(attn_out_island(cfg, run, rules, b, s).plan())
+        plans.append(decode_island(cfg, run, rules, b, s, long_ctx=False,
+                                   pos=0, kv_len=1,
+                                   window=cfg.sliding_window).plan())
+    if any(sp.mlp == "dense" for sp in pattern):
+        plans.append(mlp_island(cfg, run, rules, b, s).plan())
+    if any(sp.mlp == "moe" for sp in pattern):
+        plans.append(moe_island(cfg, run, rules, b, s).plan())
+    plans.append(lm_loss_island(run, rules, b, cfg.d_model, v).plan())
+    return plans

@@ -52,6 +52,14 @@ class ShardingRules:
             return axes
         return None
 
+    def local_batch(self, b: int) -> int:
+        """Per-dp-rank batch under act_btd sharding: b/|dp| when the batch
+        shards, b when it replicates (the same rule dim() applies). The
+        island builders price their Comm coordinates on this."""
+        if self.dim(b, self.dp) is None:
+            return b
+        return b // axes_size(self.mesh, self.dp)
+
     def spec(self, *entries) -> P:
         return P(*entries)
 

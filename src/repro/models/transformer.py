@@ -329,7 +329,7 @@ def forward_train(params, batch, cfg: ArchConfig, run: RunConfig,
     """Returns (loss, metrics). batch keys: tokens (B,S), targets (B,S),
     weights (B,S) [+ frontend_embeds (B,n,d) | enc_embeds (B,Se,d)]."""
     tokens = batch["tokens"]
-    x = L.embed_tokens(params, tokens, rules)
+    x = L.embed_tokens(params, tokens, rules, run)
     x = _merge_frontend(x, batch.get("frontend_embeds"), cfg)
     if rules is not None:
         x = L.constrain(x, rules, rules.act_btd())
@@ -405,7 +405,7 @@ def decode_step(params, cache, tokens, cfg: ArchConfig, run: RunConfig,
     inputs/outputs. RoPE position = cache["pos"].
     """
     pos = cache["pos"]
-    x = L.embed_tokens(params, tokens, rules)
+    x = L.embed_tokens(params, tokens, rules, run)
     pattern = cfg.layer_pattern()
 
     def body(x, args):
@@ -461,7 +461,7 @@ def decode_step_encdec(params, cache, tokens, cfg: ArchConfig, run: RunConfig,
                        rules: ShardingRules | None):
     """Whisper decode: self-attention cache + precomputed cross K/V."""
     pos = cache["pos"]
-    x = L.embed_tokens(params, tokens, rules)
+    x = L.embed_tokens(params, tokens, rules, run)
     pattern = cfg.layer_pattern()
     ck, cv = cache["cross"]["k"], cache["cross"]["v"]
 
@@ -515,7 +515,7 @@ def forward_prefill(params, batch, cfg: ArchConfig, run: RunConfig,
     loss (cache building is exercised by the serving example; the dominant
     cost — the full forward — is identical)."""
     tokens = batch["tokens"]
-    x = L.embed_tokens(params, tokens, rules)
+    x = L.embed_tokens(params, tokens, rules, run)
     x = _merge_frontend(x, batch.get("frontend_embeds"), cfg)
     if rules is not None:
         x = L.constrain(x, rules, rules.act_btd())

@@ -475,3 +475,32 @@ def test_checked_in_baseline_is_valid():
     doc = json.loads(path.read_text())
     assert cb.validate_schema(doc) == []
     assert all(f["status"] == "ok" for f in doc["figures"])
+
+
+def test_best_backend_compares_only_shared_grid_points():
+    """A backend measured only at a much smaller shape must not win on
+    shape size: backends are compared at one shared (m, n, k) point."""
+    fp = autotune.live_fingerprint("tpu_v5e")
+    rows = [
+        # bulk measured at both sizes; ring only at the small one (the
+        # sweep's try/except skipped it) — 60us@128 vs 3000us@512 is not
+        # an apples-to-apples race
+        {"op": "matmul_all_reduce", "backend": "bulk", "axis_size": N,
+         "m": 128, "n": 128, "k": 64, "us": 50.0},
+        {"op": "matmul_all_reduce", "backend": "ring", "axis_size": N,
+         "m": 128, "n": 128, "k": 64, "us": 60.0},
+        {"op": "matmul_all_reduce", "backend": "bulk", "axis_size": N,
+         "m": 512, "n": 128, "k": 64, "us": 3000.0},
+    ]
+    table = _synthetic(fp, rows)
+    # querying at the large shape: the only shared point is (128, 128, 64),
+    # where bulk wins — ring's small-shape time must not beat bulk's
+    # large-shape time
+    assert table.best_backend("matmul_all_reduce", 512, 128, 64,
+                              allowed=("bulk", "ring"), axis_size=N) == "bulk"
+    assert table.best_backend("matmul_all_reduce", 128, 128, 64,
+                              allowed=("bulk", "ring"), axis_size=N) == "bulk"
+    # a one-sided table (ring rows removed) yields no dispatch at all
+    table1 = _synthetic(fp, [r for r in rows if r["backend"] == "bulk"])
+    assert table1.best_backend("matmul_all_reduce", 128, 128, 64,
+                               allowed=("bulk", "ring"), axis_size=N) is None

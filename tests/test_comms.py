@@ -272,13 +272,9 @@ def test_canonical_kernels_preregistered():
 
 
 # ---------------------------------------------------------------------------
-# Deprecation shim
+# Removed module (was a deprecation shim for one release)
 # ---------------------------------------------------------------------------
 
-def test_collectives_shim_warns_and_forwards():
-    import warnings
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        from repro.core.collectives import pk_all_to_all as shimmed
-    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
-    assert shimmed is comms.pk_all_to_all
+def test_collectives_module_removed_with_migration_message():
+    with pytest.raises(ImportError, match="repro.core.comms"):
+        from repro.core.collectives import pk_all_to_all  # noqa: F401

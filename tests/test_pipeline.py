@@ -9,7 +9,8 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.train.pipeline import gpipe_apply, gpipe_loss
+from repro.train.pipeline import (gpipe_apply, gpipe_forward, gpipe_island,
+                                  gpipe_loss)
 
 N_STAGES = 4
 
@@ -73,3 +74,99 @@ def test_gpipe_grads(pipe_mesh):
     want = jax.grad(seq_loss)(ws)
     np.testing.assert_allclose(np.asarray(piped), np.asarray(want),
                                rtol=1e-4, atol=1e-5)
+
+
+def test_gpipe_bubble_masking(pipe_mesh):
+    """Only the LAST stage ever writes outputs: bubble ticks and
+    intermediate-stage compute must leave every other rank's output buffer
+    untouched (zeros), and the last stage's buffer must be fully populated
+    with no bubble garbage for any microbatch index."""
+    d, mb, m = 8, 4, 6
+    ws = jax.random.normal(jax.random.PRNGKey(0), (N_STAGES, d, d)) * 0.5
+    # non-zero input for every microbatch so leaked bubble compute (which
+    # runs on garbage/zeros) is distinguishable from real outputs
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, mb, d)) + 1.0
+
+    g = jax.jit(compat.shard_map(
+        lambda ws_, x_: jax.lax.all_gather(
+            gpipe_apply(_stage_fn, ws_[0], x_, "pipe"), "pipe"),
+        mesh=pipe_mesh, in_specs=(P("pipe"), P()), out_specs=P(None),
+        check_vma=False))
+    gathered = np.asarray(g(ws, x))          # (n_stages, M, mb, d)
+
+    # non-last stages: masked to zero on every tick
+    np.testing.assert_array_equal(gathered[:-1],
+                                  np.zeros_like(gathered[:-1]))
+    # last stage: every microbatch slot written with the sequential result
+    want = x
+    for i in range(N_STAGES):
+        want = jnp.tanh(want @ ws[i])
+    np.testing.assert_allclose(gathered[-1], np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    assert np.all(np.abs(gathered[-1]) > 0)  # no bubble slot left unwritten
+
+
+def test_gpipe_island_matches_sequential(pipe_mesh):
+    """The unified-template GPipe entry (jit-level Island) returns the last
+    stage's outputs replicated on every rank."""
+    d, mb, m = 8, 4, 6
+    ws = jax.random.normal(jax.random.PRNGKey(0), (N_STAGES, d, d)) * 0.5
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, mb, d))
+    island = gpipe_island(_stage_fn, pipe_mesh, n_microbatches=m)
+    assert island.fallback_reason() is None
+    out = jax.jit(lambda ws, x: gpipe_forward(_stage_fn, ws, x, pipe_mesh))(
+        ws, x)
+    want = x
+    for i in range(N_STAGES):
+        want = jnp.tanh(want @ ws[i])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gpipe_island_single_device_falls_back():
+    """1-stage mesh: the template predicate routes to the sequential
+    reference — same math, no pipeline collectives."""
+    mesh1 = compat.make_mesh((1,), ("pipe",))
+    d, mb, m = 8, 4, 3
+    ws = jax.random.normal(jax.random.PRNGKey(0), (3, d, d)) * 0.5
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, mb, d))
+    island = gpipe_island(_stage_fn, mesh1, n_microbatches=m)
+    assert island.fallback_reason() == "single-device mesh"
+    out = island(stage_params=ws, x_mb=x)
+    want = x
+    for i in range(3):
+        want = jnp.tanh(want @ ws[i])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gpipe_island_virtual_stages(pipe_mesh):
+    """More stages than pipeline ranks: each rank composes its contiguous
+    slab of virtual stages in order — no stage may be silently dropped."""
+    d, mb, m, n_stages = 8, 4, 6, 8           # 8 stages on 4 ranks
+    ws = jax.random.normal(jax.random.PRNGKey(0), (n_stages, d, d)) * 0.5
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, mb, d))
+    out = jax.jit(lambda ws, x: gpipe_forward(_stage_fn, ws, x, pipe_mesh))(
+        ws, x)
+    want = x
+    for i in range(n_stages):
+        want = jnp.tanh(want @ ws[i])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gpipe_island_indivisible_stages_fall_back(pipe_mesh):
+    """A stage count the pipe axis doesn't divide routes to the sequential
+    reference with a readable reason, not a low-level shard_map error."""
+    d, mb, m, n_stages = 8, 4, 5, 6               # 6 stages on 4 ranks
+    ws = jax.random.normal(jax.random.PRNGKey(0), (n_stages, d, d)) * 0.5
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, mb, d))
+    island = gpipe_island(_stage_fn, pipe_mesh, n_microbatches=m,
+                          n_stages=n_stages)
+    assert "not divisible" in island.fallback_reason()
+    out = gpipe_forward(_stage_fn, ws, x, pipe_mesh)
+    want = x
+    for i in range(n_stages):
+        want = jnp.tanh(want @ ws[i])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
