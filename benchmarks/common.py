@@ -27,10 +27,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import time
-from functools import partial
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P  # noqa: F401
 
 from repro import compat
@@ -84,7 +82,8 @@ class Recorder:
         return self._cur["figure"] if self._cur else "-"
 
     def add(self, name: str, us: float, derived: str,
-            predicted_us: float | None) -> None:
+            predicted_us: float | None,
+            island: str | None = None) -> None:
         err = None
         if predicted_us is not None and us > 0:
             err = (predicted_us - us) / us
@@ -93,6 +92,7 @@ class Recorder:
         self._cur["rows"].append({
             "name": name, "us_per_call": us, "derived": derived,
             "predicted_us": predicted_us, "pred_err": err,
+            "island": island,
         })
 
     def report(self) -> dict:
@@ -121,12 +121,14 @@ RECORDER = Recorder()
 
 
 def row(name: str, us: float, derived: str = "",
-        predicted_us: float | None = None):
+        predicted_us: float | None = None, island: str | None = None):
     """One measurement: prints the CSV row and records it for the JSON
     artifact. ``predicted_us`` is the §3.1.1 cost-model prediction for the
-    same configuration (on ``pred_hw()``) when the bench can supply one."""
+    same configuration (on ``pred_hw()``) when the bench can supply one;
+    ``island`` tags rows that belong to one island's calibration key
+    (``repro.core.autotune.island_key``)."""
     print(f"{RECORDER.current_figure},{name},{us:.1f},{derived}")
-    RECORDER.add(name, us, derived, predicted_us)
+    RECORDER.add(name, us, derived, predicted_us, island)
 
 
 def _pred_table():

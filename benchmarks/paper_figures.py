@@ -295,7 +295,89 @@ def fig_unified_template():
             f"hidden={plan.hidden_fraction}")
 
 
+def fig_chunk_pipeline():
+    """Chunk-pipelined ring vs the classic 1-chunk ring at small K (the
+    paper-Fig. 2/11 regime: small per-step transfers waste link bandwidth),
+    plus the measured per-island overlap plan. The `auto` rows use the chunk
+    scheduler's resolution — on the calibrated emulated mesh (expensive
+    per-hop sync) it must stay at or below the unchunked ring by picking the
+    right count; forced `c4` rows show what over-chunking costs here."""
+    mesh = make_mesh()
+    ctx = CommContext(axis_name="x", mesh=mesh, policy="auto")
+    hw = pred_hw()
+    cases = (
+        ("gemm_rs", "matmul_reduce_scatter",
+         (P(None, "x"), P("x", None)), P("x", None)),
+        ("ag_gemm", "all_gather_matmul", (P("x"), P()), P()),
+    )
+    for tag, op, in_specs, out_specs in cases:
+        for nsz in (256, 512):           # small-K rows: K_loc = nsz/8
+            if op == "all_gather_matmul":
+                x = jax.random.normal(jax.random.PRNGKey(0),
+                                      (nsz, nsz // 8), jnp.bfloat16)
+                w = jax.random.normal(jax.random.PRNGKey(1),
+                                      (nsz // 8, nsz // 4), jnp.bfloat16)
+                m, n, k = nsz, nsz // 4, nsz // 8
+            else:
+                x = jax.random.normal(jax.random.PRNGKey(0),
+                                      (nsz, N * (nsz // 8)), jnp.bfloat16)
+                w = jax.random.normal(jax.random.PRNGKey(1),
+                                      (N * (nsz // 8), nsz // 4),
+                                      jnp.bfloat16)
+                m, n, k = nsz, nsz // 4, nsz // 8
+            auto_c = ctx.gemm_chunk_schedule(op, m, n, k, backend="ring",
+                                             dtype_bytes=2)
+            pred = cm.chunk_pipeline_cost(
+                m, n, k, axis_size=N, sub_chunks=auto_c.n_chunks,
+                kind=_OP_KIND[op], hw=hw).total
+            # time each DISTINCT resolved chunk count once: when the
+            # scheduler resolves to a forced count's program (same compiled
+            # schedule), both labels report the same measurement instead of
+            # sampling one program's noise twice
+            labels = (("ring_c1", 1), ("ring_auto", auto_c.n_chunks),
+                      ("ring_c4", 4))
+            us_by_count: dict = {}
+            for _, nc in labels:
+                if nc in us_by_count:
+                    continue
+                island = Island(
+                    f"fig_chunk/{tag}/c{nc}", mesh=mesh, axis="x",
+                    inputs={"x": in_specs[0], "w": in_specs[1]},
+                    out_specs=out_specs,
+                    body=lambda ctx_, x, w, nc=nc, op=op: getattr(ctx_, op)(
+                        x, w, backend="ring", n_chunks=nc),
+                    comm=Comm(op, m=m, n=n, k=k, backend="ring",
+                              n_chunks=nc))
+                us_by_count[nc] = timeit(
+                    jax.jit(lambda x, w, i=island: i(x=x, w=w)), x, w)
+            for label, nc in labels:
+                auto = label == "ring_auto"
+                row(f"fig_chunk_pipeline/{tag}/{label}/K={k}",
+                    us_by_count[nc],
+                    f"chunks={nc} ({auto_c.source if auto else 'forced'})",
+                    predicted_us=pred * 1e6 if auto else None)
+    # the measured per-island plan (island-keyed seed rows when present)
+    from repro.configs import get_config
+    from repro.configs.base import RunConfig
+    from repro.models import layers as L
+    from repro.models.sharding import ShardingRules
+
+    mesh2 = make_mesh((1, 8), ("data", "x"))
+    cfg = get_config("tinyllama-1.1b").reduced()
+    run = RunConfig(dp_axes=("data",), tp_axis="x", fsdp=False,
+                    comm_policy="auto", pk_attn_out_island=True)
+    rules = ShardingRules(mesh2, run)
+    for isl in (L.mlp_island(cfg, run, rules, 8, 128),
+                L.attn_out_island(cfg, run, rules, 8, 128)):
+        plan = isl.plan()
+        row(f"fig_chunk_pipeline/plan/{plan.island}", 0.0,
+            f"backend={plan.backend} chunks={plan.n_chunks} "
+            f"hidden={plan.hidden_fraction} src={plan.source}",
+            island=isl.island_key)
+
+
 ALL = [fig2_3_transfer_granularity, table3_hiding_threshold,
        fig6_allreduce_design_overhead, fig7_ag_gemm, fig8_gemm_rs,
        fig9_gemm_ar, fig10_ring_attention, fig11_ulysses, fig12_moe_dispatch,
-       fig15_17_strided_collectives, fig_unified_template]
+       fig15_17_strided_collectives, fig_unified_template,
+       fig_chunk_pipeline]

@@ -73,6 +73,10 @@ def validate_schema(doc) -> list[str]:
             if pe is not None and not isinstance(pe, (int, float)):
                 errors.append(f"{where}.rows[{j}].pred_err must be numeric "
                               "or null")
+            isl = r.get("island")
+            if isl is not None and not isinstance(isl, str):
+                errors.append(f"{where}.rows[{j}].island must be a string "
+                              "or null")
     return errors
 
 

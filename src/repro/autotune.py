@@ -19,7 +19,6 @@ jax initializes, which is why this module only imports jax inside ``main``.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 
@@ -59,23 +58,62 @@ def _show(table, base) -> None:
     print(f"measurements: {len(table.measurements)} rows over "
           f"{len(cov)} ops ({', '.join(f'{k}:{v}' for k, v in sorted(cov.items()))})")
     for row in table.measurements:
+        extra = ""
+        if row.get("n_chunks", 1) not in (None, 1):
+            extra += f" chunks={row['n_chunks']}"
+        if row.get("island"):
+            extra += f" island={row['island']}"
         print(f"  {row['op']}/{row['backend']}"
               f"  axis={row['axis_size']} m={row['m']} n={row['n']} "
-              f"k={row['k']}  {row['us']:.1f} us")
+              f"k={row['k']}  {row['us']:.1f} us{extra}")
+
+
+def _island_sweeps(args):
+    """IslandSweep specs for ``calibrate --per-island``: build the model's
+    island inventory on a (1, n_devices) mesh and keep every active
+    GEMM-collective island's declared coordinates."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.configs.base import RunConfig
+    from repro.launch.mesh import make_mesh
+    from repro.models.layers import island_comm_sweeps
+    from repro.models.sharding import ShardingRules
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_mesh((1, len(jax.devices())), ("data", "model"))
+    # enable every GEMM island so each one gets measured rows; a run that
+    # keeps attn_out dense simply never queries its key
+    run = RunConfig(dp_axes=("data",), fsdp=False, pk_attn_out_island=True)
+    rules = ShardingRules(mesh, run)
+    sweeps = island_comm_sweeps(cfg, run, rules, batch=args.batch,
+                                seq=args.seq)
+    if not sweeps:
+        print("warning: --per-island found no active GEMM-collective "
+              f"islands for {cfg.name} on this mesh", file=sys.stderr)
+    return sweeps
 
 
 def cmd_calibrate(args) -> int:
     from repro.core import autotune, costmodel
 
     hw = getattr(costmodel, args.hw.upper())
+    islands = _island_sweeps(args) if args.per_island else ()
     table = autotune.calibrate(grid=args.grid, reps=args.reps, hw=hw,
-                               notes=args.notes, verbose=True)
+                               notes=args.notes, verbose=True,
+                               islands=islands)
     out = args.out or autotune.cache_path(table.fingerprint)
     path = table.save(out)
     autotune.clear_caches()
     print(f"\nwrote {path}")
     print("CommContext(policy='measured') will now dispatch from it on "
           "this machine.")
+    if islands:
+        keys = sorted({r["island"] for r in table.measurements
+                       if r.get("island")})
+        print(f"island-keyed rows: {', '.join(keys) or 'none measured'}")
     return 0
 
 
@@ -151,6 +189,19 @@ def main(argv=None) -> int:
     p.add_argument("--out", default=None,
                    help="destination (default: the user cache path)")
     p.add_argument("--notes", default="")
+    p.add_argument("--per-island", action="store_true",
+                   help="additionally sweep backend x chunk count at every "
+                        "active GEMM-collective island's declared (m, n, k), "
+                        "tagging rows with the island key so dispatch and "
+                        "Island.plan() become per-island measured")
+    p.add_argument("--arch", default="tinyllama-1.1b",
+                   help="model whose islands --per-island sweeps")
+    p.add_argument("--reduced", action="store_true",
+                   help="use the smoke-scale config for --per-island")
+    p.add_argument("--batch", type=int, default=8,
+                   help="--per-island global batch")
+    p.add_argument("--seq", type=int, default=128,
+                   help="--per-island sequence length")
     p.set_defaults(fn=cmd_calibrate)
 
     p = sub.add_parser("show", help="print a table (default: the resolved one)")

@@ -11,7 +11,6 @@ import json
 import os
 import shutil
 import threading
-import time
 from pathlib import Path
 from typing import Any, Callable
 

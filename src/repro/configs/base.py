@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Literal, Sequence
+from typing import Literal
 
 
 def _round_up(x: int, m: int) -> int:
@@ -245,6 +245,15 @@ class RunConfig:
     sp_attention: Literal["ring", "ulysses", "none"] = "ring"
     moe_strategy: Literal["replicated", "a2a"] = "replicated"
     moe_chunks: int = 1
+    ulysses_chunks: int = 1                  # a2a chunk count for the Ulysses
+                                             # island (paper Fig. 11: attention
+                                             # on early head chunks overlaps
+                                             # later chunks' transfer)
+    comm_chunks: int | None = None           # force the sub-chunk count of
+                                             # every chunk-pipelined ring
+                                             # GEMM×collective (None = per-call
+                                             # kwarg > measured table > the
+                                             # analytic chunk scheduler)
 
     # compute
     attention_impl: Literal["xla", "pallas"] = "xla"

@@ -52,6 +52,32 @@ from typing import Any, Sequence
 SCHEMA = "repro-autotune/v1"
 SCHEMA_VERSION = 1
 
+
+def island_key(name: str, op: str, dtype_bytes: int = 2) -> str:
+    """Stable calibration-row key for one island's declared collective.
+
+    Derived from the island's name plus the ``Comm`` coordinates that change
+    which backend wins (op kind and element width — the layout-bearing
+    parts); NOT from (m, n, k), which stays a lookup coordinate so nearby
+    shapes can share rows. Two islands with different layouts/dtypes at the
+    same (m, n, k) get different keys and can dispatch differently.
+    """
+    return f"{name}|{op}|b{int(dtype_bytes)}"
+
+
+@dataclasses.dataclass(frozen=True)
+class IslandSweep:
+    """One island's coordinates for the ``calibrate(islands=...)`` sweep:
+    the exact (op, m, n, k, dtype) its ``CommContext`` dispatch queries
+    with, plus the key the measured rows are tagged with."""
+
+    island: str            # island_key(...) the rows carry
+    op: str                # a GEMM_OPS member
+    m: int
+    n: int
+    k: int
+    dtype_bytes: int = 2
+
 #: ops the calibrator sweeps; mirrors comms.OP_BACKENDS keys it can measure.
 GEMM_OPS = ("all_gather_matmul", "matmul_reduce_scatter", "matmul_all_reduce")
 DEFAULT_OPS = GEMM_OPS + ("psum",)
@@ -205,9 +231,73 @@ class CalibrationTable:
         """`base` HardwareSpec with this table's corrections applied."""
         return base.calibrated(**self.corrections)
 
+    @staticmethod
+    def _log_dist(m: int, n: int, k: int, row_m, row_n, row_k) -> float:
+        return max(abs(math.log(max(m, 1) / max(row_m, 1))),
+                   abs(math.log(max(n, 1) / max(row_n, 1))),
+                   abs(math.log(max(k, 1) / max(row_k, 1))))
+
+    def _rows_for(self, op: str, *, island: str | None,
+                  axis_size: int | None, dtype_bytes: int | None,
+                  island_only: bool = False):
+        """Measurement rows of `op` usable for a dispatch query, in island
+        precedence order: rows tagged with the caller's island key first,
+        then the global (untagged) rows as a fallback tier. Rows tagged with
+        a *different* island never match — another island's layout is not
+        evidence about this one. Yields at most two non-empty tiers;
+        ``island_only`` drops the global fallback tier (callers that must
+        not mix measurements across tiers, e.g. a hidden-fraction delta)."""
+        tiers: list[list[dict]] = [[], []]
+        for row in self.measurements:
+            if row["op"] != op:
+                continue
+            if axis_size is not None and row["axis_size"] != axis_size:
+                continue
+            if (dtype_bytes is not None
+                    and row.get("dtype_bytes") is not None
+                    and row["dtype_bytes"] != dtype_bytes):
+                continue
+            tag = row.get("island")
+            if tag is None:
+                tiers[1].append(row)
+            elif island is not None and tag == island:
+                tiers[0].append(row)
+        if island_only and island is not None:
+            tiers = tiers[:1]
+        return [t for t in tiers if t]
+
+    def _argmin_at_nearest(self, tier, m: int, n: int, k: int,
+                           key_of_row, max_ratio: float):
+        """argmin of ``us`` over ``key_of_row(row)`` groups at the single
+        nearest (m, n, k) grid point where >= 2 distinct keys were measured
+        (one key is not a comparison), or None past ``max_ratio`` log
+        distance. Shared by ``best_backend`` (key = backend) and
+        ``best_chunks`` (key = n_chunks) so their distance/tie-break/
+        extrapolation rules can never diverge."""
+        pts: dict[tuple, dict] = {}
+        for row in tier:
+            key = key_of_row(row)
+            if key is None:
+                continue
+            point = (row["m"], row["n"], row["k"])
+            timed = pts.setdefault(point, {})
+            timed[key] = min(timed.get(key, math.inf), float(row["us"]))
+        best_point, best_d = None, math.inf
+        for point, timed in pts.items():
+            if len(timed) < 2:
+                continue
+            d = self._log_dist(m, n, k, *point)
+            if d < best_d:
+                best_point, best_d = point, d
+        if best_point is None or best_d > math.log(max_ratio):
+            return None
+        timed = pts[best_point]
+        return min(timed, key=timed.get)
+
     def measured_us(self, op: str, backend: str, m: int, n: int, k: int,
                     *, axis_size: int | None = None,
                     dtype_bytes: int | None = None,
+                    island: str | None = None, island_only: bool = False,
                     max_ratio: float = 4.0) -> float | None:
         """Interpolated measurement for (op, backend) at the nearest grid
         point, or None when the closest point is further than ``max_ratio``
@@ -218,31 +308,33 @@ class CalibrationTable:
         ``dtype_bytes`` filters to rows measured at that element width: a
         bf16 ring's measured win (half the bytes of an f32-promoted bulk
         collective) does not transfer to an f32 payload. Rows without a
-        recorded dtype (older tables) match any width.
+        recorded dtype (older tables) match any width. ``island`` prefers
+        rows calibrated for that island key (``calibrate --per-island``)
+        and falls back to the global rows (``island_only`` disables the
+        fallback).
         """
-        best, best_d = None, math.inf
-        for row in self.measurements:
-            if row["op"] != op or row["backend"] != backend:
-                continue
-            if axis_size is not None and row["axis_size"] != axis_size:
-                continue
-            if (dtype_bytes is not None
-                    and row.get("dtype_bytes") is not None
-                    and row["dtype_bytes"] != dtype_bytes):
-                continue
-            d = max(abs(math.log(max(m, 1) / max(row["m"], 1))),
-                    abs(math.log(max(n, 1) / max(row["n"], 1))),
-                    abs(math.log(max(k, 1) / max(row["k"], 1))))
-            if d < best_d:
-                best, best_d = row, d
-        if best is None or best_d > math.log(max_ratio):
-            return None
-        return float(best["us"])
+        for tier in self._rows_for(op, island=island, axis_size=axis_size,
+                                   dtype_bytes=dtype_bytes,
+                                   island_only=island_only):
+            best, best_d = None, math.inf
+            for row in tier:
+                if row["backend"] != backend:
+                    continue
+                d = self._log_dist(m, n, k, row["m"], row["n"], row["k"])
+                # equal-distance tie (e.g. chunk-count variants at one grid
+                # point): the backend's best configuration represents it
+                if d < best_d or (best is not None and d == best_d
+                                  and float(row["us"]) < float(best["us"])):
+                    best, best_d = row, d
+            if best is not None and best_d <= math.log(max_ratio):
+                return float(best["us"])
+        return None
 
     def best_backend(self, op: str, m: int, n: int, k: int, *,
                      allowed: Sequence[str],
                      axis_size: int | None = None,
                      dtype_bytes: int | None = None,
+                     island: str | None = None,
                      max_ratio: float = 4.0) -> str | None:
         """argmin over measured backends of `op` near (m, n, k), restricted
         to `allowed` (the caller's shape/VMEM-feasible set).
@@ -252,35 +344,42 @@ class CalibrationTable:
         Comparing each backend's own nearest point would let a backend the
         sweep only captured at a much smaller shape "win" on shape size
         rather than speed (a skipped grid point would then pin the slower
-        backend). None when no shared point is within ``max_ratio`` log
+        backend). ``island`` restricts the comparison to that island's
+        calibrated rows first (two islands with different layouts can then
+        resolve differently at the same shape), falling back to the global
+        rows. None when no shared point is within ``max_ratio`` log
         distance — the caller falls back to the analytic policy."""
-        pts: dict[tuple, dict[str, float]] = {}
-        for row in self.measurements:
-            if row["op"] != op or row["backend"] not in allowed:
-                continue
-            if axis_size is not None and row["axis_size"] != axis_size:
-                continue
-            if (dtype_bytes is not None
-                    and row.get("dtype_bytes") is not None
-                    and row["dtype_bytes"] != dtype_bytes):
-                continue
-            key = (row["m"], row["n"], row["k"])
-            timed = pts.setdefault(key, {})
-            be = row["backend"]
-            timed[be] = min(timed.get(be, math.inf), float(row["us"]))
-        best_key, best_d = None, math.inf
-        for key, timed in pts.items():
-            if len(timed) < 2:    # one-sided point: nothing to compare
-                continue
-            d = max(abs(math.log(max(m, 1) / max(key[0], 1))),
-                    abs(math.log(max(n, 1) / max(key[1], 1))),
-                    abs(math.log(max(k, 1) / max(key[2], 1))))
-            if d < best_d:
-                best_key, best_d = key, d
-        if best_key is None or best_d > math.log(max_ratio):
-            return None
-        timed = pts[best_key]
-        return min(timed, key=timed.get)
+        for tier in self._rows_for(op, island=island, axis_size=axis_size,
+                                   dtype_bytes=dtype_bytes):
+            best = self._argmin_at_nearest(
+                tier, m, n, k,
+                lambda r: r["backend"] if r["backend"] in allowed else None,
+                max_ratio)
+            if best is not None:
+                return best
+        return None
+
+    def best_chunks(self, op: str, backend: str, m: int, n: int, k: int, *,
+                    axis_size: int | None = None,
+                    dtype_bytes: int | None = None,
+                    island: str | None = None,
+                    max_ratio: float = 4.0) -> int | None:
+        """Measured sub-chunk count for a chunk-pipelined ring: the argmin-us
+        ``n_chunks`` among this (op, backend)'s rows at the nearest grid
+        point where at least two distinct chunk counts were measured (one
+        count is not a comparison — return None and let the analytic chunk
+        scheduler decide). Same island-first/global-fallback precedence as
+        ``best_backend``."""
+        for tier in self._rows_for(op, island=island, axis_size=axis_size,
+                                   dtype_bytes=dtype_bytes):
+            best = self._argmin_at_nearest(
+                tier, m, n, k,
+                lambda r: (int(r.get("n_chunks", 1) or 1)
+                           if r["backend"] == backend else None),
+                max_ratio)
+            if best is not None:
+                return best
+        return None
 
     def ops_covered(self) -> dict[str, int]:
         out: dict[str, int] = {}
@@ -537,7 +636,12 @@ def _feasible(op: str, backend: str, n_dev: int, nsz: int,
     if backend not in available:
         return False
     if backend == "ring_bidir":
-        return op == "all_gather_matmul" and nsz % 2 == 0
+        # the bidirectional ring splits the local shard across the two
+        # directions: needs at least 2 local rows (uneven splits are fine)
+        # and an even device count — on an odd axis the impl silently runs
+        # the unidirectional ring, which would mislabel the measured rows
+        return (op == "all_gather_matmul" and n_dev % 2 == 0
+                and nsz // n_dev >= 2)
     if backend == "fused":
         # interpret-mode fused kernels are orders of magnitude slower than
         # the thing they emulate; timing them off-TPU would poison the table
@@ -562,8 +666,10 @@ def _sweep_gemm_ops(ctx, mesh, axis_name: str, sizes: Sequence[int],
             for be in ("bulk", "ring", "ring_bidir", "fused"):
                 if not _feasible(op, be, n_dev, nsz, avail):
                     continue
+                # the global grid pins the classic 1-chunk ring; chunk-count
+                # variants are swept per island (calibrate --per-island)
                 fn = jax.jit(compat.shard_map(
-                    partial(getattr(ctx, op), backend=be),
+                    partial(getattr(ctx, op), backend=be, n_chunks=1),
                     mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                     check_vma=False))
                 try:
@@ -573,8 +679,73 @@ def _sweep_gemm_ops(ctx, mesh, axis_name: str, sizes: Sequence[int],
                     continue
                 rows.append({"op": op, "backend": be, "axis_size": n_dev,
                              "m": m, "n": n, "k": k, "dtype_bytes": 2,
-                             "us": t * 1e6})
+                             "n_chunks": 1, "us": t * 1e6})
                 log(f"  {op}/{be}/N={nsz}: {t * 1e6:.1f} us")
+    return rows
+
+
+#: sub-chunk counts the per-island sweep measures for each ring backend.
+ISLAND_CHUNK_SWEEP = (1, 2, 4)
+
+
+def _sweep_islands(ctx, mesh, axis_name: str, sweeps: Sequence[IslandSweep],
+                   reps: int, log) -> list[dict]:
+    """Measure every feasible backend × chunk count at each island's exact
+    declared coordinates, tagging the rows with the island key so
+    ``CommContext(island=...)`` dispatch (and ``Island.plan()``) prefers
+    them over the generic shape grid."""
+    import jax
+    import jax.numpy as jnp
+    from functools import partial
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+
+    n_dev = mesh.shape[axis_name]
+    rows: list[dict] = []
+    for sw in sweeps:
+        if sw.op not in GEMM_OPS:
+            log(f"  island {sw.island}: op {sw.op} not sweepable, skipped")
+            continue
+        if sw.m % n_dev != 0:
+            log(f"  island {sw.island}: m={sw.m} not divisible by "
+                f"{n_dev}-device axis, skipped")
+            continue
+        dtype = jnp.bfloat16 if sw.dtype_bytes == 2 else jnp.float32
+        if sw.op == "all_gather_matmul":
+            x = jax.random.normal(jax.random.PRNGKey(0), (sw.m, sw.k), dtype)
+            w = jax.random.normal(jax.random.PRNGKey(1), (sw.k, sw.n), dtype)
+            in_specs, out_specs = (P(axis_name), P()), P()
+            backends = ["bulk", "ring"]
+            if sw.m // n_dev >= 2 and n_dev % 2 == 0:
+                backends.append("ring_bidir")
+        else:
+            x = jax.random.normal(jax.random.PRNGKey(0),
+                                  (sw.m, n_dev * sw.k), dtype)
+            w = jax.random.normal(jax.random.PRNGKey(1),
+                                  (n_dev * sw.k, sw.n), dtype)
+            in_specs = (P(None, axis_name), P(axis_name, None))
+            out_specs = (P(axis_name, None)
+                         if sw.op == "matmul_reduce_scatter" else P())
+            backends = ["bulk", "ring"]
+        for be in backends:
+            for c in ((1,) if be == "bulk" else ISLAND_CHUNK_SWEEP):
+                fn = jax.jit(compat.shard_map(
+                    partial(getattr(ctx, sw.op), backend=be, n_chunks=c),
+                    mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_vma=False))
+                try:
+                    t = _timeit(fn, x, w, reps=reps)
+                except Exception as e:  # noqa: BLE001 — skip, don't abort
+                    log(f"  {sw.island}/{be}/c={c}: SKIPPED "
+                        f"({type(e).__name__})")
+                    continue
+                rows.append({"op": sw.op, "backend": be, "axis_size": n_dev,
+                             "m": sw.m, "n": sw.n, "k": sw.k,
+                             "dtype_bytes": sw.dtype_bytes, "n_chunks": c,
+                             "island": sw.island, "us": t * 1e6})
+                log(f"  {sw.island}/{be}/c={c}: {t * 1e6:.1f} us")
     return rows
 
 
@@ -610,13 +781,17 @@ def _sweep_psum(ctx, mesh, axis_name: str, sizes: Sequence[int],
 
 def calibrate(mesh=None, *, axis_name: str = "x", hw=None,
               grid: str | Sequence[int] = "small", reps: int = 3,
-              notes: str = "", verbose: bool = False) -> CalibrationTable:
+              notes: str = "", verbose: bool = False,
+              islands: Sequence[IslandSweep] = ()) -> CalibrationTable:
     """Run the full micro-benchmark suite and fit a ``CalibrationTable``.
 
     With ``mesh=None`` a 1-D mesh over every visible device is built. The
     returned table is NOT saved; callers pick the destination
     (``table.save(autotune.cache_path(table.fingerprint))`` for the user
-    cache the measured policy searches).
+    cache the measured policy searches). ``islands`` adds per-island sweeps
+    (backend × chunk count at each island's exact declared coordinates,
+    rows tagged with the island key) — the CLI derives them from a model
+    config via ``calibrate --per-island``.
     """
     from repro.core import costmodel as cm
     from repro.core.comms import CommContext
@@ -643,6 +818,10 @@ def calibrate(mesh=None, *, axis_name: str = "x", hw=None,
 
     rows = _sweep_gemm_ops(ctx, mesh, axis_name, sizes, reps, log)
     rows += _sweep_psum(ctx, mesh, axis_name, sizes, reps, log)
+    if islands:
+        log(f"per-island sweep ({len(tuple(islands))} islands) ...")
+        rows += _sweep_islands(ctx, mesh, axis_name, tuple(islands), reps,
+                               log)
 
     return CalibrationTable(
         fingerprint=live_fingerprint(hw.name, mesh),

@@ -28,11 +28,25 @@ Ops (uniform signature: operands, then ``backend=None`` plus op kwargs):
     ==============================  =======================================
 
 ``bulk``    — the non-overlapped XLA collective (paper's cuBLAS+NCCL analogue)
-``ring``    — per-shard ``ppermute`` pipeline; transfers hide under the MXU
-``ring_bidir`` — both ring directions at once (2 link-pairs, halves T_comm)
+``ring``    — chunk-pipelined ``ppermute`` ring; every ring step is split
+              into ``n_chunks`` double-buffered chunks (send-ahead: step
+              i+1's shifts are issued before step i's chunk GEMMs), so
+              transfers hide under the MXU at sub-shard granularity
+``ring_bidir`` — both ring directions at once (2 link-pairs, halves T_comm);
+              multi-chunk per step per direction, uneven shards split
+              ceil/floor
 ``chunked`` — payload split so downstream compute overlaps later chunks
 ``fused``   — single Pallas kernel with intra-kernel RDMA overlap (LCSC
               template; needs a TPU backend or TPU interpret mode)
+
+The GEMM×collective ops take ``n_chunks=``/``chunk_dim=`` knobs; left unset,
+the chunk count resolves via ``CommContext.gemm_chunk_schedule`` (context
+default -> measured chunk sweep -> ``schedule.choose_gemm_chunks``), and any
+count is fitted to the chunked sub-shape's largest divisor — chunking never
+adds a shape constraint. Under the measured policy, lookups prefer
+calibration rows tagged with this context's ``island`` key (see
+``repro.core.autotune.island_key``; ``calibrate --per-island`` produces
+them), so different islands can dispatch differently at the same shape.
 
 Backend-selection precedence (highest to lowest)
 ------------------------------------------------
@@ -96,8 +110,10 @@ from jax import lax
 
 from repro import compat
 from repro.core import costmodel as cm
-from repro.core.schedule import (OverlapPolicy, choose_a2a_chunks,
-                                 choose_gemm_collective)
+from repro.core.schedule import (GEMM_CHUNK_DIM, ChunkSchedule, OverlapPolicy,
+                                 a2a_chunk_axis, choose_a2a_chunks,
+                                 choose_gemm_chunks, choose_gemm_collective,
+                                 fit_chunks)
 
 __all__ = [
     "CommContext", "collective_id", "register_collective", "OP_BACKENDS",
@@ -224,6 +240,16 @@ class CommContext:
     #: a ``CalibrationTable``, a path to one, or None (= search the user
     #: cache then the in-repo seed tables). Ignored under policy="analytic".
     calibration: Any = None
+    #: island key (``autotune.island_key(...)``) this context dispatches as.
+    #: Measured lookups prefer calibration rows tagged with this key and fall
+    #: back to the global (untagged) rows — two islands with different
+    #: layouts/dtypes can then resolve to different backends at the same
+    #: (m, n, k). None = global rows only.
+    island: str | None = None
+    #: context-wide default sub-chunk count for the chunk-pipelined ring
+    #: GEMM×collectives (``RunConfig.comm_chunks``). None = per-call kwarg,
+    #: else measured table, else the analytic chunk scheduler.
+    chunks: int | None = None
 
     # -- introspection -----------------------------------------------------
 
@@ -365,7 +391,8 @@ class CommContext:
                 allowed.append("fused")
             best = table.best_backend(op, m, n, k, allowed=allowed,
                                       axis_size=self.axis_size,
-                                      dtype_bytes=dtype_bytes)
+                                      dtype_bytes=dtype_bytes,
+                                      island=self.island)
             if best is not None:
                 return best
         pol = self.gemm_policy(
@@ -380,23 +407,68 @@ class CommContext:
             return "ring_bidir"
         return "ring"
 
+    def gemm_chunk_schedule(self, op: str, m: int, n: int, k: int, *,
+                            backend: str, dtype_bytes: int = 2,
+                            n_chunks: int | None = None,
+                            chunk_dim: str | None = None) -> ChunkSchedule:
+        """The chunk-pipeline decision for a resolved GEMM×collective call.
+
+        Precedence: explicit per-call ``n_chunks`` > the context-wide
+        ``chunks`` default (``RunConfig.comm_chunks``) > chunk counts
+        *measured* in the calibration table (island-keyed rows first) > the
+        analytic ``schedule.choose_gemm_chunks`` argmin. Bulk and fused
+        backends take no sub-chunks — the whole point of chunking is the ring
+        pipeline. The returned count is a request; the impls fit it to the
+        chunked sub-shape's largest divisor (never a new shape constraint).
+        """
+        kind = self._GEMM_KIND[op]
+        dim = chunk_dim if chunk_dim is not None else GEMM_CHUNK_DIM[kind]
+        if backend not in ("ring", "ring_bidir"):
+            return ChunkSchedule(1, dim, f"{backend} path takes no sub-chunks")
+        if n_chunks is not None:
+            return ChunkSchedule(max(1, n_chunks), dim, "per-call n_chunks=",
+                                 source="explicit")
+        if self.chunks is not None:
+            return ChunkSchedule(max(1, self.chunks), dim,
+                                 "context chunks= (RunConfig.comm_chunks)",
+                                 source="explicit")
+        table = self.active_calibration()
+        if table is not None:
+            c = table.best_chunks(op, backend, m, n, k,
+                                  axis_size=self.axis_size,
+                                  dtype_bytes=dtype_bytes,
+                                  island=self.island)
+            if c is not None:
+                return ChunkSchedule(c, dim, "measured chunk sweep argmin",
+                                     source="measured")
+        sched = choose_gemm_chunks(m, n, k, axis_size=self.axis_size,
+                                   kind=kind, dtype_bytes=dtype_bytes,
+                                   hw=self.effective_hw())
+        return sched if chunk_dim is None else dataclasses.replace(
+            sched, chunk_dim=chunk_dim)
+
     # -- GEMM × collective ops --------------------------------------------
 
     def all_gather_matmul(self, x, w, *, backend: str | None = None,
+                          n_chunks: int | None = None,
+                          chunk_dim: str | None = None,
                           preferred=jnp.float32):
         """x: (m_loc, k) row-sharded; w: (k, n_loc) local. -> (m, n_loc).
 
         The tensor-parallel first projection (paper Fig. 7): gather the
         row-sharded activations while the GEMM consumes already-arrived
-        shards. ``backend="ring_bidir"`` additionally needs an even
-        ``m_loc`` (the shard is split across the two ring directions).
+        shards. ``backend="ring_bidir"`` additionally needs ``m_loc >= 2``
+        (the shard is split across the two ring directions — unevenly when
+        odd; the guard validates the chunked sub-shape, not full-shard
+        parity). ``n_chunks``/``chunk_dim`` select the chunk-pipeline
+        granularity of the ring schedules (None = scheduler/measured table).
 
         Example (inside ``shard_map`` with axis ``"model"`` bound)::
 
             ctx = CommContext(axis_name="model", mesh=mesh)
             # x: (seq/n_dev, d_model) per device; w: (d_model, d_ff/n_dev)
             y = ctx.all_gather_matmul(x, w)          # policy-routed
-            y = ctx.all_gather_matmul(x, w, backend="ring_bidir")
+            y = ctx.all_gather_matmul(x, w, backend="ring", n_chunks=4)
         """
         n_dev = self.axis_size
         m_loc, k = x.shape
@@ -408,21 +480,28 @@ class CommContext:
                 dtype_bytes=x.dtype.itemsize,
                 fused_ok=self._prefer_fused(
                     x, w, out_bytes=m_loc * n_dev * n_out * 4),
-                bidir_ok=(m_loc % 2 == 0))
+                bidir_ok=(m_loc >= 2))
 
         be = self._resolve("all_gather_matmul", backend, auto)
         if be == "ring_bidir":
             be = self._shape_guard(
                 "all_gather_matmul", be, backend,
-                ok=(m_loc % 2 == 0 or n_dev % 2 != 0),
-                constraint="an even local row count (m_loc % 2 == 0)",
+                ok=(m_loc >= 2 or n_dev % 2 != 0),
+                constraint="at least 2 local rows to split across the two "
+                           "ring directions (m_loc >= 2)",
                 fallback="ring")
         if be == "bulk":
             return all_gather_matmul_baseline(x, w, self.axis_name,
                                               preferred=preferred)
         if be in ("ring", "ring_bidir"):
+            sched = self.gemm_chunk_schedule(
+                "all_gather_matmul", m_loc * n_dev, n_out, k, backend=be,
+                dtype_bytes=x.dtype.itemsize, n_chunks=n_chunks,
+                chunk_dim=chunk_dim)
             return pk_all_gather_matmul(x, w, self.axis_name,
                                         bidirectional=(be == "ring_bidir"),
+                                        n_chunks=sched.n_chunks,
+                                        chunk_dim=sched.chunk_dim,
                                         preferred=preferred)
         from repro.kernels import ops
         return ops.pk_ag_matmul(x, w, self.axis_name,
@@ -430,6 +509,8 @@ class CommContext:
                                 ).astype(x.dtype)
 
     def matmul_reduce_scatter(self, x, w, *, backend: str | None = None,
+                              n_chunks: int | None = None,
+                              chunk_dim: str | None = None,
                               preferred=jnp.float32):
         """x: (m, k_loc); w: (k_loc, n). -> (m_loc, n) = RS(x @ w).
 
@@ -467,7 +548,13 @@ class CommContext:
             return matmul_reduce_scatter_baseline(x, w, self.axis_name,
                                                   preferred=preferred)
         if be == "ring":
+            sched = self.gemm_chunk_schedule(
+                "matmul_reduce_scatter", m, n_out, k_loc, backend=be,
+                dtype_bytes=x.dtype.itemsize, n_chunks=n_chunks,
+                chunk_dim=chunk_dim)
             return pk_matmul_reduce_scatter(x, w, self.axis_name,
+                                            n_chunks=sched.n_chunks,
+                                            chunk_dim=sched.chunk_dim,
                                             preferred=preferred)
         from repro.kernels import ops
         return ops.pk_matmul_rs(x, w, self.axis_name,
@@ -475,6 +562,8 @@ class CommContext:
                                 ).astype(x.dtype)
 
     def matmul_all_reduce(self, x, w, *, backend: str | None = None,
+                          n_chunks: int | None = None,
+                          chunk_dim: str | None = None,
                           preferred=jnp.float32):
         """x: (m, k_loc); w: (k_loc, n). -> (m, n) = AR(x @ w).
 
@@ -510,7 +599,13 @@ class CommContext:
             return matmul_all_reduce_baseline(x, w, self.axis_name,
                                               preferred=preferred)
         if be == "ring":
+            sched = self.gemm_chunk_schedule(
+                "matmul_all_reduce", m, n_out, k_loc, backend=be,
+                dtype_bytes=x.dtype.itemsize, n_chunks=n_chunks,
+                chunk_dim=chunk_dim)
             return pk_matmul_all_reduce(x, w, self.axis_name,
+                                        n_chunks=sched.n_chunks,
+                                        chunk_dim=sched.chunk_dim,
                                         preferred=preferred)
         from repro.kernels import ops
         rs = ops.pk_matmul_rs(x, w, self.axis_name,
@@ -537,24 +632,27 @@ class CommContext:
             q = ctx.all_to_all(q, split_axis=1, concat_axis=2)
         """
 
+        def auto_chunks() -> int:
+            # the policy validates against the chunked sub-shape: counts no
+            # bystander dim can split degrade (or drop to bulk) here rather
+            # than inside the impl
+            return choose_a2a_chunks(
+                x.size * x.dtype.itemsize, axis_size=self.axis_size,
+                downstream_compute_s=downstream_compute_s,
+                hw=self.effective_hw(), shape=x.shape,
+                split_axis=split_axis, concat_axis=concat_axis)
+
         def auto() -> str:
             if n_chunks is not None:
                 return "chunked" if n_chunks > 1 else "bulk"
-            c = choose_a2a_chunks(
-                x.size * x.dtype.itemsize, axis_size=self.axis_size,
-                downstream_compute_s=downstream_compute_s,
-                hw=self.effective_hw())
-            return "chunked" if c > 1 else "bulk"
+            return "chunked" if auto_chunks() > 1 else "bulk"
 
         be = self._resolve("all_to_all", backend, auto)
         if be == "bulk":
             return all_to_all_baseline(x, self.axis_name,
                                        split_axis=split_axis,
                                        concat_axis=concat_axis)
-        c = n_chunks if n_chunks is not None else choose_a2a_chunks(
-            x.size * x.dtype.itemsize, axis_size=self.axis_size,
-            downstream_compute_s=downstream_compute_s,
-            hw=self.effective_hw())
+        c = n_chunks if n_chunks is not None else auto_chunks()
         return pk_all_to_all(x, self.axis_name, split_axis=split_axis,
                              concat_axis=concat_axis, n_chunks=max(c, 2))
 
@@ -578,7 +676,7 @@ class CommContext:
                     "psum", x.shape[0],
                     max(x.size // max(x.shape[0], 1), 1), 1,
                     allowed=("bulk", "ring"), axis_size=self.axis_size,
-                    dtype_bytes=x.dtype.itemsize)
+                    dtype_bytes=x.dtype.itemsize, island=self.island)
                 if best is not None:
                     return best
             if ring_ok and x.dtype == jnp.bfloat16:
@@ -678,6 +776,24 @@ def _axis_info(axis_name):
     return n, d
 
 
+# -- chunk plumbing shared by the ring schedules -----------------------------
+
+def _row_chunks(t: jax.Array, n_chunks: int) -> list[jax.Array]:
+    """Split `t` into `n_chunks` row chunks (fitted to a divisor of the row
+    count — the non-divisible fallback validates the chunked sub-shape)."""
+    c = fit_chunks(t.shape[0], n_chunks)
+    if c == 1:
+        return [t]
+    return list(jnp.split(t, c, axis=0))
+
+
+def _col_chunks(t: jax.Array, n_chunks: int) -> list[jax.Array]:
+    c = fit_chunks(t.shape[1], n_chunks)
+    if c == 1:
+        return [t]
+    return list(jnp.split(t, c, axis=1))
+
+
 # -- AG + GEMM (paper Fig. 7) — tensor-parallel first projection. -----------
 
 def all_gather_matmul_baseline(x: jax.Array, w: jax.Array, axis_name: str,
@@ -688,45 +804,81 @@ def all_gather_matmul_baseline(x: jax.Array, w: jax.Array, axis_name: str,
     return jnp.dot(x_full, w, preferred_element_type=preferred).astype(x.dtype)
 
 
+def _ag_ring_lane(x, w, out, axis_name, *, n, d, row0: int, m_stride: int,
+                  reverse: bool, n_chunks: int, chunk_dim: str, preferred):
+    """One direction of the chunk-pipelined AG+GEMM ring.
+
+    The travelling shard is split into chunks (rows for chunk_dim="m",
+    GEMM output columns for "n"); every step issues the *next* step's
+    ppermutes before the current chunk GEMMs consume their operands
+    (double-buffered send-ahead), so the per-chunk shifts hide under the
+    per-chunk GEMMs at sub-shard granularity.
+    """
+    perm = _perm_left(n) if reverse else _perm_right(n)
+    if chunk_dim == "n":
+        w_chunks = _col_chunks(w, n_chunks)
+        cur = [x]
+    else:
+        w_chunks = [w]
+        cur = _row_chunks(x, n_chunks)
+    for i in range(n):
+        src = (d + i) % n if reverse else (d - i) % n
+        # send-ahead: step i+1's shifts are issued before step i's GEMMs,
+        # which depend only on the already-held chunks
+        nxt = ([lax.ppermute(t, axis_name, perm) for t in cur]
+               if i < n - 1 else cur)
+        r = 0
+        for t in cur:
+            col = 0
+            for wc in w_chunks:
+                y = jnp.dot(t, wc,
+                            preferred_element_type=preferred).astype(x.dtype)
+                out = lax.dynamic_update_slice(
+                    out, y, (src * m_stride + row0 + r, col))
+                col += wc.shape[1]
+            r += t.shape[0]
+        cur = nxt
+    return out
+
+
 def pk_all_gather_matmul(x: jax.Array, w: jax.Array, axis_name: str, *,
-                         bidirectional: bool = False,
+                         bidirectional: bool = False, n_chunks: int = 1,
+                         chunk_dim: str = "m",
                          preferred=jnp.float32) -> jax.Array:
-    """Overlapped AG+GEMM: rotate x shards around the ring; GEMM each shard on
-    arrival. The ppermute for step i+1 is independent of step i's GEMM, so the
-    transfer hides under compute (paper §3.1.3 intra-/inter-SM overlap)."""
+    """Chunk-pipelined AG+GEMM: rotate x shards around the ring; GEMM each
+    chunk on arrival. Each ring step is split into `n_chunks` double-buffered
+    chunks whose shifts for step i+1 are issued before step i's GEMMs (paper
+    §3.1.3 intra-/inter-SM overlap at sub-shard granularity). Chunk counts
+    that do not divide the chunked sub-shape degrade to its largest divisor;
+    results are bit-identical to the unchunked ring for any count.
+
+    ``bidirectional`` splits the shard across the two ring directions (two
+    link-pairs, halving T_comm). The split no longer requires an even
+    ``m_loc``: an odd shard splits unevenly (ceil right, floor left) — the
+    chunked sub-shapes are what must be sliceable, not the full shard."""
     n, d = _axis_info(axis_name)
     m_loc, _ = x.shape
     n_out = w.shape[1]
     out = jnp.zeros((n * m_loc, n_out), dtype=x.dtype)
 
-    if not bidirectional or n % 2 != 0:
-        cur = x
-        for i in range(n):
-            src = (d - i) % n  # owner of the shard currently held
-            y = jnp.dot(cur, w, preferred_element_type=preferred).astype(x.dtype)
-            out = lax.dynamic_update_slice(out, y, (src * m_loc, 0))
-            if i < n - 1:
-                cur = lax.ppermute(cur, axis_name, _perm_right(n))
-        return out
+    if not bidirectional or n % 2 != 0 or m_loc < 2:
+        return _ag_ring_lane(x, w, out, axis_name, n=n, d=d, row0=0,
+                             m_stride=m_loc, reverse=False, n_chunks=n_chunks,
+                             chunk_dim=chunk_dim, preferred=preferred)
 
-    # Bidirectional: each device's shard is split in half; the top halves
-    # travel the right-going ring, the bottom halves the left-going ring.
-    # Each of the n-1 hops moves half a shard per direction over two
-    # link-pairs, halving T_comm versus the unidirectional ring.
-    assert m_loc % 2 == 0, m_loc
-    half = m_loc // 2
-    cur_r, cur_l = jnp.split(x, 2, axis=0)
-    for i in range(n):
-        src_r = (d - i) % n  # right-ring: after i hops we hold (d-i)'s half
-        src_l = (d + i) % n
-        y_r = jnp.dot(cur_r, w, preferred_element_type=preferred).astype(x.dtype)
-        out = lax.dynamic_update_slice(out, y_r, (src_r * m_loc, 0))
-        y_l = jnp.dot(cur_l, w, preferred_element_type=preferred).astype(x.dtype)
-        out = lax.dynamic_update_slice(out, y_l, (src_l * m_loc + half, 0))
-        if i < n - 1:
-            cur_r = lax.ppermute(cur_r, axis_name, _perm_right(n))
-            cur_l = lax.ppermute(cur_l, axis_name, _perm_left(n))
-    return out
+    # Bidirectional: the shard's top rows travel the right-going ring, the
+    # bottom rows the left-going ring — each of the n-1 hops moves part of a
+    # shard per direction over two link-pairs, halving T_comm versus the
+    # unidirectional ring. Odd m_loc splits ceil/floor (every device uses the
+    # same static split, so the ppermute payloads stay uniform).
+    h_r = (m_loc + 1) // 2
+    x_r, x_l = x[:h_r], x[h_r:]
+    out = _ag_ring_lane(x_r, w, out, axis_name, n=n, d=d, row0=0,
+                        m_stride=m_loc, reverse=False, n_chunks=n_chunks,
+                        chunk_dim=chunk_dim, preferred=preferred)
+    return _ag_ring_lane(x_l, w, out, axis_name, n=n, d=d, row0=h_r,
+                         m_stride=m_loc, reverse=True, n_chunks=n_chunks,
+                         chunk_dim=chunk_dim, preferred=preferred)
 
 
 # -- GEMM + reduce-scatter (paper Fig. 8 / Table 3) — TP second projection. --
@@ -741,31 +893,56 @@ def matmul_reduce_scatter_baseline(x: jax.Array, w: jax.Array, axis_name: str,
 
 
 def pk_matmul_reduce_scatter(x: jax.Array, w: jax.Array, axis_name: str, *,
+                             n_chunks: int = 1, chunk_dim: str = "m",
                              preferred=jnp.float32) -> jax.Array:
-    """Overlapped GEMM+RS (accumulate-and-forward ring).
+    """Chunk-pipelined GEMM+RS (accumulate-and-forward ring).
 
     At step i, device d computes the partial block destined for device
     (d+1+i) % n, adds the accumulator arriving from the right, and forwards
     left. The final step computes d's own block — no trailing permute. The
     per-step GEMM hides the per-step transfer whenever K >= s*R/(2*B)
-    (costmodel.hiding_threshold_k)."""
+    (costmodel.hiding_threshold_k).
+
+    With ``n_chunks`` > 1 the per-destination block travels as independent
+    chunks (rows for chunk_dim="m", output columns for "n"): chunk j's shift
+    is issued before chunk j+1's GEMM is consumed, so the per-chunk hops hide
+    under per-chunk compute at sub-block granularity. Chunk counts are fitted
+    to the chunked sub-shape (largest divisor), and every count is
+    bit-identical to the unchunked ring (GEMM rows/columns are independent
+    and the accumulation order around the ring is unchanged)."""
     n, d = _axis_info(axis_name)
     m = x.shape[0]
     assert m % n == 0, (m, n)
     m_blk = m // n
+    n_out = w.shape[1]
 
-    def partial_block(b):
-        xb = lax.dynamic_slice_in_dim(x, b * m_blk, m_blk, axis=0)
-        return jnp.dot(xb, w, preferred_element_type=preferred)
+    if chunk_dim == "n":
+        c = fit_chunks(n_out, n_chunks)
+        w_chunks = _col_chunks(w, c)
+
+        def partial_chunk(b, j):
+            xb = lax.dynamic_slice_in_dim(x, b * m_blk, m_blk, axis=0)
+            return jnp.dot(xb, w_chunks[j], preferred_element_type=preferred)
+    else:
+        c = fit_chunks(m_blk, n_chunks)
+        sub = m_blk // c
+
+        def partial_chunk(b, j):
+            xb = lax.dynamic_slice_in_dim(x, b * m_blk + j * sub, sub, axis=0)
+            return jnp.dot(xb, w, preferred_element_type=preferred)
 
     # the ring payload travels in the activation dtype (bf16): half the ICI
     # bytes of an f32 accumulator; each hop's add still runs in f32
-    acc = partial_block((d + 1) % n).astype(x.dtype)
+    accs = [partial_chunk((d + 1) % n, j).astype(x.dtype) for j in range(c)]
     for i in range(1, n):
-        acc = lax.ppermute(acc, axis_name, _perm_left(n))
-        acc = (acc.astype(preferred)
-               + partial_block((d + 1 + i) % n)).astype(x.dtype)
-    return acc
+        # send-ahead: all chunk shifts are issued before this step's GEMMs
+        accs = [lax.ppermute(a, axis_name, _perm_left(n)) for a in accs]
+        accs = [(a.astype(preferred)
+                 + partial_chunk((d + 1 + i) % n, j)).astype(x.dtype)
+                for j, a in enumerate(accs)]
+    if c == 1:
+        return accs[0]
+    return jnp.concatenate(accs, axis=1 if chunk_dim == "n" else 0)
 
 
 # -- GEMM + all-reduce (paper Fig. 9). ---------------------------------------
@@ -777,13 +954,16 @@ def matmul_all_reduce_baseline(x: jax.Array, w: jax.Array, axis_name: str,
 
 
 def pk_matmul_all_reduce(x: jax.Array, w: jax.Array, axis_name: str, *,
+                         n_chunks: int = 1, chunk_dim: str = "m",
                          preferred=jnp.float32) -> jax.Array:
     """Overlapped GEMM+AR. TPU ICI has no in-network reduction (DESIGN §2.1),
     so the paper's switch-offloaded AR is re-derived as overlapped
     RS(accumulate-on-arrival) + AG: same 2*(N-1)/N per-device traffic, and the
-    RS half hides under the GEMM."""
+    RS half hides under the GEMM. ``n_chunks``/``chunk_dim`` chunk-pipeline
+    the RS half (see ``pk_matmul_reduce_scatter``)."""
     n, _ = _axis_info(axis_name)
-    rs = pk_matmul_reduce_scatter(x, w, axis_name, preferred=preferred)
+    rs = pk_matmul_reduce_scatter(x, w, axis_name, n_chunks=n_chunks,
+                                  chunk_dim=chunk_dim, preferred=preferred)
     return lax.all_gather(rs, axis_name, axis=0, tiled=True)
 
 
@@ -803,20 +983,21 @@ def pk_all_to_all(x: jax.Array, axis_name: str, *, split_axis: int,
     (paper §4.2) — already operates on the strided layout with no reshape.
 
     Chunks are cut along a *bystander* dim (neither split nor concat) so the
-    chunked result is bit-identical to the bulk op."""
+    chunked result is bit-identical to the bulk op. The requested count is
+    validated against the chunked sub-shape (``schedule.a2a_chunk_axis``): a
+    count no bystander dim divides exactly degrades to the largest feasible
+    divisor instead of silently bulking the whole transfer."""
     if n_chunks == 1:
         return all_to_all_baseline(x, axis_name, split_axis=split_axis,
                                    concat_axis=concat_axis)
-    chunk_axis = next((d for d in range(x.ndim)
-                       if d not in (split_axis, concat_axis)
-                       and x.shape[d] % n_chunks == 0 and x.shape[d] > 1),
-                      None)
-    if chunk_axis is None:
+    fit = a2a_chunk_axis(x.shape, split_axis, concat_axis, n_chunks)
+    if fit is None:
         return all_to_all_baseline(x, axis_name, split_axis=split_axis,
                                    concat_axis=concat_axis)
-    chunks = jnp.split(x, n_chunks, axis=chunk_axis)
-    outs = [lax.all_to_all(c, axis_name, split_axis=split_axis,
-                           concat_axis=concat_axis, tiled=True) for c in chunks]
+    chunk_axis, c = fit
+    chunks = jnp.split(x, c, axis=chunk_axis)
+    outs = [lax.all_to_all(t, axis_name, split_axis=split_axis,
+                           concat_axis=concat_axis, tiled=True) for t in chunks]
     return jnp.concatenate(outs, axis=chunk_axis)
 
 

@@ -150,12 +150,16 @@ def ring_collective_bytes(shard_bytes: float, n_devices: int,
     raise ValueError(f"unknown collective kind: {kind}")
 
 
-def _collective_tensor_bytes(m: int, n: int, k: int, dtype_bytes: int,
-                             kind: str) -> float:
+def collective_tensor_bytes(m: int, n: int, k: int, dtype_bytes: int,
+                            kind: str) -> float:
     """Size of the tensor a GEMM×collective actually moves: AG+GEMM gathers
     the (m, k) *input*; RS/AR reduce the (m, n) *output*. Pricing AG on the
     output would be off by n/k whenever the projection changes width."""
     return (m * k if kind == "all_gather" else m * n) * dtype_bytes
+
+
+#: pre-rename alias (the benchmarks/plan code used the private name)
+_collective_tensor_bytes = collective_tensor_bytes
 
 
 def bulk_gemm_collective_cost(
@@ -206,3 +210,34 @@ def overlapped_gemm_collective_cost(
     t_sync = 2.0 * n_chunks * hw.remote_sync_s * max(axis_size - 1, 0)
     return KernelCost(t_launch=hw.kernel_launch_s, t_comp=t_comp, t_mem=t_mem,
                       t_comm=t_comm, t_non_overlap=fill, t_sync=t_sync)
+
+
+def chunk_pipeline_cost(
+    m: int, n: int, k: int, *, axis_size: int, sub_chunks: int,
+    dtype_bytes: int = 2, kind: str = "reduce_scatter",
+    hw: HardwareSpec = TPU_V5E,
+) -> KernelCost:
+    """Cost of the chunk-pipelined ring schedule (paper Fig. 2/11 regime).
+
+    Each of the ``axis_size`` ring steps is split into ``sub_chunks``
+    double-buffered chunks: chunk j's transfer for step i+1 is issued before
+    step i's chunk GEMMs consume their operands, so the pipeline fill shrinks
+    to one *chunk* transfer while per-chunk sync overhead grows linearly.
+    ``core.schedule.choose_gemm_chunks`` takes the argmin of this total over
+    candidate chunk counts — on a calibrated spec the tradeoff is priced on
+    *measured* link bandwidth, sync and GEMM-efficiency constants.
+
+    The sync term is per chunk-HOP: the ring makes ``axis_size - 1`` hops
+    (2x for the AR re-derivation's trailing gather) and every hop moves
+    ``sub_chunks`` independently-synchronized payloads — one semaphore pair
+    each. (``overlapped_gemm_collective_cost``'s generic term additionally
+    scales every chunk by the whole axis, which over-penalizes fine chunking
+    by a factor of ``axis_size``.)
+    """
+    total = max(axis_size, 1) * max(sub_chunks, 1)
+    base = overlapped_gemm_collective_cost(
+        m, n, k, axis_size=axis_size, dtype_bytes=dtype_bytes, kind=kind,
+        n_chunks=total, hw=hw)
+    hops = max(axis_size - 1, 0) * (2 if kind == "all_reduce" else 1)
+    return dataclasses.replace(
+        base, t_sync=hops * max(sub_chunks, 1) * hw.remote_sync_s)

@@ -21,7 +21,6 @@ Two views exist:
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ sharded over that axis, heads/batch are local.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

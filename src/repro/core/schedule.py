@@ -5,6 +5,21 @@ DMA engines are free, so the knobs become (a) whether to decompose a bulk
 collective into a ring pipeline at all, (b) the chunk count, and (c) whether
 to use the bidirectional ring (2 link-pairs). This module picks them from the
 paper's cost model — the analytic analogue of PK's runtime SM-split search.
+
+Two levels of granularity:
+
+* ``choose_gemm_collective`` — ring vs bulk vs bidirectional ring, the
+  step-level decision (one GEMM + one shift per ring step);
+* ``choose_gemm_chunks`` — the chunk-pipeline refinement: how many
+  double-buffered sub-chunks each ring step is split into, so step *i*'s
+  shift overlaps step *i−1*'s GEMM at sub-shard granularity (Syncopate's
+  chunk-centric scheduling, arXiv 2601.20595). The count is the argmin of
+  ``costmodel.chunk_pipeline_cost`` — priced on measured link/GEMM constants
+  when the spec is calibrated.
+
+Chunked schedules never *reject* shapes: ``fit_chunks`` degrades a requested
+count to the largest divisor the chunked sub-shape supports, so divisibility
+is validated against the sub-shape, not the full shard.
 """
 
 from __future__ import annotations
@@ -12,6 +27,42 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core import costmodel as cm
+
+#: cost-model kind -> the dimension the chunk pipeline slices. AG+GEMM moves
+#: the (m, k) input around the ring, so its chunks cut the travelling shard's
+#: rows; RS/AR move the (m, n) output block, whose rows are likewise the
+#: payload dim. "n" (slicing the GEMM's output columns / w's columns) is the
+#: explicit-override alternative for shapes whose m extent will not split.
+GEMM_CHUNK_DIM = {"all_gather": "m", "reduce_scatter": "m", "all_reduce": "m"}
+
+#: candidate sub-chunk counts the scheduler searches (per ring step).
+CHUNK_CANDIDATES = (1, 2, 4, 8)
+
+
+def fit_chunks(extent: int, n_chunks: int) -> int:
+    """Largest divisor of ``extent`` that is <= ``n_chunks`` (always >= 1).
+
+    The non-divisible fallback for every chunked schedule: a chunk count that
+    does not divide the chunked sub-shape degrades to the nearest one that
+    does instead of raising — chunking is an optimization, never a new shape
+    constraint.
+    """
+    if extent <= 0:
+        return 1
+    c = max(1, min(n_chunks, extent))
+    while extent % c:
+        c -= 1
+    return c
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkSchedule:
+    """The chunk-pipeline decision for one GEMM×collective call."""
+
+    n_chunks: int            # sub-chunks per ring step (1 = classic ring)
+    chunk_dim: str           # "m" | "n" — which GEMM dim the chunks slice
+    reason: str
+    source: str = "analytic"   # "analytic" | "measured" | "explicit"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,12 +112,72 @@ def choose_gemm_collective(m: int, n: int, k: int, *, axis_size: int,
     return OverlapPolicy(strategy, axis_size, hidden, reason)
 
 
+def choose_gemm_chunks(m: int, n: int, k: int, *, axis_size: int, kind: str,
+                       dtype_bytes: int = 2,
+                       hw: cm.HardwareSpec = cm.TPU_V5E,
+                       candidates=CHUNK_CANDIDATES) -> ChunkSchedule:
+    """Sub-chunk count + chunk dimension for a chunk-pipelined ring.
+
+    Argmin of ``costmodel.chunk_pipeline_cost`` over ``candidates``: more
+    chunks shrink the pipeline fill (the first chunk's exposed transfer) but
+    pay per-chunk launch + sync overhead — on a calibrated spec both sides
+    are priced on *measured* constants, so a mesh with expensive hops (the
+    CPU-emulated one) resolves to 1 chunk while a real ICI mesh with cheap
+    sync resolves to more. Call sites degrade the count to the chunked
+    sub-shape's largest divisor via ``fit_chunks``.
+    """
+    dim = GEMM_CHUNK_DIM[kind]
+    if axis_size <= 1:
+        return ChunkSchedule(1, dim, "single device on axis")
+    best, best_t = 1, float("inf")
+    for c in candidates:
+        t = cm.chunk_pipeline_cost(m, n, k, axis_size=axis_size,
+                                   sub_chunks=c, dtype_bytes=dtype_bytes,
+                                   kind=kind, hw=hw).total
+        if t < best_t:
+            best, best_t = c, t
+    return ChunkSchedule(
+        best, dim,
+        f"argmin of chunk_pipeline_cost over {tuple(candidates)} "
+        f"-> {best} (t={best_t:.2e}s)")
+
+
+def a2a_chunk_axis(shape, split_axis: int, concat_axis: int,
+                   n_chunks: int) -> tuple[int, int] | None:
+    """(axis, fitted chunk count) for a chunked all-to-all, or None.
+
+    Chunks are cut along a bystander dim (neither split nor concat) so the
+    chunked op stays bit-identical to bulk. The requested count is validated
+    against the *chunked sub-shape*: a dim that `n_chunks` does not divide
+    degrades to its largest feasible divisor instead of rejecting the config
+    (the old behavior — requiring the full dim to divide exactly — bulked
+    legal chunked configs). Returns None only when no bystander dim can be
+    split at all.
+    """
+    best: tuple[int, int] | None = None
+    for d, extent in enumerate(shape):
+        if d in (split_axis, concat_axis) or extent <= 1:
+            continue
+        c = fit_chunks(extent, n_chunks)
+        if c > 1 and (best is None or c > best[1]):
+            best = (d, c)
+    return best
+
+
 def choose_a2a_chunks(payload_bytes: float, *, axis_size: int,
                       downstream_compute_s: float,
-                      hw: cm.HardwareSpec = cm.TPU_V5E) -> int:
+                      hw: cm.HardwareSpec = cm.TPU_V5E,
+                      shape=None, split_axis: int | None = None,
+                      concat_axis: int | None = None) -> int:
     """Chunk count for a2a×compute overlap (Ulysses / MoE dispatch). More
     chunks -> finer overlap but more per-chunk launch+sync overhead; choose
-    the largest count whose per-chunk overhead stays <10% of chunk time."""
+    the largest count whose per-chunk overhead stays <10% of chunk time.
+
+    When ``shape`` (with ``split_axis``/``concat_axis``) is given, the chosen
+    count is additionally fitted to what the payload's bystander dims can
+    actually split into — validation against the chunked sub-shape, so the
+    policy never reports a chunking the op would have to bulk away.
+    """
     t_comm = cm.transfer_cost(
         cm.ring_collective_bytes(payload_bytes, axis_size, "all_to_all"), hw)
     if t_comm <= 0:
@@ -76,4 +187,7 @@ def choose_a2a_chunks(payload_bytes: float, *, axis_size: int,
         per_chunk = max(t_comm, downstream_compute_s) / c
         if per_chunk > 10 * (hw.kernel_launch_s + hw.remote_sync_s):
             best = c
+    if best > 1 and shape is not None:
+        fit = a2a_chunk_axis(shape, split_axis, concat_axis, best)
+        best = fit[1] if fit is not None else 1
     return best

@@ -62,8 +62,9 @@ from jax.sharding import PartitionSpec as P  # noqa: F401  (re-export for call s
 
 from repro import compat
 from repro.core import costmodel as cm
+from repro.core.autotune import island_key as _island_key
 from repro.core.comms import GEMM_OP_KIND, OP_BACKENDS, CommContext
-from repro.core.schedule import choose_a2a_chunks
+from repro.core.schedule import a2a_chunk_axis, choose_a2a_chunks
 
 __all__ = ["Island", "Gather", "Comm", "IslandPlan", "comm_context",
            "maybe_allgather", "render_plans"]
@@ -86,7 +87,8 @@ def comm_context(run, axis: str, mesh=None, **overrides) -> CommContext:
     kw: dict[str, Any] = {"axis_name": axis, "mesh": mesh}
     if run is not None:
         kw.update(backend=run.comm_backend, allow_bidir=run.pk_bidirectional,
-                  policy=run.comm_policy, calibration=run.calibration_path)
+                  policy=run.comm_policy, calibration=run.calibration_path,
+                  chunks=run.comm_chunks)
     kw.update(overrides)
     return CommContext(**kw)
 
@@ -128,13 +130,24 @@ class Comm:
     payload_bytes: float = 0.0
     dtype_bytes: int = 2
     n_chunks: int | None = None
+    chunk_dim: str | None = None
     backend: str | None = None
     downstream_compute_s: float = 0.0
+    #: local payload shape + a2a axes, so plan() can fit the chunk count to
+    #: the splittable bystander dims exactly like pk_all_to_all will
+    shape: tuple[int, ...] | None = None
+    split_axis: int | None = None
+    concat_axis: int | None = None
 
 
 @dataclasses.dataclass(frozen=True)
 class IslandPlan:
-    """Trace-free overlap report for one island (paper §3.1.3 decision)."""
+    """Trace-free overlap report for one island (paper §3.1.3 decision).
+
+    ``source`` records where the hidden fraction and chunk count came from:
+    ``"analytic"`` (the cost model's prediction) or ``"measured"`` (this
+    island's — or the global — calibration rows on a calibrated mesh).
+    """
     island: str
     axis: Any
     axis_size: int
@@ -143,7 +156,9 @@ class IslandPlan:
     op: str | None = None
     backend: str | None = None
     n_chunks: int | None = None
+    chunk_dim: str | None = None
     hidden_fraction: float | None = None
+    source: str = "analytic"
 
     def asdict(self) -> dict:
         return dataclasses.asdict(self)
@@ -155,7 +170,8 @@ class IslandPlan:
               else f"{self.hidden_fraction:.2f}")
         return (f"{self.island:<14} op={self.op or '-':<22} "
                 f"backend={self.backend or '-':<10} "
-                f"chunks={self.n_chunks or 1:<3} hidden={hf}")
+                f"chunks={self.n_chunks or 1:<3} hidden={hf:<5} "
+                f"src={self.source}")
 
 
 def render_plans(plans: Sequence[IslandPlan]) -> str:
@@ -236,10 +252,30 @@ class Island:
 
     # -- execution ---------------------------------------------------------
 
+    @property
+    def island_key(self) -> str | None:
+        """The calibration-row key this island dispatches as (None when no
+        ``Comm`` is declared): ``autotune.island_key(name, op, dtype)``.
+        ``calibrate --per-island`` tags measured rows with it; the context
+        built below prefers those rows over the global shape grid."""
+        if self.comm is None:
+            return None
+        return _island_key(self.name, self.comm.op, self.comm.dtype_bytes)
+
     def make_context(self) -> CommContext:
         kw = dict(self.ctx_kwargs)
         if self.hw is not None:
             kw.setdefault("hw", self.hw)
+        kw.setdefault("island", self.island_key)
+        # a declared Comm.n_chunks becomes the context's chunk default, so
+        # the body's GEMM-collective calls run the schedule plan() reports
+        # without every call site re-passing n_chunks=. The global A/B knob
+        # (RunConfig.comm_chunks) still wins when set.
+        if (self.comm is not None and self.comm.n_chunks is not None
+                and self.comm.op in GEMM_OP_KIND
+                and (self.run is None
+                     or getattr(self.run, "comm_chunks", None) is None)):
+            kw.setdefault("chunks", self.comm.n_chunks)
         return comm_context(self.run, self.axis, mesh=self.mesh, **kw)
 
     def __call__(self, **arrays):
@@ -272,6 +308,59 @@ class Island:
 
     # -- introspection -----------------------------------------------------
 
+    def _measured_hidden(self, ctx: CommContext, backend: str,
+                         kind: str) -> float | None:
+        """Measured hidden fraction for the chosen backend, or None.
+
+        On a calibrated mesh the bulk row is the serial GEMM-then-collective
+        baseline and the ring row the overlapped schedule, so the time the
+        ring saved over bulk IS the hidden communication:
+        ``(us_bulk - us_ring) / t_comm`` clamped to [0, 1], with ``t_comm``
+        priced on the calibrated (measured-bandwidth) spec. A measured
+        *bulk* decision (the table showed bulk winning) reports 0.0 — still
+        a measurement, not a prediction. Island-keyed rows are preferred;
+        the generic shape grid is the fallback. None — no usable
+        measurement — leaves the plan on the analytic prediction.
+        """
+        if backend not in ("bulk", "ring", "ring_bidir"):
+            return None
+        table = ctx.active_calibration()
+        if table is None or self.comm is None:
+            return None
+        c = self.comm
+        n_dev = self.axis_size
+        ring_be = backend if backend != "bulk" else "ring"
+        # both sides of the delta must come from the SAME tier: an island
+        # ring row minus a global-grid bulk row is a cross-layout subtraction
+        # (another tier's layout is not evidence about this one)
+        tiers: list[dict[str, Any]] = []
+        if self.island_key is not None:
+            tiers.append({"island": self.island_key, "island_only": True})
+        tiers.append({"island": None})
+        us_ov = us_bulk = None
+        for sel in tiers:
+            kw: dict[str, Any] = dict(axis_size=n_dev,
+                                      dtype_bytes=c.dtype_bytes, **sel)
+            us_ov = table.measured_us(c.op, ring_be, c.m, c.n, c.k, **kw)
+            us_bulk = table.measured_us(c.op, "bulk", c.m, c.n, c.k, **kw)
+            if us_ov is not None and us_bulk is not None:
+                break
+        if us_ov is None or us_bulk is None:
+            return None
+        if backend == "bulk":
+            return 0.0          # nothing overlaps, by measurement
+        shard = cm.collective_tensor_bytes(
+            c.m, c.n, c.k, c.dtype_bytes, kind) / max(n_dev, 1)
+        # same T_comm convention as choose_gemm_collective: the
+        # bidirectional ring moves the payload over two link-pairs
+        t_comm_us = cm.transfer_cost(
+            cm.ring_collective_bytes(shard, n_dev, kind),
+            ctx.effective_hw(),
+            links=2 if backend == "ring_bidir" else 1) * 1e6
+        if t_comm_us <= 0:
+            return None
+        return max(0.0, min(1.0, (us_bulk - us_ov) / t_comm_us))
+
     def plan(self) -> IslandPlan:
         """The trace-free §3.1.3 schedule decision this island will make:
         which backend the policy (or a pin) resolves to, the chunk count and
@@ -291,8 +380,9 @@ class Island:
             # can never report a schedule CommContext would refuse to run:
             # ring RS/AR needs m divisible by the axis (auto() returns bulk,
             # context pins degrade via _shape_guard); the bidirectional AG
-            # ring additionally needs an even local row count; the fused
-            # Pallas kernel is auto-picked only on a real TPU with the
+            # ring additionally needs >= 2 local rows to split across the
+            # two directions (odd shards split unevenly); the fused Pallas
+            # kernel is auto-picked only on a real TPU with the
             # (approximate, coordinate-derived) operand footprint in VMEM.
             ring_ok = c.op == "all_gather_matmul" or c.m % n_dev == 0
             m_loc = c.m // n_dev if c.m % n_dev == 0 else c.m
@@ -316,7 +406,7 @@ class Island:
                 if backend != "bulk" and not ring_ok:
                     backend = "bulk"        # the _shape_guard degradation
                 elif (backend == "ring_bidir" and n_dev % 2 == 0
-                        and m_loc % 2 != 0):
+                        and m_loc < 2):
                     backend = "ring"
                 reason = f"context pin -> {backend}"
             elif not ring_ok:
@@ -325,23 +415,51 @@ class Island:
             else:
                 backend = ctx.auto_gemm_backend(
                     c.op, c.m, c.n, c.k, dtype_bytes=c.dtype_bytes,
-                    fused_ok=fused_ok, bidir_ok=(m_loc % 2 == 0))
+                    fused_ok=fused_ok, bidir_ok=(m_loc >= 2))
                 reason = None
             pol = ctx.gemm_policy(c.m, c.n, c.k, kind=GEMM_OP_KIND[c.op],
                                   dtype_bytes=c.dtype_bytes)
-            n_chunks = c.n_chunks if c.n_chunks is not None else (
-                pol.n_chunks if backend != "bulk" else 1)
-            hidden = pol.hidden_fraction if backend != "bulk" else 0.0
+            if backend in ("ring", "ring_bidir"):
+                # chunk-pipeline schedule, resolved through the SAME context
+                # the body receives (make_context threads Comm.n_chunks into
+                # ctx.chunks, RunConfig.comm_chunks winning): context default
+                # > measured chunk sweep (island-keyed rows first) >
+                # analytic argmin — plan and runtime cannot diverge
+                sched = ctx.gemm_chunk_schedule(
+                    c.op, c.m, c.n, c.k, backend=backend,
+                    dtype_bytes=c.dtype_bytes, chunk_dim=c.chunk_dim)
+                n_chunks = n_dev * sched.n_chunks   # ring steps × sub-chunks
+                chunk_dim = sched.chunk_dim
+                hidden = pol.hidden_fraction
+                source = "measured" if sched.source == "measured" \
+                    else "analytic"
+            else:
+                n_chunks = c.n_chunks if c.n_chunks is not None else 1
+                chunk_dim, hidden, source = None, 0.0, "analytic"
+            meas = self._measured_hidden(ctx, backend, GEMM_OP_KIND[c.op])
+            if meas is not None:
+                hidden, source = meas, "measured"
             return dataclasses.replace(
                 base, backend=backend, n_chunks=n_chunks,
-                hidden_fraction=hidden,
+                chunk_dim=chunk_dim, hidden_fraction=hidden, source=source,
                 reason=reason if reason is not None else pol.reason)
         if c.op == "all_to_all":
             n_chunks = c.n_chunks if c.n_chunks is not None else \
                 choose_a2a_chunks(c.payload_bytes, axis_size=self.axis_size,
                                   downstream_compute_s=c.downstream_compute_s,
-                                  hw=ctx.effective_hw())
-            backend = c.backend or ("chunked" if n_chunks > 1 else "bulk")
+                                  hw=ctx.effective_hw(), shape=c.shape,
+                                  split_axis=c.split_axis,
+                                  concat_axis=c.concat_axis)
+            if n_chunks > 1 and c.shape is not None:
+                # mirror pk_all_to_all's bystander-dim fitting so the plan
+                # never reports a chunking the runtime would bulk away
+                fit = a2a_chunk_axis(c.shape, c.split_axis, c.concat_axis,
+                                     n_chunks)
+                n_chunks = fit[1] if fit is not None else 1
+            backend = c.backend if c.backend is not None else \
+                ("chunked" if n_chunks > 1 else "bulk")
+            if backend == "chunked" and n_chunks <= 1:
+                backend = "bulk"    # the declared chunking cannot split
             hidden = 1.0 - 1.0 / n_chunks if n_chunks > 1 else 0.0
             return dataclasses.replace(
                 base, backend=backend, n_chunks=n_chunks,

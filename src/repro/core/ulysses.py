@@ -13,12 +13,11 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro import compat
 
 from repro.core.comms import CommContext
-from repro.core.ring_attention import _block_update, _causal_block_mask, NEG_INF
+from repro.core.ring_attention import _causal_block_mask, NEG_INF
 
 
 def _local_attention(q, k, v, *, causal, window, scale, q_offset=0):

@@ -22,7 +22,6 @@ logic, mirroring the paper's "<50 LOC of device code" claim.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax

@@ -11,7 +11,6 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
-from repro.kernels import ref
 from repro.kernels.collective_matmul import ag_matmul_fused, matmul_rs_fused
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.grouped_matmul import grouped_matmul as _gmm
@@ -105,7 +104,6 @@ def pk_reduce_scatter(x, axis_name, *, interpret=None):
 def pk_all_reduce(x, axis_name, *, interpret=None):
     """all_reduce = reduce_scatter ∘ all_gather (no in-network reduction on
     ICI — DESIGN §2.1; same 2(N-1)/N per-device traffic as switch-offload)."""
-    import jax.lax as lax
     n = compat.axis_size(axis_name)
     blk, rem = divmod(x.shape[0], n)
     if rem != 0:  # pad leading dim to a multiple of n

@@ -190,6 +190,10 @@ def lower_cell(arch: str, cell_name: str, *, multi_pod: bool,
                         for k, (v, c) in coll.by_kind.items()},
         "collective_bytes_total": coll.total_bytes,
         # trace-free overlap schedule every PK island picked for this cell
+        # (each plan records backend / chunks / chunk_dim / hidden fraction
+        # and whether those came from a calibration table or the analytic
+        # model — the "source" field)
+        "comm_policy": run.comm_policy,
         "islands": [p.asdict() for p in island_plans(
             cfg, run, rules, batch=cell.global_batch, seq=cell.seq_len)],
         "roofline": dataclasses.asdict(roof),

@@ -25,12 +25,15 @@ from repro.train.step import make_serve_step
 
 def generate(arch: str, *, reduced: bool, batch: int, prompt_len: int,
              gen_tokens: int, mesh_shape=None, mesh_axes=("data", "model"),
-             seed: int = 0, greedy: bool = True):
+             seed: int = 0, greedy: bool = True,
+             comm_policy: str = "analytic", comm_chunks: int | None = None):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
     mesh = make_mesh(mesh_shape, mesh_axes) if mesh_shape else None
-    run = RunConfig(dp_axes=("data",), fsdp=False, decode_seq_shard=mesh is not None)
+    run = RunConfig(dp_axes=("data",), fsdp=False,
+                    decode_seq_shard=mesh is not None,
+                    comm_policy=comm_policy, comm_chunks=comm_chunks)
     rules = ShardingRules(mesh, run) if mesh is not None else None
 
     tmpl = T.param_template(cfg, run, rules)
@@ -83,10 +86,14 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--mesh-shape", type=int, nargs="*", default=None)
+    ap.add_argument("--comm-policy", default="analytic",
+                    choices=["analytic", "measured", "auto"])
+    ap.add_argument("--comm-chunks", type=int, default=None)
     args = ap.parse_args()
     generate(args.arch, reduced=args.reduced, batch=args.batch,
              prompt_len=args.prompt_len, gen_tokens=args.tokens,
-             mesh_shape=args.mesh_shape)
+             mesh_shape=args.mesh_shape, comm_policy=args.comm_policy,
+             comm_chunks=args.comm_chunks)
 
 
 if __name__ == "__main__":

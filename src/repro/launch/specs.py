@@ -5,17 +5,15 @@ shardable, zero allocation (assignment MULTI-POD DRY-RUN §2).
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchConfig, RunConfig, SHAPES, ShapeCell
+from repro.configs.base import ArchConfig, RunConfig, ShapeCell
 from repro.models import transformer as T
 from repro.models.sharding import ShardingRules
-from repro.optim.adamw import AdamW, AdamWState
+from repro.optim.adamw import AdamWState
 from repro.train.step import TrainState
 
 

@@ -8,12 +8,10 @@ are intended for real pods (use dryrun.py to validate them without hardware).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs import SHAPES, get_config
+from repro.configs import get_config
 from repro.configs.base import RunConfig
 from repro.core.template import render_plans
 from repro.data.pipeline import DataConfig, SyntheticLM
@@ -33,7 +31,8 @@ def build_and_train(arch: str, *, steps: int, reduced: bool, mesh_shape,
                     lr: float = 3e-3, microbatches: int = 1,
                     pk_overlap: bool = True, compress_grads: bool = False,
                     fault_hook=None, seed: int = 0, log_every: int = 10,
-                    ckpt_every: int = 50):
+                    ckpt_every: int = 50, comm_policy: str = "analytic",
+                    comm_chunks: int | None = None, ulysses_chunks: int = 1):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -41,10 +40,14 @@ def build_and_train(arch: str, *, steps: int, reduced: bool, mesh_shape,
     run = RunConfig(dp_axes=tuple(a for a in (mesh_axes or ()) if a != "model")
                     or ("data",),
                     pk_overlap=pk_overlap, microbatches=microbatches,
-                    fsdp=mesh is not None)
+                    fsdp=mesh is not None, comm_policy=comm_policy,
+                    comm_chunks=comm_chunks, ulysses_chunks=ulysses_chunks)
     rules = ShardingRules(mesh, run) if mesh is not None else None
     if rules is not None:
-        # the overlap schedule every PK island will pick, before tracing
+        # the overlap schedule every PK island will pick, before tracing —
+        # hidden fractions/chunks are measured when a calibration table
+        # matches this machine (src=measured), predicted otherwise
+        print(f"[plan] comm_policy={run.comm_policy}")
         print(render_plans(island_plans(cfg, run, rules, batch=batch,
                                         seq=seq)))
 
@@ -96,13 +99,25 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--no-pk", action="store_true")
+    ap.add_argument("--comm-policy", default="analytic",
+                    choices=["analytic", "measured", "auto"],
+                    help="cost source for comm backend dispatch "
+                         "(measured needs a calibration table)")
+    ap.add_argument("--comm-chunks", type=int, default=None,
+                    help="force the ring GEMM-collective sub-chunk count "
+                         "(default: scheduler/measured table)")
+    ap.add_argument("--ulysses-chunks", type=int, default=1,
+                    help="a2a chunk count for the Ulysses attention island")
     args = ap.parse_args()
     build_and_train(args.arch, steps=args.steps, reduced=args.reduced,
                     mesh_shape=args.mesh_shape, mesh_axes=args.mesh_axes,
                     batch=args.batch, seq=args.seq, ckpt_dir=args.ckpt_dir,
                     lr=args.lr, microbatches=args.microbatches,
                     pk_overlap=not args.no_pk,
-                    compress_grads=args.compress_grads)
+                    compress_grads=args.compress_grads,
+                    comm_policy=args.comm_policy,
+                    comm_chunks=args.comm_chunks,
+                    ulysses_chunks=args.ulysses_chunks)
 
 
 if __name__ == "__main__":

@@ -195,15 +195,24 @@ def sp_attention_island(cfg: ArchConfig, run: RunConfig,
     dtb = _dtype_bytes(cfg)
     divisible = [(s, axis)] + ([(hq, axis)] if ulysses else [])
     if ulysses:
-        comm = Comm("all_to_all", n_chunks=1, backend="bulk",
-                    payload_bytes=b_loc * hq * s_loc * hd * dtb)
+        # RunConfig.ulysses_chunks reaches the paper-Fig. 11 chunked-a2a
+        # overlap: attention on early head chunks hides later chunks' a2a.
+        # The local payload shape lets plan() fit the count to the
+        # splittable bystander dims exactly like the runtime a2a will.
+        a2a_chunks = max(1, run.ulysses_chunks)
+        comm = Comm("all_to_all", n_chunks=a2a_chunks,
+                    backend="chunked" if a2a_chunks > 1 else "bulk",
+                    payload_bytes=b_loc * hq * s_loc * hd * dtb,
+                    shape=(b_loc, hq, s_loc, hd), split_axis=1,
+                    concat_axis=2)
     else:
         comm = Comm("ring_shift", backend="bulk", n_chunks=tp_size,
                     payload_bytes=2 * b_loc * hkv * s_loc * hd * dtb)
 
     def body(ctx, q, k, v):
+        kw = {"n_chunks": max(1, run.ulysses_chunks)} if ulysses else {}
         return fn(q, k, v, axis, causal=causal, window=cfg.sliding_window,
-                  ctx=ctx)
+                  ctx=ctx, **kw)
 
     return Island(f"attn_{run.sp_attention}", rules=rules, run=run,
                   inputs={"q": spec, "k": spec, "v": spec}, out_specs=spec,
@@ -762,29 +771,63 @@ def lm_logits(p, x, rules: ShardingRules | None):
 # Plan report: the whole forward pass's overlap schedule from one object
 # ---------------------------------------------------------------------------
 
+def _forward_islands(cfg: ArchConfig, run: RunConfig,
+                     rules: ShardingRules | None, *, batch: int = 8,
+                     seq: int = 128) -> list:
+    """Every PK island a forward pass (and a decode step) of this
+    (cfg, run, mesh) will build — the single island inventory behind both
+    ``island_plans`` and ``island_comm_sweeps``."""
+    b, s = batch, seq
+    pattern = cfg.layer_pattern()
+    v = cfg.padded_vocab(rules.mesh.shape[rules.tp] if rules else 16)
+    islands = [embed_island(run, rules, v, cfg.d_model, b)]
+    if any(sp.mixer == "attn" for sp in pattern):
+        if run.sp_attention != "none":
+            islands.append(
+                sp_attention_island(cfg, run, rules, b, s, causal=True))
+        islands.append(attn_out_island(cfg, run, rules, b, s))
+        islands.append(decode_island(cfg, run, rules, b, s, long_ctx=False,
+                                     pos=0, kv_len=1,
+                                     window=cfg.sliding_window))
+    if any(sp.mlp == "dense" for sp in pattern):
+        islands.append(mlp_island(cfg, run, rules, b, s))
+    if any(sp.mlp == "moe" for sp in pattern):
+        islands.append(moe_island(cfg, run, rules, b, s))
+    islands.append(lm_loss_island(run, rules, b, cfg.d_model, v))
+    return islands
+
+
 def island_plans(cfg: ArchConfig, run: RunConfig,
                  rules: ShardingRules | None, *, batch: int = 8,
                  seq: int = 128) -> list[IslandPlan]:
     """Trace-free overlap schedule for every PK island a forward pass (and a
     decode step) of this (cfg, run, mesh) will build: chosen backend, chunk
-    count, predicted hidden fraction — or the fallback reason. Launchers
-    print this via ``repro.core.template.render_plans``; the dry-run records
-    it in its JSON artifact."""
-    b, s = batch, seq
-    pattern = cfg.layer_pattern()
-    v = cfg.padded_vocab(rules.mesh.shape[rules.tp] if rules else 16)
-    plans = [embed_island(run, rules, v, cfg.d_model, b).plan()]
-    if any(sp.mixer == "attn" for sp in pattern):
-        if run.sp_attention != "none":
-            plans.append(
-                sp_attention_island(cfg, run, rules, b, s, causal=True).plan())
-        plans.append(attn_out_island(cfg, run, rules, b, s).plan())
-        plans.append(decode_island(cfg, run, rules, b, s, long_ctx=False,
-                                   pos=0, kv_len=1,
-                                   window=cfg.sliding_window).plan())
-    if any(sp.mlp == "dense" for sp in pattern):
-        plans.append(mlp_island(cfg, run, rules, b, s).plan())
-    if any(sp.mlp == "moe" for sp in pattern):
-        plans.append(moe_island(cfg, run, rules, b, s).plan())
-    plans.append(lm_loss_island(run, rules, b, cfg.d_model, v).plan())
-    return plans
+    count, hidden fraction (measured on a calibrated mesh, else predicted)
+    — or the fallback reason. Launchers print this via
+    ``repro.core.template.render_plans``; the dry-run records it in its JSON
+    artifact."""
+    return [i.plan() for i in _forward_islands(cfg, run, rules,
+                                               batch=batch, seq=seq)]
+
+
+def island_comm_sweeps(cfg: ArchConfig, run: RunConfig,
+                       rules: ShardingRules | None, *, batch: int = 8,
+                       seq: int = 128):
+    """Per-island calibration sweep specs (``autotune.IslandSweep``) for
+    every active GEMM-collective island of this forward pass — the driver
+    behind ``python -m repro.autotune calibrate --per-island``. Each spec
+    carries the exact (op, m, n, k, dtype) coordinates the island's
+    ``CommContext`` dispatch will query with, plus its island key."""
+    from repro.core.autotune import IslandSweep
+    from repro.core.comms import GEMM_OP_KIND
+    sweeps = []
+    for isl in _forward_islands(cfg, run, rules, batch=batch, seq=seq):
+        c = isl.comm
+        if c is None or c.op not in GEMM_OP_KIND:
+            continue
+        if isl.fallback_reason() is not None:
+            continue
+        sweeps.append(IslandSweep(island=isl.island_key, op=c.op,
+                                  m=c.m, n=c.n, k=c.k,
+                                  dtype_bytes=c.dtype_bytes))
+    return sweeps

@@ -10,12 +10,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Sequence
 
-import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchConfig, RunConfig
+from repro.configs.base import RunConfig
 
 
 def axes_size(mesh: Mesh, axes) -> int:

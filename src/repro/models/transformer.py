@@ -6,12 +6,10 @@ assigned families (dense, MoE, SSM, hybrid, enc-dec, VLM/audio-stub).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 

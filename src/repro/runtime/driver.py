@@ -8,11 +8,9 @@ it directly — all state that must survive a restart lives in the checkpoint
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.ckpt.manager import CheckpointManager
 from repro.runtime.straggler import StepTimer, StragglerWatchdog

@@ -8,7 +8,6 @@ through the logical layout on host (core/moe_layout.py).
 
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import numpy as np

@@ -5,7 +5,6 @@ compression hook, and the serve (decode) step used by the inference cells.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple
 
 import jax

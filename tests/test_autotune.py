@@ -14,7 +14,6 @@ import pytest
 sys.path.insert(0, str(Path(__file__).parent.parent))
 
 from repro.core import autotune
-from repro.core import costmodel as cm
 from repro.core.comms import CommContext
 
 N = 4
@@ -231,6 +230,114 @@ def test_measured_psum_dispatch(mesh4, table, monkeypatch):
     compat.shard_map(lambda v: ctx.psum(v[0])[None], mesh=mesh4,
                      in_specs=P("x"), out_specs=P("x"), check_vma=False)(x)
     assert calls, "measured policy did not route psum to the ring impl"
+
+
+# ---------------------------------------------------------------------------
+# Island-keyed dispatch (calibrate --per-island)
+# ---------------------------------------------------------------------------
+
+MLP_KEY = autotune.island_key("mlp", "matmul_all_reduce", 2)
+ATTN_KEY = autotune.island_key("attn_out", "matmul_all_reduce", 2)
+
+
+def _island_table(live):
+    """Global rows say bulk wins; mlp-island rows say ring wins; attn_out
+    rows agree with the global table — all at the same (m, n, k)."""
+    rows = _rows("matmul_all_reduce", {"bulk": 10.0, "ring": 100.0},
+                 256, 64, 16)
+    mlp = _rows("matmul_all_reduce", {"bulk": 100.0, "ring": 10.0},
+                256, 64, 16)
+    for r in mlp:
+        r["island"] = MLP_KEY
+    attn = _rows("matmul_all_reduce", {"bulk": 5.0, "ring": 500.0},
+                 256, 64, 16)
+    for r in attn:
+        r["island"] = ATTN_KEY
+    return _synthetic(live, rows + mlp + attn)
+
+
+def test_island_keyed_rows_beat_global(mesh4):
+    """Two islands with different layouts can resolve to different backends
+    at the SAME (m, n, k): each context prefers its own island's rows and
+    only falls back to the global grid when it has none."""
+    live = autotune.live_fingerprint("tpu_v5e", mesh4)
+    t = _island_table(live)
+    mk = dict(mesh=mesh4, policy="measured", calibration=t)
+    no_key = CommContext(axis_name="x", **mk)
+    mlp = CommContext(axis_name="x", island=MLP_KEY, **mk)
+    attn = CommContext(axis_name="x", island=ATTN_KEY, **mk)
+    other = CommContext(axis_name="x",
+                        island=autotune.island_key("decode", "psum", 4), **mk)
+    assert no_key.auto_gemm_backend("matmul_all_reduce", 256, 64, 16) == "bulk"
+    assert mlp.auto_gemm_backend("matmul_all_reduce", 256, 64, 16) == "ring"
+    assert attn.auto_gemm_backend("matmul_all_reduce", 256, 64, 16) == "bulk"
+    # an island with no rows of its own falls back to the global grid
+    assert other.auto_gemm_backend("matmul_all_reduce", 256, 64, 16) == "bulk"
+
+
+def test_island_rows_never_leak_across_islands(mesh4):
+    """An island whose key has rows must not see another island's rows as
+    evidence — only its own tier, then the global tier."""
+    live = autotune.live_fingerprint("tpu_v5e", mesh4)
+    mlp = _rows("matmul_all_reduce", {"bulk": 100.0, "ring": 10.0},
+                256, 64, 16)
+    for r in mlp:
+        r["island"] = MLP_KEY
+    t = _synthetic(live, mlp)           # island rows ONLY, no global tier
+    attn = CommContext(axis_name="x", mesh=mesh4, policy="measured",
+                       calibration=t, island=ATTN_KEY)
+    # attn_out has no rows and there is no global tier -> analytic fallback
+    # (tiny GEMM -> bulk)
+    assert attn.auto_gemm_backend("matmul_all_reduce", 256, 64, 16) == "bulk"
+    assert t.best_backend("matmul_all_reduce", 256, 64, 16,
+                          allowed=("bulk", "ring"), axis_size=N,
+                          island=ATTN_KEY) is None
+
+
+def test_best_chunks_measured(mesh4):
+    """best_chunks returns the argmin-us chunk count at the nearest point
+    with >= 2 distinct measured counts; one count is not a comparison."""
+    live = autotune.live_fingerprint("tpu_v5e", mesh4)
+    rows = []
+    for c, us in ((1, 100.0), (2, 40.0), (4, 60.0)):
+        rows.append({"op": "matmul_reduce_scatter", "backend": "ring",
+                     "axis_size": N, "m": 256, "n": 64, "k": 16,
+                     "n_chunks": c, "us": us})
+    t = _synthetic(live, rows)
+    assert t.best_chunks("matmul_reduce_scatter", "ring", 256, 64, 16,
+                         axis_size=N) == 2
+    one = _synthetic(live, rows[:1])
+    assert one.best_chunks("matmul_reduce_scatter", "ring", 256, 64, 16,
+                           axis_size=N) is None
+    # the measured count feeds the context's chunk resolution
+    ctx = CommContext(axis_name="x", mesh=mesh4, policy="measured",
+                      calibration=t)
+    sched = ctx.gemm_chunk_schedule("matmul_reduce_scatter", 256, 64, 16,
+                                    backend="ring")
+    assert sched.n_chunks == 2 and sched.source == "measured"
+
+
+def test_per_island_calibrate_sweeps_and_dispatches(mesh4):
+    """calibrate(islands=...) measures backend x chunk rows tagged with the
+    island key at the island's exact coordinates, and a context carrying
+    that key dispatches from them."""
+    sweeps = (autotune.IslandSweep(island=MLP_KEY, op="matmul_all_reduce",
+                                   m=8 * N, n=16, k=8),)
+    table = autotune.calibrate(mesh=mesh4, grid="tiny", reps=1,
+                               islands=sweeps)
+    tagged = [r for r in table.measurements if r.get("island") == MLP_KEY]
+    assert {r["backend"] for r in tagged} >= {"bulk", "ring"}
+    assert {r["n_chunks"] for r in tagged if r["backend"] == "ring"} \
+        == set(autotune.ISLAND_CHUNK_SWEEP)
+    assert all((r["m"], r["n"], r["k"]) == (8 * N, 16, 8) for r in tagged)
+    ctx = CommContext(axis_name="x", mesh=mesh4, policy="measured",
+                      calibration=table, island=MLP_KEY)
+    # island rows cover >= 2 backends at the exact coordinates: the measured
+    # argmin (whichever side won on this machine) decides, not the analytic
+    # small-GEMM heuristic
+    best = min(((r["backend"], r["us"]) for r in tagged),
+               key=lambda be_us: be_us[1])[0]
+    assert ctx.auto_gemm_backend("matmul_all_reduce", 8 * N, 16, 8) == best
 
 
 # ---------------------------------------------------------------------------

@@ -169,10 +169,26 @@ def test_shape_guard_pinned_vs_explicit(sm, mesh4):
     ctx = CommContext(axis_name="x", mesh=mesh4)
     with pytest.raises(ValueError, match="divisible by the axis size"):
         ctx.matmul_all_reduce(x, w, backend="ring")
-    with pytest.raises(ValueError, match="even local row"):
+    # a single local row cannot split across the two ring directions
+    with pytest.raises(ValueError, match="at least 2 local rows"):
         ctx.all_gather_matmul(jax.random.normal(jax.random.PRNGKey(2),
-                                                (3, 8)),
+                                                (1, 8)),
                               jnp.ones((8, 8)), backend="ring_bidir")
+
+
+def test_bidir_odd_m_loc_is_legal(sm, ctx):
+    """An odd local row count used to be rejected by the full-shard parity
+    guard ("even local row count"); the chunk-pipelined ring validates the
+    chunked sub-shape instead and splits the shard unevenly (ceil right,
+    floor left), so the config is legal — and exact."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (3 * N, 8))   # m_loc = 3
+    w = jax.random.normal(jax.random.PRNGKey(1), (8, 6))
+    got = _run(sm, partial(ctx.all_gather_matmul, backend="ring_bidir"),
+               (P("x"), P()), P(), x, w)
+    np.testing.assert_allclose(got, np.asarray(x @ w), rtol=1e-4, atol=1e-4)
+    # ...and the policy may now consider bidir for odd local rows
+    assert ctx.auto_gemm_backend("all_gather_matmul", BIG + 4, BIG, BIG) \
+        in ("ring", "ring_bidir")
 
 
 # ---------------------------------------------------------------------------
@@ -207,6 +223,84 @@ def test_gemm_ops_backend_equivalence(sm, ctx):
                        *args)
             np.testing.assert_allclose(got, np.asarray(want), rtol=1e-4,
                                        atol=1e-4, err_msg=f"{op}/{be}")
+
+
+@pytest.mark.parametrize("nc", [1, 2, 4, 3])    # 3: non-divisible fallback
+def test_gemm_ops_chunked_equivalence(sm, ctx, nc):
+    """The chunk-pipelined ring schedules are bit-compatible with the dense
+    reference for every chunk count and both chunk dims — including counts
+    that do not divide the chunked sub-shape (fitted to a divisor) and the
+    bidirectional multi-chunk-per-step variant."""
+    x_ag = jax.random.normal(jax.random.PRNGKey(0), (8 * N, 16))
+    w_ag = jax.random.normal(jax.random.PRNGKey(1), (16, 12))
+    x_rs = jax.random.normal(jax.random.PRNGKey(2), (16, 8 * N))
+    w_rs = jax.random.normal(jax.random.PRNGKey(3), (8 * N, 12))
+
+    cases = {
+        ("all_gather_matmul", "ring"): (
+            ctx.all_gather_matmul, (x_ag, w_ag), (P("x"), P()), P(),
+            x_ag @ w_ag),
+        ("all_gather_matmul", "ring_bidir"): (
+            ctx.all_gather_matmul, (x_ag, w_ag), (P("x"), P()), P(),
+            x_ag @ w_ag),
+        ("matmul_reduce_scatter", "ring"): (
+            ctx.matmul_reduce_scatter, (x_rs, w_rs),
+            (P(None, "x"), P("x", None)), P("x", None), x_rs @ w_rs),
+        ("matmul_all_reduce", "ring"): (
+            ctx.matmul_all_reduce, (x_rs, w_rs),
+            (P(None, "x"), P("x", None)), P(), x_rs @ w_rs),
+    }
+    for (op, be), (meth, args, in_specs, out_specs, want) in cases.items():
+        for dim in ("m", "n"):
+            got = _run(sm, partial(meth, backend=be, n_chunks=nc,
+                                   chunk_dim=dim), in_specs, out_specs,
+                       *args)
+            np.testing.assert_allclose(got, np.asarray(want), rtol=1e-4,
+                                       atol=1e-4,
+                                       err_msg=f"{op}/{be}/c={nc}/{dim}")
+
+
+def test_chunk_schedule_resolution(ctx, mesh4):
+    """gemm_chunk_schedule precedence: explicit kwarg > context chunks= >
+    analytic scheduler; bulk takes no sub-chunks."""
+    s = ctx.gemm_chunk_schedule("matmul_all_reduce", BIG, BIG, BIG,
+                                backend="ring", n_chunks=4)
+    assert s.n_chunks == 4 and s.source == "explicit"
+    pinned = CommContext(axis_name="x", mesh=mesh4, chunks=2)
+    s = pinned.gemm_chunk_schedule("matmul_all_reduce", BIG, BIG, BIG,
+                                   backend="ring")
+    assert s.n_chunks == 2 and s.source == "explicit"
+    s = ctx.gemm_chunk_schedule("matmul_all_reduce", BIG, BIG, BIG,
+                                backend="bulk", n_chunks=8)
+    assert s.n_chunks == 1
+    s = ctx.gemm_chunk_schedule("matmul_all_reduce", BIG, BIG, BIG,
+                                backend="ring")
+    assert s.source == "analytic" and s.n_chunks >= 1
+    assert s.chunk_dim == "m"
+
+
+def test_fit_chunks_fallback():
+    from repro.core.schedule import fit_chunks
+    assert fit_chunks(8, 3) == 2        # largest divisor <= request
+    assert fit_chunks(7, 4) == 1
+    assert fit_chunks(8, 16) == 8       # clamped to the extent
+    assert fit_chunks(0, 4) == 1
+
+
+def test_a2a_chunk_policy_validates_sub_shape():
+    """choose_a2a_chunks with shape= fits the count to what the bystander
+    dims can actually split — a payload whose dims cannot divide the naive
+    count no longer silently bulks the whole transfer."""
+    from repro.core.schedule import a2a_chunk_axis, choose_a2a_chunks
+    big = 2 ** 28
+    # dim 3 (size 6) cannot split by 8 but can by 3
+    assert a2a_chunk_axis((1, 4, 8, 6), 1, 2, 8) == (3, 6)
+    c = choose_a2a_chunks(big, axis_size=N, downstream_compute_s=1e-3,
+                          shape=(1, 4, 8, 6), split_axis=1, concat_axis=2)
+    assert c > 1 and 6 % c == 0
+    # no bystander dim at all -> bulk
+    assert choose_a2a_chunks(big, axis_size=N, downstream_compute_s=1e-3,
+                             shape=(4, 8), split_axis=0, concat_axis=1) == 1
 
 
 def test_all_to_all_backend_equivalence(sm, ctx):

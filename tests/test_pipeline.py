@@ -1,6 +1,5 @@
 """GPipe pipeline parallelism: schedule correctness + gradients."""
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

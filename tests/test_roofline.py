@@ -1,6 +1,5 @@
 """Roofline machinery: HLO collective parsing and term construction."""
 
-import numpy as np
 
 from repro.core.costmodel import TPU_V5E
 from repro.roofline.hlo import collective_bytes

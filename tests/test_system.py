@@ -2,10 +2,7 @@
 mesh with all substrates active (PK overlap, FSDP, checkpointing)."""
 
 import numpy as np
-import pytest
 
-import jax
-import jax.numpy as jnp
 
 
 def test_end_to_end_train_on_mesh(tmp_path):

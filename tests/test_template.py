@@ -284,6 +284,133 @@ def test_collectives_stub_preserves_attribute_protocol():
         stub.pk_psum_ring
 
 
+def test_plan_measured_per_island_dispatch(mesh22, tmp_path):
+    """Acceptance: on a calibrated mesh, plan() reports MEASURED hidden
+    fraction and chunk count for the MLP and attention out-projection
+    islands — and island-keyed rows let the two resolve to different
+    backends at the SAME (m, n, k)."""
+    from repro.core import autotune
+
+    # d_ff == n_heads*head_dim so both islands' GEMM+AR land on the same
+    # (m, n, k) = (b_loc*s, d, 32) coordinates with tp=2
+    cfg = dataclasses.replace(get_config("tinyllama-1.1b").reduced(),
+                              d_ff=64)
+    b, s = 4, 8
+    m, n, k = 16, 64, 32                   # b_loc=2 -> m=16; k=64/2
+    live = autotune.live_fingerprint("tpu_v5e", mesh22)
+    mlp_key = autotune.island_key("mlp", "matmul_all_reduce", 2)
+    attn_key = autotune.island_key("attn_out", "matmul_all_reduce", 2)
+
+    def rows(key, us_by_backend, n_chunks=1):
+        return [{"op": "matmul_all_reduce", "backend": be, "axis_size": 2,
+                 "m": m, "n": n, "k": k, "dtype_bytes": 2,
+                 "n_chunks": n_chunks, "island": key, "us": us}
+                for be, us in us_by_backend.items()]
+
+    table = autotune.CalibrationTable(
+        fingerprint=live,
+        corrections={"ici_bandwidth": 1e8, "remote_sync_s": 1e-6,
+                     "gemm_efficiency": 1e-4, "kernel_launch_s": 1e-6},
+        measurements=(rows(mlp_key, {"bulk": 100.0, "ring": 10.0})
+                      + rows(mlp_key, {"ring": 4.0}, n_chunks=2)
+                      + rows(attn_key, {"bulk": 5.0, "ring": 500.0})))
+    path = table.save(tmp_path / "island-cal.json")
+    autotune.clear_caches()
+
+    run = RunConfig(dp_axes=("data",), fsdp=False, pk_attn_out_island=True,
+                    comm_policy="measured", calibration_path=str(path))
+    rules = ShardingRules(mesh22, run)
+    mlp = L.mlp_island(cfg, run, rules, b, s).plan()
+    attn = L.attn_out_island(cfg, run, rules, b, s).plan()
+
+    # same shape, different measured outcome per island
+    assert mlp.backend == "ring"
+    assert attn.backend == "bulk"
+    assert mlp.source == "measured" and attn.source == "measured"
+    # measured chunk count: ring@2 chunks (4us) beat ring@1 (10us) ->
+    # 2 ring steps x 2 sub-chunks
+    assert mlp.n_chunks == 4
+    # measured hidden fraction: (100 - 4) us saved vs the priced t_comm,
+    # clamped to 1.0 — NOT the analytic prediction
+    assert mlp.hidden_fraction == pytest.approx(1.0)
+    assert attn.hidden_fraction == 0.0      # bulk, by measurement
+    autotune.clear_caches()
+
+
+def test_plan_analytic_without_table(mesh22, tmp_path, monkeypatch):
+    """No calibration anywhere -> the plan stays an honest prediction."""
+    from repro.core import autotune
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "empty"))
+    monkeypatch.setattr(autotune, "_SEED_DIR", tmp_path / "no-seeds")
+    autotune.clear_caches()
+    cfg = get_config("tinyllama-1.1b").reduced()
+    run = RunConfig(dp_axes=("data",), fsdp=False, comm_policy="auto")
+    rules = ShardingRules(mesh22, run)
+    plan = L.mlp_island(cfg, run, rules, 4, 64).plan()
+    assert plan.source == "analytic"
+    autotune.clear_caches()
+
+
+def test_ulysses_chunks_knob_reaches_island(mesh22):
+    """RunConfig.ulysses_chunks threads through sp_attention_island: the
+    declared Comm reports the chunked a2a and the island still matches the
+    dense reference numerically."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    run = RunConfig(dp_axes=("data",), fsdp=False, sp_attention="ulysses",
+                    ulysses_chunks=2)
+    rules = ShardingRules(mesh22, run)
+    plans = {p.island: p for p in
+             L.island_plans(cfg, run, rules, batch=4, seq=64)}
+    ul = plans["attn_ulysses"]
+    assert ul.op == "all_to_all"
+    assert ul.backend == "chunked" and ul.n_chunks == 2
+
+    # numerics: chunked a2a attention == the dense reference
+    b, s, hq, hkv, hd = 2, 16, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, hq, s, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, hkv, s, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, hkv, s, hd))
+
+    def reference(q, k, v):
+        return L._full_attention(q, k, v, causal=True, window=None)
+
+    island = L.sp_attention_island(cfg, run, rules, b, s, causal=True,
+                                   reference=reference)
+    assert island.fallback_reason() is None
+    got = island(q=q, k=k, v=v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(reference(q, k, v)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_comm_n_chunks_reaches_runtime_context(mesh4):
+    """A declared Comm.n_chunks must be the schedule the BODY runs, not just
+    what plan() reports: make_context() threads it as the context's chunk
+    default (RunConfig.comm_chunks, the global A/B knob, still wins)."""
+    comm = Comm("matmul_all_reduce", m=4096, n=4096, k=4096, n_chunks=4)
+    island = Island("declared", mesh=mesh4, axis="x", inputs={"x": P()},
+                    out_specs=P(), body=lambda ctx, x: x, comm=comm)
+    ctx = island.make_context()
+    assert ctx.chunks == 4
+    sched = ctx.gemm_chunk_schedule("matmul_all_reduce", 4096, 4096, 4096,
+                                    backend="ring")
+    assert sched.n_chunks == 4 and sched.source == "explicit"
+    # plan() reports the same schedule (ring steps x declared sub-chunks)
+    plan = island.plan()
+    if plan.backend in ("ring", "ring_bidir"):
+        assert plan.n_chunks == island.axis_size * 4
+    # the global force beats the declaration
+    run = RunConfig(comm_chunks=2)
+    forced = Island("forced", mesh=mesh4, axis="x", run=run,
+                    inputs={"x": P()}, out_specs=P(),
+                    body=lambda ctx, x: x, comm=comm)
+    assert forced.make_context().chunks == 2
+    # non-GEMM Comm declarations never leak into the GEMM chunk default
+    a2a = Island("a2a", mesh=mesh4, axis="x", inputs={"x": P()},
+                 out_specs=P(), body=lambda ctx, x: x,
+                 comm=Comm("all_to_all", n_chunks=8, payload_bytes=1.0))
+    assert a2a.make_context().chunks is None
+
+
 def test_mlp_plan_respects_backend_pin(mesh22):
     cfg = get_config("tinyllama-1.1b").reduced()
     run = RunConfig(dp_axes=("data",), fsdp=False, comm_backend="ring")
