@@ -1,7 +1,8 @@
 # Developer entry points. `make test` is the tier-1 gate from ROADMAP.md.
 PY ?= python
 
-.PHONY: test test-full lint bench bench-baseline calibrate quickstart deps
+.PHONY: test test-full lint bench bench-baseline calibrate quickstart deps \
+        serve-smoke
 
 deps:
 	$(PY) -m pip install -r requirements.txt
@@ -29,6 +30,13 @@ bench-baseline:     # accept the current numbers as the new checked-in baseline
 
 calibrate:          # measure this machine into the autotune cache
 	PYTHONPATH=src $(PY) -m repro.autotune calibrate
+
+serve-smoke:        # continuous-batching engine over a tiny synthetic trace
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+	    $(PY) -m repro.launch.serve --arch tinyllama-1.1b --reduced \
+	    --mode continuous --mesh-shape 1 8 --requests 6 --tokens 4 \
+	    --max-batch 4 --prefill-batch 2 --bucket-edges 8 16 \
+	    --comm-policy auto
 
 quickstart:
 	PYTHONPATH=src $(PY) examples/quickstart.py

@@ -83,7 +83,8 @@ class Recorder:
 
     def add(self, name: str, us: float, derived: str,
             predicted_us: float | None,
-            island: str | None = None) -> None:
+            island: str | None = None,
+            tokens_per_s: float | None = None) -> None:
         err = None
         if predicted_us is not None and us > 0:
             err = (predicted_us - us) / us
@@ -92,7 +93,7 @@ class Recorder:
         self._cur["rows"].append({
             "name": name, "us_per_call": us, "derived": derived,
             "predicted_us": predicted_us, "pred_err": err,
-            "island": island,
+            "island": island, "tokens_per_s": tokens_per_s,
         })
 
     def report(self) -> dict:
@@ -121,14 +122,17 @@ RECORDER = Recorder()
 
 
 def row(name: str, us: float, derived: str = "",
-        predicted_us: float | None = None, island: str | None = None):
+        predicted_us: float | None = None, island: str | None = None,
+        tokens_per_s: float | None = None):
     """One measurement: prints the CSV row and records it for the JSON
     artifact. ``predicted_us`` is the §3.1.1 cost-model prediction for the
     same configuration (on ``pred_hw()``) when the bench can supply one;
     ``island`` tags rows that belong to one island's calibration key
-    (``repro.core.autotune.island_key``)."""
+    (``repro.core.autotune.island_key``); ``tokens_per_s`` carries serving
+    throughput (fig_serving) so the regression gate sees it as data, not
+    just a derived string."""
     print(f"{RECORDER.current_figure},{name},{us:.1f},{derived}")
-    RECORDER.add(name, us, derived, predicted_us, island)
+    RECORDER.add(name, us, derived, predicted_us, island, tokens_per_s)
 
 
 def _pred_table():

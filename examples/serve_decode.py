@@ -1,5 +1,6 @@
-"""Batched serving example: prefill-free decode loop with a sharded KV cache
-(flash-decode logsumexp merge over the model axis) on 8 emulated devices.
+"""Batched serving example: cache-building prefill + decode loop with a
+sharded KV cache (flash-decode logsumexp merge over the model axis) on 8
+emulated devices, through the continuous-batching engine's static path.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/serve_decode.py

@@ -77,6 +77,10 @@ def validate_schema(doc) -> list[str]:
             if isl is not None and not isinstance(isl, str):
                 errors.append(f"{where}.rows[{j}].island must be a string "
                               "or null")
+            tps = r.get("tokens_per_s")
+            if tps is not None and not isinstance(tps, (int, float)):
+                errors.append(f"{where}.rows[{j}].tokens_per_s must be "
+                              "numeric or null")
     return errors
 
 

@@ -21,3 +21,13 @@ if [ "${REPRO_BENCH:-1}" != "0" ]; then
              "run 'make bench' for details)" >&2
     fi
 fi
+
+# Stage 3 (non-blocking): the continuous-batching serving engine over a
+# tiny synthetic trace (`make serve-smoke`) — catches engine/CLI breakage
+# the unit suite might miss. Skip with REPRO_SERVE=0.
+if [ "${REPRO_SERVE:-1}" != "0" ]; then
+    if ! make serve-smoke; then
+        echo "WARNING: serve-smoke stage failed (non-blocking; run" \
+             "'make serve-smoke' for details)" >&2
+    fi
+fi

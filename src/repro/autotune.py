@@ -85,14 +85,18 @@ def _island_sweeps(args):
         cfg = cfg.reduced()
     mesh = make_mesh((1, len(jax.devices())), ("data", "model"))
     # enable every GEMM island so each one gets measured rows; a run that
-    # keeps attn_out dense simply never queries its key
-    run = RunConfig(dp_axes=("data",), fsdp=False, pk_attn_out_island=True)
+    # keeps attn_out dense simply never queries its key. --sp-attention
+    # ulysses additionally sweeps the a2a re-sharding island; --phase
+    # prefill|decode sweeps one serving bucket's inventory at its exact
+    # coordinates (the serving engine's per-bucket dispatch rows).
+    run = RunConfig(dp_axes=("data",), fsdp=False, pk_attn_out_island=True,
+                    sp_attention=args.sp_attention)
     rules = ShardingRules(mesh, run)
     sweeps = island_comm_sweeps(cfg, run, rules, batch=args.batch,
-                                seq=args.seq)
+                                seq=args.seq, phase=args.phase)
     if not sweeps:
-        print("warning: --per-island found no active GEMM-collective "
-              f"islands for {cfg.name} on this mesh", file=sys.stderr)
+        print("warning: --per-island found no active comm islands "
+              f"for {cfg.name} on this mesh", file=sys.stderr)
     return sweeps
 
 
@@ -202,6 +206,15 @@ def main(argv=None) -> int:
                    help="--per-island global batch")
     p.add_argument("--seq", type=int, default=128,
                    help="--per-island sequence length")
+    p.add_argument("--sp-attention", default="ring",
+                   choices=["ring", "ulysses", "none"],
+                   help="--per-island: attention SP mode (ulysses adds the "
+                        "a2a re-sharding island to the sweep)")
+    p.add_argument("--phase", default="all",
+                   choices=["all", "prefill", "decode"],
+                   help="--per-island: sweep one serving bucket's island "
+                        "inventory (prefill: full-seq shapes at --seq; "
+                        "decode: one-token shapes)")
     p.set_defaults(fn=cmd_calibrate)
 
     p = sub.add_parser("show", help="print a table (default: the resolved one)")

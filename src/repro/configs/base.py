@@ -244,11 +244,16 @@ class RunConfig:
                                              # user cache then in-repo seeds
     sp_attention: Literal["ring", "ulysses", "none"] = "ring"
     moe_strategy: Literal["replicated", "a2a"] = "replicated"
-    moe_chunks: int = 1
+    moe_chunks: int = 1                      # MoE dispatch/combine chunks;
+                                             # 0 = auto (measured a2a island
+                                             # rows first, analytic policy
+                                             # otherwise)
     ulysses_chunks: int = 1                  # a2a chunk count for the Ulysses
                                              # island (paper Fig. 11: attention
                                              # on early head chunks overlaps
-                                             # later chunks' transfer)
+                                             # later chunks' transfer);
+                                             # 0 = auto (plan override >
+                                             # measured a2a rows > analytic)
     comm_chunks: int | None = None           # force the sub-chunk count of
                                              # every chunk-pipelined ring
                                              # GEMM×collective (None = per-call
@@ -282,3 +287,69 @@ class RunConfig:
     serve_moe_tp_data: bool = False          # resident 2D-TP expert weights
                                              # (ff over dp as TP, not FSDP):
                                              # no per-token weight gathers
+    # per-island plan overrides: frozen ((island_name, backend, chunks), ...)
+    # entries produced by core.template.plan_overrides() from resolved
+    # Island.plan() reports. The serving engine evaluates island_plans() per
+    # shape bucket at startup and threads the chosen backend / sub-chunk
+    # count back into each bucket's CommContext through this field, so the
+    # decode bucket can run a different schedule than the prefill bucket.
+    # () = no overrides (policy dispatch, the default everywhere else).
+    island_overrides: tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Continuous-batching serving knobs (runtime/serving.py engine).
+
+    ``bucket_edges`` are the padded prompt lengths the engine jits prefill
+    steps for: a request is admitted into the smallest bucket >= its prompt
+    length (strictly increasing edges). ``max_batch`` is the decode pool
+    size (slots); ``prefill_batch`` the fixed prefill group size (groups are
+    padded with inert slots so every bucket compiles exactly one program).
+    ``queue_policy``:
+
+    * ``"fcfs"`` — admit the queue head's bucket, taking only the contiguous
+      prefix of same-bucket requests behind it (strict arrival order);
+    * ``"bucket-greedy"`` — scan the whole queue for requests in the head's
+      bucket to fill the group (better bucket occupancy, may reorder).
+
+    ``exact_buckets`` disables padding (each distinct prompt length is its
+    own bucket) — required for SSM/hybrid architectures, whose recurrent
+    state cannot mask right-padding the way attention masks stale cache.
+    """
+
+    max_batch: int = 8
+    prefill_batch: int = 4
+    bucket_edges: tuple[int, ...] = (16, 32, 64)
+    max_new_tokens: int = 16
+    queue_policy: Literal["fcfs", "bucket-greedy"] = "fcfs"
+    exact_buckets: bool = False
+
+    def __post_init__(self):
+        if not self.bucket_edges or \
+                list(self.bucket_edges) != sorted(set(self.bucket_edges)):
+            raise ValueError(
+                f"bucket_edges must be strictly increasing, got "
+                f"{self.bucket_edges}")
+        if self.prefill_batch > self.max_batch:
+            raise ValueError("prefill_batch cannot exceed max_batch")
+
+    @property
+    def s_max(self) -> int:
+        """Cache length every bucket shares: worst prompt + generation."""
+        return self.bucket_edges[-1] + self.max_new_tokens
+
+    def bucket_for(self, prompt_len: int) -> int:
+        """Padded length of the bucket admitting a prompt of this length."""
+        if self.exact_buckets:
+            if prompt_len > self.bucket_edges[-1]:
+                raise ValueError(
+                    f"prompt length {prompt_len} exceeds the largest bucket "
+                    f"edge {self.bucket_edges[-1]}")
+            return prompt_len
+        for edge in self.bucket_edges:
+            if prompt_len <= edge:
+                return edge
+        raise ValueError(
+            f"prompt length {prompt_len} exceeds the largest bucket edge "
+            f"{self.bucket_edges[-1]}")

@@ -69,14 +69,24 @@ def island_key(name: str, op: str, dtype_bytes: int = 2) -> str:
 class IslandSweep:
     """One island's coordinates for the ``calibrate(islands=...)`` sweep:
     the exact (op, m, n, k, dtype) its ``CommContext`` dispatch queries
-    with, plus the key the measured rows are tagged with."""
+    with, plus the key the measured rows are tagged with.
+
+    GEMM×collective islands carry the global GEMM (m, n, k). ``all_to_all``
+    islands (Ulysses re-sharding, MoE dispatch) additionally carry the local
+    payload ``shape`` and split/concat axes; their (m, n, k) follow the
+    ``CommContext.a2a_coords`` convention (payload elements, split extent,
+    concat extent) so the sweep's rows land exactly where the a2a chunk
+    policy queries."""
 
     island: str            # island_key(...) the rows carry
-    op: str                # a GEMM_OPS member
+    op: str                # a GEMM_OPS member or "all_to_all"
     m: int
     n: int
     k: int
     dtype_bytes: int = 2
+    shape: tuple[int, ...] | None = None    # a2a local payload shape
+    split_axis: int | None = None
+    concat_axis: int | None = None
 
 #: ops the calibrator sweeps; mirrors comms.OP_BACKENDS keys it can measure.
 GEMM_OPS = ("all_gather_matmul", "matmul_reduce_scatter", "matmul_all_reduce")
@@ -688,6 +698,62 @@ def _sweep_gemm_ops(ctx, mesh, axis_name: str, sizes: Sequence[int],
 ISLAND_CHUNK_SWEEP = (1, 2, 4)
 
 
+def _sweep_a2a_island(ctx, mesh, axis_name: str, sw: IslandSweep,
+                      reps: int, log) -> list[dict]:
+    """Measure bulk vs chunked all-to-all at one island's exact payload
+    shape, tagging rows with its key — the a2a analogue of the GEMM island
+    sweep. Rows are stored under the ``CommContext.a2a_coords`` (m, n, k)
+    so ``a2a_chunk_schedule`` finds them."""
+    import jax
+    import jax.numpy as jnp
+    from functools import partial
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.core.schedule import a2a_chunk_axis
+
+    n_dev = mesh.shape[axis_name]
+    shape = tuple(sw.shape)
+    sa, ca = sw.split_axis, sw.concat_axis
+    if shape[sa] % n_dev != 0:
+        log(f"  island {sw.island}: a2a split dim {shape[sa]} not divisible "
+            f"by {n_dev}-device axis, skipped")
+        return []
+    dtype = jnp.bfloat16 if sw.dtype_bytes == 2 else jnp.float32
+    gshape = list(shape)
+    gshape[ca] *= n_dev                     # concat dim sharded on input
+    x = jax.random.normal(jax.random.PRNGKey(0), tuple(gshape), dtype)
+    in_specs = P(*[axis_name if d == ca else None for d in range(len(shape))])
+    out_specs = P(*[axis_name if d == sa else None for d in range(len(shape))])
+    cases = [("bulk", 1)]
+    seen = {1}
+    for c in ISLAND_CHUNK_SWEEP[1:]:
+        fit = a2a_chunk_axis(shape, sa, ca, c)
+        if fit is None or fit[1] in seen:
+            continue
+        seen.add(fit[1])
+        cases.append(("chunked", fit[1]))
+    rows: list[dict] = []
+    for be, c in cases:
+        fn = jax.jit(compat.shard_map(
+            partial(ctx.all_to_all, split_axis=sa, concat_axis=ca,
+                    backend=be, n_chunks=c),
+            mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False))
+        try:
+            t = _timeit(fn, x, reps=reps)
+        except Exception as e:  # noqa: BLE001 — skip, don't abort
+            log(f"  {sw.island}/{be}/c={c}: SKIPPED ({type(e).__name__})")
+            continue
+        rows.append({"op": "all_to_all", "backend": be, "axis_size": n_dev,
+                     "m": sw.m, "n": sw.n, "k": sw.k,
+                     "dtype_bytes": sw.dtype_bytes, "n_chunks": c,
+                     "island": sw.island, "us": t * 1e6})
+        log(f"  {sw.island}/{be}/c={c}: {t * 1e6:.1f} us")
+    return rows
+
+
 def _sweep_islands(ctx, mesh, axis_name: str, sweeps: Sequence[IslandSweep],
                    reps: int, log) -> list[dict]:
     """Measure every feasible backend × chunk count at each island's exact
@@ -705,6 +771,9 @@ def _sweep_islands(ctx, mesh, axis_name: str, sweeps: Sequence[IslandSweep],
     n_dev = mesh.shape[axis_name]
     rows: list[dict] = []
     for sw in sweeps:
+        if sw.op == "all_to_all" and sw.shape is not None:
+            rows += _sweep_a2a_island(ctx, mesh, axis_name, sw, reps, log)
+            continue
         if sw.op not in GEMM_OPS:
             log(f"  island {sw.island}: op {sw.op} not sweepable, skipped")
             continue

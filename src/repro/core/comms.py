@@ -102,6 +102,7 @@ the island body.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any
 
 import jax
@@ -446,6 +447,64 @@ class CommContext:
                                    hw=self.effective_hw())
         return sched if chunk_dim is None else dataclasses.replace(
             sched, chunk_dim=chunk_dim)
+
+    @staticmethod
+    def a2a_coords(shape, split_axis: int, concat_axis: int
+                   ) -> tuple[int, int, int]:
+        """The (m, n, k) lookup coordinates an ``all_to_all`` calibration
+        row is stored/queried under: (local payload elements, split-dim
+        extent, concat-dim extent). One convention shared by the per-island
+        calibration sweep and every dispatch query, the same way the GEMM
+        rows share ``auto_gemm_backend``'s coordinates — rows stored in any
+        other system would never be found."""
+        return (int(math.prod(shape)), int(shape[split_axis]),
+                int(shape[concat_axis]))
+
+    def a2a_chunk_schedule(self, shape, split_axis: int, concat_axis: int, *,
+                           dtype_bytes: int = 2,
+                           downstream_compute_s: float = 0.0
+                           ) -> ChunkSchedule:
+        """Chunk count for an ``all_to_all`` of local payload ``shape``.
+
+        Measured-first: when the calibration table carries a2a rows near
+        :meth:`a2a_coords` (``calibrate --per-island`` sweeps the Ulysses /
+        MoE dispatch islands; island-keyed rows preferred), the bulk-vs-
+        chunked decision and the chunk count are the measured argmin;
+        otherwise the analytic ``schedule.choose_a2a_chunks`` policy
+        answers. The count is always fitted to the payload's splittable
+        bystander dims, exactly like ``pk_all_to_all`` will."""
+        m, n, k = self.a2a_coords(shape, split_axis, concat_axis)
+        table = self.active_calibration()
+        if table is not None:
+            be = table.best_backend("all_to_all", m, n, k,
+                                    allowed=("bulk", "chunked"),
+                                    axis_size=self.axis_size,
+                                    dtype_bytes=dtype_bytes,
+                                    island=self.island)
+            if be == "bulk":
+                return ChunkSchedule(1, "a2a", "measured: bulk a2a wins",
+                                     source="measured")
+            if be == "chunked":
+                c = table.best_chunks("all_to_all", "chunked", m, n, k,
+                                      axis_size=self.axis_size,
+                                      dtype_bytes=dtype_bytes,
+                                      island=self.island)
+                c = c if c is not None else 2
+                fit = a2a_chunk_axis(shape, split_axis, concat_axis, c)
+                if fit is not None and fit[1] > 1:
+                    return ChunkSchedule(fit[1], "a2a",
+                                         "measured chunk sweep argmin",
+                                         source="measured")
+                return ChunkSchedule(1, "a2a",
+                                     "measured chunked win, but no "
+                                     "bystander dim splits", source="measured")
+        c = choose_a2a_chunks(
+            math.prod(shape) * dtype_bytes, axis_size=self.axis_size,
+            downstream_compute_s=downstream_compute_s,
+            hw=self.effective_hw(), shape=shape, split_axis=split_axis,
+            concat_axis=concat_axis)
+        return ChunkSchedule(c, "a2a",
+                             f"choose_a2a_chunks -> {c}", source="analytic")
 
     # -- GEMM × collective ops --------------------------------------------
 

@@ -67,7 +67,8 @@ from repro.core.comms import GEMM_OP_KIND, OP_BACKENDS, CommContext
 from repro.core.schedule import a2a_chunk_axis, choose_a2a_chunks
 
 __all__ = ["Island", "Gather", "Comm", "IslandPlan", "comm_context",
-           "maybe_allgather", "render_plans"]
+           "maybe_allgather", "render_plans", "plan_overrides",
+           "island_override"]
 
 
 def _axes_size(mesh, axes) -> int:
@@ -138,6 +139,10 @@ class Comm:
     shape: tuple[int, ...] | None = None
     split_axis: int | None = None
     concat_axis: int | None = None
+    #: where a declared n_chunks/backend came from ("measured" when the
+    #: builder resolved it from calibration rows, e.g. the auto Ulysses a2a
+    #: chunk count) — plan() reports it instead of re-deriving
+    source: str | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,6 +183,49 @@ def render_plans(plans: Sequence[IslandPlan]) -> str:
     """One-line-per-island overlap schedule table (launchers print this)."""
     head = "island         overlap schedule (backend / chunks / hidden frac)"
     return "\n".join([head, "-" * len(head)] + [str(p) for p in plans])
+
+
+def plan_overrides(plans: Sequence[IslandPlan]) -> tuple:
+    """Freeze resolved plans into ``RunConfig.island_overrides`` entries.
+
+    Each non-fallback plan with a resolved backend becomes one
+    ``(island_name, backend, chunks)`` entry; ``chunks`` is normalized to
+    what the consumer expects — *sub-chunks per ring step* for the
+    chunk-pipelined GEMM×collectives (``Island.make_context`` threads it
+    into ``CommContext.chunks``), the *total* chunk count for ``all_to_all``
+    islands (the a2a builders consume it directly). This is the serving
+    engine's plan-to-context seam: evaluate ``island_plans()`` once per
+    shape bucket, freeze the decisions here, and every island the bucket's
+    jitted step builds runs exactly the schedule its plan reported.
+    """
+    out = []
+    for p in plans:
+        if p.fallback or p.backend is None:
+            continue
+        if p.op in GEMM_OP_KIND:
+            chunks = None
+            if p.backend in ("ring", "ring_bidir") and p.n_chunks:
+                chunks = max(1, p.n_chunks // max(p.axis_size, 1))
+        elif p.op == "all_to_all":
+            chunks = p.n_chunks
+        else:
+            # psum / ring_shift / ...: the backend choice is the whole
+            # decision; chunk counts there are structural (axis size)
+            chunks = None
+        out.append((p.island, p.backend, chunks))
+    return tuple(out)
+
+
+def island_override(run, name: str) -> tuple | None:
+    """The ``(backend, chunks)`` override ``RunConfig.island_overrides``
+    carries for island ``name``, or None. Later entries win (a re-resolved
+    plan appended to an existing tuple supersedes the stale one)."""
+    entries = getattr(run, "island_overrides", ()) if run is not None else ()
+    hit = None
+    for entry in entries:
+        if entry and entry[0] == name:
+            hit = (entry[1], entry[2] if len(entry) > 2 else None)
+    return hit
 
 
 class Island:
@@ -267,6 +315,19 @@ class Island:
         if self.hw is not None:
             kw.setdefault("hw", self.hw)
         kw.setdefault("island", self.island_key)
+        # RunConfig.island_overrides: a frozen plan decision for THIS island
+        # (serving engine buckets). The backend becomes a context pin and a
+        # GEMM sub-chunk count the context default, so the bucket's step
+        # runs exactly what its recorded plan reported. Explicit ctx_kwargs
+        # at the declaration site still win (setdefault).
+        ov = island_override(self.run, self.name)
+        if ov is not None:
+            be, chunks = ov
+            if be is not None:
+                kw.setdefault("backend", be)
+            if (chunks is not None and self.comm is not None
+                    and self.comm.op in GEMM_OP_KIND):
+                kw.setdefault("chunks", chunks)
         # a declared Comm.n_chunks becomes the context's chunk default, so
         # the body's GEMM-collective calls run the schedule plan() reports
         # without every call site re-passing n_chunks=. The global A/B knob
@@ -444,12 +505,23 @@ class Island:
                 chunk_dim=chunk_dim, hidden_fraction=hidden, source=source,
                 reason=reason if reason is not None else pol.reason)
         if c.op == "all_to_all":
-            n_chunks = c.n_chunks if c.n_chunks is not None else \
-                choose_a2a_chunks(c.payload_bytes, axis_size=self.axis_size,
-                                  downstream_compute_s=c.downstream_compute_s,
-                                  hw=ctx.effective_hw(), shape=c.shape,
-                                  split_axis=c.split_axis,
-                                  concat_axis=c.concat_axis)
+            source = c.source or "analytic"
+            if c.n_chunks is not None:
+                n_chunks = c.n_chunks
+            elif c.shape is not None:
+                # measured-first resolution, same method the builders use
+                # for the auto chunk count (calibrate --per-island a2a rows)
+                sched = ctx.a2a_chunk_schedule(
+                    c.shape, c.split_axis, c.concat_axis,
+                    dtype_bytes=c.dtype_bytes,
+                    downstream_compute_s=c.downstream_compute_s)
+                n_chunks, source = sched.n_chunks, sched.source
+            else:
+                n_chunks = choose_a2a_chunks(
+                    c.payload_bytes, axis_size=self.axis_size,
+                    downstream_compute_s=c.downstream_compute_s,
+                    hw=ctx.effective_hw(), shape=c.shape,
+                    split_axis=c.split_axis, concat_axis=c.concat_axis)
             if n_chunks > 1 and c.shape is not None:
                 # mirror pk_all_to_all's bystander-dim fitting so the plan
                 # never reports a chunking the runtime would bulk away
@@ -463,7 +535,7 @@ class Island:
             hidden = 1.0 - 1.0 / n_chunks if n_chunks > 1 else 0.0
             return dataclasses.replace(
                 base, backend=backend, n_chunks=n_chunks,
-                hidden_fraction=hidden,
+                hidden_fraction=hidden, source=source,
                 reason=f"a2a chunk policy -> {n_chunks} chunks")
         # psum / ring_shift / all_gather / reduce_scatter: the backend is
         # either pinned at the call site or bulk; per-hop overlap of the ring

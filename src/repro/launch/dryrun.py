@@ -198,6 +198,20 @@ def lower_cell(arch: str, cell_name: str, *, multi_pod: bool,
             cfg, run, rules, batch=cell.global_batch, seq=cell.seq_len)],
         "roofline": dataclasses.asdict(roof),
     }
+    if cell.kind == "decode":
+        # the CONTINUOUS-BATCHING schedule for this cell: the per-bucket
+        # island table the serving engine would resolve at startup (prefill
+        # buckets at full-sequence coordinates, the decode pool at one
+        # token), diffable without running the engine
+        from repro.configs.base import ServeConfig
+        from repro.runtime.serving import serving_plan_record
+        edges = tuple(sorted({max(cell.seq_len // 4, 1),
+                              max(cell.seq_len // 2, 1), cell.seq_len}))
+        serve = ServeConfig(max_batch=cell.global_batch,
+                            prefill_batch=min(cell.global_batch, 32),
+                            bucket_edges=edges,
+                            max_new_tokens=min(cell.seq_len, 128))
+        result["serving"] = serving_plan_record(cfg, run, rules, serve)
     return result
 
 

@@ -1,99 +1,167 @@
-"""Serving launcher: batched prefill + decode loop.
+"""Serving launcher — a thin CLI over the continuous-batching engine
+(``repro.runtime.serving``).
 
-`python -m repro.launch.serve --arch tinyllama-1.1b --reduced --tokens 32`
-runs a real batched generation on local devices and reports tokens/s.
+    # static batch (the classic throughput run)
+    python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
+        --mesh-shape 1 8 --batch 8 --prompt-len 8 --tokens 16
+
+    # continuous batching over a synthetic request trace
+    python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
+        --mesh-shape 1 8 --mode continuous --requests 12 --tokens 16
+
+Both modes print the per-bucket serving plan table (island backend / chunks
+/ hidden fraction, measured on a calibrated mesh) before anything traces —
+the engine consumes exactly those plans via ``RunConfig.island_overrides``.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
-from repro.configs.base import RunConfig
-from repro.core.template import render_plans
+from repro.configs.base import RunConfig, ServeConfig
 from repro.launch import specs as SP
 from repro.launch.mesh import make_mesh
 from repro.models import transformer as T
-from repro.models.layers import island_plans
 from repro.models.sharding import ShardingRules
-from repro.train.step import make_serve_step
+from repro.runtime.serving import ServingEngine, render_serving_plans
+
+
+def build_engine(arch: str, *, reduced: bool = True, mesh_shape=None,
+                 mesh_axes=("data", "model"), serve: ServeConfig | None = None,
+                 seed: int = 0, comm_policy: str = "analytic",
+                 comm_chunks: int | None = None,
+                 run_overrides: dict | None = None) -> ServingEngine:
+    """Config -> params -> ServingEngine, on local devices (CPU-emulated or
+    a real slice). The tests and the bench harness build engines through
+    this, so there is exactly one construction path."""
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    mesh = make_mesh(mesh_shape, mesh_axes) if mesh_shape else None
+    kw = dict(dp_axes=tuple(a for a in (mesh_axes or ()) if a != "model")
+              or ("data",),
+              fsdp=False, decode_seq_shard=mesh is not None,
+              comm_policy=comm_policy, comm_chunks=comm_chunks)
+    kw.update(run_overrides or {})
+    run = RunConfig(**kw)
+    rules = ShardingRules(mesh, run) if mesh is not None else None
+    tmpl = T.param_template(cfg, run, rules)
+    params = T.init_params(tmpl, jax.random.PRNGKey(seed), cfg.d_model)
+    if rules is not None:
+        params = jax.tree.map(jax.device_put, params,
+                              SP.named(mesh, T.param_specs(tmpl)))
+    if serve is None:
+        ssm = any(sp.mixer == "mamba" for sp in cfg.layer_pattern())
+        serve = ServeConfig(exact_buckets=ssm)
+    return ServingEngine(cfg, run, rules, params, serve)
+
+
+def synthetic_trace(n_requests: int, serve: ServeConfig, vocab: int,
+                    seed: int = 0):
+    """Deterministic mixed-bucket request trace: prompt lengths drawn over
+    the bucket range, token ids over the vocab."""
+    rng = np.random.RandomState(seed)
+    lo = 2
+    hi = serve.bucket_edges[-1]
+    out = []
+    for _ in range(n_requests):
+        n = int(rng.randint(lo, hi + 1))
+        out.append(tuple(int(t) for t in rng.randint(0, vocab, size=n)))
+    return out
 
 
 def generate(arch: str, *, reduced: bool, batch: int, prompt_len: int,
              gen_tokens: int, mesh_shape=None, mesh_axes=("data", "model"),
              seed: int = 0, greedy: bool = True,
              comm_policy: str = "analytic", comm_chunks: int | None = None):
-    cfg = get_config(arch)
-    if reduced:
-        cfg = cfg.reduced()
-    mesh = make_mesh(mesh_shape, mesh_axes) if mesh_shape else None
-    run = RunConfig(dp_axes=("data",), fsdp=False,
-                    decode_seq_shard=mesh is not None,
-                    comm_policy=comm_policy, comm_chunks=comm_chunks)
-    rules = ShardingRules(mesh, run) if mesh is not None else None
+    """Static-batch generation (the legacy entry point, now one engine
+    call): `batch` synthetic prompts of `prompt_len` tokens, prefilled as
+    one batch and decoded in lockstep. Returns the (batch, gen_tokens)
+    generated ids and prints tokens/s."""
+    import time
 
-    tmpl = T.param_template(cfg, run, rules)
-    params = T.init_params(tmpl, jax.random.PRNGKey(seed), cfg.d_model)
-    if rules is not None:
-        params = jax.tree.map(jax.device_put, params,
-                              SP.named(mesh, T.param_specs(tmpl)))
+    import jax.numpy as jnp
 
-    s_max = prompt_len + gen_tokens
-    if rules is not None:
-        # the whole serving pass's overlap schedule, before anything traces
-        print(render_plans(island_plans(cfg, run, rules, batch=batch,
-                                        seq=s_max)))
-    ct = T.cache_template(cfg, run, rules, batch=batch, s_max=s_max,
-                          enc_len=prompt_len if cfg.encoder_decoder else 0)
-    cache = T.init_params(ct, jax.random.PRNGKey(1), cfg.d_model)
-    if rules is not None:
-        cache = jax.tree.map(jax.device_put, cache,
-                             SP.named(mesh, T.param_specs(ct)))
-
-    step = jax.jit(make_serve_step(cfg, run, rules), donate_argnums=(1,))
-    key = jax.random.PRNGKey(seed)
-    tokens = jax.random.randint(key, (batch, 1), 0, cfg.vocab_size)
-    if cfg.encoder_decoder:
-        enc = jnp.ones((batch, prompt_len, cfg.d_model), jnp.bfloat16)
-        # precompute stub cross KV = zeros already in cache; fine for perf
-    # prefill simulation: feed prompt tokens one by one (correct but simple —
-    # a production prefill uses forward_prefill; exercised in tests)
-    out_tokens = []
+    # exact_buckets: uniform static prompts never pad, and it keeps the
+    # engine's SSM right-padding guard satisfied for mamba archs
+    serve = ServeConfig(bucket_edges=(max(prompt_len, 2),),
+                        max_new_tokens=gen_tokens,
+                        max_batch=batch, prefill_batch=min(batch, 8),
+                        exact_buckets=True)
+    eng = build_engine(arch, reduced=reduced, mesh_shape=mesh_shape,
+                       mesh_axes=mesh_axes, serve=serve, seed=seed,
+                       comm_policy=comm_policy, comm_chunks=comm_chunks)
+    if eng.rules is not None:
+        print(f"[plan] comm_policy={comm_policy}")
+        print(render_serving_plans(eng.bucket_plans))
+    rng = np.random.RandomState(seed)
+    prompts = [tuple(int(t) for t in
+                     rng.randint(0, eng.cfg.vocab_size, size=prompt_len))
+               for _ in range(batch)]
     t0 = time.perf_counter()
-    for i in range(prompt_len + gen_tokens):
-        logits, cache = step(params, cache, tokens)
-        tokens = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)[:, None] \
-            .astype(jnp.int32)
-        if i >= prompt_len:
-            out_tokens.append(tokens)
-    jax.block_until_ready(tokens)
+    out = eng.generate_static(prompts, gen_tokens)
     dt = time.perf_counter() - t0
     total = batch * (prompt_len + gen_tokens)
     print(f"[serve] {arch}: {total} tokens in {dt:.2f}s "
           f"({total/dt:.1f} tok/s, batch={batch})")
-    return jnp.concatenate(out_tokens, axis=1) if out_tokens else None
+    return jnp.asarray(out, jnp.int32)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mode", default="static",
+                    choices=["static", "continuous"])
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="continuous mode: synthetic trace length")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--prefill-batch", type=int, default=4)
+    ap.add_argument("--bucket-edges", type=int, nargs="*", default=None)
+    ap.add_argument("--queue-policy", default="fcfs",
+                    choices=["fcfs", "bucket-greedy"])
     ap.add_argument("--mesh-shape", type=int, nargs="*", default=None)
     ap.add_argument("--comm-policy", default="analytic",
                     choices=["analytic", "measured", "auto"])
     ap.add_argument("--comm-chunks", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    generate(args.arch, reduced=args.reduced, batch=args.batch,
-             prompt_len=args.prompt_len, gen_tokens=args.tokens,
-             mesh_shape=args.mesh_shape, comm_policy=args.comm_policy,
-             comm_chunks=args.comm_chunks)
+
+    if args.mode == "static":
+        generate(args.arch, reduced=args.reduced, batch=args.batch,
+                 prompt_len=args.prompt_len, gen_tokens=args.tokens,
+                 mesh_shape=args.mesh_shape, comm_policy=args.comm_policy,
+                 comm_chunks=args.comm_chunks, seed=args.seed)
+        return
+
+    edges = tuple(args.bucket_edges) if args.bucket_edges else (8, 16, 32)
+    serve = ServeConfig(max_batch=args.max_batch,
+                        prefill_batch=args.prefill_batch,
+                        bucket_edges=edges, max_new_tokens=args.tokens,
+                        queue_policy=args.queue_policy)
+    eng = build_engine(args.arch, reduced=args.reduced,
+                       mesh_shape=args.mesh_shape, serve=serve,
+                       seed=args.seed, comm_policy=args.comm_policy,
+                       comm_chunks=args.comm_chunks)
+    if eng.rules is not None:
+        print(f"[plan] comm_policy={args.comm_policy}")
+        print(render_serving_plans(eng.bucket_plans))
+    trace = synthetic_trace(args.requests, serve, eng.cfg.vocab_size,
+                            seed=args.seed)
+    done = eng.run(trace)
+    st = eng.stats()
+    print(f"[serve] {args.arch}: {len(done)} requests, "
+          f"{st['tokens_generated']} tokens in {st['wall_s']:.2f}s "
+          f"({st['tokens_per_s']:.1f} tok/s; "
+          f"{st['prefill_steps']} prefill + {st['decode_steps']} decode "
+          f"steps; buckets jitted: {st['compiled_buckets']})")
 
 
 if __name__ == "__main__":

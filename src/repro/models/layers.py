@@ -22,7 +22,9 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig, RunConfig
 from repro.core import moe as pk_moe
 from repro.core import pk_ring_attention, pk_ulysses_attention
-from repro.core.template import Comm, Gather, Island, IslandPlan
+from repro.core.autotune import island_key
+from repro.core.template import (Comm, Gather, Island, IslandPlan,
+                                 comm_context, island_override)
 from repro.models.sharding import ShardingRules
 
 NEG_INF = -1e30
@@ -82,7 +84,11 @@ def apply_rope(x, positions, theta: float):
 
 def _full_attention(q, k, v, *, causal, window, q_offset=0, kv_len=None,
                     scale=None):
-    """q: (B,Hq,Sq,hd); k,v: (B,Hkv,Skv,hd). fp32 softmax, GQA grouped."""
+    """q: (B,Hq,Sq,hd); k,v: (B,Hkv,Skv,hd). fp32 softmax, GQA grouped.
+
+    ``kv_len`` (valid cache prefix) may be a scalar or a per-slot ``(B,)``
+    vector — the continuous-batching decode pool holds sequences at
+    different positions in one batch."""
     b, hq, sq, hd = q.shape
     hkv, skv = k.shape[1], k.shape[2]
     g = hq // hkv
@@ -98,8 +104,12 @@ def _full_attention(q, k, v, *, causal, window, q_offset=0, kv_len=None,
     if window is not None:
         keep &= ki > qi - window
     if kv_len is not None:                      # decode: valid cache prefix
-        keep &= ki < kv_len
-    s = jnp.where(keep, s, NEG_INF)
+        if jnp.ndim(kv_len):                    # per-slot (B,) prefix
+            keep = keep[None] & (ki[None] < kv_len[:, None, None])
+        else:
+            keep = keep & (ki < kv_len)
+    mask = keep if keep.ndim == 2 else keep[:, None, None]
+    s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
     return o.reshape(b, hq, sq, hd).astype(q.dtype)
@@ -199,18 +209,35 @@ def sp_attention_island(cfg: ArchConfig, run: RunConfig,
         # overlap: attention on early head chunks hides later chunks' a2a.
         # The local payload shape lets plan() fit the count to the
         # splittable bystander dims exactly like the runtime a2a will.
-        a2a_chunks = max(1, run.ulysses_chunks)
+        # ulysses_chunks=0 means AUTO: a frozen serving-bucket plan
+        # (RunConfig.island_overrides) wins, then measured a2a rows from
+        # `calibrate --per-island` (island-keyed first), then the analytic
+        # chunk policy — the a2a twin of the GEMM chunk-schedule precedence.
+        shape = (b_loc, hq, s_loc, hd)
+        ov = island_override(run, "attn_ulysses")
+        source = None
+        if ov is not None and ov[1] is not None:
+            a2a_chunks = max(1, ov[1])
+            source = "plan"
+        elif run.ulysses_chunks > 0:
+            a2a_chunks = run.ulysses_chunks
+        else:
+            ctx = comm_context(run, axis, mesh=rules.mesh,
+                               island=island_key("attn_ulysses",
+                                                 "all_to_all", dtb))
+            sched = ctx.a2a_chunk_schedule(shape, 1, 2, dtype_bytes=dtb)
+            a2a_chunks, source = sched.n_chunks, sched.source
         comm = Comm("all_to_all", n_chunks=a2a_chunks,
                     backend="chunked" if a2a_chunks > 1 else "bulk",
                     payload_bytes=b_loc * hq * s_loc * hd * dtb,
-                    shape=(b_loc, hq, s_loc, hd), split_axis=1,
-                    concat_axis=2)
+                    shape=shape, split_axis=1, concat_axis=2,
+                    source=source)
     else:
         comm = Comm("ring_shift", backend="bulk", n_chunks=tp_size,
                     payload_bytes=2 * b_loc * hkv * s_loc * hd * dtb)
 
     def body(ctx, q, k, v):
-        kw = {"n_chunks": max(1, run.ulysses_chunks)} if ulysses else {}
+        kw = {"n_chunks": comm.n_chunks} if ulysses else {}
         return fn(q, k, v, axis, causal=causal, window=cfg.sliding_window,
                   ctx=ctx, **kw)
 
@@ -302,6 +329,21 @@ def attention_block(p, x, cfg: ArchConfig, run: RunConfig,
     return out
 
 
+def _cache_write(cache, new, pos):
+    """Write a one-token K/V block into the cache's seq dim at ``pos``.
+
+    cache: (B, H, S, hd); new: (B, H, 1, hd). Scalar ``pos`` is the classic
+    lockstep decode (dynamic_update_slice); a ``(B,)`` vector writes each
+    slot at its own position via a one-hot select — the continuous-batching
+    pool's slots sit at different depths. Out-of-range vector positions
+    write nothing (the engine parks inactive slots past their cache)."""
+    if jnp.ndim(pos) == 0:
+        return lax.dynamic_update_slice(cache, new.astype(cache.dtype),
+                                        (0, 0, pos, 0))
+    oh = jnp.arange(cache.shape[2])[None, :] == pos[:, None]       # (B, S)
+    return jnp.where(oh[:, None, :, None], new.astype(cache.dtype), cache)
+
+
 def decode_island(cfg: ArchConfig, run: RunConfig,
                   rules: ShardingRules | None, b: int, s_max: int, *,
                   long_ctx: bool, pos, kv_len, window) -> Island:
@@ -309,16 +351,44 @@ def decode_island(cfg: ArchConfig, run: RunConfig,
     write + flash-decode logsumexp merge over the tp axis (DESIGN §4). The
     cache write happens INSIDE the island — a dynamic_update_slice on a
     seq-sharded array at the jit level would force XLA to all-gather the
-    whole cache (GBs per token)."""
+    whole cache (GBs per token). ``pos``/``kv_len`` may be scalars (lockstep
+    decode) or per-slot ``(B,)`` vectors (the serving engine's mixed pool)."""
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    vec = jnp.ndim(pos) > 0
 
-    def reference(q, cache_k, cache_v, k_new, v_new):
-        ck = lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype),
-                                      (0, 0, pos, 0))
-        cv = lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype),
-                                      (0, 0, pos, 0))
+    def _mix(q, k_, v_, offset, s_loc, axis, pos_in):
+        """Local partial attention + logsumexp merge over the axis.
+        ``pos_in`` scalar or (B_loc,) — the shard-local slice of pos."""
+        g = hq // hkv
+        qg = q.reshape(q.shape[0], hkv, g, 1, hd)
+        s_ = jnp.einsum("bkgqd,bksd->bkgqs", qg, k_,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+        ki = offset + jnp.arange(s_loc)[None, None, None, None, :]
+        kvl = pos_in[:, None, None, None, None] + 1 if vec else kv_len
+        keep = ki < kvl
+        if window is not None:
+            keep &= ki > (kvl - 1) - window
+        s_ = jnp.where(keep, s_, NEG_INF)
+        m_loc = s_.max(axis=-1)                                # (b,k,g,1)
+        m_glob = lax.pmax(m_loc, axis)
+        p_ = jnp.exp(s_ - m_glob[..., None])
+        l_loc = p_.sum(axis=-1)
+        o_loc = jnp.einsum("bkgqs,bksd->bkgqd", p_, v_.astype(jnp.float32))
+        l_glob = lax.psum(l_loc, axis)
+        o_glob = lax.psum(o_loc, axis)
+        o = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+        return o.reshape(q.shape[0], hq, 1, hd).astype(q.dtype)
+
+    # Per-slot (vector) pos is an ISLAND INPUT sharded like the batch — a
+    # closure capture would hand every shard the global-batch vector while
+    # its arrays are dp-local. The scalar (lockstep) form keeps the closure.
+    def reference(q, cache_k, cache_v, k_new, v_new, **kw):
+        p_ = kw.get("pos", pos)
+        ck = _cache_write(cache_k, k_new, p_)
+        cv = _cache_write(cache_v, v_new, p_)
         o = _full_attention(q, ck, cv, causal=False, window=window,
-                            q_offset=0, kv_len=kv_len)
+                            q_offset=0,
+                            kv_len=p_ + 1 if vec else kv_len)
         return o, ck, cv
 
     if rules is None:
@@ -329,47 +399,39 @@ def decode_island(cfg: ArchConfig, run: RunConfig,
     bspec = None if long_ctx else rules.dim(b, rules.dp)
     qspec = P(bspec, None, None, None)
 
-    def body(ctx, q, cache_k, cache_v, k_new, v_new):
+    def body(ctx, q, cache_k, cache_v, k_new, v_new, **kw):
+        p_ = kw.get("pos", pos)
         ax_idx = lax.axis_index(axis)
         s_loc = cache_k.shape[2]
         offset = ax_idx * s_loc
         # shard-local cache update (one-sided, pre-allocated slot — the
         # PK §3.1.4 principle applied to the KV cache)
-        local_pos = pos - offset
+        local_pos = p_ - offset
         hit = (local_pos >= 0) & (local_pos < s_loc)
         lp = jnp.clip(local_pos, 0, s_loc - 1)
 
-        def upd(c, n):
-            new = lax.dynamic_update_slice(c, n.astype(c.dtype),
-                                           (0, 0, lp, 0))
-            return lax.cond(hit, lambda: new, lambda: c)
+        if vec:
+            def upd(c, n):
+                oh = (jnp.arange(s_loc)[None, :] == lp[:, None]) \
+                    & hit[:, None]                             # (B, s_loc)
+                return jnp.where(oh[:, None, :, None], n.astype(c.dtype), c)
+        else:
+            def upd(c, n):
+                new = lax.dynamic_update_slice(c, n.astype(c.dtype),
+                                               (0, 0, lp, 0))
+                return lax.cond(hit, lambda: new, lambda: c)
 
         k_ = upd(cache_k, k_new)
         v_ = upd(cache_v, v_new)
-        # local partial attention + logsumexp merge over the axis
-        g = hq // hkv
-        qg = q.reshape(q.shape[0], hkv, g, 1, hd)
-        s_ = jnp.einsum("bkgqd,bksd->bkgqs", qg, k_,
-                        preferred_element_type=jnp.float32) * hd ** -0.5
-        ki = offset + jnp.arange(s_loc)[None, None, None, None, :]
-        keep = ki < kv_len
-        if window is not None:
-            keep &= ki > (kv_len - 1) - window
-        s_ = jnp.where(keep, s_, NEG_INF)
-        m_loc = s_.max(axis=-1)                                # (b,k,g,1)
-        m_glob = lax.pmax(m_loc, axis)
-        p_ = jnp.exp(s_ - m_glob[..., None])
-        l_loc = p_.sum(axis=-1)
-        o_loc = jnp.einsum("bkgqs,bksd->bkgqd", p_, v_.astype(jnp.float32))
-        l_glob = lax.psum(l_loc, axis)
-        o_glob = lax.psum(o_loc, axis)
-        o = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
-        return (o.reshape(q.shape[0], hq, 1, hd).astype(q.dtype), k_, v_)
+        return (_mix(q, k_, v_, offset, s_loc, axis, p_), k_, v_)
 
+    inputs = {"q": qspec, "cache_k": cache_spec, "cache_v": cache_spec,
+              "k_new": qspec, "v_new": qspec}
+    if vec:
+        inputs["pos"] = P(bspec)
     return Island(
         "decode_attn", rules=rules, run=run, axis=tp, fallback_axes=axis,
-        inputs={"q": qspec, "cache_k": cache_spec, "cache_v": cache_spec,
-                "k_new": qspec, "v_new": qspec},
+        inputs=inputs,
         out_specs=(qspec, cache_spec, cache_spec),
         body=body, reference=reference,
         enable=run.decode_seq_shard,
@@ -396,8 +458,11 @@ def decode_attention(p, x, cache_k, cache_v, pos, cfg: ArchConfig,
     if cross_kv is None:
         k_new = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(b, 1, hkv, hd).transpose(0, 2, 1, 3)
         v_new = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(b, 1, hkv, hd).transpose(0, 2, 1, 3)
-        q = apply_rope(q, jnp.full((1,), pos), cfg.rope_theta)
-        k_new = apply_rope(k_new, jnp.full((1,), pos), cfg.rope_theta)
+        # scalar pos = lockstep decode; (B,) pos = per-slot positions (the
+        # serving engine's mixed pool) — RoPE takes the (B, 1) form directly
+        positions = pos[:, None] if jnp.ndim(pos) else jnp.full((1,), pos)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
         kv_len = pos + 1          # cache write is deferred (see below)
     else:
         k_att, v_att = cross_kv
@@ -408,15 +473,14 @@ def decode_attention(p, x, cache_k, cache_v, pos, cfg: ArchConfig,
         island = decode_island(cfg, run, rules, b, cache_k_in.shape[2],
                                long_ctx=long_ctx, pos=pos, kv_len=kv_len,
                                window=window)
+        kw = {"pos": pos} if jnp.ndim(pos) else {}
         o, cache_k, cache_v = island(q=q, cache_k=cache_k_in,
                                      cache_v=cache_v_in, k_new=k_new,
-                                     v_new=v_new)
+                                     v_new=v_new, **kw)
     else:
         if cross_kv is None:
-            cache_k = lax.dynamic_update_slice(
-                cache_k_in, k_new.astype(cache_k_in.dtype), (0, 0, pos, 0))
-            cache_v = lax.dynamic_update_slice(
-                cache_v_in, v_new.astype(cache_v_in.dtype), (0, 0, pos, 0))
+            cache_k = _cache_write(cache_k_in, k_new, pos)
+            cache_v = _cache_write(cache_v_in, v_new, pos)
             k_att, v_att = cache_k, cache_v
         o = _full_attention(q, k_att, v_att, causal=False, window=window,
                             q_offset=0, kv_len=kv_len)
@@ -427,6 +491,82 @@ def decode_attention(p, x, cache_k, cache_v, pos, cfg: ArchConfig,
     if cross_kv is None:
         return out, cache_k, cache_v
     return out, None, None
+
+
+def prefill_write_island(cfg: ArchConfig, run: RunConfig,
+                         rules: ShardingRules | None, b: int,
+                         L: int) -> Island:
+    """Shard-local write of a prompt's K/V block into the sequence-sharded
+    cache: each tp shard takes its own [off, off+s_loc) window of the
+    (replicated, activation-sized) new K/V. A ``dynamic_update_slice`` on
+    the sharded cache at the jit level would make XLA re-shard /
+    all-gather the whole cache per layer — the same trap decode_island's
+    in-island write avoids for the one-token case."""
+    hkv = cfg.n_kv_heads
+
+    def reference(cache, new):
+        return lax.dynamic_update_slice(cache, new.astype(cache.dtype),
+                                        (0, 0, 0, 0))
+
+    if rules is None:
+        return Island("prefill_write", run=run, reference=reference)
+    tp = rules.tp
+    cache_spec = rules.kv_cache(hkv, b)
+    bspec = rules.dim(b, rules.dp)
+
+    def body(ctx, cache, new):
+        s_loc = cache.shape[2]
+        off = lax.axis_index(tp) * s_loc
+        idx = off + jnp.arange(s_loc)                  # global positions
+        window = jnp.take(new, jnp.clip(idx, 0, L - 1), axis=2)
+        hit = (idx < L)[None, None, :, None]
+        return jnp.where(hit, window.astype(cache.dtype), cache)
+
+    return Island(
+        "prefill_write", rules=rules, run=run,
+        inputs={"cache": cache_spec, "new": P(bspec, None, None, None)},
+        out_specs=cache_spec,
+        body=body, reference=reference,
+        enable=run.decode_seq_shard)
+
+
+def prefill_attention_block(p, x, cache_k, cache_v, cfg: ArchConfig,
+                            run: RunConfig, rules: ShardingRules | None):
+    """Batched prefill: causal attention over the whole (padded) prompt with
+    the K/V written into the decode cache at positions [0, L).
+
+    The serving engine's prefill bucket runs this at the bucket's (B, L) —
+    so the attention out-projection island here sees m = B_loc·L and can
+    resolve to a *different* backend/chunk schedule than the decode bucket's
+    m = B_loc·1 call (the whole point of per-bucket plans). Right-padding is
+    safe: rows past a slot's real length are causal-masked garbage the
+    caller discards, and the padded cache tail is never attended because
+    decode masks ``ki < kv_len`` with ``kv_len`` the slot's real position.
+    Returns (out (B, L, d), new_cache_k, new_cache_v).
+    """
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, s, hq, hd).transpose(0, 2, 1, 3)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    positions = jnp.arange(s)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if rules is not None:
+        q = constrain(q, rules, rules.act_bhsd(hq))
+    win = cfg.sliding_window
+    if s >= XLA_ATTN_CHUNK_THRESHOLD:
+        o = _chunked_attention(q, k, v, causal=True, window=win)
+    else:
+        o = _full_attention(q, k, v, causal=True, window=win)
+    write = prefill_write_island(cfg, run, rules, b, s)
+    new_k = write(cache=cache_k, new=k)
+    new_v = write(cache=cache_v, new=v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    out = attn_out_island(cfg, run, rules, b, s)(o=o, wo=p["wo"])
+    if rules is not None:
+        out = constrain(out, rules, rules.act_btd())
+    return out, new_k, new_v
 
 
 # ---------------------------------------------------------------------------
@@ -547,10 +687,26 @@ def moe_island(cfg: ArchConfig, run: RunConfig,
     # ONE gating/capacity plan for every variant: the serve path sees the
     # dp-gathered token count, the train path the local count.
     n_tok = b * s if run.serve_moe_tp_data else b_loc * s
+    moe_chunks = run.moe_chunks
+    if moe_chunks == 0:
+        # AUTO: measured-first off the `calibrate --per-island` MoE-dispatch
+        # a2a rows (island "moe_dispatch"), analytic a2a chunk policy
+        # otherwise — the same resolution order as the Ulysses island.
+        n_dev = rules.mesh.shape[tp]
+        base = pk_moe.dispatch_plan(n_tok, n_experts=cfg.n_experts,
+                                    top_k=cfg.top_k,
+                                    capacity_factor=cfg.capacity_factor)
+        shape = (n_dev, max(cfg.n_experts // max(n_dev, 1), 1), base.cap,
+                 cfg.d_model)
+        ctx = comm_context(run, tp, mesh=rules.mesh,
+                           island=island_key("moe_dispatch", "all_to_all",
+                                             _dtype_bytes(cfg)))
+        moe_chunks = ctx.a2a_chunk_schedule(
+            shape, 0, 0, dtype_bytes=_dtype_bytes(cfg)).n_chunks
     plan = pk_moe.dispatch_plan(n_tok, n_experts=cfg.n_experts,
                                 top_k=cfg.top_k,
                                 capacity_factor=cfg.capacity_factor,
-                                n_chunks=run.moe_chunks)
+                                n_chunks=moe_chunks)
     gathers: dict[str, Gather] = {}
 
     if run.serve_moe_tp_data:
@@ -773,61 +929,110 @@ def lm_logits(p, x, rules: ShardingRules | None):
 
 def _forward_islands(cfg: ArchConfig, run: RunConfig,
                      rules: ShardingRules | None, *, batch: int = 8,
-                     seq: int = 128) -> list:
+                     seq: int = 128, phase: str = "all") -> list:
     """Every PK island a forward pass (and a decode step) of this
     (cfg, run, mesh) will build — the single island inventory behind both
-    ``island_plans`` and ``island_comm_sweeps``."""
-    b, s = batch, seq
+    ``island_plans`` and ``island_comm_sweeps``.
+
+    ``phase`` narrows the inventory to one serving bucket's step program:
+    ``"prefill"`` is the full-sequence cache-building forward (GEMM islands
+    at m = B_loc·seq, no decode or loss islands), ``"decode"`` the one-token
+    step (GEMM islands at m = B_loc·1 plus the decode-attention island);
+    ``"all"`` (default) is the historical union every launcher prints.
+    """
+    if phase not in ("all", "prefill", "decode"):
+        raise ValueError(f"unknown island phase {phase!r}")
+    b = batch
+    s = 1 if phase == "decode" else seq
     pattern = cfg.layer_pattern()
     v = cfg.padded_vocab(rules.mesh.shape[rules.tp] if rules else 16)
     islands = [embed_island(run, rules, v, cfg.d_model, b)]
     if any(sp.mixer == "attn" for sp in pattern):
-        if run.sp_attention != "none":
+        if run.sp_attention != "none" and phase == "all":
             islands.append(
                 sp_attention_island(cfg, run, rules, b, s, causal=True))
         islands.append(attn_out_island(cfg, run, rules, b, s))
-        islands.append(decode_island(cfg, run, rules, b, s, long_ctx=False,
-                                     pos=0, kv_len=1,
-                                     window=cfg.sliding_window))
+        if phase in ("all", "decode"):
+            islands.append(decode_island(
+                cfg, run, rules, b, seq, long_ctx=False, pos=0, kv_len=1,
+                window=cfg.sliding_window))
     if any(sp.mlp == "dense" for sp in pattern):
         islands.append(mlp_island(cfg, run, rules, b, s))
     if any(sp.mlp == "moe" for sp in pattern):
         islands.append(moe_island(cfg, run, rules, b, s))
-    islands.append(lm_loss_island(run, rules, b, cfg.d_model, v))
+    if phase == "all":
+        islands.append(lm_loss_island(run, rules, b, cfg.d_model, v))
     return islands
 
 
 def island_plans(cfg: ArchConfig, run: RunConfig,
                  rules: ShardingRules | None, *, batch: int = 8,
-                 seq: int = 128) -> list[IslandPlan]:
+                 seq: int = 128, phase: str = "all") -> list[IslandPlan]:
     """Trace-free overlap schedule for every PK island a forward pass (and a
     decode step) of this (cfg, run, mesh) will build: chosen backend, chunk
     count, hidden fraction (measured on a calibrated mesh, else predicted)
     — or the fallback reason. Launchers print this via
     ``repro.core.template.render_plans``; the dry-run records it in its JSON
-    artifact."""
+    artifact. ``phase`` narrows to one serving bucket's step program (see
+    ``_forward_islands``) — the serving engine resolves a plan table per
+    shape bucket this way."""
     return [i.plan() for i in _forward_islands(cfg, run, rules,
-                                               batch=batch, seq=seq)]
+                                               batch=batch, seq=seq,
+                                               phase=phase)]
 
 
 def island_comm_sweeps(cfg: ArchConfig, run: RunConfig,
                        rules: ShardingRules | None, *, batch: int = 8,
-                       seq: int = 128):
+                       seq: int = 128, phase: str = "all"):
     """Per-island calibration sweep specs (``autotune.IslandSweep``) for
-    every active GEMM-collective island of this forward pass — the driver
-    behind ``python -m repro.autotune calibrate --per-island``. Each spec
-    carries the exact (op, m, n, k, dtype) coordinates the island's
-    ``CommContext`` dispatch will query with, plus its island key."""
+    every active GEMM-collective *and all-to-all* island of this forward
+    pass — the driver behind ``python -m repro.autotune calibrate
+    --per-island``. GEMM islands carry the exact (op, m, n, k, dtype)
+    coordinates their ``CommContext`` dispatch queries with; a2a islands
+    (Ulysses re-sharding, MoE dispatch) carry the local payload shape and
+    split/concat axes, stored under ``CommContext.a2a_coords``. ``phase``
+    narrows to one serving bucket's inventory, so the serving buckets can
+    be calibrated at their exact shapes."""
     from repro.core.autotune import IslandSweep
-    from repro.core.comms import GEMM_OP_KIND
+    from repro.core.comms import GEMM_OP_KIND, CommContext
     sweeps = []
-    for isl in _forward_islands(cfg, run, rules, batch=batch, seq=seq):
+    for isl in _forward_islands(cfg, run, rules, batch=batch, seq=seq,
+                                phase=phase):
         c = isl.comm
-        if c is None or c.op not in GEMM_OP_KIND:
+        if c is None or isl.fallback_reason() is not None:
             continue
-        if isl.fallback_reason() is not None:
-            continue
-        sweeps.append(IslandSweep(island=isl.island_key, op=c.op,
-                                  m=c.m, n=c.n, k=c.k,
-                                  dtype_bytes=c.dtype_bytes))
+        if c.op in GEMM_OP_KIND:
+            sweeps.append(IslandSweep(island=isl.island_key, op=c.op,
+                                      m=c.m, n=c.n, k=c.k,
+                                      dtype_bytes=c.dtype_bytes))
+        elif c.op == "all_to_all" and c.shape is not None:
+            m, n, k = CommContext.a2a_coords(c.shape, c.split_axis,
+                                             c.concat_axis)
+            sweeps.append(IslandSweep(
+                island=isl.island_key, op="all_to_all", m=m, n=n, k=k,
+                dtype_bytes=c.dtype_bytes, shape=tuple(c.shape),
+                split_axis=c.split_axis, concat_axis=c.concat_axis))
+    if any(sp.mlp == "moe" for sp in cfg.layer_pattern()) \
+            and rules is not None:
+        # MoE a2a dispatch (pk_moe_a2a): the destination-major payload
+        # (n_dev, E_loc, capacity, d) transposed with split==concat==0.
+        # Not a declared island Comm (the moe island's dominant collective
+        # is the combine psum), but the chunk policy dispatches off these
+        # rows when RunConfig.moe_chunks = 0 (auto).
+        n_dev = rules.mesh.shape[rules.tp]
+        if cfg.n_experts % n_dev == 0:
+            b_loc = rules.local_batch(batch)
+            s = 1 if phase == "decode" else seq     # the bucket's token count
+            n_tok = batch * s if run.serve_moe_tp_data else b_loc * s
+            plan = pk_moe.dispatch_plan(n_tok, n_experts=cfg.n_experts,
+                                        top_k=cfg.top_k,
+                                        capacity_factor=cfg.capacity_factor)
+            shape = (n_dev, cfg.n_experts // n_dev, plan.cap, cfg.d_model)
+            m, n, k = CommContext.a2a_coords(shape, 0, 0)
+            sweeps.append(IslandSweep(
+                island=island_key("moe_dispatch", "all_to_all",
+                                  _dtype_bytes(cfg)),
+                op="all_to_all", m=m, n=n, k=k,
+                dtype_bytes=_dtype_bytes(cfg), shape=shape,
+                split_axis=0, concat_axis=0))
     return sweeps

@@ -355,8 +355,12 @@ def forward_train(params, batch, cfg: ArchConfig, run: RunConfig,
 
 def cache_template(cfg: ArchConfig, run: RunConfig, rules: ShardingRules | None,
                    *, batch: int, s_max: int, enc_len: int = 0,
-                   long_ctx: bool = False) -> dict:
-    """ShapeDtypeStruct+spec tree for the decode cache (PD-style)."""
+                   long_ctx: bool = False, slot_pos: bool = False) -> dict:
+    """ShapeDtypeStruct+spec tree for the decode cache (PD-style).
+
+    ``slot_pos=True`` gives the cache a per-slot ``(batch,)`` position
+    vector instead of the lockstep scalar — the continuous-batching engine's
+    decode pool holds sequences admitted at different times."""
     dt = DTYPES[cfg.dtype]
     hkv, hd, di, n, ck = (cfg.n_kv_heads, cfg.hd, cfg.d_inner, cfg.ssm_state,
                           cfg.conv_kernel)
@@ -365,8 +369,9 @@ def cache_template(cfg: ArchConfig, run: RunConfig, rules: ShardingRules | None,
         P(None, None, None, None)
     ssm_spec = rules.ssm_cache(batch) if rules else P(None, None)
     bspec = rules.dim(batch, rules.dp) if rules else None
-    tree: dict[str, Any] = {"pos": PD((), P(), "zeros", jnp.int32),
-                            "blocks": {}}
+    pos_pd = PD((batch,), P(bspec), "zeros", jnp.int32) if slot_pos \
+        else PD((), P(), "zeros", jnp.int32)
+    tree: dict[str, Any] = {"pos": pos_pd, "blocks": {}}
     for i, spec in enumerate(cfg.layer_pattern()):
         if spec.mixer == "attn":
             tree["blocks"][f"pos{i}"] = {
@@ -503,6 +508,89 @@ def decode_step_encdec(params, cache, tokens, cfg: ArchConfig, run: RunConfig,
     logits = L.lm_logits({"lm_head": head}, x, rules)
     return logits, {"pos": pos + 1, "blocks": new_blocks,
                     "cross": cache["cross"]}
+
+
+def prefill_step(params, cache, tokens, prompt_lens, cfg: ArchConfig,
+                 run: RunConfig, rules: ShardingRules | None):
+    """Batched cache-building prefill: ONE full-sequence forward over the
+    (right-padded) prompts writes every layer's K/V — and SSM state — into
+    the decode cache and returns each slot's next-token logits.
+
+    tokens: (B, L) int32 right-padded prompts; prompt_lens: (B,) real
+    lengths (or a scalar for uniform lockstep prefill). Returns
+    (logits (B, 1, V) at each slot's last real position, cache) with
+    ``cache["pos"]`` set to the prompt lengths. Right-padding is masked for
+    attention (decode attends ``ki < pos``); SSM state cannot mask pads, so
+    SSM/hybrid callers must prefill at exact prompt length (the serving
+    engine's ``exact_buckets``). The GEMM islands inside run at the bucket's
+    (B, L) coordinates — the prefill half of the per-bucket plan story.
+    """
+    if cfg.encoder_decoder:
+        raise NotImplementedError(
+            "batched cache prefill covers decoder-only models; the enc-dec "
+            "path precomputes cross K/V separately (decode_step_encdec)")
+    b, s = tokens.shape
+    x = L.embed_tokens(params, tokens, rules, run)
+    if rules is not None:
+        x = L.constrain(x, rules, rules.act_btd())
+    pattern = cfg.layer_pattern()
+
+    def body(x, args):
+        period_params, period_cache = args
+        new_cache = {}
+        for i, spec in enumerate(pattern):
+            bp = period_params[f"pos{i}"]
+            cp = period_cache[f"pos{i}"]
+            if spec.mixer == "attn":
+                a = bp["attn"]
+                h, nk, nv = L.prefill_attention_block(
+                    a, L.rms_norm(a["norm"], x, cfg.norm_eps), cp["k"],
+                    cp["v"], cfg, run, rules)
+                x = x + h
+                new_cache[f"pos{i}"] = {"k": nk, "v": nv}
+            else:
+                mp = bp["mamba"]
+                h, (nh, nconv) = S.mamba_block(
+                    mp, L.rms_norm(mp["norm"], x, cfg.norm_eps), cfg, run,
+                    rules, cache=(cp["h"], cp["conv"]))
+                x = x + h
+                new_cache[f"pos{i}"] = {"h": nh, "conv": nconv}
+            if spec.mlp == "dense":
+                mp = bp["mlp"]
+                x = x + L.mlp_block(mp, L.rms_norm(mp["norm"], x,
+                                                   cfg.norm_eps),
+                                    cfg, run, rules)
+            elif spec.mlp == "moe":
+                mp = bp["moe"]
+                h, _ = L.moe_block(mp, L.rms_norm(mp["norm"], x,
+                                                  cfg.norm_eps),
+                                   cfg, run, rules)
+                x = x + h
+        return x, new_cache
+
+    if not run.scan_layers:
+        new_list = []
+        for i in range(cfg.n_periods):
+            x, nc = body(x, jax.tree.map(lambda a: a[i],
+                                         (params["blocks"], cache["blocks"])))
+            new_list.append(nc)
+        new_blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *new_list)
+    else:
+        x, new_blocks = lax.scan(body, x, (params["blocks"], cache["blocks"]))
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    # per-slot last REAL position only — never the (B, L, V) logits
+    idx = jnp.reshape(jnp.asarray(prompt_lens) - 1, (-1, 1, 1))
+    x_last = jnp.take_along_axis(
+        x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])), axis=1)
+    head = params["lm_head"] if "lm_head" in params else params["embed"].T
+    logits = L.lm_logits({"lm_head": head}, x_last, rules)
+    new_pos = (jnp.broadcast_to(jnp.asarray(prompt_lens), (b,))
+               if jnp.ndim(cache["pos"]) else
+               jnp.asarray(prompt_lens).reshape(()).astype(jnp.int32))
+    new_cache = {"pos": new_pos.astype(jnp.int32), "blocks": new_blocks}
+    if "cross" in cache:
+        new_cache["cross"] = cache["cross"]
+    return logits, new_cache
 
 
 def forward_prefill(params, batch, cfg: ArchConfig, run: RunConfig,

@@ -1,0 +1,528 @@
+"""Template-driven continuous-batching serving engine.
+
+The ROADMAP's serving batcher: a request queue with shape-bucketed
+admission, prefill/decode interleaving over one shared slot-cache, and a
+per-bucket jitted step cache — where *every* bucket's step program is built
+from the unified ``core.template.Island`` declarations with that bucket's
+resolved overlap plan threaded back into its ``CommContext``.
+
+The plan loop (the point of the whole engine)::
+
+    per bucket:  island_plans(cfg, run, rules, batch, seq, phase=...)
+                      │  trace-free: backend / chunks / hidden fraction,
+                      │  measured on a calibrated mesh (island rows first)
+                      ▼
+                 plan_overrides(plans)  ──►  RunConfig.island_overrides
+                      │
+                      ▼
+                 jit(prefill_step | decode_step)   ← Island.make_context()
+                      pins each island to exactly the schedule its
+                      recorded plan reported
+
+Prefill buckets run the full-sequence cache-building forward at
+(prefill_batch, bucket_len) — their GEMM islands see m = B_loc·L — while the
+decode bucket's one-token step sees m = B_loc·1, so on a calibrated mesh the
+two can (and do) resolve to different backends or chunk counts for the SAME
+island. That is Syncopate's chunk-centric observation applied to serving:
+per-phase chunk choices are where overlap wins or dies.
+
+Scheduling: prefill-priority. Each engine step is either one prefill of a
+bucket group (up to ``ServeConfig.prefill_batch`` queued requests sharing a
+bucket, padded with inert slots so each bucket compiles exactly one program)
+or one decode tick over the whole slot pool. Slots hold sequences at
+different depths — the decode step runs with a per-slot position vector
+(``cache_template(slot_pos=True)``), stale cache masked by ``ki < pos``.
+
+Determinism: admission, eviction, and token choice (greedy argmax) are pure
+functions of the submitted trace; ``events`` records every admit/retire so
+scheduling regressions are diffable. Continuous-batched outputs are
+bit-identical to sequential (one-request-at-a-time) processing — pinned by
+tests/test_serving.py on the emulated meshes.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, RunConfig, ServeConfig
+from repro.core.template import IslandPlan, plan_overrides, render_plans
+from repro.models import transformer as T
+from repro.models.layers import island_plans
+from repro.models.sharding import ShardingRules
+from repro.runtime.straggler import StepTimer, StragglerWatchdog
+from repro.train.step import make_prefill_cache_step, make_serve_step
+
+__all__ = ["Request", "Completion", "BucketPlan", "ServingEngine",
+           "resolve_serving_plans", "render_serving_plans",
+           "serving_plan_record"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request. ``prompt`` is the token ids; generation is
+    greedy argmax for ``max_new_tokens`` tokens (no EOS in the synthetic
+    vocab — length is the stop condition)."""
+
+    rid: int
+    prompt: tuple[int, ...]
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    prompt_len: int
+    bucket: int
+    tokens: list[int]
+    admitted_step: int
+    finished_step: int
+    slot: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """The resolved overlap schedule for one bucket's step program."""
+
+    phase: str                       # "prefill" | "decode"
+    bucket: int                      # padded prompt length / pool size
+    batch: int
+    seq: int
+    plans: tuple[IslandPlan, ...]
+    overrides: tuple                 # frozen RunConfig.island_overrides
+
+    def asdict(self) -> dict:
+        return {"phase": self.phase, "bucket": self.bucket,
+                "batch": self.batch, "seq": self.seq,
+                "islands": [p.asdict() for p in self.plans],
+                "overrides": [list(o) for o in self.overrides]}
+
+
+def padded_s_max(serve: ServeConfig, rules: ShardingRules | None) -> int:
+    """The slot-cache length: worst prompt + generation, rounded up so the
+    sequence-sharded KV cache divides the tp axis (extra tail slots are
+    never attended — decode masks ``ki < pos``)."""
+    tp = rules.mesh.shape[rules.tp] if rules is not None else 1
+    return -(-serve.s_max // tp) * tp
+
+
+def resolve_serving_plans(cfg: ArchConfig, run: RunConfig,
+                          rules: ShardingRules | None,
+                          serve: ServeConfig) -> dict[str, BucketPlan]:
+    """Evaluate ``island_plans()`` per shape bucket: one prefill entry per
+    bucket edge (at the bucket's exact (prefill_batch, L) coordinates) plus
+    the decode pool's one-token entry. The returned overrides are what the
+    engine threads into each bucket's jitted step."""
+    out: dict[str, BucketPlan] = {}
+    for edge in serve.bucket_edges:
+        plans = tuple(island_plans(cfg, run, rules,
+                                   batch=serve.prefill_batch, seq=edge,
+                                   phase="prefill"))
+        out[f"prefill@{edge}"] = BucketPlan(
+            "prefill", edge, serve.prefill_batch, edge, plans,
+            plan_overrides(plans))
+    plans = tuple(island_plans(cfg, run, rules, batch=serve.max_batch,
+                               seq=padded_s_max(serve, rules),
+                               phase="decode"))
+    out["decode"] = BucketPlan("decode", serve.max_batch, serve.max_batch,
+                               1, plans, plan_overrides(plans))
+    return out
+
+
+def render_serving_plans(table: dict[str, BucketPlan]) -> str:
+    """Printable per-bucket island table (the serve CLI shows this)."""
+    lines = []
+    for name, bp in table.items():
+        lines.append(f"[{name}] batch={bp.batch} seq={bp.seq}")
+        lines.append(render_plans(bp.plans))
+    return "\n".join(lines)
+
+
+def serving_plan_record(cfg: ArchConfig, run: RunConfig,
+                        rules: ShardingRules | None,
+                        serve: ServeConfig) -> dict:
+    """JSON-able per-bucket plan table (dry-run artifact / plan diffing):
+    resolves the full serving schedule without building the engine, so plan
+    regressions are reviewable from the artifact alone."""
+    table = resolve_serving_plans(cfg, run, rules, serve)
+    return {"config": {"max_batch": serve.max_batch,
+                       "prefill_batch": serve.prefill_batch,
+                       "bucket_edges": list(serve.bucket_edges),
+                       "max_new_tokens": serve.max_new_tokens,
+                       "queue_policy": serve.queue_policy},
+            "comm_policy": run.comm_policy,
+            "buckets": {name: bp.asdict() for name, bp in table.items()}}
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int
+    last_token: int
+    remaining: int
+    tokens: list[int]
+    admitted_step: int
+    bucket: int
+    prompt_len: int
+
+
+class ServingEngine:
+    """Continuous-batching engine over one (cfg, run, rules, params).
+
+    The caller owns parameter construction/sharding (see
+    ``launch.serve.build_engine``); the engine owns the slot cache, the
+    request queue, the per-bucket jitted step cache, and the schedule.
+    """
+
+    def __init__(self, cfg: ArchConfig, run: RunConfig,
+                 rules: ShardingRules | None, params,
+                 serve: ServeConfig | None = None):
+        self.cfg = cfg
+        self.serve = serve if serve is not None else ServeConfig()
+        if cfg.encoder_decoder:
+            raise NotImplementedError(
+                "the continuous-batching engine covers decoder-only models")
+        if any(sp.mixer == "mamba" for sp in cfg.layer_pattern()) \
+                and not self.serve.exact_buckets:
+            raise ValueError(
+                "SSM state cannot mask right-padded prompts; use "
+                "ServeConfig(exact_buckets=True) for SSM/hybrid archs")
+        self.base_run = run
+        self.rules = rules
+        self.params = params
+        # --- per-bucket plan resolution (the startup plan loop) ----------
+        self.bucket_plans = resolve_serving_plans(cfg, run, rules, self.serve)
+        self._runs = {name: dataclasses.replace(run,
+                                                island_overrides=bp.overrides)
+                      for name, bp in self.bucket_plans.items()}
+        # --- decode pool state -------------------------------------------
+        b = self.serve.max_batch
+        self.s_max = padded_s_max(self.serve, rules)
+        self._cache_tmpl = T.cache_template(cfg, self._runs["decode"], rules,
+                                            batch=b, s_max=self.s_max,
+                                            slot_pos=True)
+        self.cache = self._sharded_zeros(self._cache_tmpl)
+        self._decode_fn = jax.jit(
+            make_serve_step(cfg, self._runs["decode"], rules),
+            donate_argnums=(1,))
+        self._prefill_fns: dict[int, Any] = {}     # bucket L -> jitted step
+        self._prefill_tmpls: dict[int, Any] = {}
+        self._static_fns: dict[tuple[int, int], tuple] = {}
+        # --- host-side scheduler state -----------------------------------
+        self.queue: collections.deque[Request] = collections.deque()
+        self.slots: list[_Slot | None] = [None] * b
+        self.completions: dict[int, Completion] = {}
+        self.events: list[tuple] = []
+        self.step_no = 0
+        self.step_kinds: list[str] = []
+        self.watchdog = StragglerWatchdog()
+        self.step_times: list[float] = []
+        self.tokens_generated = 0
+        self._next_rid = 0
+
+    # -- plumbing ----------------------------------------------------------
+
+    def _sharded_zeros(self, tmpl):
+        tree = jax.tree.map(
+            lambda pd: jnp.zeros(pd.shape, pd.dtype), tmpl,
+            is_leaf=lambda x: isinstance(x, T.PD))
+        if self.rules is None:
+            return tree
+        specs = T.param_specs(tmpl)
+        return jax.tree.map(
+            lambda x, s: jax.device_put(x, self.rules.named(s)), tree, specs)
+
+    def _recommit_cache(self, cache):
+        """Re-pin the slot cache to its declared shardings after host-side
+        scatter updates (``.at[slots].set`` results default-commit)."""
+        if self.rules is None:
+            return cache
+        specs = T.param_specs(self._cache_tmpl)
+        return jax.tree.map(
+            lambda x, s: jax.device_put(x, self.rules.named(s)), cache, specs)
+
+    def _greedy(self, logits) -> np.ndarray:
+        """Next token per slot — the ONE sampling rule both the engine and
+        the static baseline use, so batched-vs-sequential equivalence is a
+        scheduling property, not a sampling accident."""
+        return np.asarray(
+            jnp.argmax(logits[:, -1, :self.cfg.vocab_size], axis=-1),
+            dtype=np.int32)
+
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefill_fns:
+            name = f"prefill@{bucket}"
+            if name not in self.bucket_plans:
+                # exact_buckets: lengths inside the largest edge that are
+                # not pre-declared resolve their plan on first use
+                run = self.base_run
+                plans = tuple(island_plans(
+                    self.cfg, run, self.rules, batch=self.serve.prefill_batch,
+                    seq=bucket, phase="prefill"))
+                self.bucket_plans[name] = BucketPlan(
+                    "prefill", bucket, self.serve.prefill_batch, bucket,
+                    plans, plan_overrides(plans))
+                self._runs[name] = dataclasses.replace(
+                    run, island_overrides=self.bucket_plans[name].overrides)
+            run = self._runs[name]
+            self._prefill_fns[bucket] = jax.jit(
+                make_prefill_cache_step(self.cfg, run, self.rules),
+                donate_argnums=(1,))
+            self._prefill_tmpls[bucket] = T.cache_template(
+                self.cfg, run, self.rules, batch=self.serve.prefill_batch,
+                s_max=self.s_max, slot_pos=True)
+        return self._prefill_fns[bucket]
+
+    @property
+    def compiled_buckets(self) -> list[int]:
+        """Prefill buckets a step has been jitted for (the jit cache)."""
+        return sorted(self._prefill_fns)
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int | None = None,
+               rid: int | None = None) -> int:
+        prompt = tuple(int(t) for t in prompt)
+        if not prompt:
+            raise ValueError("empty prompt")
+        self.serve.bucket_for(len(prompt))       # validate length up front
+        mx = max_new_tokens if max_new_tokens is not None \
+            else self.serve.max_new_tokens
+        if not 1 <= mx <= self.serve.max_new_tokens:
+            # the slot cache is sized for bucket + max_new_tokens; a longer
+            # generation would walk pos past s_max and silently drop K/V
+            raise ValueError(
+                f"max_new_tokens must be in [1, "
+                f"{self.serve.max_new_tokens}] (ServeConfig sized the "
+                f"cache); got {mx}")
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid) + 1
+        self.queue.append(Request(rid, prompt, mx))
+        return rid
+
+    # -- scheduling --------------------------------------------------------
+
+    def _next_group(self):
+        """(bucket, requests, slot_ids) to prefill next, or None.
+
+        Prefill-priority: whenever slots are free and the queue is
+        non-empty, admit. ``fcfs`` takes only the contiguous same-bucket
+        prefix behind the queue head; ``bucket-greedy`` scans the whole
+        queue for head-bucket requests (may reorder across buckets).
+        """
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free or not self.queue:
+            return None
+        cap = min(len(free), self.serve.prefill_batch)
+        head_bucket = self.serve.bucket_for(len(self.queue[0].prompt))
+        group = []
+        if self.serve.queue_policy == "fcfs":
+            for r in self.queue:
+                if len(group) == cap or \
+                        self.serve.bucket_for(len(r.prompt)) != head_bucket:
+                    break
+                group.append(r)
+        else:                                    # bucket-greedy
+            for r in self.queue:
+                if len(group) == cap:
+                    break
+                if self.serve.bucket_for(len(r.prompt)) == head_bucket:
+                    group.append(r)
+        for r in group:
+            self.queue.remove(r)
+        return head_bucket, group, free[:len(group)]
+
+    def _prefill(self, bucket: int, reqs: list[Request],
+                 slot_ids: list[int]) -> None:
+        g = self.serve.prefill_batch
+        fn = self._prefill_fn(bucket)
+        tokens = np.zeros((g, bucket), np.int32)
+        lens = np.ones((g,), np.int32)           # inert pad slots: 1 token
+        for i, r in enumerate(reqs):
+            tokens[i, :len(r.prompt)] = r.prompt
+            lens[i] = len(r.prompt)
+        gcache = self._sharded_zeros(self._prefill_tmpls[bucket])
+        logits, gcache = fn(self.params, gcache, jnp.asarray(tokens),
+                            jnp.asarray(lens))
+        first = self._greedy(logits)
+        idx = np.asarray(slot_ids)
+
+        def scatter(dst, src):
+            if dst.ndim == 1:                    # pos: batch is dim 0
+                return dst.at[idx].set(src[:len(reqs)])
+            return dst.at[:, idx].set(src[:, :len(reqs)])
+
+        self.cache = self._recommit_cache(
+            jax.tree.map(scatter, self.cache, gcache))
+        for i, (r, slot) in enumerate(zip(reqs, slot_ids)):
+            self.slots[slot] = _Slot(
+                rid=r.rid, last_token=int(first[i]),
+                remaining=r.max_new_tokens - 1,
+                tokens=[int(first[i])], admitted_step=self.step_no,
+                bucket=bucket, prompt_len=len(r.prompt))
+            self.events.append(("admit", self.step_no, r.rid, slot, bucket))
+            self.tokens_generated += 1
+            if self.slots[slot].remaining == 0:
+                self._retire(slot)
+
+    def _retire(self, slot: int) -> None:
+        s = self.slots[slot]
+        self.completions[s.rid] = Completion(
+            rid=s.rid, prompt_len=s.prompt_len, bucket=s.bucket,
+            tokens=list(s.tokens), admitted_step=s.admitted_step,
+            finished_step=self.step_no, slot=slot)
+        self.events.append(("retire", self.step_no, s.rid, slot))
+        self.slots[slot] = None
+
+    def _decode_tick(self) -> None:
+        tokens = np.zeros((self.serve.max_batch, 1), np.int32)
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                tokens[i, 0] = s.last_token
+        logits, self.cache = self._decode_fn(self.params, self.cache,
+                                             jnp.asarray(tokens))
+        nxt = self._greedy(logits)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            s.last_token = int(nxt[i])
+            s.tokens.append(s.last_token)
+            s.remaining -= 1
+            self.tokens_generated += 1
+            if s.remaining == 0:
+                self._retire(i)
+
+    def step(self) -> str | None:
+        """One engine step: a bucket prefill when admission is possible,
+        else a decode tick over the pool. Returns the step kind, or None
+        when fully idle."""
+        active = any(s is not None for s in self.slots)
+        group = self._next_group()
+        if group is None and not active:
+            return None
+        with StepTimer() as t:
+            if group is not None:
+                self._prefill(*group)
+                kind = "prefill"
+            else:
+                self._decode_tick()
+                kind = "decode"
+        self.step_no += 1
+        self.step_kinds.append(kind)
+        self.step_times.append(t.dt)
+        if self.watchdog.record(self.step_no, t.dt):
+            print(f"[serve] STRAGGLER step {self.step_no} ({kind}): "
+                  f"{t.dt:.3f}s (deadline {self.watchdog.deadline:.3f}s)")
+        return kind
+
+    def run(self, requests=None, max_steps: int = 100_000
+            ) -> list[Completion]:
+        """Drain the queue (plus ``requests``, submitted first) to
+        completion; returns the completions finished during THIS call, in
+        submission (rid) order. ``self.completions`` keeps the full
+        history across calls."""
+        done_before = set(self.completions)
+        for r in requests or ():
+            if isinstance(r, Request):
+                self.submit(r.prompt, r.max_new_tokens, rid=r.rid)
+            else:
+                self.submit(r)
+        for _ in range(max_steps):
+            if self.step() is None:
+                break
+        else:
+            raise RuntimeError(f"engine did not drain in {max_steps} steps")
+        return [self.completions[k] for k in sorted(self.completions)
+                if k not in done_before]
+
+    # -- static baseline + stats ------------------------------------------
+
+    def _static_step_fns(self, n: int, bucket: int) -> tuple:
+        """Jitted (prefill, decode, cache template) for a static batch of
+        ``n`` at ``bucket`` — cached so repeated static runs (warm-up then
+        timing, the bench harness) hit jax's trace cache instead of
+        recompiling fresh wrappers every call."""
+        key = (n, bucket)
+        if key not in self._static_fns:
+            run = self.base_run
+            pre_plans = tuple(island_plans(self.cfg, run, self.rules,
+                                           batch=n, seq=bucket,
+                                           phase="prefill"))
+            dec_plans = tuple(island_plans(self.cfg, run, self.rules,
+                                           batch=n, seq=self.s_max,
+                                           phase="decode"))
+            run_pre = dataclasses.replace(
+                run, island_overrides=plan_overrides(pre_plans))
+            run_dec = dataclasses.replace(
+                run, island_overrides=plan_overrides(dec_plans))
+            tmpl = T.cache_template(self.cfg, run_dec, self.rules, batch=n,
+                                    s_max=self.s_max, slot_pos=True)
+            self._static_fns[key] = (
+                jax.jit(make_prefill_cache_step(self.cfg, run_pre,
+                                                self.rules),
+                        donate_argnums=(1,)),
+                jax.jit(make_serve_step(self.cfg, run_dec, self.rules),
+                        donate_argnums=(1,)),
+                tmpl)
+        return self._static_fns[key]
+
+    def generate_static(self, prompts: Sequence[Sequence[int]],
+                        max_new_tokens: int | None = None) -> list[list[int]]:
+        """Static-batch baseline: every prompt padded to ONE bucket,
+        prefilled as a single batch, decoded in lockstep until the longest
+        request finishes (shorter ones over-decode and are trimmed) — the
+        throughput bar continuous batching is measured against. Uses the
+        same prefill/decode math and greedy rule as the engine."""
+        mx = max_new_tokens if max_new_tokens is not None \
+            else self.serve.max_new_tokens
+        if not 1 <= mx <= self.serve.max_new_tokens:
+            raise ValueError(
+                f"max_new_tokens must be in [1, "
+                f"{self.serve.max_new_tokens}] (ServeConfig sized the "
+                f"cache); got {mx}")
+        n = len(prompts)
+        bucket = self.serve.bucket_for(max(len(p) for p in prompts))
+        if any(sp.mixer == "mamba" for sp in self.cfg.layer_pattern()) \
+                and any(len(p) != bucket for p in prompts):
+            # same invariant the engine's __init__ guard protects: the SSM
+            # recurrent state scans right-padding it cannot mask
+            raise ValueError(
+                "static SSM batches require uniform prompt lengths equal "
+                f"to the bucket ({bucket}); got "
+                f"{sorted({len(p) for p in prompts})}")
+        prefill, decode, tmpl = self._static_step_fns(n, bucket)
+        cache = self._sharded_zeros(tmpl)
+        tokens = np.zeros((n, bucket), np.int32)
+        lens = np.zeros((n,), np.int32)
+        for i, p in enumerate(prompts):
+            tokens[i, :len(p)] = list(p)
+            lens[i] = len(p)
+        logits, cache = prefill(self.params, cache, jnp.asarray(tokens),
+                                jnp.asarray(lens))
+        last = self._greedy(logits)
+        out = [[int(t)] for t in last]
+        for _ in range(mx - 1):
+            logits, cache = decode(self.params, cache,
+                                   jnp.asarray(last[:, None]))
+            last = self._greedy(logits)
+            for i in range(n):
+                out[i].append(int(last[i]))
+        return [seq[:mx] for seq in out]
+
+    def stats(self) -> dict:
+        total = sum(self.step_times)
+        return {
+            "steps": self.step_no,
+            "prefill_steps": self.step_kinds.count("prefill"),
+            "decode_steps": self.step_kinds.count("decode"),
+            "tokens_generated": self.tokens_generated,
+            "wall_s": total,
+            "tokens_per_s": self.tokens_generated / total if total else 0.0,
+            "straggler_events": len(self.watchdog.events),
+            "compiled_buckets": self.compiled_buckets,
+        }

@@ -88,3 +88,16 @@ def make_prefill_step(cfg: ArchConfig, run: RunConfig,
     def prefill_step(params, batch):
         return T.forward_prefill(params, batch, cfg, run, rules)
     return prefill_step
+
+
+def make_prefill_cache_step(cfg: ArchConfig, run: RunConfig,
+                            rules: ShardingRules | None):
+    """Returns prefill(params, cache, tokens, prompt_lens) -> (logits, cache)
+    — the batched cache-building prefill (one full-sequence forward, K/V and
+    SSM state written into the decode cache). The serving engine jits one of
+    these per (prompt bucket × group size), each with the bucket's resolved
+    island plans threaded through ``run.island_overrides``."""
+    def prefill_step(params, cache, tokens, prompt_lens):
+        return T.prefill_step(params, cache, tokens, prompt_lens, cfg, run,
+                              rules)
+    return prefill_step

@@ -611,3 +611,134 @@ def test_best_backend_compares_only_shared_grid_points():
     table1 = _synthetic(fp, [r for r in rows if r["backend"] == "bulk"])
     assert table1.best_backend("matmul_all_reduce", 128, 128, 64,
                                allowed=("bulk", "ring"), axis_size=N) is None
+
+
+# ---------------------------------------------------------------------------
+# all-to-all island sweep (Ulysses / MoE dispatch) + measured a2a dispatch
+# ---------------------------------------------------------------------------
+
+def _a2a_sweep():
+    # local payload (8, 4, 16, 16), split heads (dim 1), concat seq (dim 2)
+    shape = (8, 4, 16, 16)
+    m, n, k = CommContext.a2a_coords(shape, 1, 2)
+    return autotune.IslandSweep(island="attn_ulysses|all_to_all|b2",
+                                op="all_to_all", m=m, n=n, k=k,
+                                dtype_bytes=2, shape=shape,
+                                split_axis=1, concat_axis=2)
+
+
+def test_calibrate_sweeps_a2a_islands(mesh4):
+    table = autotune.calibrate(mesh=mesh4, grid="tiny", reps=1,
+                               islands=[_a2a_sweep()])
+    rows = [r for r in table.measurements
+            if r["op"] == "all_to_all" and r.get("island")]
+    assert rows, "a2a island sweep produced no rows"
+    backends = {(r["backend"], r["n_chunks"]) for r in rows}
+    assert ("bulk", 1) in backends
+    assert any(be == "chunked" and c > 1 for be, c in backends)
+    sw = _a2a_sweep()
+    for r in rows:
+        assert (r["m"], r["n"], r["k"]) == (sw.m, sw.n, sw.k)
+        assert r["island"] == sw.island
+
+
+def test_a2a_chunk_schedule_measured_dispatch(mesh4, tmp_path):
+    """a2a_chunk_schedule prefers island-keyed measured rows and reports
+    the argmin chunk count; without usable rows it answers analytically."""
+    sw = _a2a_sweep()
+    fp = autotune.live_fingerprint("tpu_v5e", mesh4)
+
+    def r(be, c, us):
+        return {"op": "all_to_all", "backend": be, "axis_size": N,
+                "m": sw.m, "n": sw.n, "k": sw.k, "dtype_bytes": 2,
+                "n_chunks": c, "island": sw.island, "us": us}
+
+    table = _synthetic(fp, [r("bulk", 1, 500.0), r("chunked", 2, 100.0),
+                            r("chunked", 4, 300.0)])
+    path = Path(table.save(tmp_path / "a2a.json"))
+    autotune.clear_caches()
+    ctx = CommContext(axis_name="x", mesh=mesh4, policy="measured",
+                      calibration=str(path), island=sw.island)
+    sched = ctx.a2a_chunk_schedule(sw.shape, 1, 2)
+    assert sched.source == "measured"
+    assert sched.n_chunks == 2
+    # bulk measured fastest -> 1 chunk, still a measurement
+    table2 = _synthetic(fp, [r("bulk", 1, 50.0), r("chunked", 2, 100.0),
+                             r("chunked", 4, 300.0)])
+    path2 = Path(table2.save(tmp_path / "a2a2.json"))
+    autotune.clear_caches()
+    ctx2 = dataclasses.replace(ctx, calibration=str(path2))
+    sched2 = ctx2.a2a_chunk_schedule(sw.shape, 1, 2)
+    assert sched2.source == "measured" and sched2.n_chunks == 1
+    # no table -> analytic
+    ctx3 = CommContext(axis_name="x", mesh=mesh4, policy="analytic")
+    assert ctx3.a2a_chunk_schedule(sw.shape, 1, 2).source == "analytic"
+
+
+def test_ulysses_auto_chunks_consume_a2a_rows(mesh22, tmp_path):
+    """RunConfig.ulysses_chunks=0 (auto): the sp attention island resolves
+    its a2a chunk count from the island-keyed measured rows, and the chunked
+    island still matches the dense reference numerically."""
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.configs.base import RunConfig
+    from repro.models import layers as L
+    from repro.models.sharding import ShardingRules
+
+    cfg = get_config("tinyllama-1.1b").reduced()
+    b, s = 4, 16
+    # island payload on this mesh: (b_loc=2, hq=4, s_loc=8, hd=16)
+    shape = (2, 4, 8, 16)
+    m, n, k = CommContext.a2a_coords(shape, 1, 2)
+    key = autotune.island_key("attn_ulysses", "all_to_all", 2)
+    fp = autotune.live_fingerprint("tpu_v5e", mesh22)
+
+    def r(be, c, us):
+        return {"op": "all_to_all", "backend": be, "axis_size": 2,
+                "m": m, "n": n, "k": k, "dtype_bytes": 2, "n_chunks": c,
+                "island": key, "us": us}
+
+    table = _synthetic(fp, [r("bulk", 1, 500.0), r("chunked", 2, 100.0),
+                            r("chunked", 4, 400.0)])
+    path = table.save(tmp_path / "ul.json")
+    autotune.clear_caches()
+    run = RunConfig(dp_axes=("data",), fsdp=False, sp_attention="ulysses",
+                    ulysses_chunks=0, comm_policy="measured",
+                    calibration_path=str(path))
+    rules = ShardingRules(mesh22, run)
+    island = L.sp_attention_island(cfg, run, rules, b, s, causal=True)
+    plan = island.plan()
+    assert plan.backend == "chunked" and plan.n_chunks == 2
+    assert plan.source == "measured"
+
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, hq, s, hd))
+    kk = jax.random.normal(jax.random.PRNGKey(1), (b, hkv, s, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, hkv, s, hd))
+
+    def reference(q, k, v):
+        return L._full_attention(q, k, v, causal=True, window=None)
+
+    isl = L.sp_attention_island(cfg, run, rules, b, s, causal=True,
+                                reference=reference)
+    got = isl(q=q, k=kk, v=v)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(reference(q, kk, v)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_auto_chunks_resolve(mesh8):
+    """RunConfig.moe_chunks=0 (auto) resolves a concrete dispatch-plan
+    chunk count (analytic without a table) and the plan stays coherent."""
+    from repro.configs import get_config
+    from repro.configs.base import RunConfig
+    from repro.models import layers as L
+    from repro.models.sharding import ShardingRules
+
+    cfg = get_config("moonshot-v1-16b-a3b").reduced()
+    run = RunConfig(dp_axes=("data",), fsdp=False, moe_chunks=0)
+    rules = ShardingRules(mesh8, run)
+    isl = L.moe_island(cfg, run, rules, 4, 8)
+    assert isl.comm.n_chunks >= 1
+    assert isl.plan().n_chunks >= 1
