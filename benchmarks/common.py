@@ -84,7 +84,8 @@ class Recorder:
     def add(self, name: str, us: float, derived: str,
             predicted_us: float | None,
             island: str | None = None,
-            tokens_per_s: float | None = None) -> None:
+            tokens_per_s: float | None = None,
+            cache_layout: str | None = None) -> None:
         err = None
         if predicted_us is not None and us > 0:
             err = (predicted_us - us) / us
@@ -94,6 +95,7 @@ class Recorder:
             "name": name, "us_per_call": us, "derived": derived,
             "predicted_us": predicted_us, "pred_err": err,
             "island": island, "tokens_per_s": tokens_per_s,
+            "cache_layout": cache_layout,
         })
 
     def report(self) -> dict:
@@ -123,16 +125,18 @@ RECORDER = Recorder()
 
 def row(name: str, us: float, derived: str = "",
         predicted_us: float | None = None, island: str | None = None,
-        tokens_per_s: float | None = None):
+        tokens_per_s: float | None = None, cache_layout: str | None = None):
     """One measurement: prints the CSV row and records it for the JSON
     artifact. ``predicted_us`` is the §3.1.1 cost-model prediction for the
     same configuration (on ``pred_hw()``) when the bench can supply one;
     ``island`` tags rows that belong to one island's calibration key
     (``repro.core.autotune.island_key``); ``tokens_per_s`` carries serving
     throughput (fig_serving) so the regression gate sees it as data, not
-    just a derived string."""
+    just a derived string; ``cache_layout`` tags the KV layout
+    ("slab"/"paged") behind a serving row."""
     print(f"{RECORDER.current_figure},{name},{us:.1f},{derived}")
-    RECORDER.add(name, us, derived, predicted_us, island, tokens_per_s)
+    RECORDER.add(name, us, derived, predicted_us, island, tokens_per_s,
+                 cache_layout)
 
 
 def _pred_table():

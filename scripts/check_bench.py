@@ -81,6 +81,10 @@ def validate_schema(doc) -> list[str]:
             if tps is not None and not isinstance(tps, (int, float)):
                 errors.append(f"{where}.rows[{j}].tokens_per_s must be "
                               "numeric or null")
+            cl = r.get("cache_layout")
+            if cl is not None and cl not in ("slab", "paged"):
+                errors.append(f"{where}.rows[{j}].cache_layout must be "
+                              "'slab', 'paged' or null")
     return errors
 
 

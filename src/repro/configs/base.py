@@ -316,6 +316,22 @@ class ServeConfig:
     ``exact_buckets`` disables padding (each distinct prompt length is its
     own bucket) — required for SSM/hybrid architectures, whose recurrent
     state cannot mask right-padding the way attention masks stale cache.
+
+    ``cache_layout`` selects the KV-cache memory layout:
+
+    * ``"slab"`` — one dense ``padded_s_max`` slab per slot (the default);
+    * ``"paged"`` — a fixed global page pool (``runtime/paging.py``) with
+      per-slot block tables, refcounted copy-on-write prefix sharing, and
+      admission backpressure when the pool is exhausted. Attention-only
+      architectures only (SSM state has no paged equivalent here).
+
+    ``page_size`` is the tokens-per-page granularity of the paged layout
+    (rounded up to a multiple of the tp axis size so pages stripe evenly
+    over shards). ``n_pages`` sizes the pool; 0 = auto (slab-equivalent:
+    ``max_batch`` slots' worth of pages). ``prefill_chunk`` > 0 splits
+    prefill across engine steps in chunks of that many tokens (page-aligned;
+    must be a positive multiple of ``page_size``) so decode ticks interleave
+    mid-prefill; 0 = single-shot prefill per bucket.
     """
 
     max_batch: int = 8
@@ -324,6 +340,10 @@ class ServeConfig:
     max_new_tokens: int = 16
     queue_policy: Literal["fcfs", "bucket-greedy"] = "fcfs"
     exact_buckets: bool = False
+    cache_layout: Literal["slab", "paged"] = "slab"
+    page_size: int = 16
+    n_pages: int = 0
+    prefill_chunk: int = 0
 
     def __post_init__(self):
         if not self.bucket_edges or \
@@ -333,6 +353,20 @@ class ServeConfig:
                 f"{self.bucket_edges}")
         if self.prefill_batch > self.max_batch:
             raise ValueError("prefill_batch cannot exceed max_batch")
+        if self.cache_layout not in ("slab", "paged"):
+            raise ValueError(f"unknown cache_layout {self.cache_layout!r}")
+        if self.page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        if self.n_pages < 0:
+            raise ValueError("n_pages must be >= 0 (0 = auto)")
+        if self.prefill_chunk:
+            if self.cache_layout != "paged":
+                raise ValueError(
+                    "prefill_chunk requires cache_layout='paged'")
+            if self.prefill_chunk % self.page_size:
+                raise ValueError(
+                    f"prefill_chunk ({self.prefill_chunk}) must be a "
+                    f"multiple of page_size ({self.page_size})")
 
     @property
     def s_max(self) -> int:

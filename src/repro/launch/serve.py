@@ -127,6 +127,15 @@ def main():
     ap.add_argument("--bucket-edges", type=int, nargs="*", default=None)
     ap.add_argument("--queue-policy", default="fcfs",
                     choices=["fcfs", "bucket-greedy"])
+    ap.add_argument("--cache-layout", default="slab",
+                    choices=["slab", "paged"])
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged layout: tokens per KV page")
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="paged layout: pool pages (0 = slab-equivalent)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="paged layout: split prefill into page-aligned "
+                         "chunks so decode ticks interleave (0 = off)")
     ap.add_argument("--mesh-shape", type=int, nargs="*", default=None)
     ap.add_argument("--comm-policy", default="analytic",
                     choices=["analytic", "measured", "auto"])
@@ -145,7 +154,10 @@ def main():
     serve = ServeConfig(max_batch=args.max_batch,
                         prefill_batch=args.prefill_batch,
                         bucket_edges=edges, max_new_tokens=args.tokens,
-                        queue_policy=args.queue_policy)
+                        queue_policy=args.queue_policy,
+                        cache_layout=args.cache_layout,
+                        page_size=args.page_size, n_pages=args.n_pages,
+                        prefill_chunk=args.prefill_chunk)
     eng = build_engine(args.arch, reduced=args.reduced,
                        mesh_shape=args.mesh_shape, serve=serve,
                        seed=args.seed, comm_policy=args.comm_policy,
@@ -153,6 +165,11 @@ def main():
     if eng.rules is not None:
         print(f"[plan] comm_policy={args.comm_policy}")
         print(render_serving_plans(eng.bucket_plans))
+    if eng.paged:
+        g = eng.geom
+        print(f"[cache] paged: page={g.page_size} pool={g.n_pages} pages "
+              f"x {g.n_partitions} partitions "
+              f"(chunk={serve.prefill_chunk or 'off'})")
     trace = synthetic_trace(args.requests, serve, eng.cfg.vocab_size,
                             seed=args.seed)
     done = eng.run(trace)
@@ -162,6 +179,18 @@ def main():
           f"({st['tokens_per_s']:.1f} tok/s; "
           f"{st['prefill_steps']} prefill + {st['decode_steps']} decode "
           f"steps; buckets jitted: {st['compiled_buckets']})")
+    cs = st["cache"]
+    line = (f"[cache] layout={cs['layout']} "
+            f"hbm={cs['hbm_bytes']/1e6:.1f}MB "
+            f"(slab-equivalent {cs['slab_bytes']/1e6:.1f}MB) "
+            f"peak_slots={cs['peak_resident_slots']}")
+    if cs["layout"] == "paged":
+        line += (f" peak_pages={cs['peak_resident_pages']}/{cs['n_pages']} "
+                 f"prefix_hits={cs['prefix_hits']} "
+                 f"shared_pages={cs['shared_pages_reused']} "
+                 f"cow={cs['cow_copies']} "
+                 f"blocked={cs['admission_blocked']}")
+    print(line)
 
 
 if __name__ == "__main__":

@@ -570,6 +570,293 @@ def prefill_attention_block(p, x, cache_k, cache_v, cfg: ArchConfig,
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache (runtime/paging.py pool + block tables)
+# ---------------------------------------------------------------------------
+#
+# The paged islands are the block-table twins of decode_island /
+# prefill_write_island: the page *interior* is striped over the tp axis
+# exactly like the slab's sequence dim, so each shard writes its own stripe
+# of every page and attention keeps the flash-decode logsumexp merge. The
+# only new machinery is indexing: reads gather pages through the block
+# table, writes scatter with mode="drop" so rows whose block table is the
+# engine's -1 sentinel (free slots, slots mid-prefill) write nothing — that
+# is what makes interleaving decode ticks between prefill chunks safe.
+
+
+def _paged_gather(pool, bt):
+    """pool (N, Hkv, s, hd); bt (B, P) ids (clipped) -> (B, Hkv, P*s, hd)."""
+    g = pool[jnp.clip(bt, 0, pool.shape[0] - 1)]       # (B, P, Hkv, s, hd)
+    b, pm, hk, s, hd = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(b, hk, pm * s, hd)
+
+
+def _page_positions(pmax: int, ps: int, off, s_loc: int):
+    """Global cache position of every gathered cell: (P*s_loc,)."""
+    return (jnp.arange(pmax)[:, None] * ps
+            + off + jnp.arange(s_loc)[None, :]).reshape(-1)
+
+
+def _paged_mix(q, gk, gv, ki, *, kv_len=None, q_pos=None, window, axis):
+    """Attention over gathered pages. ``ki`` maps each gathered cell to its
+    global cache position; masking is ``ki < kv_len`` (decode, per-slot) or
+    ``ki <= q_pos`` (prefill chunk, causal vs. global query positions), so
+    allocated-but-unwritten page tails are never attended. ``axis`` None =
+    dense (full pages); else shard-local partials + logsumexp merge."""
+    b, hq, sq, hd = q.shape
+    hkv = gk.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, hd)
+    s_ = jnp.einsum("bkgqd,bksd->bkgqs", qg, gk,
+                    preferred_element_type=jnp.float32) * hd ** -0.5
+    kib = ki[None, None, None, None, :]
+    if kv_len is not None:
+        keep = kib < kv_len[:, None, None, None, None]
+        lim = kv_len[:, None, None, None, None] - 1
+    else:
+        qp = q_pos[None, None, None, :, None]
+        keep = kib <= qp
+        lim = qp
+    if window is not None:
+        keep = keep & (kib > lim - window)
+    s_ = jnp.where(keep, s_, NEG_INF)
+    m_loc = s_.max(axis=-1)
+    if axis is None:
+        p_ = jnp.exp(s_ - m_loc[..., None])
+        l_ = p_.sum(axis=-1)
+        o = jnp.einsum("bkgqs,bksd->bkgqd", p_, gv.astype(jnp.float32))
+    else:
+        m_glob = lax.pmax(m_loc, axis)
+        p_ = jnp.exp(s_ - m_glob[..., None])
+        l_ = lax.psum(p_.sum(axis=-1), axis)
+        o = lax.psum(
+            jnp.einsum("bkgqs,bksd->bkgqd", p_, gv.astype(jnp.float32)),
+            axis)
+    o = o / jnp.maximum(l_, 1e-30)[..., None]
+    return o.reshape(b, hq, sq, hd).astype(q.dtype)
+
+
+def _paged_decode_write(pool, new, bt, pos, ps: int, off, s_loc: int):
+    """Scatter one token per slot into its block-table page at ``pos``.
+    Misses (position outside this shard's stripe, unmapped page) drop."""
+    n = pool.shape[0]
+    pmax = bt.shape[1]
+    lp = jnp.clip(pos // ps, 0, pmax - 1)
+    pid = jnp.take_along_axis(bt, lp[:, None], axis=1)[:, 0]
+    r = pos % ps
+    hit = (r >= off) & (r < off + s_loc) & (pid >= 0)
+    rl = jnp.clip(r - off, 0, s_loc - 1)
+    pid_safe = jnp.where(hit, pid, n)
+    return pool.at[pid_safe, :, rl].set(
+        new[:, :, 0, :].astype(pool.dtype), mode="drop")
+
+
+def _paged_chunk_write(pool, new, bt, c0, wf, ps: int, off, s_loc: int):
+    """Write one prefill chunk's K/V (``new``, positions [c0, c0+sq)) into
+    block-table pages: gather the touched pages, select per cell between the
+    chunk value and the current content, scatter whole pages back. The
+    per-cell select is what makes copy-on-write prefix resume sound —
+    positions below ``wf`` (per-slot ``write_from``) keep the donor pages'
+    values byte-for-byte even though the boundary chunk recomputes them."""
+    n = pool.shape[0]
+    b, hk, sq, hd = new.shape
+    pmax = bt.shape[1]
+    npg = -(-sq // ps)
+    pgs = c0 // ps + jnp.arange(npg)
+    pid = jnp.take(bt, jnp.clip(pgs, 0, pmax - 1), axis=1)     # (B, npg)
+    pid = jnp.where((pgs < pmax)[None, :], pid, -1)
+    tt = jnp.arange(npg)[:, None] * ps + off + jnp.arange(s_loc)[None, :]
+    src = jnp.take(new, jnp.clip(tt.reshape(-1), 0, sq - 1), axis=2)
+    src = src.reshape(b, hk, npg, s_loc, hd).transpose(0, 2, 1, 3, 4)
+    cur = pool[jnp.clip(pid, 0, n - 1)]              # (B, npg, hk, s_loc, hd)
+    t_glob = c0 + tt                                 # (npg, s_loc) global pos
+    cell = ((tt < sq)[None, :, None, :, None]
+            & (t_glob[None, :, None, :, None]
+               >= wf[:, None, None, None, None]))
+    vals = jnp.where(cell, src.astype(pool.dtype), cur)
+    pid_safe = jnp.where(pid >= 0, pid, n)
+    return pool.at[pid_safe].set(vals, mode="drop")
+
+
+def _dp_pool_base(rules: ShardingRules, partitioned: bool):
+    """Global id of this shard's first pool page (0 when un-partitioned),
+    as a traced scalar factory for use inside shard_map bodies."""
+    if not partitioned:
+        return lambda n_loc: 0
+    axes = rules.run.dp_axes
+
+    def base(n_loc):
+        idx = jnp.int32(0)
+        for a in axes:
+            idx = idx * rules.mesh.shape[a] + lax.axis_index(a)
+        return idx * n_loc
+    return base
+
+
+def paged_decode_island(cfg: ArchConfig, run: RunConfig,
+                        rules: ShardingRules | None, b: int, page_size: int,
+                        *, window) -> Island:
+    """One-token decode over the paged pool: block-table page write + gather
+    + flash-decode logsumexp merge over the tp axis. Declares the same name
+    and ``Comm`` coordinates as the slab ``decode_island`` — the merge
+    collective is identical — so frozen per-bucket plans and overrides apply
+    unchanged to the paged layout."""
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    def reference(q, pool_k, pool_v, k_new, v_new, bt, pos):
+        ps = pool_k.shape[2]
+        pk = _paged_decode_write(pool_k, k_new, bt, pos, ps, 0, ps)
+        pv = _paged_decode_write(pool_v, v_new, bt, pos, ps, 0, ps)
+        ki = _page_positions(bt.shape[1], ps, 0, ps)
+        o = _paged_mix(q, _paged_gather(pk, bt), _paged_gather(pv, bt), ki,
+                       kv_len=pos + 1, window=window, axis=None)
+        return o, pk, pv
+
+    if rules is None:
+        return Island("decode_attn", run=run, reference=reference)
+    tp = rules.tp
+    bspec = rules.dim(b, rules.dp)
+    partitioned = bspec is not None
+    pool_spec = P(rules.dp if partitioned else None, None, tp, None)
+    qspec = P(bspec, None, None, None)
+    base_fn = _dp_pool_base(rules, partitioned)
+
+    def body(ctx, q, pool_k, pool_v, k_new, v_new, bt, pos):
+        n_loc, _, s_loc, _ = pool_k.shape
+        off = lax.axis_index(tp) * s_loc
+        bt_l = jnp.where(bt >= 0, bt - base_fn(n_loc), -1)
+        pk = _paged_decode_write(pool_k, k_new, bt_l, pos, page_size, off,
+                                 s_loc)
+        pv = _paged_decode_write(pool_v, v_new, bt_l, pos, page_size, off,
+                                 s_loc)
+        ki = _page_positions(bt.shape[1], page_size, off, s_loc)
+        o = _paged_mix(q, _paged_gather(pk, bt_l), _paged_gather(pv, bt_l),
+                       ki, kv_len=pos + 1, window=window, axis=tp)
+        return o, pk, pv
+
+    return Island(
+        "decode_attn", rules=rules, run=run, axis=tp, fallback_axes=tp,
+        inputs={"q": qspec, "pool_k": pool_spec, "pool_v": pool_spec,
+                "k_new": qspec, "v_new": qspec, "bt": P(bspec, None),
+                "pos": P(bspec)},
+        out_specs=(qspec, pool_spec, pool_spec),
+        body=body, reference=reference,
+        enable=run.decode_seq_shard,
+        divisible=((page_size, tp),),
+        comm=Comm("psum", backend="bulk", n_chunks=1,
+                  payload_bytes=2 * b * hq * hd * 4))
+
+
+def paged_prefill_island(cfg: ArchConfig, run: RunConfig,
+                         rules: ShardingRules | None, b: int, s: int,
+                         page_size: int, *, window) -> Island:
+    """One prefill chunk over the paged pool: chunk K/V written into the
+    group's block-table pages (shard-local stripes), then causal attention
+    of the chunk's queries against every mapped page — donor prefix, earlier
+    chunks, and the chunk itself — with the tp logsumexp merge. ``c0`` is
+    the chunk's global start position, ``wf`` the per-slot write_from floor
+    below which writes are suppressed (copy-on-write prefix resume)."""
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    def reference(q, pool_k, pool_v, k_new, v_new, bt, c0, wf):
+        ps = pool_k.shape[2]
+        pk = _paged_chunk_write(pool_k, k_new, bt, c0, wf, ps, 0, ps)
+        pv = _paged_chunk_write(pool_v, v_new, bt, c0, wf, ps, 0, ps)
+        ki = _page_positions(bt.shape[1], ps, 0, ps)
+        o = _paged_mix(q, _paged_gather(pk, bt), _paged_gather(pv, bt), ki,
+                       q_pos=c0 + jnp.arange(s), window=window, axis=None)
+        return o, pk, pv
+
+    if rules is None:
+        return Island("paged_prefill_attn", run=run, reference=reference)
+    tp = rules.tp
+    bspec = rules.dim(b, rules.dp)
+    partitioned = bspec is not None
+    pool_spec = P(rules.dp if partitioned else None, None, tp, None)
+    qspec = P(bspec, None, None, None)
+    base_fn = _dp_pool_base(rules, partitioned)
+
+    def body(ctx, q, pool_k, pool_v, k_new, v_new, bt, c0, wf):
+        n_loc, _, s_loc, _ = pool_k.shape
+        off = lax.axis_index(tp) * s_loc
+        bt_l = jnp.where(bt >= 0, bt - base_fn(n_loc), -1)
+        pk = _paged_chunk_write(pool_k, k_new, bt_l, c0, wf, page_size, off,
+                                s_loc)
+        pv = _paged_chunk_write(pool_v, v_new, bt_l, c0, wf, page_size, off,
+                                s_loc)
+        ki = _page_positions(bt.shape[1], page_size, off, s_loc)
+        o = _paged_mix(q, _paged_gather(pk, bt_l), _paged_gather(pv, bt_l),
+                       ki, q_pos=c0 + jnp.arange(s), window=window, axis=tp)
+        return o, pk, pv
+
+    return Island(
+        "paged_prefill_attn", rules=rules, run=run, axis=tp,
+        fallback_axes=tp,
+        inputs={"q": qspec, "pool_k": pool_spec, "pool_v": pool_spec,
+                "k_new": qspec, "v_new": qspec, "bt": P(bspec, None),
+                "c0": P(), "wf": P(bspec)},
+        out_specs=(qspec, pool_spec, pool_spec),
+        body=body, reference=reference,
+        enable=run.decode_seq_shard,
+        divisible=((page_size, tp),),
+        comm=Comm("psum", backend="bulk", n_chunks=1,
+                  payload_bytes=2 * b * hq * s * hd * 4))
+
+
+def paged_decode_attention(p, x, pool_k, pool_v, bt, pos, cfg: ArchConfig,
+                           run: RunConfig, rules: ShardingRules | None):
+    """One-token decode against the paged pool (the block-table twin of
+    ``decode_attention``). x: (B, 1, d); pool_k/v: (N_pages, Hkv, page, hd);
+    bt: (B, P) block table (−1 = unmapped — the write drops, so free and
+    mid-prefill slots are inert); pos: per-slot (B,) positions.
+    Returns (out (B,1,d), new_pool_k, new_pool_v)."""
+    b, _, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, 1, hq, hd).transpose(0, 2, 1, 3)
+    k_new = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(b, 1, hkv, hd).transpose(0, 2, 1, 3)
+    v_new = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(b, 1, hkv, hd).transpose(0, 2, 1, 3)
+    positions = pos[:, None]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    island = paged_decode_island(cfg, run, rules, b, pool_k.shape[2],
+                                 window=cfg.sliding_window)
+    o, pk, pv = island(q=q, pool_k=pool_k, pool_v=pool_v, k_new=k_new,
+                       v_new=v_new, bt=bt, pos=pos)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, hq * hd)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
+    return out, pk, pv
+
+
+def paged_prefill_attention_block(p, x, pool_k, pool_v, bt, chunk_start,
+                                  write_from, cfg: ArchConfig,
+                                  run: RunConfig,
+                                  rules: ShardingRules | None):
+    """One chunk of paged prefill attention: x (B, cl, d) are the chunk's
+    hidden states (global positions [chunk_start, chunk_start+cl)); K/V land
+    in the block table's pages and the queries attend over every mapped
+    page. Returns (out (B, cl, d), new_pool_k, new_pool_v)."""
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, s, hq, hd).transpose(0, 2, 1, 3)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    positions = chunk_start + jnp.arange(s)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if rules is not None:
+        q = constrain(q, rules, rules.act_bhsd(hq))
+    island = paged_prefill_island(cfg, run, rules, b, s, pool_k.shape[2],
+                                  window=cfg.sliding_window)
+    o, pk, pv = island(q=q, pool_k=pool_k, pool_v=pool_v, k_new=k, v_new=v,
+                       bt=bt, c0=jnp.asarray(chunk_start, jnp.int32),
+                       wf=write_from)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    out = attn_out_island(cfg, run, rules, b, s)(o=o, wo=p["wo"])
+    if rules is not None:
+        out = constrain(out, rules, rules.act_btd())
+    return out, pk, pv
+
+
+# ---------------------------------------------------------------------------
 # MLP / MoE
 # ---------------------------------------------------------------------------
 
@@ -929,7 +1216,8 @@ def lm_logits(p, x, rules: ShardingRules | None):
 
 def _forward_islands(cfg: ArchConfig, run: RunConfig,
                      rules: ShardingRules | None, *, batch: int = 8,
-                     seq: int = 128, phase: str = "all") -> list:
+                     seq: int = 128, phase: str = "all",
+                     page_size: int = 0) -> list:
     """Every PK island a forward pass (and a decode step) of this
     (cfg, run, mesh) will build — the single island inventory behind both
     ``island_plans`` and ``island_comm_sweeps``.
@@ -939,6 +1227,11 @@ def _forward_islands(cfg: ArchConfig, run: RunConfig,
     at m = B_loc·seq, no decode or loss islands), ``"decode"`` the one-token
     step (GEMM islands at m = B_loc·1 plus the decode-attention island);
     ``"all"`` (default) is the historical union every launcher prints.
+
+    ``page_size`` > 0 switches the serving phases to the paged-cache island
+    set: decode keeps the ``decode_attn`` name and Comm coordinates (frozen
+    plans apply unchanged) and prefill gains the ``paged_prefill_attn``
+    merge island the chunk program runs.
     """
     if phase not in ("all", "prefill", "decode"):
         raise ValueError(f"unknown island phase {phase!r}")
@@ -952,10 +1245,19 @@ def _forward_islands(cfg: ArchConfig, run: RunConfig,
             islands.append(
                 sp_attention_island(cfg, run, rules, b, s, causal=True))
         islands.append(attn_out_island(cfg, run, rules, b, s))
-        if phase in ("all", "decode"):
-            islands.append(decode_island(
-                cfg, run, rules, b, seq, long_ctx=False, pos=0, kv_len=1,
+        if page_size and phase == "prefill":
+            islands.append(paged_prefill_island(
+                cfg, run, rules, b, s, page_size,
                 window=cfg.sliding_window))
+        if phase in ("all", "decode"):
+            if page_size and phase == "decode":
+                islands.append(paged_decode_island(
+                    cfg, run, rules, b, page_size,
+                    window=cfg.sliding_window))
+            else:
+                islands.append(decode_island(
+                    cfg, run, rules, b, seq, long_ctx=False, pos=0,
+                    kv_len=1, window=cfg.sliding_window))
     if any(sp.mlp == "dense" for sp in pattern):
         islands.append(mlp_island(cfg, run, rules, b, s))
     if any(sp.mlp == "moe" for sp in pattern):
@@ -967,7 +1269,8 @@ def _forward_islands(cfg: ArchConfig, run: RunConfig,
 
 def island_plans(cfg: ArchConfig, run: RunConfig,
                  rules: ShardingRules | None, *, batch: int = 8,
-                 seq: int = 128, phase: str = "all") -> list[IslandPlan]:
+                 seq: int = 128, phase: str = "all",
+                 page_size: int = 0) -> list[IslandPlan]:
     """Trace-free overlap schedule for every PK island a forward pass (and a
     decode step) of this (cfg, run, mesh) will build: chosen backend, chunk
     count, hidden fraction (measured on a calibrated mesh, else predicted)
@@ -975,10 +1278,12 @@ def island_plans(cfg: ArchConfig, run: RunConfig,
     ``repro.core.template.render_plans``; the dry-run records it in its JSON
     artifact. ``phase`` narrows to one serving bucket's step program (see
     ``_forward_islands``) — the serving engine resolves a plan table per
-    shape bucket this way."""
+    shape bucket this way; ``page_size`` > 0 swaps in the paged-cache
+    serving islands."""
     return [i.plan() for i in _forward_islands(cfg, run, rules,
                                                batch=batch, seq=seq,
-                                               phase=phase)]
+                                               phase=phase,
+                                               page_size=page_size)]
 
 
 def island_comm_sweeps(cfg: ArchConfig, run: RunConfig,

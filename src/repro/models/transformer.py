@@ -405,9 +405,13 @@ def decode_step(params, cache, tokens, cfg: ArchConfig, run: RunConfig,
     """One decode step. tokens: (B, 1) int32. Returns (logits, new_cache).
 
     Scans over periods with the per-period cache slices threaded as scan
-    inputs/outputs. RoPE position = cache["pos"].
+    inputs/outputs. RoPE position = cache["pos"]. A cache carrying
+    ``block_tables`` routes attention through the paged-pool islands
+    (``runtime/paging.py`` layout) — same step signature, so
+    ``make_serve_step`` and the engine's jit/donation story are unchanged.
     """
     pos = cache["pos"]
+    bt = cache.get("block_tables")
     x = L.embed_tokens(params, tokens, rules, run)
     pattern = cfg.layer_pattern()
 
@@ -419,9 +423,14 @@ def decode_step(params, cache, tokens, cfg: ArchConfig, run: RunConfig,
             cp = period_cache[f"pos{i}"]
             if spec.mixer == "attn":
                 a = bp["attn"]
-                h, nk, nv = L.decode_attention(
-                    a, L.rms_norm(a["norm"], x, cfg.norm_eps), cp["k"],
-                    cp["v"], pos, cfg, run, rules, long_ctx=long_ctx)
+                if bt is not None:
+                    h, nk, nv = L.paged_decode_attention(
+                        a, L.rms_norm(a["norm"], x, cfg.norm_eps), cp["k"],
+                        cp["v"], bt, pos, cfg, run, rules)
+                else:
+                    h, nk, nv = L.decode_attention(
+                        a, L.rms_norm(a["norm"], x, cfg.norm_eps), cp["k"],
+                        cp["v"], pos, cfg, run, rules, long_ctx=long_ctx)
                 x = x + h
                 new_cache[f"pos{i}"] = {"k": nk, "v": nv}
             else:
@@ -455,6 +464,8 @@ def decode_step(params, cache, tokens, cfg: ArchConfig, run: RunConfig,
     head = params["lm_head"] if "lm_head" in params else params["embed"].T
     logits = L.lm_logits({"lm_head": head}, x, rules)
     new_cache = {"pos": pos + 1, "blocks": new_blocks}
+    if bt is not None:
+        new_cache["block_tables"] = bt
     if "cross" in cache:
         new_cache["cross"] = cache["cross"]
     return logits, new_cache
@@ -591,6 +602,80 @@ def prefill_step(params, cache, tokens, prompt_lens, cfg: ArchConfig,
     if "cross" in cache:
         new_cache["cross"] = cache["cross"]
     return logits, new_cache
+
+
+def prefill_paged_step(params, cache, tokens, block_tables, prompt_lens,
+                       chunk_start, write_from, cfg: ArchConfig,
+                       run: RunConfig, rules: ShardingRules | None):
+    """One chunk of paged cache-building prefill.
+
+    tokens: (G, cl) — the chunk's token window, global positions
+    [chunk_start, chunk_start+cl); block_tables: (G, P) the *group's* page
+    mapping (NOT the live cache rows — those stay at the −1 sentinel until
+    the final chunk commits, so interleaved decode ticks cannot touch
+    half-built pages); prompt_lens: (G,) real lengths; write_from: (G,)
+    per-slot floor below which K/V writes are suppressed (positions already
+    covered by shared prefix pages). Returns (logits (G, 1, V) at each
+    slot's last real position *clamped into this chunk* — the engine keeps
+    the logits from the chunk containing L−1 — and the cache with updated
+    pools). Attention-only architectures (paged_cache_template validates).
+    """
+    b, s = tokens.shape
+    x = L.embed_tokens(params, tokens, rules, run)
+    if rules is not None:
+        x = L.constrain(x, rules, rules.act_btd())
+    pattern = cfg.layer_pattern()
+    c0 = jnp.asarray(chunk_start, jnp.int32)
+    wf = jnp.asarray(write_from, jnp.int32)
+
+    def body(x, args):
+        period_params, period_cache = args
+        new_cache = {}
+        for i, spec in enumerate(pattern):
+            bp = period_params[f"pos{i}"]
+            cp = period_cache[f"pos{i}"]
+            assert spec.mixer == "attn", "paged prefill is attention-only"
+            a = bp["attn"]
+            h, nk, nv = L.paged_prefill_attention_block(
+                a, L.rms_norm(a["norm"], x, cfg.norm_eps), cp["k"],
+                cp["v"], block_tables, c0, wf, cfg, run, rules)
+            x = x + h
+            new_cache[f"pos{i}"] = {"k": nk, "v": nv}
+            if spec.mlp == "dense":
+                mp = bp["mlp"]
+                x = x + L.mlp_block(mp, L.rms_norm(mp["norm"], x,
+                                                   cfg.norm_eps),
+                                    cfg, run, rules)
+            elif spec.mlp == "moe":
+                mp = bp["moe"]
+                h, _ = L.moe_block(mp, L.rms_norm(mp["norm"], x,
+                                                  cfg.norm_eps),
+                                   cfg, run, rules)
+                x = x + h
+        return x, new_cache
+
+    if not run.scan_layers:
+        new_list = []
+        for i in range(cfg.n_periods):
+            x, nc = body(x, jax.tree.map(lambda a: a[i],
+                                         (params["blocks"], cache["blocks"])))
+            new_list.append(nc)
+        new_blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *new_list)
+    else:
+        x, new_blocks = lax.scan(body, x, (params["blocks"], cache["blocks"]))
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    # each slot's last real position clamped into this chunk's window — the
+    # engine keeps the logits row from the chunk that contains L−1
+    idx = jnp.clip(jnp.asarray(prompt_lens) - 1 - c0, 0, s - 1)
+    idx = jnp.reshape(idx, (-1, 1, 1))
+    x_last = jnp.take_along_axis(
+        x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])), axis=1)
+    head = params["lm_head"] if "lm_head" in params else params["embed"].T
+    logits = L.lm_logits({"lm_head": head}, x_last, rules)
+    # pos and the live block tables pass through untouched: the engine
+    # commits both host-side only after the final chunk
+    return logits, {"pos": cache["pos"], "blocks": new_blocks,
+                    "block_tables": cache["block_tables"]}
 
 
 def forward_prefill(params, batch, cfg: ArchConfig, run: RunConfig,

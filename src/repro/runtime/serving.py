@@ -33,11 +33,21 @@ or one decode tick over the whole slot pool. Slots hold sequences at
 different depths — the decode step runs with a per-slot position vector
 (``cache_template(slot_pos=True)``), stale cache masked by ``ki < pos``.
 
+Memory: ``ServeConfig.cache_layout`` picks between the dense per-slot slab
+and the paged pool (``runtime/paging.py``): a fixed page pool + per-slot
+block tables + a host-side refcounting allocator, with copy-on-write prefix
+sharing and page-aligned chunked prefill (``prefill_chunk``) so a long
+prompt's prefill is split across engine steps and decode ticks interleave
+mid-prefill. Admission in paged mode allocates a request's full page span up
+front; pool exhaustion surfaces as admission backpressure (the step decodes
+instead, draining pages), never as an error.
+
 Determinism: admission, eviction, and token choice (greedy argmax) are pure
-functions of the submitted trace; ``events`` records every admit/retire so
-scheduling regressions are diffable. Continuous-batched outputs are
-bit-identical to sequential (one-request-at-a-time) processing — pinned by
-tests/test_serving.py on the emulated meshes.
+functions of the submitted trace; ``events`` records every admit/retire
+(with cache-memory metrics) plus every prefill chunk so scheduling
+regressions are diffable. Continuous-batched outputs are bit-identical to
+sequential (one-request-at-a-time) processing — pinned by
+tests/test_serving.py on the emulated meshes, for both cache layouts.
 """
 
 from __future__ import annotations
@@ -55,8 +65,10 @@ from repro.core.template import IslandPlan, plan_overrides, render_plans
 from repro.models import transformer as T
 from repro.models.layers import island_plans
 from repro.models.sharding import ShardingRules
+from repro.runtime import paging
 from repro.runtime.straggler import StepTimer, StragglerWatchdog
-from repro.train.step import make_prefill_cache_step, make_serve_step
+from repro.train.step import (make_paged_prefill_step,
+                              make_prefill_cache_step, make_serve_step)
 
 __all__ = ["Request", "Completion", "BucketPlan", "ServingEngine",
            "resolve_serving_plans", "render_serving_plans",
@@ -111,24 +123,51 @@ def padded_s_max(serve: ServeConfig, rules: ShardingRules | None) -> int:
     return -(-serve.s_max // tp) * tp
 
 
+def resolve_page_geometry(serve: ServeConfig,
+                          rules: ShardingRules | None) -> paging.PageGeometry:
+    """The engine's page-pool geometry for this (serve, mesh) pair — page
+    size padded to the tp stripe, pool partitioned with the slot batch."""
+    tp = rules.mesh.shape[rules.tp] if rules is not None else 1
+    return paging.resolve_page_geometry(
+        serve, s_max=padded_s_max(serve, rules), tp_size=tp,
+        n_partitions=paging.page_partitions(rules, serve.max_batch))
+
+
 def resolve_serving_plans(cfg: ArchConfig, run: RunConfig,
                           rules: ShardingRules | None,
                           serve: ServeConfig) -> dict[str, BucketPlan]:
     """Evaluate ``island_plans()`` per shape bucket: one prefill entry per
     bucket edge (at the bucket's exact (prefill_batch, L) coordinates) plus
     the decode pool's one-token entry. The returned overrides are what the
-    engine threads into each bucket's jitted step."""
+    engine threads into each bucket's jitted step.
+
+    Paged layout: the decode entry resolves the paged decode island (same
+    ``decode_attn`` name and Comm coordinates, so frozen plans carry over),
+    and with ``prefill_chunk`` set every bucket shares ONE chunk-shaped
+    prefill program — the inventory collapses to a single
+    ``prefill@chunk{cl}`` entry at (prefill_batch, chunk) coordinates."""
+    paged = serve.cache_layout == "paged"
+    ps = resolve_page_geometry(serve, rules).page_size if paged else 0
     out: dict[str, BucketPlan] = {}
-    for edge in serve.bucket_edges:
+    if paged and serve.prefill_chunk:
+        cl = serve.prefill_chunk
         plans = tuple(island_plans(cfg, run, rules,
-                                   batch=serve.prefill_batch, seq=edge,
-                                   phase="prefill"))
-        out[f"prefill@{edge}"] = BucketPlan(
-            "prefill", edge, serve.prefill_batch, edge, plans,
+                                   batch=serve.prefill_batch, seq=cl,
+                                   phase="prefill", page_size=ps))
+        out[f"prefill@chunk{cl}"] = BucketPlan(
+            "prefill", cl, serve.prefill_batch, cl, plans,
             plan_overrides(plans))
+    else:
+        for edge in serve.bucket_edges:
+            plans = tuple(island_plans(cfg, run, rules,
+                                       batch=serve.prefill_batch, seq=edge,
+                                       phase="prefill", page_size=ps))
+            out[f"prefill@{edge}"] = BucketPlan(
+                "prefill", edge, serve.prefill_batch, edge, plans,
+                plan_overrides(plans))
     plans = tuple(island_plans(cfg, run, rules, batch=serve.max_batch,
                                seq=padded_s_max(serve, rules),
-                               phase="decode"))
+                               phase="decode", page_size=ps))
     out["decode"] = BucketPlan("decode", serve.max_batch, serve.max_batch,
                                1, plans, plan_overrides(plans))
     return out
@@ -150,12 +189,34 @@ def serving_plan_record(cfg: ArchConfig, run: RunConfig,
     resolves the full serving schedule without building the engine, so plan
     regressions are reviewable from the artifact alone."""
     table = resolve_serving_plans(cfg, run, rules, serve)
+    s_max = padded_s_max(serve, rules)
+    cache: dict[str, Any] = {"layout": serve.cache_layout,
+                             "s_max": s_max,
+                             "slab_bytes": paging.slab_hbm_bytes(
+                                 cfg, serve.max_batch, s_max)}
+    if serve.cache_layout == "paged":
+        geom = resolve_page_geometry(serve, rules)
+        cache.update({
+            "page_size": geom.page_size, "n_pages": geom.n_pages,
+            "pages_per_slot": geom.pages_per_slot,
+            "n_partitions": geom.n_partitions,
+            "prefill_chunk": serve.prefill_chunk,
+            "pool_bytes": paging.pool_hbm_bytes(cfg, geom),
+            # per-bucket resident-slot capacity at full span (L + max_new)
+            "resident_capacity": {
+                str(e): geom.resident_capacity(e + serve.max_new_tokens,
+                                               serve.max_batch)
+                for e in serve.bucket_edges}})
+    else:
+        cache["resident_capacity"] = {str(e): serve.max_batch
+                                      for e in serve.bucket_edges}
     return {"config": {"max_batch": serve.max_batch,
                        "prefill_batch": serve.prefill_batch,
                        "bucket_edges": list(serve.bucket_edges),
                        "max_new_tokens": serve.max_new_tokens,
                        "queue_policy": serve.queue_policy},
             "comm_policy": run.comm_policy,
+            "cache": cache,
             "buckets": {name: bp.asdict() for name, bp in table.items()}}
 
 
@@ -168,6 +229,31 @@ class _Slot:
     admitted_step: int
     bucket: int
     prompt_len: int
+
+
+@dataclasses.dataclass
+class _PrefillJob:
+    """One in-flight chunked paged prefill: a bucket group whose chunks run
+    across engine steps (decode ticks interleave between them). Group rows
+    are partition-aligned — row ``p*rows_per_part + i`` computes on dp shard
+    ``p`` and writes that shard's pool partition."""
+
+    bucket: int
+    chunk_len: int
+    n_chunks: int                    # ceil(bucket / chunk_len)
+    next_chunk: int                  # resumes past fully-shared chunks
+    end_chunk: int                   # last chunk any row needs
+    reqs: list                       # Request | None per group row
+    slot_ids: list                   # int | None per group row
+    tokens: np.ndarray               # (G, n_chunks*cl) right-padded prompts
+    lens: np.ndarray                 # (G,) real lengths (1 for pad rows)
+    write_from: np.ndarray           # (G,) shared-prefix write floor
+    group_bt: np.ndarray             # (G, pages_per_slot) global page ids
+    pages: list                      # per row: owned page list (refs held)
+    shared: list                     # per row: leading shared-page count
+    logit_chunk: list                # per row: chunk containing L-1
+    first_token: list                # per row: captured greedy first token
+    started_step: int
 
 
 class ServingEngine:
@@ -202,10 +288,40 @@ class ServingEngine:
         # --- decode pool state -------------------------------------------
         b = self.serve.max_batch
         self.s_max = padded_s_max(self.serve, rules)
-        self._cache_tmpl = T.cache_template(cfg, self._runs["decode"], rules,
-                                            batch=b, s_max=self.s_max,
-                                            slot_pos=True)
-        self.cache = self._sharded_zeros(self._cache_tmpl)
+        self.paged = self.serve.cache_layout == "paged"
+        if self.paged:
+            self.geom = resolve_page_geometry(self.serve, rules)
+            if self.serve.prefill_batch % self.geom.n_partitions:
+                raise ValueError(
+                    f"paged prefill groups are partition-aligned: "
+                    f"prefill_batch ({self.serve.prefill_batch}) must be a "
+                    f"multiple of the pool partition count "
+                    f"({self.geom.n_partitions})")
+            self._cache_tmpl = paging.paged_cache_template(
+                cfg, self._runs["decode"], rules, batch=b, geom=self.geom)
+            self.cache = self._sharded_zeros(self._cache_tmpl)
+            # block tables start fully unmapped (-1), never all-zeros: a
+            # zero row would alias every free slot onto physical page 0
+            self._commit_leaf("block_tables",
+                              jnp.full((b, self.geom.pages_per_slot), -1,
+                                       jnp.int32))
+            self.allocator = paging.PageAllocator(self.geom)
+            self.prefix = paging.PrefixCache(self.allocator)
+            # MoE capacity dropping makes K/V depend on batch composition,
+            # so a donor's pages are not reusable bit-for-bit — disable
+            # sharing there (chunked prefill itself is still fine)
+            self._share_ok = all(sp.mlp == "dense"
+                                 for sp in cfg.layer_pattern())
+            self._bt_host = np.full((b, self.geom.pages_per_slot), -1,
+                                    np.int32)
+            self._slot_pages: list[list[int] | None] = [None] * b
+        else:
+            self.geom = None
+            self._cache_tmpl = T.cache_template(
+                cfg, self._runs["decode"], rules, batch=b, s_max=self.s_max,
+                slot_pos=True)
+            self.cache = self._sharded_zeros(self._cache_tmpl)
+        self._job: _PrefillJob | None = None
         self._decode_fn = jax.jit(
             make_serve_step(cfg, self._runs["decode"], rules),
             donate_argnums=(1,))
@@ -223,6 +339,13 @@ class ServingEngine:
         self.step_times: list[float] = []
         self.tokens_generated = 0
         self._next_rid = 0
+        # cache-memory accounting (both layouts track peak residency)
+        self.prefix_hits = 0
+        self.shared_pages_reused = 0
+        self.cow_copies = 0
+        self.admission_blocked = 0
+        self._peak_pages = 0
+        self._peak_slots = 0
 
     # -- plumbing ----------------------------------------------------------
 
@@ -244,6 +367,26 @@ class ServingEngine:
         specs = T.param_specs(self._cache_tmpl)
         return jax.tree.map(
             lambda x, s: jax.device_put(x, self.rules.named(s)), cache, specs)
+
+    def _commit_leaf(self, name: str, val) -> None:
+        """Replace ONE top-level cache leaf, re-pinned to its sharding —
+        cheaper than recommitting the whole pool for block-table edits."""
+        if self.rules is not None:
+            spec = T.param_specs(self._cache_tmpl)[name]
+            val = jax.device_put(val, self.rules.named(spec))
+        self.cache = {**self.cache, name: val}
+
+    def _mem_metrics(self) -> dict:
+        """Cache-memory snapshot attached to every admit/retire event."""
+        live = sum(s is not None for s in self.slots)
+        self._peak_slots = max(self._peak_slots, live)
+        m: dict[str, Any] = {"resident_slots": live}
+        if self.paged:
+            rp = self.allocator.resident_pages
+            self._peak_pages = max(self._peak_pages, rp)
+            m["resident_pages"] = rp
+            m["free_pages"] = self.geom.n_pages - rp
+        return m
 
     def _greedy(self, logits) -> np.ndarray:
         """Next token per slot — the ONE sampling rule both the engine and
@@ -276,6 +419,32 @@ class ServingEngine:
                 self.cfg, run, self.rules, batch=self.serve.prefill_batch,
                 s_max=self.s_max, slot_pos=True)
         return self._prefill_fns[bucket]
+
+    def _paged_prefill_fn(self, bucket: int):
+        """Jitted chunk program, keyed by chunk length: with
+        ``prefill_chunk`` set every bucket shares ONE (G, cl) program; in
+        single-shot paged mode (chunk = bucket) it is per-bucket like the
+        slab path."""
+        cl = self.serve.prefill_chunk or bucket
+        if cl not in self._prefill_fns:
+            name = (f"prefill@chunk{cl}" if self.serve.prefill_chunk
+                    else f"prefill@{bucket}")
+            if name not in self.bucket_plans:
+                run = self.base_run
+                plans = tuple(island_plans(
+                    self.cfg, run, self.rules,
+                    batch=self.serve.prefill_batch, seq=cl, phase="prefill",
+                    page_size=self.geom.page_size))
+                self.bucket_plans[name] = BucketPlan(
+                    "prefill", bucket, self.serve.prefill_batch, cl,
+                    plans, plan_overrides(plans))
+                self._runs[name] = dataclasses.replace(
+                    run, island_overrides=self.bucket_plans[name].overrides)
+            self._prefill_fns[cl] = jax.jit(
+                make_paged_prefill_step(self.cfg, self._runs[name],
+                                        self.rules),
+                donate_argnums=(1,))
+        return self._prefill_fns[cl]
 
     @property
     def compiled_buckets(self) -> list[int]:
@@ -337,6 +506,201 @@ class ServingEngine:
             self.queue.remove(r)
         return head_bucket, group, free[:len(group)]
 
+    # -- paged scheduling --------------------------------------------------
+
+    def _next_group_paged(self):
+        """Paged admission: place queued head-bucket requests into
+        partition-aligned group rows, allocating each request's FULL page
+        span (prompt + max_new — no mid-decode allocation) up front, with
+        prefix-share lookup against the registry. Stops at the first
+        request that fits nowhere (strict order → deterministic
+        backpressure); returns (bucket, placements) or None. Each placement
+        is (request, slot, row, pages, n_shared, cow_src, write_from)."""
+        if self._job is not None or not self.queue:
+            return None
+        geom, serve = self.geom, self.serve
+        b_loc = serve.max_batch // geom.n_partitions
+        rows_per_part = serve.prefill_batch // geom.n_partitions
+        free = {p: [i for i in range(p * b_loc, (p + 1) * b_loc)
+                    if self.slots[i] is None]
+                for p in range(geom.n_partitions)}
+        if not any(free.values()):
+            return None
+        head_bucket = serve.bucket_for(len(self.queue[0].prompt))
+        if serve.queue_policy == "fcfs":
+            cands = []
+            for r in self.queue:
+                if serve.bucket_for(len(r.prompt)) != head_bucket:
+                    break
+                cands.append(r)
+        else:                                    # bucket-greedy
+            cands = [r for r in self.queue
+                     if serve.bucket_for(len(r.prompt)) == head_bucket]
+        sched = ("chunk", serve.prefill_chunk or head_bucket)
+        placements, used = [], {p: 0 for p in range(geom.n_partitions)}
+        blocked = False
+        for r in cands:
+            if len(placements) == serve.prefill_batch:
+                break
+            need = geom.pages_for(len(r.prompt) + r.max_new_tokens)
+            placed = False
+            for p in range(geom.n_partitions):
+                if not free[p] or used[p] >= rows_per_part:
+                    continue
+                shared, cow_src, wf = [], None, 0
+                if self._share_ok:
+                    m, ent = self.prefix.lookup(p, r.prompt, sched)
+                    if ent is not None and m:
+                        nfull = m // geom.page_size
+                        shared = list(ent.pages[:nfull])
+                        if m % geom.page_size and nfull < len(ent.pages):
+                            cow_src = ent.pages[nfull]
+                        wf = m
+                # retain BEFORE the eviction loop so evicting the donor
+                # entry cannot free the pages we are about to share
+                self.allocator.retain(shared)
+                if cow_src is not None:
+                    self.allocator.retain([cow_src])
+                while True:
+                    fresh = self.allocator.alloc(p, need - len(shared))
+                    if fresh is not None or not self.prefix.evict_one(p):
+                        break
+                if fresh is None:
+                    self.allocator.release(shared)
+                    if cow_src is not None:
+                        self.allocator.release([cow_src])
+                    continue
+                slot = free[p].pop(0)
+                row = p * rows_per_part + used[p]
+                used[p] += 1
+                placements.append((r, slot, row, shared + fresh,
+                                   len(shared), cow_src, wf))
+                placed = True
+                break
+            if not placed:
+                blocked = True
+                break
+        if not placements:
+            if blocked:
+                self.admission_blocked += 1
+            return None
+        for pl in placements:
+            self.queue.remove(pl[0])
+        return head_bucket, placements
+
+    def _start_prefill_job(self, bucket: int, placements: list) -> None:
+        geom, serve = self.geom, self.serve
+        g = serve.prefill_batch
+        cl = serve.prefill_chunk or bucket
+        n_chunks = -(-bucket // cl)
+        job = _PrefillJob(
+            bucket=bucket, chunk_len=cl, n_chunks=n_chunks,
+            next_chunk=n_chunks - 1, end_chunk=0,
+            reqs=[None] * g, slot_ids=[None] * g,
+            tokens=np.zeros((g, n_chunks * cl), np.int32),
+            lens=np.ones((g,), np.int32),
+            write_from=np.zeros((g,), np.int32),
+            group_bt=np.full((g, geom.pages_per_slot), -1, np.int32),
+            pages=[[] for _ in range(g)], shared=[0] * g,
+            logit_chunk=[0] * g, first_token=[None] * g,
+            started_step=self.step_no)
+        copies = []
+        for (r, slot, row, pages, nsh, cow_src, wf) in placements:
+            length = len(r.prompt)
+            job.reqs[row], job.slot_ids[row] = r, slot
+            job.tokens[row, :length] = r.prompt
+            job.lens[row] = length
+            job.write_from[row] = wf
+            job.group_bt[row, :len(pages)] = pages
+            job.pages[row], job.shared[row] = pages, nsh
+            if cow_src is not None:
+                # boundary page: device-copy donor -> first fresh page
+                copies.append((cow_src, pages[nsh]))
+                self.cow_copies += 1
+            if wf:
+                self.prefix_hits += 1
+                self.shared_pages_reused += nsh
+            lc = (length - 1) // cl
+            job.logit_chunk[row] = lc
+            job.end_chunk = max(job.end_chunk, lc)
+            # a fully-shared prefix still owes the logits chunk (min)
+            job.next_chunk = min(job.next_chunk, min(wf // cl, lc))
+        if copies:
+            self._cow_device_copy(copies)
+        for (_, _, _, _, _, cow_src, _) in placements:
+            if cow_src is not None:
+                self.allocator.release([cow_src])   # admission's temp retain
+        self._job = job
+
+    def _cow_device_copy(self, copies: list[tuple[int, int]]) -> None:
+        """Copy donor boundary pages into fresh ones across every layer's
+        K/V pool (page dim is axis 1: (periods, pages, Hkv, page, hd)).
+        src and dst always share a partition, so the copy is shard-local."""
+        src = jnp.asarray([s for s, _ in copies])
+        dst = jnp.asarray([d for _, d in copies])
+        blocks = jax.tree.map(lambda x: x.at[:, dst].set(x[:, src]),
+                              self.cache["blocks"])
+        self.cache = self._recommit_cache({**self.cache, "blocks": blocks})
+
+    def _prefill_chunk_step(self) -> None:
+        """Run the job's next chunk; the live cache's block-table rows stay
+        at the -1 sentinel until ``_finish_prefill_job`` commits, so decode
+        ticks interleaved between chunks cannot touch half-built pages."""
+        job = self._job
+        c = job.next_chunk
+        c0 = c * job.chunk_len
+        fn = self._paged_prefill_fn(job.bucket)
+        logits, self.cache = fn(
+            self.params, self.cache,
+            jnp.asarray(job.tokens[:, c0:c0 + job.chunk_len]),
+            jnp.asarray(job.group_bt), jnp.asarray(job.lens),
+            jnp.asarray(c0, jnp.int32), jnp.asarray(job.write_from))
+        first = self._greedy(logits)
+        for row, r in enumerate(job.reqs):
+            if r is not None and job.logit_chunk[row] == c:
+                job.first_token[row] = int(first[row])
+        self.events.append(
+            ("prefill_chunk", self.step_no,
+             tuple(r.rid for r in job.reqs if r is not None),
+             c, job.n_chunks))
+        job.next_chunk += 1
+        if job.next_chunk > job.end_chunk:
+            self._finish_prefill_job()
+
+    def _finish_prefill_job(self) -> None:
+        """Last chunk done: commit block-table rows + positions into the
+        live cache, open the slots, register prompts for prefix sharing."""
+        job, geom = self._job, self.geom
+        self._job = None
+        rows = [i for i, r in enumerate(job.reqs) if r is not None]
+        idx = np.asarray([job.slot_ids[i] for i in rows])
+        for i in rows:
+            self._bt_host[job.slot_ids[i]] = job.group_bt[i]
+        self._commit_leaf("block_tables",
+                          self.cache["block_tables"]
+                          .at[idx].set(jnp.asarray(job.group_bt[rows])))
+        self._commit_leaf("pos", self.cache["pos"]
+                          .at[idx].set(jnp.asarray(job.lens[rows])))
+        for i in rows:
+            r, slot = job.reqs[i], job.slot_ids[i]
+            self._slot_pages[slot] = job.pages[i]
+            if self._share_ok:
+                part = geom.slot_partition(slot, self.serve.max_batch)
+                self.prefix.register(
+                    part, r.prompt,
+                    job.pages[i][:geom.pages_for(len(r.prompt))],
+                    ("chunk", job.chunk_len))
+            tok = job.first_token[i]
+            self.slots[slot] = _Slot(
+                rid=r.rid, last_token=tok, remaining=r.max_new_tokens - 1,
+                tokens=[tok], admitted_step=job.started_step,
+                bucket=job.bucket, prompt_len=len(r.prompt))
+            self.tokens_generated += 1
+            self.events.append(("admit", self.step_no, r.rid, slot,
+                                job.bucket, self._mem_metrics()))
+            if self.slots[slot].remaining == 0:
+                self._retire(slot)
+
     def _prefill(self, bucket: int, reqs: list[Request],
                  slot_ids: list[int]) -> None:
         g = self.serve.prefill_batch
@@ -365,7 +729,8 @@ class ServingEngine:
                 remaining=r.max_new_tokens - 1,
                 tokens=[int(first[i])], admitted_step=self.step_no,
                 bucket=bucket, prompt_len=len(r.prompt))
-            self.events.append(("admit", self.step_no, r.rid, slot, bucket))
+            self.events.append(("admit", self.step_no, r.rid, slot, bucket,
+                                self._mem_metrics()))
             self.tokens_generated += 1
             if self.slots[slot].remaining == 0:
                 self._retire(slot)
@@ -376,8 +741,18 @@ class ServingEngine:
             rid=s.rid, prompt_len=s.prompt_len, bucket=s.bucket,
             tokens=list(s.tokens), admitted_step=s.admitted_step,
             finished_step=self.step_no, slot=slot)
-        self.events.append(("retire", self.step_no, s.rid, slot))
         self.slots[slot] = None
+        if self.paged:
+            # unmap BEFORE releasing: a freed page may be re-allocated next
+            # step, and this slot keeps decoding inertly (writes must hit
+            # the -1 sentinel and drop, never a recycled page)
+            self._bt_host[slot] = -1
+            self._commit_leaf("block_tables",
+                              self.cache["block_tables"].at[slot].set(-1))
+            self.allocator.release(self._slot_pages[slot] or [])
+            self._slot_pages[slot] = None
+        self.events.append(("retire", self.step_no, s.rid, slot,
+                            self._mem_metrics()))
 
     def _decode_tick(self) -> None:
         tokens = np.zeros((self.serve.max_batch, 1), np.int32)
@@ -400,8 +775,42 @@ class ServingEngine:
     def step(self) -> str | None:
         """One engine step: a bucket prefill when admission is possible,
         else a decode tick over the pool. Returns the step kind, or None
-        when fully idle."""
+        when fully idle.
+
+        Paged mode runs ONE prefill chunk per prefill step and alternates
+        with decode ticks while a job is in flight (chunk, decode, chunk,
+        ...), so decode latency is bounded by a chunk — the whole point of
+        chunked prefill. Pool exhaustion shows up here as "no group" with a
+        non-empty queue: the step decodes instead, draining pages."""
         active = any(s is not None for s in self.slots)
+        if self.paged:
+            group = self._next_group_paged()
+            if group is None and self._job is None and not active:
+                if self.queue:
+                    raise RuntimeError(
+                        "paged admission deadlock: queue non-empty but no "
+                        "slots/pages can ever free (pool undersized?)")
+                return None
+            with StepTimer() as t:
+                if group is not None:
+                    self._start_prefill_job(*group)
+                    self._prefill_chunk_step()
+                    kind = "prefill"
+                elif self._job is not None and not (
+                        active and self.step_kinds
+                        and self.step_kinds[-1] == "prefill"):
+                    self._prefill_chunk_step()
+                    kind = "prefill"
+                else:
+                    self._decode_tick()
+                    kind = "decode"
+            self.step_no += 1
+            self.step_kinds.append(kind)
+            self.step_times.append(t.dt)
+            if self.watchdog.record(self.step_no, t.dt):
+                print(f"[serve] STRAGGLER step {self.step_no} ({kind}): "
+                      f"{t.dt:.3f}s (deadline {self.watchdog.deadline:.3f}s)")
+            return kind
         group = self._next_group()
         if group is None and not active:
             return None
@@ -514,6 +923,35 @@ class ServingEngine:
                 out[i].append(int(last[i]))
         return [seq[:mx] for seq in out]
 
+    def cache_stats(self) -> dict:
+        """Cache-memory story: layout, pool bytes vs the slab equivalent,
+        residency peaks, prefix-sharing and backpressure counters."""
+        slab = paging.slab_hbm_bytes(self.cfg, self.serve.max_batch,
+                                     self.s_max)
+        out: dict[str, Any] = {
+            "layout": self.serve.cache_layout,
+            "peak_resident_slots": self._peak_slots,
+            "slab_bytes": slab,
+        }
+        if not self.paged:
+            out["hbm_bytes"] = slab
+            return out
+        g = self.geom
+        out.update({
+            "hbm_bytes": paging.pool_hbm_bytes(self.cfg, g),
+            "page_size": g.page_size, "n_pages": g.n_pages,
+            "pages_per_slot": g.pages_per_slot,
+            "n_partitions": g.n_partitions,
+            "resident_pages": self.allocator.resident_pages,
+            "peak_resident_pages": self._peak_pages,
+            "peak_pool_occupancy": self._peak_pages / g.n_pages,
+            "prefix_hits": self.prefix_hits,
+            "shared_pages_reused": self.shared_pages_reused,
+            "cow_copies": self.cow_copies,
+            "admission_blocked": self.admission_blocked,
+        })
+        return out
+
     def stats(self) -> dict:
         total = sum(self.step_times)
         return {
@@ -525,4 +963,5 @@ class ServingEngine:
             "tokens_per_s": self.tokens_generated / total if total else 0.0,
             "straggler_events": len(self.watchdog.events),
             "compiled_buckets": self.compiled_buckets,
+            "cache": self.cache_stats(),
         }

@@ -101,3 +101,20 @@ def make_prefill_cache_step(cfg: ArchConfig, run: RunConfig,
         return T.prefill_step(params, cache, tokens, prompt_lens, cfg, run,
                               rules)
     return prefill_step
+
+
+def make_paged_prefill_step(cfg: ArchConfig, run: RunConfig,
+                            rules: ShardingRules | None):
+    """Returns prefill(params, cache, tokens, block_tables, prompt_lens,
+    chunk_start, write_from) -> (logits, cache) — one chunk of paged
+    cache-building prefill against the page pool (runtime/paging.py). The
+    serving engine jits exactly one of these per chunk length: with
+    ``prefill_chunk`` set, every bucket shares the same (G, cl) program and
+    only the chunk count varies — prefill becomes just another chunked
+    schedule the engine interleaves with decode ticks."""
+    def prefill_step(params, cache, tokens, block_tables, prompt_lens,
+                     chunk_start, write_from):
+        return T.prefill_paged_step(params, cache, tokens, block_tables,
+                                    prompt_lens, chunk_start, write_from,
+                                    cfg, run, rules)
+    return prefill_step

@@ -1,0 +1,153 @@
+"""Paged KV-cache primitives (repro.runtime.paging), host-side only:
+
+* geometry resolution — tp padding, partition rounding, capacity math;
+* PageAllocator — deterministic all-or-nothing allocation, refcounted
+  retain/release, partition-local free lists over global ids;
+* PrefixCache — longest-common-prefix lookup, schedule gating, retained
+  pages surviving donor release, FIFO eviction;
+* paged_cache_template — shape/partitioning of the pool tree and the
+  attention-only guard.
+
+Engine-level paged behavior (bit-identity, chunk interleave, backpressure)
+lives in tests/test_paged_serving.py.
+"""
+
+import dataclasses
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import RunConfig, ServeConfig
+from repro.models.sharding import ShardingRules
+from repro.runtime import paging
+
+SERVE = ServeConfig(max_batch=4, prefill_batch=2, bucket_edges=(8, 16),
+                    max_new_tokens=4, cache_layout="paged", page_size=4)
+
+
+# ---------------------------------------------------------------------------
+# Geometry
+# ---------------------------------------------------------------------------
+
+def test_geometry_resolution_and_padding():
+    g = paging.resolve_page_geometry(SERVE, s_max=20)
+    assert g.page_size == 4 and g.pages_per_slot == 5
+    assert g.n_pages == 4 * 5                    # slab-equivalent default
+    assert g.pages_for(1) == 1 and g.pages_for(4) == 1 and g.pages_for(5) == 2
+    # page interior stripes over tp: page_size pads up to |tp|
+    g8 = paging.resolve_page_geometry(
+        dataclasses.replace(SERVE, page_size=6), s_max=24, tp_size=4)
+    assert g8.page_size == 8
+    # pool rounds to the partition count and reports per-partition capacity
+    gp = paging.resolve_page_geometry(
+        dataclasses.replace(SERVE, n_pages=11), s_max=8, n_partitions=2)
+    assert gp.n_pages == 12 and gp.pages_per_partition == 6
+    assert gp.slot_partition(0, 4) == 0 and gp.slot_partition(2, 4) == 1
+    # capacity: how many full-span requests fit resident at once
+    assert gp.resident_capacity(8, 4) == 4       # 2 pages/req, capped by b
+    assert gp.resident_capacity(8, 100) == 6
+
+
+def test_geometry_rejects_undersized_pool_and_misaligned_chunk():
+    with pytest.raises(ValueError, match="pool too small"):
+        paging.resolve_page_geometry(
+            dataclasses.replace(SERVE, n_pages=4), s_max=20)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        # tp pads the page 4 -> 8; a chunk of 4 is no longer page-aligned
+        paging.resolve_page_geometry(
+            dataclasses.replace(SERVE, prefill_chunk=4, page_size=4),
+            s_max=20, tp_size=8)
+    # the same chunk IS aligned when tp does not pad the page
+    paging.resolve_page_geometry(
+        dataclasses.replace(SERVE, prefill_chunk=8, page_size=4), s_max=20)
+
+
+# ---------------------------------------------------------------------------
+# Allocator
+# ---------------------------------------------------------------------------
+
+def _alloc(n_pages=8, n_partitions=2):
+    geom = paging.PageGeometry(page_size=4, n_pages=n_pages,
+                               pages_per_slot=2, n_partitions=n_partitions)
+    return paging.PageAllocator(geom)
+
+
+def test_alloc_is_deterministic_and_all_or_nothing():
+    a = _alloc()
+    assert a.alloc(0, 2) == [0, 1]               # lowest global id first
+    assert a.alloc(1, 1) == [4]                  # partition 1 owns [4, 8)
+    assert a.alloc(0, 3) is None                 # only 2 left: no partial
+    assert a.free_pages(0) == 2
+    assert a.resident_pages == 3
+
+
+def test_refcount_retain_release():
+    a = _alloc()
+    pages = a.alloc(0, 2)
+    a.retain(pages)                              # shared by a second owner
+    assert a.release(pages) == 0                 # first owner: still held
+    assert a.refcount(pages[0]) == 1
+    assert a.release(pages) == 2                 # last owner frees
+    assert a.resident_pages == 0
+    # release derives the partition from the global id
+    p1 = a.alloc(1, 2)
+    a.release(p1)
+    assert a.free_pages(1) == 4
+    # freed pages come back lowest-first
+    assert a.alloc(0, 1) == [0]
+
+
+def test_prefix_cache_lookup_register_evict():
+    a = _alloc(n_pages=12, n_partitions=1)
+    pc = paging.PrefixCache(a, max_entries=2)
+    pages = a.alloc(0, 3)
+    pc.register(0, (1, 2, 3, 4, 5, 6, 7, 8, 9), pages, ("chunk", 8))
+    # registry retains: donor release must NOT free the pages
+    a.release(pages)
+    assert a.resident_pages == 3
+    m, ent = pc.lookup(0, (1, 2, 3, 4, 5, 99), ("chunk", 8))
+    assert m == 5 and ent.pages == tuple(pages)
+    # schedule mismatch never matches (different chunk program)
+    assert pc.lookup(0, (1, 2, 3), ("chunk", 4)) == (0, None)
+    # FIFO eviction releases the oldest entry's pages
+    for seed in (50, 60):
+        pg = a.alloc(0, 1)
+        pc.register(0, (seed,), pg, ("chunk", 8))
+        a.release(pg)
+    assert len(pc) == 2 and a.refcount(pages[0]) == 0
+    assert pc.evict_one(0) and pc.evict_one(0) and not pc.evict_one(0)
+    assert a.resident_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# Cache template
+# ---------------------------------------------------------------------------
+
+def test_paged_cache_template_shapes(mesh22):
+    cfg = get_config("tinyllama-1.1b").reduced()
+    run = RunConfig(dp_axes=("data",), fsdp=False)
+    rules = ShardingRules(mesh22, run)
+    geom = paging.resolve_page_geometry(
+        SERVE, s_max=20, tp_size=2,
+        n_partitions=paging.page_partitions(rules, SERVE.max_batch))
+    assert geom.n_partitions == 2
+    tree = paging.paged_cache_template(cfg, run, rules, batch=4, geom=geom)
+    assert tree["block_tables"].shape == (4, geom.pages_per_slot)
+    k = tree["blocks"]["pos0"]["k"]
+    assert k.shape == (cfg.n_periods, geom.n_pages, cfg.n_kv_heads,
+                       geom.page_size, cfg.hd)
+    # pages over dp, page interior striped over tp
+    assert k.spec == P(None, "data", None, "model", None)
+    assert tree["block_tables"].spec == P("data", None)
+    # pool/slab byte accounting agree at the slab-equivalent default
+    assert paging.pool_hbm_bytes(cfg, geom) == \
+        paging.slab_hbm_bytes(cfg, SERVE.max_batch, 20)
+
+
+def test_paged_template_rejects_ssm():
+    cfg = get_config("falcon-mamba-7b").reduced()
+    run = RunConfig(dp_axes=("data",), fsdp=False)
+    geom = paging.resolve_page_geometry(SERVE, s_max=20)
+    with pytest.raises(ValueError, match="pure-attention"):
+        paging.paged_cache_template(cfg, run, None, batch=4, geom=geom)

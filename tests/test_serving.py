@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.configs import get_config
@@ -24,7 +25,6 @@ from repro.core.template import (Comm, Island, island_override,
                                  plan_overrides)
 from repro.models.sharding import ShardingRules
 from repro.runtime.serving import resolve_serving_plans, serving_plan_record
-from jax.sharding import PartitionSpec as P
 
 
 def _engine(mesh_shape, serve, arch="tinyllama-1.1b", **kw):
@@ -106,8 +106,9 @@ def test_admission_eviction_deterministic():
     assert len(admits) == len(retires) == 7
     # every admit names the right bucket for its prompt length
     lens = [5, 12, 3, 8, 16, 2, 7]
-    for (_, _, rid, _, bucket) in admits:
+    for (_, _, rid, _, bucket, mem) in admits:
         assert bucket == SERVE.bucket_for(lens[rid])
+        assert mem["resident_slots"] >= 1      # memory metrics ride along
     # fcfs: admission order == arrival order
     assert [a[2] for a in admits] == sorted(a[2] for a in admits)
     # slots are reused only after retirement
@@ -161,6 +162,8 @@ def test_serving_plan_record_shape(mesh22):
     rules = ShardingRules(mesh22, run)
     rec = serving_plan_record(cfg, run, rules, SERVE)
     assert set(rec["buckets"]) == {"prefill@8", "prefill@16", "decode"}
+    assert rec["cache"]["layout"] == "slab"
+    assert rec["cache"]["resident_capacity"] == {"8": 4, "16": 4}
     pre = rec["buckets"]["prefill@16"]
     dec = rec["buckets"]["decode"]
     assert pre["phase"] == "prefill" and pre["seq"] == 16
