@@ -2,7 +2,7 @@
 PY ?= python
 
 .PHONY: test test-full lint bench bench-baseline calibrate quickstart deps \
-        serve-smoke
+        serve-smoke fleet-smoke
 
 deps:
 	$(PY) -m pip install -r requirements.txt
@@ -37,6 +37,13 @@ serve-smoke:        # continuous-batching engine over a tiny synthetic trace
 	    --mode continuous --mesh-shape 1 8 --requests 6 --tokens 4 \
 	    --max-batch 4 --prefill-batch 2 --bucket-edges 8 16 \
 	    --comm-policy auto
+
+fleet-smoke:        # 2-replica fleet with a scripted kill + rejoin
+	PYTHONPATH=src $(PY) -m repro.launch.serve --arch tinyllama-1.1b \
+	    --reduced --mode continuous --replicas 2 --router least-loaded \
+	    --fault-plan "drain:1@1 kill:1@3 rejoin:1@5" \
+	    --ckpt-dir /tmp/repro-fleet-ckpt --requests 8 --tokens 4 \
+	    --max-batch 4 --prefill-batch 2 --bucket-edges 8 16
 
 quickstart:
 	PYTHONPATH=src $(PY) examples/quickstart.py

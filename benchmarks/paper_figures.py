@@ -478,8 +478,73 @@ def fig_serving():
                 f"hidden={plan.hidden_fraction} src={plan.source}")
 
 
+def fig_fleet():
+    """Serving fleet (runtime/fleet.py): tokens/s vs replica count, plus
+    the kill-one-replica completion-set-invariance trace.
+
+    NOTE: replicas are in-process engines stepped round-robin on ONE
+    machine, so on the emulated CPU mesh tokens/s does NOT scale with N —
+    every replica shares the same cores and each adds its own jit-cache
+    footprint. The replica rows track per-replica-count trajectory (a
+    routing/scheduling regression shows as one count degrading relative to
+    the others), not a scaling claim; real scaling needs one host per
+    replica. The kill row is the correctness trace: a scripted
+    drain->kill->rejoin fleet run must complete every request exactly once,
+    token-identical to the no-fault run (`identical=True` in the derived
+    string; also pinned hard by tests/test_fleet.py)."""
+    import time
+
+    from repro.configs.base import FleetConfig, ServeConfig
+    from repro.launch.serve import build_engine, synthetic_trace
+    from repro.runtime.fleet import FaultPlan, ServingFleet
+
+    serve = ServeConfig(max_batch=4, prefill_batch=2, bucket_edges=(8, 16),
+                        max_new_tokens=8)
+
+    def factory(i):
+        return build_engine("tinyllama-1.1b", reduced=True, serve=serve)
+
+    trace = synthetic_trace(12, serve, 64, seed=2)
+    useful = 12 * serve.max_new_tokens
+
+    ref2 = None                          # fleet-of-2 tokens, kill-row ref
+    for n in (1, 2, 4):
+        fleet = ServingFleet(factory, FleetConfig(n_replicas=n))
+        fleet.run(trace)                 # warm every replica's jit cache
+        t0 = time.perf_counter()
+        out = fleet.run(trace)
+        dt = time.perf_counter() - t0
+        st = fleet.stats()
+        if n == 2:
+            ref2 = {c.rid - out[0].rid: tuple(c.tokens) for c in out}
+        row(f"fig_fleet/replicas/{n}", dt * 1e6 / useful,
+            f"useful_tokens={useful} steals={st['steals']} "
+            f"assignments={st['assignments']}",
+            tokens_per_s=useful / dt)
+
+    # kill-one-replica trace: cold run (the fault plan scripts absolute
+    # fleet steps, so no warm pass), checked token-for-token against the
+    # warm no-fault fleet-of-2 run above
+    plan = FaultPlan.parse("drain:1@1 kill:1@3 rejoin:1@6")
+    fleet = ServingFleet(factory, FleetConfig(n_replicas=2),
+                         fault_plan=plan)
+    t0 = time.perf_counter()
+    out = fleet.run(trace)
+    dt = time.perf_counter() - t0
+    got = {c.rid: tuple(c.tokens) for c in out}
+    identical = got == ref2 and len(out) == len(trace)
+    st = fleet.stats()
+    row("fig_fleet/kill_one", dt * 1e6 / useful,
+        f"identical={identical} requeued={st['requeued']} "
+        f"completed={st['completed']} live={st['live']} (cold run)",
+        tokens_per_s=useful / dt)
+    if not identical:
+        raise AssertionError(
+            "kill-one-replica run diverged from the no-fault completion set")
+
+
 ALL = [fig2_3_transfer_granularity, table3_hiding_threshold,
        fig6_allreduce_design_overhead, fig7_ag_gemm, fig8_gemm_rs,
        fig9_gemm_ar, fig10_ring_attention, fig11_ulysses, fig12_moe_dispatch,
        fig15_17_strided_collectives, fig_unified_template,
-       fig_chunk_pipeline, fig_serving]
+       fig_chunk_pipeline, fig_serving, fig_fleet]

@@ -31,3 +31,20 @@ if [ "${REPRO_SERVE:-1}" != "0" ]; then
              "'make serve-smoke' for details)" >&2
     fi
 fi
+
+# Stage 4 (non-blocking): the multi-replica fleet smoke (`make
+# fleet-smoke`: scripted drain/kill/rejoin over a 2-replica fleet) plus the
+# slow randomized-trace fuzz (`pytest -m slow`; excluded from tier-1 by the
+# pyproject addopts, and a no-op skip when hypothesis is absent). Skip with
+# REPRO_FLEET=0.
+if [ "${REPRO_FLEET:-1}" != "0" ]; then
+    if ! make fleet-smoke; then
+        echo "WARNING: fleet-smoke stage failed (non-blocking; run" \
+             "'make fleet-smoke' for details)" >&2
+    fi
+    if ! PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+            python -m pytest -q -m slow tests/test_property.py; then
+        echo "WARNING: slow fuzz stage failed (non-blocking; run" \
+             "'pytest -m slow' for details)" >&2
+    fi
+fi

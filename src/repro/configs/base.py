@@ -387,3 +387,48 @@ class ServeConfig:
         raise ValueError(
             f"prompt length {prompt_len} exceeds the largest bucket edge "
             f"{self.bucket_edges[-1]}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Multi-replica serving fleet knobs (runtime/fleet.py).
+
+    ``router`` is the admission-steering policy the fleet's deterministic
+    router runs over per-replica feedback (queue depth, live slots,
+    mid-prefill rows, tokens/s, cache occupancy):
+
+    * ``"fcfs"`` — fixed rotation over the admitting replicas in request
+      order (no feedback; the baseline);
+    * ``"least-loaded"`` — argmin of (queued + in-flight + prefill rows),
+      lowest replica index breaks ties;
+    * ``"cache-affinity"`` — paged engines only: route to the replica whose
+      ``PrefixCache`` holds the longest prefix of the prompt (ties and
+      misses fall back to least-loaded).
+
+    ``step_budget`` is how many engine steps each live replica runs per
+    fleet step (the cooperative interleave quantum). ``steal`` enables
+    straggler-aware request stealing: queued (never in-flight) requests are
+    pulled back from a replica the ``FleetWatchdog`` flags — EMA above
+    ``steal_factor`` x the live-median, a blown per-replica deadline, or a
+    scripted stall — and rerouted. ``stall_dt`` is the synthetic step time
+    a stalled (fault-injected ``delay``) tick records into that replica's
+    watchdog feed, so scripted faults drive the same signal real slowness
+    would."""
+
+    n_replicas: int = 2
+    router: Literal["fcfs", "least-loaded", "cache-affinity"] = \
+        "least-loaded"
+    step_budget: int = 1
+    steal: bool = True
+    steal_factor: float = 3.0
+    stall_dt: float = 1.0
+
+    def __post_init__(self):
+        if self.n_replicas < 1:
+            raise ValueError("n_replicas must be >= 1")
+        if self.router not in ("fcfs", "least-loaded", "cache-affinity"):
+            raise ValueError(f"unknown router {self.router!r}")
+        if self.step_budget < 1:
+            raise ValueError("step_budget must be >= 1")
+        if self.steal_factor <= 1.0:
+            raise ValueError("steal_factor must exceed 1.0")

@@ -9,6 +9,16 @@
     python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
         --mesh-shape 1 8 --mode continuous --requests 12 --tokens 16
 
+    # a 2-replica fleet with a scripted kill + rejoin
+    python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
+        --mode continuous --replicas 2 --router least-loaded \
+        --fault-plan "kill:1@4 rejoin:1@8" --requests 12
+
+``--replicas N`` (N > 1) wraps N engine replicas in a
+``runtime.fleet.ServingFleet`` behind the chosen ``--router`` policy;
+``--fault-plan`` injects scripted kill/delay/drain/rejoin events
+(``kind:replica@step[xticks]``).
+
 Both modes print the per-bucket serving plan table (island backend / chunks
 / hidden fraction, measured on a calibrated mesh) before anything traces —
 the engine consumes exactly those plans via ``RunConfig.island_overrides``.
@@ -111,6 +121,51 @@ def generate(arch: str, *, reduced: bool, batch: int, prompt_len: int,
     return jnp.asarray(out, jnp.int32)
 
 
+def serve_fleet(args, serve: ServeConfig) -> None:
+    """Continuous mode with ``--replicas > 1``: a ServingFleet over
+    identical engine replicas (same arch/serve/seed — data-parallel), with
+    optional scripted faults, ending in the fleet + per-replica stats."""
+    from repro.configs.base import FleetConfig
+    from repro.runtime.fleet import FaultPlan, ServingFleet
+
+    def factory(i: int) -> ServingEngine:
+        return build_engine(args.arch, reduced=args.reduced,
+                            mesh_shape=args.mesh_shape, serve=serve,
+                            seed=args.seed, comm_policy=args.comm_policy,
+                            comm_chunks=args.comm_chunks)
+
+    plan = FaultPlan.parse(args.fault_plan) if args.fault_plan else None
+    fleet = ServingFleet(
+        factory, FleetConfig(n_replicas=args.replicas, router=args.router),
+        fault_plan=plan, ckpt_dir=args.ckpt_dir)
+    trace = synthetic_trace(args.requests, serve,
+                            fleet.replicas[0].engine.cfg.vocab_size,
+                            seed=args.seed)
+    done = fleet.run(trace)
+    st = fleet.stats()
+    print(f"[fleet] {args.arch} x{st['replicas']} ({st['router']}): "
+          f"{len(done)} requests, {st['useful_tokens']} tokens in "
+          f"{st['wall_s']:.2f}s ({st['tokens_per_s']:.1f} tok/s; "
+          f"{st['fleet_steps']} fleet steps, {st['assignments']} routed, "
+          f"{st['steals']} steals, {st['requeued']} requeued, "
+          f"{st['live']}/{st['replicas']} live)")
+    for idx, fb in sorted(st["per_replica"].items()):
+        if not fb["alive"]:
+            print(f"[fleet]   r{idx}: dead")
+            continue
+        print(f"[fleet]   r{idx}: load={fb['load']} "
+              f"queue={fb['queue_depth']} "
+              f"tok/s={fb['tokens_per_s']:.1f} "
+              f"buckets={fb['jitted_buckets']} "
+              f"ema={fb['watchdog_ema']:.3f}"
+              + (" (draining)" if fb["draining"] else ""))
+    if args.fault_plan:
+        kinds = [e[0] for e in fleet.events
+                 if e[0] in ("kill", "drain", "rejoin", "delay", "stall",
+                             "steal", "snapshot")]
+        print(f"[fleet] fault events fired: {kinds}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -140,6 +195,16 @@ def main():
     ap.add_argument("--comm-policy", default="analytic",
                     choices=["analytic", "measured", "auto"])
     ap.add_argument("--comm-chunks", type=int, default=None)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="continuous mode: >1 runs a ServingFleet of "
+                         "data-parallel engine replicas")
+    ap.add_argument("--router", default="least-loaded",
+                    choices=["fcfs", "least-loaded", "cache-affinity"])
+    ap.add_argument("--fault-plan", default=None,
+                    help="scripted faults, e.g. 'kill:1@4 rejoin:1@8' "
+                         "or 'delay:0@2x3' (kind:replica@step[xticks])")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="fleet: snapshot/rejoin checkpoint directory")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -158,6 +223,9 @@ def main():
                         cache_layout=args.cache_layout,
                         page_size=args.page_size, n_pages=args.n_pages,
                         prefill_chunk=args.prefill_chunk)
+    if args.replicas > 1:
+        serve_fleet(args, serve)
+        return
     eng = build_engine(args.arch, reduced=args.reduced,
                        mesh_shape=args.mesh_shape, serve=serve,
                        seed=args.seed, comm_policy=args.comm_policy,

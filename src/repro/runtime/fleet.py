@@ -1,0 +1,506 @@
+"""Multi-replica elastic serving fleet: N data-parallel ``ServingEngine``
+replicas behind a deterministic router, with scripted fault injection.
+
+The ROADMAP's "heavy traffic from millions of users" north star needs more
+than one fast engine: it needs throughput that scales with replica count and
+tail latency that survives losing a replica. This module is that layer, kept
+deliberately in-process (replicas are plain ``ServingEngine`` objects on
+no-mesh or disjoint sub-meshes) so every scheduling decision is a pure
+function of the submitted trace and the fault plan — testable to the token.
+
+Feedback-driven routing (the CUCo / resource-aware-overlap argument one
+level up from per-island measured dispatch): admission steers off
+*measured* per-replica state, re-read every fleet step —
+
+* queue depth + live slots + mid-prefill rows (``engine.load()``),
+* jitted-bucket warmth (``engine.compiled_buckets``),
+* tokens/s (``engine.stats()``),
+* prefix-cache occupancy (``engine.prefix_match_len`` /
+  ``engine.cache_stats()``).
+
+Policies: ``fcfs`` (fixed rotation over healthy replicas), ``least-loaded``
+(argmin load, lowest index breaks ties), ``cache-affinity`` (route to the
+replica whose paged ``PrefixCache`` holds the longest prefix; least-loaded
+among equals and when nothing matches).
+
+Straggler-aware stealing: each replica's fleet turn records one sample into
+a ``FleetWatchdog`` feed. A replica flagged by its own deadline, by the
+cross-replica EMA-vs-median rule, or currently serving a scripted stall has
+its *queued* (never in-flight) requests pulled back to the fleet backlog
+and re-routed to healthy peers.
+
+Elasticity — the drain / kill / rejoin lifecycle::
+
+    drain r   stop admitting on r; queued requests return to the backlog;
+              in-flight slots finish; params snapshot to the fleet
+              checkpoint (the rejoin seed), tagged with r's tp size
+    kill r    harvest r's finished completions FIRST, then take_undone()
+              pops every not-yet-completed request exactly once (queued +
+              mid-prefill rows + live slots) onto the backlog front; the
+              engine object is dropped
+    rejoin r  rebuild via the replica factory, restore params from the
+              fleet checkpoint (``elastic_restore`` when the new engine has
+              a mesh — possibly a *different* mesh than the snapshot's, the
+              MoE device-major layout converted in transit), fresh
+              watchdog feed
+
+Faults are scripted, not raced: ``FaultPlan.parse("kill:1@5 delay:0@3x4")``
+fires events at exact fleet steps, and injected delays fold into recorded
+step times (``engine.inject_step_delay``) rather than sleeping, so a fault
+run is exactly reproducible. The acceptance invariant (tests/test_fleet.py)
+is that a kill-one-replica run completes every submitted request exactly
+once, token-identical to the no-fault run — which holds because engine
+outputs are batch-composition independent (pinned by tests/test_serving.py)
+and the router requeues lost work exactly once.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Callable, Literal, Sequence
+
+from repro.configs.base import FleetConfig
+from repro.runtime.serving import Completion, Request, ServingEngine
+from repro.runtime.straggler import FleetWatchdog, StepTimer
+
+__all__ = ["FaultEvent", "FaultPlan", "ServingFleet"]
+
+
+# --------------------------------------------------------------------------
+# fault plans
+# --------------------------------------------------------------------------
+
+_KINDS = ("kill", "delay", "drain", "rejoin")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scripted fault: do ``kind`` to ``replica`` at fleet ``step``.
+
+    ``ticks`` is kind-specific: for ``delay`` it is how many fleet ticks the
+    replica stalls (its turns pass without engine steps, each recording a
+    synthetic ``FleetConfig.stall_dt`` watchdog sample); other kinds ignore
+    it."""
+
+    kind: Literal["kill", "delay", "drain", "rejoin"]
+    replica: int
+    step: int
+    ticks: int = 0
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"one of {_KINDS}")
+        if self.replica < 0 or self.step < 0:
+            raise ValueError(f"replica/step must be >= 0: {self}")
+        if self.kind == "delay" and self.ticks < 1:
+            raise ValueError(f"delay needs ticks >= 1 (spec 'xK'): {self}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An ordered script of ``FaultEvent``s, parseable from the CLI spec
+    ``kind:replica@step[xticks]`` (comma/space/semicolon separated)::
+
+        FaultPlan.parse("kill:1@5, rejoin:1@9")
+        FaultPlan.parse("delay:0@3x4 drain:2@7")
+    """
+
+    events: tuple[FaultEvent, ...] = ()
+
+    @classmethod
+    def parse(cls, spec: str) -> "FaultPlan":
+        evs = []
+        for item in spec.replace(";", ",").replace(" ", ",").split(","):
+            item = item.strip()
+            if not item:
+                continue
+            try:
+                kind, rest = item.split(":", 1)
+                rloc, sloc = rest.split("@", 1)
+                ticks = 0
+                if "x" in sloc:
+                    sloc, t = sloc.split("x", 1)
+                    ticks = int(t)
+                evs.append(FaultEvent(kind, int(rloc), int(sloc), ticks))
+            except ValueError as e:
+                raise ValueError(
+                    f"bad fault spec {item!r} (want kind:replica@step"
+                    f"[xticks], kind in {_KINDS}): {e}") from e
+        return cls(tuple(sorted(evs, key=lambda e: (e.step, e.replica))))
+
+    def at(self, step: int) -> list[FaultEvent]:
+        return [e for e in self.events if e.step == step]
+
+    def rejoin_after(self, step: int) -> bool:
+        return any(e.kind == "rejoin" and e.step >= step
+                   for e in self.events)
+
+
+# --------------------------------------------------------------------------
+# fleet
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Replica:
+    idx: int
+    engine: ServingEngine | None
+    alive: bool = True
+    draining: bool = False
+    stall: int = 0                   # remaining scripted stall ticks
+
+
+class ServingFleet:
+    """N serving replicas behind one deterministic router.
+
+    ``factory(i) -> ServingEngine`` builds replica ``i`` — all replicas must
+    share the same ``ServeConfig`` and parameters (data-parallel serving:
+    any replica can serve any request). The fleet owns the request backlog;
+    replicas only ever see requests the router assigned to them.
+
+    One ``step()`` is: fire scripted faults → steal from flagged/stalled
+    replicas → route the backlog → give each live replica one turn of at
+    most ``FleetConfig.step_budget`` engine steps (index order — the
+    deterministic interleave) → harvest completions.
+    """
+
+    def __init__(self, factory: Callable[[int], ServingEngine],
+                 fleet: FleetConfig | None = None,
+                 fault_plan: FaultPlan | None = None,
+                 ckpt_dir: str | None = None):
+        self.factory = factory
+        self.cfg = fleet if fleet is not None else FleetConfig()
+        self.plan = fault_plan if fault_plan is not None else FaultPlan()
+        self.replicas = [_Replica(i, factory(i))
+                         for i in range(self.cfg.n_replicas)]
+        self._serve = self.replicas[0].engine.serve
+        self.watchdog = FleetWatchdog(self.cfg.n_replicas,
+                                      factor=self.cfg.steal_factor)
+        self.backlog: collections.deque[Request] = collections.deque()
+        self.completions: dict[int, Completion] = {}
+        self.assignments: list[tuple] = []   # (step, rid, replica, reason)
+        self.events: list[tuple] = []
+        self.step_no = 0
+        self.step_times: list[float] = []
+        self.steals = 0
+        self.requeued = 0
+        self._next_rid = 0
+        self._rr = 0                         # fcfs rotation cursor
+        # checkpoint-backed rejoin: lazy manager, created on first drain
+        self._ckpt_dir = ckpt_dir
+        self._ckpt = None
+        self._ckpt_tp = 1                    # tp size the snapshot was cut at
+        self._ckpt_no = 0
+
+    # -- intake ------------------------------------------------------------
+
+    def submit(self, prompt: Sequence[int],
+               max_new_tokens: int | None = None,
+               rid: int | None = None) -> int:
+        """Queue a request on the FLEET backlog (routing happens at the
+        next ``step()``). Validation mirrors ``ServingEngine.submit``."""
+        prompt = tuple(int(t) for t in prompt)
+        if not prompt:
+            raise ValueError("empty prompt")
+        self._serve.bucket_for(len(prompt))
+        mx = max_new_tokens if max_new_tokens is not None \
+            else self._serve.max_new_tokens
+        if not 1 <= mx <= self._serve.max_new_tokens:
+            raise ValueError(
+                f"max_new_tokens must be in [1, "
+                f"{self._serve.max_new_tokens}]; got {mx}")
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid) + 1
+        self.backlog.append(Request(rid, prompt, mx))
+        return rid
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def drain(self, idx: int) -> None:
+        """Stop admitting on replica ``idx``: queued requests return to the
+        backlog front, in-flight slots finish on their own, and the
+        replica's params are snapshotted as the fleet's rejoin seed."""
+        rep = self.replicas[idx]
+        if not rep.alive or rep.draining:
+            return
+        rep.draining = True
+        rep.engine.drain()
+        if self._ckpt_dir is not None:
+            self._snapshot(rep.engine)
+        queued = rep.engine.take_queued()
+        self.requeued += len(queued)
+        self.backlog.extendleft(reversed(queued))
+        self.events.append(("drain", self.step_no, idx,
+                            tuple(r.rid for r in queued)))
+
+    def kill(self, idx: int) -> None:
+        """Drop replica ``idx`` mid-step. Finished completions are
+        harvested FIRST (they survive — completions live on the host), then
+        every not-yet-completed request is popped exactly once and requeued
+        at the backlog front, so lost work re-routes before new work."""
+        rep = self.replicas[idx]
+        if not rep.alive:
+            return
+        self._harvest_replica(rep)
+        undone = rep.engine.take_undone()
+        self.requeued += len(undone)
+        self.backlog.extendleft(reversed(undone))
+        rep.alive = False
+        rep.draining = False
+        rep.stall = 0
+        rep.engine = None
+        self.events.append(("kill", self.step_no, idx,
+                            tuple(r.rid for r in undone)))
+
+    def delay(self, idx: int, ticks: int) -> None:
+        """Stall replica ``idx`` for ``ticks`` fleet turns: its turns pass
+        without engine steps, each recording a synthetic
+        ``FleetConfig.stall_dt`` sample — the deterministic straggler."""
+        rep = self.replicas[idx]
+        if rep.alive:
+            rep.stall += ticks
+            self.events.append(("delay", self.step_no, idx, ticks))
+
+    def rejoin(self, idx: int,
+               factory: Callable[[int], ServingEngine] | None = None) -> None:
+        """Bring a dead (or drained) replica back: rebuild the engine via
+        the factory — possibly on a DIFFERENT mesh than the fleet started
+        with — and restore params from the fleet checkpoint when one was
+        cut (``elastic_restore`` re-places logical-layout params and
+        converts the MoE device-major layout to the new tp size)."""
+        rep = self.replicas[idx]
+        eng = (factory or self.factory)(idx)
+        params = self._restored_params(eng)
+        if params is not None:
+            eng.params = params
+        rep.engine = eng
+        rep.alive = True
+        rep.draining = False
+        rep.stall = 0
+        self.watchdog.reset(idx)
+        self.events.append(("rejoin", self.step_no, idx))
+
+    def _snapshot(self, engine: ServingEngine) -> None:
+        from repro.ckpt.manager import CheckpointManager
+        if self._ckpt is None:
+            self._ckpt = CheckpointManager(self._ckpt_dir, async_save=False)
+        self._ckpt_tp = (engine.rules.mesh.shape[engine.base_run.tp_axis]
+                         if engine.rules is not None else 1)
+        self._ckpt_no += 1
+        self._ckpt.save(self._ckpt_no, engine.params)
+        self.events.append(("snapshot", self.step_no, self._ckpt_no))
+
+    def _restored_params(self, eng: ServingEngine):
+        if self._ckpt is None:
+            return None
+        if eng.rules is not None:
+            from repro.runtime.elastic import elastic_restore
+            params, _ = elastic_restore(
+                str(self._ckpt.dir), eng.cfg, eng.base_run, eng.rules.mesh,
+                old_model_size=self._ckpt_tp)
+            return params
+        import jax.numpy as jnp
+        import jax
+        params, _ = self._ckpt.restore(eng.params)
+        return (None if params is None
+                else jax.tree.map(jnp.asarray, params))
+
+    # -- routing -----------------------------------------------------------
+
+    def _flagged(self) -> set[int]:
+        live = [r.idx for r in self.replicas if r.alive]
+        return set(self.watchdog.stragglers(live)) if self.cfg.steal \
+            else set()
+
+    def _healthy(self, flagged: set[int]) -> list[_Replica]:
+        return [r for r in self.replicas
+                if r.alive and not r.draining and r.stall == 0
+                and r.idx not in flagged]
+
+    def _steal(self, flagged: set[int]) -> None:
+        """Pull QUEUED (never in-flight) requests off stalled/flagged
+        replicas back onto the backlog front — only when a healthy
+        destination exists, else stealing would just bounce them back."""
+        for rep in self.replicas:
+            if not rep.alive or not (rep.stall > 0 or rep.idx in flagged):
+                continue
+            if not rep.engine.queue:
+                continue
+            if not any(h.idx != rep.idx for h in self._healthy(flagged)):
+                continue
+            stolen = rep.engine.take_queued()
+            self.steals += 1
+            self.requeued += len(stolen)
+            self.backlog.extendleft(reversed(stolen))
+            self.events.append(("steal", self.step_no, rep.idx,
+                                tuple(r.rid for r in stolen)))
+
+    def _route(self, flagged: set[int]) -> None:
+        """Assign the whole backlog, head first. Per-request feedback
+        (load, prefix match) is re-read per pick, so a burst spreads out
+        instead of dogpiling the replica that was least loaded at step
+        start. No healthy candidate → the backlog waits (stalls expire,
+        drains finish, rejoin events fire)."""
+        while self.backlog:
+            cands = self._healthy(flagged)
+            if not cands:
+                return
+            req = self.backlog.popleft()
+            rep, reason = self._pick(req, cands)
+            rep.engine.submit(req.prompt, req.max_new_tokens, rid=req.rid)
+            self.assignments.append((self.step_no, req.rid, rep.idx, reason))
+
+    def _pick(self, req: Request,
+              cands: list[_Replica]) -> tuple[_Replica, str]:
+        if self.cfg.router == "fcfs":
+            rep = cands[self._rr % len(cands)]
+            self._rr += 1
+            return rep, "fcfs"
+        loads = {r.idx: r.engine.load() for r in cands}
+        if self.cfg.router == "cache-affinity":
+            match = {r.idx: r.engine.prefix_match_len(req.prompt)
+                     for r in cands}
+            best = max(match.values())
+            if best > 0:
+                hit = [r for r in cands if match[r.idx] == best]
+                rep = min(hit, key=lambda r: (loads[r.idx], r.idx))
+                return rep, f"affinity:{best}"
+        rep = min(cands, key=lambda r: (loads[r.idx], r.idx))
+        return rep, f"least-loaded:{loads[rep.idx]}"
+
+    # -- stepping ----------------------------------------------------------
+
+    def _fire(self, ev: FaultEvent) -> None:
+        {"kill": lambda: self.kill(ev.replica),
+         "drain": lambda: self.drain(ev.replica),
+         "rejoin": lambda: self.rejoin(ev.replica),
+         "delay": lambda: self.delay(ev.replica, ev.ticks)}[ev.kind]()
+
+    def step(self) -> bool:
+        """One fleet step; returns True if any replica made progress (ran
+        engine steps or burned a stall tick)."""
+        for ev in self.plan.at(self.step_no):
+            self._fire(ev)
+        flagged = self._flagged()
+        if self.cfg.steal:
+            self._steal(flagged)
+        self._route(flagged)
+        progressed = False
+        with StepTimer() as t:
+            for rep in self.replicas:
+                if not rep.alive:
+                    continue
+                if rep.stall > 0:
+                    rep.stall -= 1
+                    self.watchdog.record(rep.idx, self.step_no,
+                                         self.cfg.stall_dt)
+                    self.events.append(("stall", self.step_no, rep.idx))
+                    progressed = True
+                    continue
+                n0 = rep.engine.step_no
+                rep.engine.run(step_budget=self.cfg.step_budget)
+                ran = rep.engine.step_no - n0
+                if ran:
+                    self.watchdog.record(
+                        rep.idx, self.step_no,
+                        sum(rep.engine.step_times[-ran:]))
+                    progressed = True
+        self._harvest()
+        self.step_times.append(t.dt)
+        self.step_no += 1
+        return progressed
+
+    def _harvest_replica(self, rep: _Replica) -> None:
+        for rid, c in rep.engine.completions.items():
+            if rid not in self.completions:
+                self.completions[rid] = c
+                self.events.append(("complete", self.step_no, rep.idx, rid))
+
+    def _harvest(self) -> None:
+        for rep in self.replicas:
+            if rep.alive:
+                self._harvest_replica(rep)
+
+    @property
+    def pending(self) -> bool:
+        return bool(self.backlog) or any(
+            rep.alive and rep.engine.pending for rep in self.replicas)
+
+    def _check_liveness(self) -> None:
+        if self.plan.rejoin_after(self.step_no):
+            return                       # a scripted rejoin can still save us
+        if not any(rep.alive for rep in self.replicas):
+            raise RuntimeError(
+                "fleet dead: every replica killed with work pending and no "
+                "rejoin scheduled")
+        if self.backlog and not any(rep.alive and not rep.draining
+                                    for rep in self.replicas):
+            raise RuntimeError(
+                "fleet backlog unroutable: every live replica is draining "
+                "and no rejoin is scheduled")
+
+    def run(self, requests=None, max_steps: int = 100_000) -> list[Completion]:
+        """Drain the backlog (plus ``requests``, submitted first) through
+        the fleet; returns completions finished during THIS call in rid
+        order. Deterministic: same trace + same fault plan → same
+        assignment log, same completions, token for token."""
+        done_before = set(self.completions)
+        for r in requests or ():
+            if isinstance(r, Request):
+                self.submit(r.prompt, r.max_new_tokens, rid=r.rid)
+            else:
+                self.submit(r)
+        for _ in range(max_steps):
+            if not self.pending and not self.plan.rejoin_after(self.step_no):
+                break
+            self._check_liveness()
+            self.step()
+            if not self.pending and not self.plan.rejoin_after(self.step_no):
+                break
+        else:
+            raise RuntimeError(f"fleet did not drain in {max_steps} steps")
+        return [self.completions[k] for k in sorted(self.completions)
+                if k not in done_before]
+
+    # -- feedback / stats --------------------------------------------------
+
+    def replica_feedback(self) -> dict[int, dict]:
+        """The router's live per-replica view — what admission steers on."""
+        out: dict[int, dict] = {}
+        for rep in self.replicas:
+            if not rep.alive:
+                out[rep.idx] = {"alive": False}
+                continue
+            eng = rep.engine
+            s = eng.stats()
+            out[rep.idx] = {
+                "alive": True, "draining": rep.draining,
+                "stalled": rep.stall,
+                "queue_depth": len(eng.queue), "load": eng.load(),
+                "jitted_buckets": s["compiled_buckets"],
+                "tokens_per_s": s["tokens_per_s"],
+                "watchdog_ema": self.watchdog.ema(rep.idx),
+                "cache": eng.cache_stats(),
+            }
+        return out
+
+    def stats(self) -> dict[str, Any]:
+        total = sum(self.step_times)
+        useful = sum(len(c.tokens) for c in self.completions.values())
+        return {
+            "replicas": self.cfg.n_replicas,
+            "live": sum(r.alive for r in self.replicas),
+            "router": self.cfg.router,
+            "fleet_steps": self.step_no,
+            "wall_s": total,
+            "completed": len(self.completions),
+            "useful_tokens": useful,
+            "tokens_per_s": useful / total if total else 0.0,
+            "steals": self.steals,
+            "requeued": self.requeued,
+            "assignments": len(self.assignments),
+            "per_replica": self.replica_feedback(),
+        }

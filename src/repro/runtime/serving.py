@@ -48,6 +48,24 @@ functions of the submitted trace; ``events`` records every admit/retire
 regressions are diffable. Continuous-batched outputs are bit-identical to
 sequential (one-request-at-a-time) processing — pinned by
 tests/test_serving.py on the emulated meshes, for both cache layouts.
+
+Fleet hooks (``runtime/fleet.py`` drives N engines as replicas):
+
+* ``run(step_budget=k)`` — cooperative stepping: run at most ``k`` engine
+  steps and return, so an external driver can interleave replicas
+  deterministically (``step()`` itself stays public for one-at-a-time
+  drivers);
+* ``drain()`` — stop admitting; in-flight slots finish, queued requests are
+  handed back via ``take_queued()`` (the fleet router requeues them);
+* ``take_undone()`` — kill support: pop EVERY not-yet-completed request
+  (queued + in-flight slots + mid-prefill job rows) exactly once, in rid
+  order, so the router can requeue a dead replica's work;
+* ``load()`` — router feedback: queued + live slots + mid-prefill rows;
+* ``inject_step_delay(dt)`` — tests/fault plans inflate the next recorded
+  step time (feeds the watchdog and the fleet's straggler signal without
+  wall-clock sleeps);
+* ``prefix_match_len(prompt)`` — cache-affinity routing feedback: longest
+  prefix the paged ``PrefixCache`` already holds for this prompt.
 """
 
 from __future__ import annotations
@@ -339,6 +357,11 @@ class ServingEngine:
         self.step_times: list[float] = []
         self.tokens_generated = 0
         self._next_rid = 0
+        # fleet hooks: original Request per live rid (so a killed replica's
+        # in-flight work can be requeued), admission gate, injected delay
+        self._requests: dict[int, Request] = {}
+        self.draining = False
+        self._injected_delay = 0.0
         # cache-memory accounting (both layouts track peak residency)
         self.prefix_hits = 0
         self.shared_pages_reused = 0
@@ -471,8 +494,76 @@ class ServingEngine:
         if rid is None:
             rid = self._next_rid
         self._next_rid = max(self._next_rid, rid) + 1
-        self.queue.append(Request(rid, prompt, mx))
+        req = Request(rid, prompt, mx)
+        self._requests[rid] = req
+        self.queue.append(req)
         return rid
+
+    # -- fleet hooks -------------------------------------------------------
+
+    @property
+    def pending(self) -> bool:
+        """True while any submitted request has not completed yet."""
+        return (bool(self.queue) or self._job is not None
+                or any(s is not None for s in self.slots))
+
+    def drain(self) -> None:
+        """Stop admitting: queued requests stay queued (the fleet router
+        takes them via ``take_queued``), in-flight slots finish normally."""
+        if not self.draining:
+            self.draining = True
+            self.events.append(("drain", self.step_no))
+
+    def take_queued(self) -> list[Request]:
+        """Pop every queued (not yet admitted) request, in queue order —
+        the drain-snapshot hook: nothing on-device references these."""
+        out = list(self.queue)
+        self.queue.clear()
+        return out
+
+    def take_undone(self) -> list[Request]:
+        """Pop EVERY not-yet-completed request — queued, mid-prefill job
+        rows, and in-flight decode slots — exactly once, in rid order. The
+        kill hook: the engine is dead afterwards (its device state is
+        abandoned), the returned originals are what the router requeues."""
+        undone: dict[int, Request] = {r.rid: r for r in self.queue}
+        self.queue.clear()
+        if self._job is not None:
+            for r in self._job.reqs:
+                if r is not None:
+                    undone[r.rid] = r
+            self._job = None
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                undone[s.rid] = self._requests[s.rid]
+                self.slots[i] = None
+        return [undone[k] for k in sorted(undone)]
+
+    def load(self) -> int:
+        """Router feedback: queued + live decode slots + mid-prefill job
+        rows — everything this replica still owes compute to."""
+        job_rows = 0 if self._job is None \
+            else sum(r is not None for r in self._job.reqs)
+        return (len(self.queue) + sum(s is not None for s in self.slots)
+                + job_rows)
+
+    def inject_step_delay(self, dt: float) -> None:
+        """Inflate the NEXT recorded step time by ``dt`` seconds (fault
+        injection: feeds the watchdog and the fleet straggler signal
+        deterministically, without a wall-clock sleep)."""
+        self._injected_delay += dt
+
+    def prefix_match_len(self, prompt: Sequence[int]) -> int:
+        """Longest prefix of ``prompt`` the paged ``PrefixCache`` already
+        holds (0 for the slab layout or when sharing is disabled) — the
+        feedback the fleet's cache-affinity router steers on."""
+        if not self.paged or not self._share_ok:
+            return 0
+        prompt = tuple(int(t) for t in prompt)
+        sched = ("chunk", self.serve.prefill_chunk
+                 or self.serve.bucket_for(len(prompt)))
+        return max(self.prefix.lookup(p, prompt, sched)[0]
+                   for p in range(self.geom.n_partitions))
 
     # -- scheduling --------------------------------------------------------
 
@@ -485,7 +576,7 @@ class ServingEngine:
         queue for head-bucket requests (may reorder across buckets).
         """
         free = [i for i, s in enumerate(self.slots) if s is None]
-        if not free or not self.queue:
+        if self.draining or not free or not self.queue:
             return None
         cap = min(len(free), self.serve.prefill_batch)
         head_bucket = self.serve.bucket_for(len(self.queue[0].prompt))
@@ -516,7 +607,7 @@ class ServingEngine:
         request that fits nowhere (strict order → deterministic
         backpressure); returns (bucket, placements) or None. Each placement
         is (request, slot, row, pages, n_shared, cow_src, write_from)."""
-        if self._job is not None or not self.queue:
+        if self.draining or self._job is not None or not self.queue:
             return None
         geom, serve = self.geom, self.serve
         b_loc = serve.max_batch // geom.n_partitions
@@ -737,6 +828,7 @@ class ServingEngine:
 
     def _retire(self, slot: int) -> None:
         s = self.slots[slot]
+        self._requests.pop(s.rid, None)
         self.completions[s.rid] = Completion(
             rid=s.rid, prompt_len=s.prompt_len, bucket=s.bucket,
             tokens=list(s.tokens), admitted_step=s.admitted_step,
@@ -786,7 +878,7 @@ class ServingEngine:
         if self.paged:
             group = self._next_group_paged()
             if group is None and self._job is None and not active:
-                if self.queue:
+                if self.queue and not self.draining:
                     raise RuntimeError(
                         "paged admission deadlock: queue non-empty but no "
                         "slots/pages can ever free (pool undersized?)")
@@ -804,13 +896,7 @@ class ServingEngine:
                 else:
                     self._decode_tick()
                     kind = "decode"
-            self.step_no += 1
-            self.step_kinds.append(kind)
-            self.step_times.append(t.dt)
-            if self.watchdog.record(self.step_no, t.dt):
-                print(f"[serve] STRAGGLER step {self.step_no} ({kind}): "
-                      f"{t.dt:.3f}s (deadline {self.watchdog.deadline:.3f}s)")
-            return kind
+            return self._record_step(kind, t.dt)
         group = self._next_group()
         if group is None and not active:
             return None
@@ -821,30 +907,47 @@ class ServingEngine:
             else:
                 self._decode_tick()
                 kind = "decode"
+        return self._record_step(kind, t.dt)
+
+    def _record_step(self, kind: str, dt: float) -> str:
+        """Shared step accounting: injected fault delay folds into the
+        recorded time (watchdog + fleet feed see it; no wall-clock sleep)."""
+        dt += self._injected_delay
+        self._injected_delay = 0.0
         self.step_no += 1
         self.step_kinds.append(kind)
-        self.step_times.append(t.dt)
-        if self.watchdog.record(self.step_no, t.dt):
+        self.step_times.append(dt)
+        if self.watchdog.record(self.step_no, dt):
             print(f"[serve] STRAGGLER step {self.step_no} ({kind}): "
-                  f"{t.dt:.3f}s (deadline {self.watchdog.deadline:.3f}s)")
+                  f"{dt:.3f}s (deadline {self.watchdog.deadline:.3f}s)")
         return kind
 
-    def run(self, requests=None, max_steps: int = 100_000
-            ) -> list[Completion]:
+    def run(self, requests=None, max_steps: int = 100_000,
+            step_budget: int | None = None) -> list[Completion]:
         """Drain the queue (plus ``requests``, submitted first) to
         completion; returns the completions finished during THIS call, in
         submission (rid) order. ``self.completions`` keeps the full
-        history across calls."""
+        history across calls.
+
+        ``step_budget`` makes the call cooperative: run at most that many
+        engine steps and return whatever finished, leaving the rest pending
+        — an external driver (the fleet) interleaves replicas by calling
+        each with a small budget in a deterministic rotation. A budgeted
+        call never raises on an undrained queue."""
         done_before = set(self.completions)
         for r in requests or ():
             if isinstance(r, Request):
                 self.submit(r.prompt, r.max_new_tokens, rid=r.rid)
             else:
                 self.submit(r)
-        for _ in range(max_steps):
+        limit = max_steps if step_budget is None else min(max_steps,
+                                                          step_budget)
+        drained = False
+        for _ in range(limit):
             if self.step() is None:
+                drained = True
                 break
-        else:
+        if not drained and step_budget is None:
             raise RuntimeError(f"engine did not drain in {max_steps} steps")
         return [self.completions[k] for k in sorted(self.completions)
                 if k not in done_before]

@@ -3,6 +3,13 @@
 On a real pod this drives mitigation (preempt + re-slot the slow host, or
 drop to the checkpoint and exclude it — runtime/elastic.py); in this
 container the detection logic is what we can exercise (tests inject delays).
+
+``FleetWatchdog`` is the multi-replica feed (runtime/fleet.py): one
+``StragglerWatchdog`` per serving replica, plus a cross-replica comparison —
+a replica whose step-time EMA exceeds ``factor`` x the median EMA of its
+live peers is a *fleet* straggler even if its own per-step deadline never
+fires (a uniformly-slow replica looks healthy to itself). The fleet router
+steals queued requests from flagged replicas.
 """
 
 from __future__ import annotations
@@ -36,6 +43,61 @@ class StragglerWatchdog:
     @property
     def deadline(self) -> float:
         return self.factor * self.ema if self.n >= self.min_samples else float("inf")
+
+
+class FleetWatchdog:
+    """Per-replica straggler feed for the serving fleet.
+
+    Each replica's fleet turn records ONE sample (the wall time of the
+    engine steps it ran, plus any injected fault delay) into that replica's
+    ``StragglerWatchdog``. ``stragglers()`` then flags a replica when
+
+    * its own watchdog flagged the most recent sample (deadline blown), or
+    * its EMA exceeds ``factor`` x the median EMA across the live replicas
+      (relative slowness its own deadline cannot see).
+
+    ``min_samples=1`` on the per-replica feeds: a replica's very first
+    sample seeds its EMA, so scripted delays are visible immediately.
+    """
+
+    def __init__(self, n_replicas: int, factor: float = 3.0,
+                 ema_decay: float = 0.9):
+        self.factor = factor
+        self.ema_decay = ema_decay
+        self.feeds = {r: StragglerWatchdog(factor=factor,
+                                           ema_decay=ema_decay,
+                                           min_samples=1)
+                      for r in range(n_replicas)}
+        self._last_flag = {r: False for r in range(n_replicas)}
+
+    def record(self, replica: int, step: int, dt: float) -> bool:
+        flagged = self.feeds[replica].record(step, dt)
+        self._last_flag[replica] = flagged
+        return flagged
+
+    def reset(self, replica: int) -> None:
+        """Fresh feed for a rejoining replica (its old EMA is meaningless
+        after a restore)."""
+        self.feeds[replica] = StragglerWatchdog(factor=self.factor,
+                                                ema_decay=self.ema_decay,
+                                                min_samples=1)
+        self._last_flag[replica] = False
+
+    def ema(self, replica: int) -> float:
+        return self.feeds[replica].ema
+
+    def stragglers(self, live=None) -> list[int]:
+        rs = sorted(self.feeds if live is None else live)
+        emas = sorted(self.feeds[r].ema for r in rs if self.feeds[r].n > 0)
+        med = emas[len(emas) // 2] if emas else 0.0
+        out = []
+        for r in rs:
+            feed = self.feeds[r]
+            if self._last_flag[r] or (len(emas) >= 2 and med > 0.0
+                                      and feed.n > 0
+                                      and feed.ema > self.factor * med):
+                out.append(r)
+        return out
 
 
 class StepTimer:

@@ -99,6 +99,103 @@ def test_moe_layout_roundtrip(e, m1, m2):
     np.testing.assert_array_equal(dm_to_logical(dmw2, e, w2=True), logical2)
 
 
+@pytest.mark.parametrize("e,m1,m2", [(6, 4, 2), (6, 2, 4), (12, 8, 2)])
+def test_moe_converter_non_dividing_experts(e, m1, m2):
+    """moe_converter round-trip at expert counts the model axis does NOT
+    divide (ep = gcd(e, m) < m): per-period stacked w1/w2 convert
+    m1 -> m2 -> m1 bit-exactly, and non-MoE keys pass through untouched."""
+    import types
+
+    from repro.runtime.elastic import moe_converter
+
+    cfg = types.SimpleNamespace(is_moe=True, n_experts=e)
+    d, ff = 4, 16                         # ff divisible by every tp_ff here
+    rng = np.random.default_rng(0)
+    periods = 2
+    log_w1 = rng.normal(size=(e, d, ff)).astype(np.float32)
+    log_w2 = rng.normal(size=(e, ff, d)).astype(np.float32)
+    dm1_w1 = np.stack([logical_to_dm(log_w1, m1) for _ in range(periods)])
+    dm1_w2 = np.stack([logical_to_dm(log_w2, m1, w2=True)
+                       for _ in range(periods)])
+
+    fwd = moe_converter(cfg, m1, m2)
+    bwd = moe_converter(cfg, m2, m1)
+    dm2_w1 = fwd("layers/moe/w1", dm1_w1)
+    dm2_w2 = fwd("layers/moe/w2", dm1_w2)
+    # target layout is exactly logical_to_dm at m2, every period
+    for p in range(periods):
+        np.testing.assert_array_equal(dm2_w1[p], logical_to_dm(log_w1, m2))
+        np.testing.assert_array_equal(
+            dm2_w2[p], logical_to_dm(log_w2, m2, w2=True))
+    # and the round trip is exact
+    np.testing.assert_array_equal(bwd("layers/moe/w1", dm2_w1), dm1_w1)
+    np.testing.assert_array_equal(bwd("layers/moe/w2", dm2_w2), dm1_w2)
+    # non-MoE keys (and non-w{1,2,3} leaves) pass through untouched
+    other = rng.normal(size=(3, 5)).astype(np.float32)
+    assert fwd("layers/attn/wq", other) is other
+    assert fwd("layers/moe/gate", other) is other
+
+
+def test_moe_converter_identity_cases():
+    import types
+
+    from repro.runtime.elastic import moe_converter
+
+    assert moe_converter(types.SimpleNamespace(is_moe=True, n_experts=8),
+                         4, 4) is None
+    assert moe_converter(types.SimpleNamespace(is_moe=False, n_experts=0),
+                         4, 2) is None
+
+
+def test_train_driver_direct_resume(tmp_path):
+    """TrainDriver unit coverage without the launch wrapper: periodic
+    saves, crash at a scripted step, auto-resume from the newest committed
+    checkpoint, and bit-identical final state vs an uninterrupted run."""
+    from repro.runtime.driver import DriverConfig, TrainDriver
+
+    def train_step(state, batch):
+        new = {"w": state["w"] * 0.9 + batch}
+        return new, {"loss": jnp.sum(new["w"])}
+
+    class Data:
+        def batch(self, step):
+            return jnp.float32(step + 1)
+
+    def fresh():
+        return {"w": jnp.float32(1.0)}
+
+    cfg = DriverConfig(total_steps=6, ckpt_every=2, log_every=2,
+                       async_checkpoint=False)
+
+    class Crash(Exception):
+        pass
+
+    def hook(step):
+        if step == 4 and not hook.done:
+            hook.done = True
+            raise Crash()
+    hook.done = False
+
+    d1 = TrainDriver(train_step=train_step, state=fresh(), data=Data(),
+                     ckpt_dir=str(tmp_path / "a"), cfg=cfg, fault_hook=hook)
+    with pytest.raises(Crash):
+        d1.run()
+    # restart: resumes from step 4's checkpoint, not from scratch
+    d2 = TrainDriver(train_step=train_step, state=fresh(), data=Data(),
+                     ckpt_dir=str(tmp_path / "a"), cfg=cfg, fault_hook=hook)
+    assert d2.start_step == 4
+    state_resumed, log = d2.run()
+    clean = TrainDriver(train_step=train_step, state=fresh(), data=Data(),
+                        ckpt_dir=str(tmp_path / "b"), cfg=cfg)
+    state_clean, _ = clean.run()
+    np.testing.assert_array_equal(np.asarray(state_resumed["w"]),
+                                  np.asarray(state_clean["w"]))
+    assert log[-1]["step"] == 6
+    # the final checkpoint is committed (atomic rename, no tmp debris)
+    assert d2.ckpt.latest_step() == 6
+    assert not list((tmp_path / "a").glob("tmp_*"))
+
+
 def test_elastic_restore_across_meshes(tmp_path):
     """Save params sharded on (1,2), restore onto (2,1) — values identical."""
     from repro.configs import get_config

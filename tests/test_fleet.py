@@ -1,0 +1,288 @@
+"""Serving fleet (runtime/fleet.py): deterministic routing, fleet ==
+single-engine token identity, the scripted fault matrix (kill mid-decode,
+kill mid-prefill-chunk, kill while draining — every request completes
+exactly once), straggler stealing, cooperative interleaving, and the
+drain-snapshot -> grown-mesh rejoin path.
+
+All replicas are no-mesh engines (dense island fallbacks — the fast path)
+except the grown-mesh rejoin test; determinism-sensitive tests disable
+stealing so routing never depends on wall-clock watchdog state.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.configs.base import FleetConfig, ServeConfig
+from repro.runtime.fleet import FaultEvent, FaultPlan, ServingFleet
+
+SERVE = ServeConfig(max_batch=4, prefill_batch=2, bucket_edges=(8, 16),
+                    max_new_tokens=4)
+PAGED = dataclasses.replace(SERVE, cache_layout="paged", page_size=4,
+                            prefill_chunk=8)
+
+
+def _engine(serve=SERVE, mesh_shape=None):
+    from repro.launch.serve import build_engine
+    return build_engine("tinyllama-1.1b", reduced=True,
+                        mesh_shape=mesh_shape, serve=serve)
+
+
+def _factory(serve=SERVE):
+    return lambda i: _engine(serve)
+
+
+def _trace(n, serve=SERVE, seed=3):
+    from repro.launch.serve import synthetic_trace
+    eng_vocab = 64                  # < any arch vocab; ids are arbitrary
+    return synthetic_trace(n, serve, eng_vocab, seed=seed)
+
+
+def _tokens(completions):
+    return {c.rid: tuple(c.tokens) for c in completions}
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan parsing
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_parse_roundtrip():
+    plan = FaultPlan.parse("kill:1@5, delay:0@3x4; rejoin:1@9 drain:2@7")
+    assert plan.events == (
+        FaultEvent("delay", 0, 3, 4), FaultEvent("kill", 1, 5),
+        FaultEvent("drain", 2, 7), FaultEvent("rejoin", 1, 9))
+    assert [e.kind for e in plan.at(5)] == ["kill"]
+    assert plan.at(4) == []
+    assert plan.rejoin_after(9) and not plan.rejoin_after(10)
+
+
+@pytest.mark.parametrize("bad", ["boom:0@1", "kill:0", "delay:0@1",
+                                 "kill:-1@2", "kill:0@-2"])
+def test_fault_plan_rejects(bad):
+    with pytest.raises(ValueError):
+        FaultPlan.parse(bad)
+
+
+# ---------------------------------------------------------------------------
+# Routing determinism + fleet == single engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("router", ["fcfs", "least-loaded"])
+def test_routing_deterministic(router):
+    cfg = FleetConfig(n_replicas=2, router=router, steal=False)
+    trace = _trace(8)
+    logs = []
+    for _ in range(2):
+        fleet = ServingFleet(_factory(), cfg)
+        out = fleet.run(trace)
+        assert len(out) == len(trace)
+        logs.append((fleet.assignments, _tokens(out)))
+    assert logs[0] == logs[1]
+    # every request routed exactly once, to a real replica
+    rids = [a[1] for a in logs[0][0]]
+    assert sorted(rids) == list(range(len(trace)))
+    assert {a[2] for a in logs[0][0]} <= {0, 1}
+
+
+@pytest.mark.parametrize("n", [2, 3])
+def test_fleet_matches_single_engine(n):
+    trace = _trace(9)
+    ref = _tokens(_engine().run(trace))
+    fleet = ServingFleet(_factory(), FleetConfig(n_replicas=n))
+    assert _tokens(fleet.run(trace)) == ref
+    st = fleet.stats()
+    assert st["completed"] == len(trace) and st["live"] == n
+
+
+# ---------------------------------------------------------------------------
+# Fault matrix: every submitted request completes exactly once,
+# token-identical to the no-fault run
+# ---------------------------------------------------------------------------
+
+def test_kill_mid_decode_completes_exactly_once():
+    trace = _trace(8)
+    ref = _tokens(_engine().run(trace))
+    fleet = ServingFleet(_factory(), FleetConfig(n_replicas=2, steal=False))
+    for p in trace:
+        fleet.submit(p)
+    # step until replica 1 has live decode slots, then pull the plug
+    for _ in range(50):
+        fleet.step()
+        rep = fleet.replicas[1]
+        if any(s is not None for s in rep.engine.slots):
+            break
+    else:
+        pytest.fail("replica 1 never admitted")
+    fleet.kill(1)
+    kill_ev = [e for e in fleet.events if e[0] == "kill"]
+    assert len(kill_ev) == 1 and len(kill_ev[0][3]) > 0   # work was lost
+    out = fleet.run()
+    have = _tokens(fleet.completions.values())
+    assert have == ref                    # exactly once, token-identical
+    assert len(out) + sum(1 for e in fleet.events
+                          if e[0] == "complete" and e[1] <= kill_ev[0][1]) \
+        == len(trace)
+
+
+def test_kill_mid_prefill_chunk_completes_exactly_once():
+    # two-chunk prompts (len > chunk=8) so a prefill job is in flight
+    trace = [tuple(range(2, 14)), tuple(range(3, 15)),
+             tuple(range(4, 16)), (5, 6, 7)]
+    ref = _tokens(_engine(PAGED).run(trace))
+    fleet = ServingFleet(_factory(PAGED),
+                         FleetConfig(n_replicas=2, steal=False))
+    for p in trace:
+        fleet.submit(p)
+    for _ in range(50):
+        fleet.step()
+        if fleet.replicas[1].engine._job is not None:
+            break
+    else:
+        pytest.fail("replica 1 never had a chunked prefill in flight")
+    fleet.kill(1)
+    fleet.run()
+    assert _tokens(fleet.completions.values()) == ref
+
+
+def test_kill_while_draining_completes_exactly_once(tmp_path):
+    trace = _trace(8)
+    ref = _tokens(_engine().run(trace))
+    fleet = ServingFleet(_factory(), FleetConfig(n_replicas=2, steal=False),
+                         ckpt_dir=str(tmp_path))
+    for p in trace:
+        fleet.submit(p)
+    fleet.step()
+    fleet.drain(1)                        # queued requests requeue + snapshot
+    fleet.step()
+    fleet.kill(1)                         # in-flight slots requeue
+    fleet.run()
+    assert _tokens(fleet.completions.values()) == ref
+    kinds = [e[0] for e in fleet.events]
+    assert kinds.count("drain") == 1 and kinds.count("kill") == 1
+    assert "snapshot" in kinds            # the rejoin seed was cut
+
+
+def test_scripted_kill_rejoin_via_plan(tmp_path):
+    trace = _trace(10)
+    ref = _tokens(_engine().run(trace))
+    plan = FaultPlan.parse("drain:1@1 kill:1@3 rejoin:1@5")
+    fleet = ServingFleet(_factory(), FleetConfig(n_replicas=2, steal=False),
+                         fault_plan=plan, ckpt_dir=str(tmp_path))
+    assert _tokens(fleet.run(trace)) == ref
+    assert fleet.stats()["live"] == 2     # replica 1 is back
+    assert fleet.requeued > 0
+
+
+def test_all_dead_raises_without_rejoin():
+    fleet = ServingFleet(_factory(),
+                         FleetConfig(n_replicas=2, steal=False),
+                         fault_plan=FaultPlan.parse("kill:0@0 kill:1@0"))
+    with pytest.raises(RuntimeError, match="rejoin"):
+        fleet.run(_trace(4))
+
+
+# ---------------------------------------------------------------------------
+# Straggler stealing
+# ---------------------------------------------------------------------------
+
+def test_stealing_from_scripted_slow_replica():
+    trace = _trace(8)
+    ref = _tokens(_engine().run(trace))
+    fleet = ServingFleet(_factory(), FleetConfig(n_replicas=2, steal=True))
+    for p in trace:
+        fleet.submit(p)
+    fleet.step()                          # routes the burst across replicas
+    assert len(fleet.replicas[1].engine.queue) > 0   # backlog behind r1
+    fleet.delay(1, 8)                     # r1 goes dark for 8 fleet ticks
+    fleet.run()
+    assert fleet.steals >= 1
+    stolen_rids = [rid for e in fleet.events if e[0] == "steal"
+                   for rid in e[3]]
+    assert stolen_rids
+    # every stolen request was re-routed (two assignment entries) and
+    # finished on the healthy replica, exactly once
+    for rid in stolen_rids:
+        routes = [a for a in fleet.assignments if a[1] == rid]
+        assert len(routes) == 2 and routes[-1][2] == 0
+    assert _tokens(fleet.completions.values()) == ref
+
+
+# ---------------------------------------------------------------------------
+# Cache-affinity routing (paged prefix cache as router feedback)
+# ---------------------------------------------------------------------------
+
+def test_cache_affinity_follows_prefix():
+    fleet = ServingFleet(_factory(PAGED),
+                         FleetConfig(n_replicas=2, router="cache-affinity",
+                                     steal=False))
+    shared = tuple(range(1, 9))           # one full page-aligned chunk
+    first = fleet.run([shared + (20,)])
+    home = fleet.assignments[0][2]
+    fleet.run([shared + (21,), shared + (22,)])
+    aff = [a for a in fleet.assignments if a[3].startswith("affinity")]
+    assert len(aff) == 2
+    assert all(a[2] == home for a in aff)
+    assert len(first) == 1 and len(fleet.completions) == 3
+
+
+# ---------------------------------------------------------------------------
+# Cooperative stepping: interleave order cannot change tokens
+# ---------------------------------------------------------------------------
+
+def test_two_interleavings_identical_completions():
+    tr_a, tr_b = _trace(4, seed=5), _trace(4, seed=6)
+
+    def run_pair(schedule):
+        a, b = _engine(), _engine()
+        for p in tr_a:
+            a.submit(p)
+        for p in tr_b:
+            b.submit(p)
+        for eng, budget in schedule:
+            eng = a if eng == "a" else b
+            eng.run(step_budget=budget)
+        a.run(), b.run()                  # drain whatever is left
+        return _tokens(a.completions.values()), \
+            _tokens(b.completions.values())
+
+    # fine-grained alternation vs. run-A-then-B
+    fine = run_pair([("a", 1), ("b", 1)] * 30)
+    coarse = run_pair([("a", 1000), ("b", 1000)])
+    assert fine == coarse
+
+
+def test_step_budget_is_cooperative():
+    eng = _engine()
+    for p in _trace(6):
+        eng.submit(p)
+    done = eng.run(step_budget=1)         # one step cannot finish the queue
+    assert eng.pending and len(done) < 6  # ...and does NOT raise
+    total = {c.rid for c in done} | {c.rid for c in eng.run()}
+    assert total == set(range(6))
+
+
+# ---------------------------------------------------------------------------
+# Drain snapshot -> elastic rejoin onto a GROWN mesh, mid-serving
+# ---------------------------------------------------------------------------
+
+def test_drain_snapshot_rejoins_onto_grown_mesh(tmp_path):
+    trace = _trace(6)
+    ref = _tokens(_engine().run(trace))
+    fleet = ServingFleet(_factory(), FleetConfig(n_replicas=2, steal=False),
+                         ckpt_dir=str(tmp_path))
+    for p in trace[:4]:
+        fleet.submit(p)
+    fleet.step()
+    fleet.drain(1)                        # snapshot cut mid-serving (tp=1)
+    fleet.run()                           # replica 1 finishes in-flight
+    # rejoin onto a (2,2) mesh: elastic_restore re-places the tp=1
+    # snapshot onto the larger mesh's shardings
+    fleet.rejoin(1, factory=lambda i: _engine(SERVE, mesh_shape=(2, 2)))
+    assert fleet.replicas[1].engine.rules is not None
+    rejoin_step = [e for e in fleet.events if e[0] == "rejoin"][0][1]
+    out = fleet.run(trace[4:])
+    assert _tokens(fleet.completions.values()) == ref
+    assert len(out) == 2
+    # the restored replica actually served traffic after rejoining
+    assert any(a[2] == 1 and a[0] >= rejoin_step for a in fleet.assignments)
+    assert fleet.stats()["live"] == 2

@@ -1,5 +1,13 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
 
+The serving-equivalence fuzz (``-m slow``; excluded from tier-1 by the
+pyproject ``addopts``) randomizes whole request traces — prompt lengths,
+max_new_tokens, submit times — and checks paged continuous, slab
+continuous, and sequential one-at-a-time processing are token-identical.
+A violation shrinks to a minimal failing trace."""
+
+import dataclasses
+import functools
 import math
 
 import jax.numpy as jnp
@@ -108,3 +116,80 @@ def test_schedule_policy_sane(m, k, nn, axis):
     assert 0.0 <= pol.hidden_fraction <= 1.0
     if pol.enabled:
         assert pol.n_chunks >= 1
+
+
+# ---------------------------------------------------------------------------
+# Randomized-trace serving equivalence (slow: excluded from tier-1 -x -q)
+# ---------------------------------------------------------------------------
+
+_FUZZ_SERVE = None          # built lazily so collection stays import-cheap
+
+
+def _fuzz_engines():
+    """One slab + one paged + one sequential engine, shared across fuzz
+    examples (jit caches are the expensive part; engine state carries over
+    harmlessly because completions are keyed by fresh rids and the paged
+    prefix registry may only ever *reuse* bit-identical pages)."""
+    global _FUZZ_SERVE
+    from repro.configs.base import ServeConfig
+    from repro.launch.serve import build_engine
+    _FUZZ_SERVE = ServeConfig(max_batch=4, prefill_batch=2,
+                              bucket_edges=(8, 16), max_new_tokens=4)
+    paged = dataclasses.replace(_FUZZ_SERVE, cache_layout="paged",
+                                page_size=4, prefill_chunk=8)
+    mk = functools.partial(build_engine, "tinyllama-1.1b", reduced=True)
+    return mk(serve=_FUZZ_SERVE), mk(serve=paged), mk(serve=_FUZZ_SERVE)
+
+
+@functools.lru_cache(maxsize=1)
+def _fuzz_engines_cached():
+    return _fuzz_engines()
+
+
+@st.composite
+def _traces(draw):
+    """(prompt, max_new, submit_step) triples: mixed buckets, staggered
+    arrival — the shapes continuous batching actually reorders around."""
+    n = draw(st.integers(1, 5))
+    out = []
+    for _ in range(n):
+        plen = draw(st.integers(2, 16))
+        prompt = tuple(draw(st.integers(0, 63)) for _ in range(plen))
+        max_new = draw(st.integers(1, 4))
+        submit_step = draw(st.integers(0, 6))
+        out.append((prompt, max_new, submit_step))
+    return out
+
+
+def _drive(eng, trace):
+    """Feed the trace with its staggered submit times through the engine's
+    cooperative API; returns index -> generated tokens."""
+    if eng.pending:                       # debris from a failed example
+        eng.run()
+    rid_of = {}
+    waiting = sorted(range(len(trace)), key=lambda i: (trace[i][2], i))
+    step = 0
+    while waiting or eng.pending:
+        while waiting and trace[waiting[0]][2] <= step:
+            i = waiting.pop(0)
+            rid_of[i] = eng.submit(trace[i][0], trace[i][1])
+        eng.run(step_budget=1)
+        step += 1
+        assert step < 500, "fuzz trace did not drain"
+    return {i: tuple(eng.completions[r].tokens) for i, r in rid_of.items()}
+
+
+@pytest.mark.slow
+@settings(max_examples=12, deadline=None)
+@given(trace=_traces())
+def test_random_trace_slab_paged_sequential_identical(trace):
+    slab, paged, seq = _fuzz_engines_cached()
+    got_slab = _drive(slab, trace)
+    got_paged = _drive(paged, trace)
+    # sequential reference: one request at a time, in submit order
+    got_seq = {}
+    for i, (prompt, max_new, _) in enumerate(trace):
+        seq.submit(prompt, max_new)
+        got_seq[i] = tuple(seq.run()[0].tokens)
+    assert got_slab == got_seq
+    assert got_paged == got_seq
