@@ -85,7 +85,9 @@ class Recorder:
             predicted_us: float | None,
             island: str | None = None,
             tokens_per_s: float | None = None,
-            cache_layout: str | None = None) -> None:
+            cache_layout: str | None = None,
+            wire: str | None = None,
+            dtype_bytes: int | None = None) -> None:
         err = None
         if predicted_us is not None and us > 0:
             err = (predicted_us - us) / us
@@ -96,6 +98,7 @@ class Recorder:
             "predicted_us": predicted_us, "pred_err": err,
             "island": island, "tokens_per_s": tokens_per_s,
             "cache_layout": cache_layout,
+            "wire": wire, "dtype_bytes": dtype_bytes,
         })
 
     def report(self) -> dict:
@@ -125,7 +128,8 @@ RECORDER = Recorder()
 
 def row(name: str, us: float, derived: str = "",
         predicted_us: float | None = None, island: str | None = None,
-        tokens_per_s: float | None = None, cache_layout: str | None = None):
+        tokens_per_s: float | None = None, cache_layout: str | None = None,
+        wire: str | None = None, dtype_bytes: int | None = None):
     """One measurement: prints the CSV row and records it for the JSON
     artifact. ``predicted_us`` is the §3.1.1 cost-model prediction for the
     same configuration (on ``pred_hw()``) when the bench can supply one;
@@ -133,10 +137,12 @@ def row(name: str, us: float, derived: str = "",
     (``repro.core.autotune.island_key``); ``tokens_per_s`` carries serving
     throughput (fig_serving) so the regression gate sees it as data, not
     just a derived string; ``cache_layout`` tags the KV layout
-    ("slab"/"paged") behind a serving row."""
+    ("slab"/"paged") behind a serving row; ``wire``/``dtype_bytes`` tag the
+    on-wire element format of a quantized-collective row (fig_quant_comm)
+    so dtype regressions gate against same-dtype baselines only."""
     print(f"{RECORDER.current_figure},{name},{us:.1f},{derived}")
     RECORDER.add(name, us, derived, predicted_us, island, tokens_per_s,
-                 cache_layout)
+                 cache_layout, wire, dtype_bytes)
 
 
 def _pred_table():

@@ -376,6 +376,70 @@ def fig_chunk_pipeline():
             island=isl.island_key)
 
 
+def fig_quant_comm():
+    """Quantized wire formats on the ring GEMM×collectives: bf16 payloads vs
+    the int8+per-block-scale wire (core.quant), same chunk count, all three
+    ops. The int8 rows carry ``wire``/``dtype_bytes`` tags so the regression
+    gate compares them against same-dtype baselines, a cost-model prediction
+    priced at the on-wire element width (wire_bytes=1 plus the quantize-pass
+    term), and the measured max relative error vs the bf16 wire."""
+    mesh = make_mesh()
+    ctx = CommContext(axis_name="x", mesh=mesh)
+    hw = pred_hw()
+    nsz, nc = 512, 2
+    cases = (
+        ("ag_gemm", "all_gather_matmul", (P("x"), P()), P()),
+        ("gemm_rs", "matmul_reduce_scatter",
+         (P(None, "x"), P("x", None)), P("x", None)),
+        ("gemm_ar", "matmul_all_reduce",
+         (P(None, "x"), P("x", None)), P()),
+    )
+    for tag, op, in_specs, out_specs in cases:
+        if op == "all_gather_matmul":
+            x = jax.random.normal(jax.random.PRNGKey(0),
+                                  (nsz, nsz // 8), jnp.bfloat16)
+            w = jax.random.normal(jax.random.PRNGKey(1),
+                                  (nsz // 8, nsz // 4), jnp.bfloat16)
+        else:
+            x = jax.random.normal(jax.random.PRNGKey(0),
+                                  (nsz, N * (nsz // 8)), jnp.bfloat16)
+            w = jax.random.normal(jax.random.PRNGKey(1),
+                                  (N * (nsz // 8), nsz // 4), jnp.bfloat16)
+        m, n, k = nsz, nsz // 4, nsz // 8
+        outs = {}
+        for wire, wbytes in (("bf16", 2), ("int8", 1)):
+            island = Island(
+                f"fig_quant/{tag}/{wire}", mesh=mesh, axis="x",
+                inputs={"x": in_specs[0], "w": in_specs[1]},
+                out_specs=out_specs,
+                body=lambda ctx_, x, w, op=op, wire=wire: getattr(ctx_, op)(
+                    x, w, backend="ring", n_chunks=nc, wire=wire),
+                comm=Comm(op, m=m, n=n, k=k, backend="ring", n_chunks=nc))
+            fn = jax.jit(lambda x, w, i=island: i(x=x, w=w))
+            outs[wire] = jnp.asarray(fn(x, w), jnp.float32)
+            pred = cm.chunk_pipeline_cost(
+                m, n, k, axis_size=N, sub_chunks=nc, kind=_OP_KIND[op],
+                hw=hw, wire_bytes=None if wire == "bf16" else 1.0).total
+            derived = f"chunks={nc}"
+            if wire != "bf16":
+                rel = float(jnp.max(jnp.abs(outs[wire] - outs["bf16"]))
+                            / (jnp.max(jnp.abs(outs["bf16"])) + 1e-9))
+                derived += f" max_rel_err_vs_bf16={rel:.4f}"
+            row(f"fig_quant_comm/{tag}/{wire}", timeit(fn, x, w), derived,
+                predicted_us=pred * 1e6, wire=wire, dtype_bytes=wbytes)
+    # int8-KV capacity: resident sequence slots a fixed HBM budget holds at
+    # each cache dtype (per-position bytes include the f32 scale planes)
+    from repro.configs import get_config
+    from repro.runtime import paging
+    cfg = get_config("tinyllama-1.1b").reduced()
+    s_max, budget = 128, 4 << 20
+    for kv, wbytes in (("bf16", 2), ("int8", 1)):
+        bpp = paging._kv_bytes_per_pos(cfg, kv)
+        row(f"fig_quant_comm/kv_resident_slots/{kv}", 0.0,
+            f"bytes_per_pos={bpp} slots={budget // (bpp * s_max)}",
+            cache_layout="slab", wire=kv, dtype_bytes=wbytes)
+
+
 def fig_serving():
     """Continuous batching vs static batching (tokens/s) on the 8-dev mesh.
 
@@ -547,4 +611,4 @@ ALL = [fig2_3_transfer_granularity, table3_hiding_threshold,
        fig6_allreduce_design_overhead, fig7_ag_gemm, fig8_gemm_rs,
        fig9_gemm_ar, fig10_ring_attention, fig11_ulysses, fig12_moe_dispatch,
        fig15_17_strided_collectives, fig_unified_template,
-       fig_chunk_pipeline, fig_serving, fig_fleet]
+       fig_chunk_pipeline, fig_quant_comm, fig_serving, fig_fleet]

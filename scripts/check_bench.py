@@ -85,6 +85,15 @@ def validate_schema(doc) -> list[str]:
             if cl is not None and cl not in ("slab", "paged"):
                 errors.append(f"{where}.rows[{j}].cache_layout must be "
                               "'slab', 'paged' or null")
+            wr = r.get("wire")
+            if wr is not None and not isinstance(wr, str):
+                errors.append(f"{where}.rows[{j}].wire must be a string "
+                              "or null")
+            db = r.get("dtype_bytes")
+            if db is not None and (isinstance(db, bool)
+                                   or not isinstance(db, int)):
+                errors.append(f"{where}.rows[{j}].dtype_bytes must be an "
+                              "integer or null")
     return errors
 
 

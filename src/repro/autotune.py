@@ -101,13 +101,26 @@ def _island_sweeps(args):
 
 
 def cmd_calibrate(args) -> int:
+    import dataclasses
+
     from repro.core import autotune, costmodel
 
     hw = getattr(costmodel, args.hw.upper())
-    islands = _island_sweeps(args) if args.per_island else ()
+    dtypes = {"bf16": (2,), "int8": (1,), "both": (2, 1)}[args.dtype]
+    islands = list(_island_sweeps(args)) if args.per_island else []
+    if 1 in dtypes and islands:
+        # re-key each GEMM island sweep at the int8 wire width: same declared
+        # (m, n, k), rows land under the island's b1 key so per-island
+        # measured dispatch resolves when the run sets comm_wire="int8"
+        islands += [
+            dataclasses.replace(
+                sw, island=sw.island.rsplit("|", 1)[0] + "|b1",
+                dtype_bytes=1)
+            for sw in islands
+            if sw.op in autotune.GEMM_OPS and sw.dtype_bytes != 1]
     table = autotune.calibrate(grid=args.grid, reps=args.reps, hw=hw,
                                notes=args.notes, verbose=True,
-                               islands=islands)
+                               islands=islands, dtypes=dtypes)
     out = args.out or autotune.cache_path(table.fingerprint)
     path = table.save(out)
     autotune.clear_caches()
@@ -193,6 +206,13 @@ def main(argv=None) -> int:
     p.add_argument("--out", default=None,
                    help="destination (default: the user cache path)")
     p.add_argument("--notes", default="")
+    p.add_argument("--dtype", default="bf16",
+                   choices=["bf16", "int8", "both"],
+                   help="wire-width axis: bf16 sweeps full precision (b2 "
+                        "rows); int8 sweeps the quantized ring wire (b1 "
+                        "rows: ring backends run wire='int8', the bulk "
+                        "baseline is timed unquantized under the same b1 "
+                        "key); both runs the grid twice")
     p.add_argument("--per-island", action="store_true",
                    help="additionally sweep backend x chunk count at every "
                         "active GEMM-collective island's declared (m, n, k), "

@@ -259,6 +259,13 @@ class RunConfig:
                                              # GEMM×collective (None = per-call
                                              # kwarg > measured table > the
                                              # analytic chunk scheduler)
+    comm_wire: str | None = None             # on-wire format for ring
+                                             # GEMM×collectives: None/"bf16" =
+                                             # full precision, "int8" =
+                                             # per-block int8 + f32 scales,
+                                             # "int8_sr" = int8 + stochastic
+                                             # rounding (core/quant.py);
+                                             # threaded to CommContext.wire
 
     # compute
     attention_impl: Literal["xla", "pallas"] = "xla"
@@ -325,6 +332,11 @@ class ServeConfig:
       admission backpressure when the pool is exhausted. Attention-only
       architectures only (SSM state has no paged equivalent here).
 
+    ``kv_dtype`` selects the stored KV-cache element type: ``"bf16"`` (the
+    default — byte-identical to the historical layout) or ``"int8"``, which
+    stores K/V as int8 with one f32 scale per (token, head) plane —
+    quantize-on-write, dequantize-on-read — roughly halving cache HBM.
+
     ``page_size`` is the tokens-per-page granularity of the paged layout
     (rounded up to a multiple of the tp axis size so pages stripe evenly
     over shards). ``n_pages`` sizes the pool; 0 = auto (slab-equivalent:
@@ -341,6 +353,7 @@ class ServeConfig:
     queue_policy: Literal["fcfs", "bucket-greedy"] = "fcfs"
     exact_buckets: bool = False
     cache_layout: Literal["slab", "paged"] = "slab"
+    kv_dtype: Literal["bf16", "int8"] = "bf16"
     page_size: int = 16
     n_pages: int = 0
     prefill_chunk: int = 0
@@ -355,6 +368,8 @@ class ServeConfig:
             raise ValueError("prefill_batch cannot exceed max_batch")
         if self.cache_layout not in ("slab", "paged"):
             raise ValueError(f"unknown cache_layout {self.cache_layout!r}")
+        if self.kv_dtype not in ("bf16", "int8"):
+            raise ValueError(f"unknown kv_dtype {self.kv_dtype!r}")
         if self.page_size < 1:
             raise ValueError("page_size must be >= 1")
         if self.n_pages < 0:

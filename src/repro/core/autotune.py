@@ -263,10 +263,19 @@ class CalibrationTable:
                 continue
             if axis_size is not None and row["axis_size"] != axis_size:
                 continue
-            if (dtype_bytes is not None
-                    and row.get("dtype_bytes") is not None
-                    and row["dtype_bytes"] != dtype_bytes):
-                continue
+            if dtype_bytes is not None:
+                row_b = row.get("dtype_bytes")
+                if row_b is None:
+                    # Legacy rows predate the dtype axis. They were measured
+                    # on full-precision payloads, so they may serve any
+                    # full-precision query — but never a quantized-wire
+                    # (sub-2-byte) one: a b1 lookup resolving onto a
+                    # bf16-era measurement would report the unquantized
+                    # ring's time as the int8 ring's.
+                    if dtype_bytes < 2:
+                        continue
+                elif row_b != dtype_bytes:
+                    continue
             tag = row.get("island")
             if tag is None:
                 tiers[1].append(row)
@@ -318,7 +327,8 @@ class CalibrationTable:
         ``dtype_bytes`` filters to rows measured at that element width: a
         bf16 ring's measured win (half the bytes of an f32-promoted bulk
         collective) does not transfer to an f32 payload. Rows without a
-        recorded dtype (older tables) match any width. ``island`` prefers
+        recorded dtype (older tables) match any full-precision width but
+        never a quantized-wire query (``dtype_bytes < 2``). ``island`` prefers
         rows calibrated for that island key (``calibrate --per-island``)
         and falls back to the global rows (``island_only`` disables the
         fallback).
@@ -661,36 +671,52 @@ def _feasible(op: str, backend: str, n_dev: int, nsz: int,
 
 
 def _sweep_gemm_ops(ctx, mesh, axis_name: str, sizes: Sequence[int],
-                    reps: int, log) -> list[dict]:
+                    reps: int, log, *, dtype_bytes: int = 2) -> list[dict]:
+    """One pass over the GEMM-op grid at one wire width.
+
+    ``dtype_bytes=2`` is the classic bf16 sweep. ``dtype_bytes=1`` measures
+    the *int8 wire*: operands stay bf16 but ring backends run with
+    ``wire="int8"`` (quantize → int8+scales ring → dequantize), and the bulk
+    baseline is timed unquantized but recorded under the same ``b1`` width —
+    so a ``dtype_bytes=1`` dispatch query compares the int8 ring against the
+    full-precision bulk it would actually be replacing. The fused backend is
+    excluded at b1 (fused kernels ship full precision; timing one under a
+    quantized-wire label would poison the table)."""
     import jax
     from functools import partial
 
     from repro import compat
 
     n_dev = mesh.shape[axis_name]
+    wire = "int8" if dtype_bytes == 1 else None
     rows: list[dict] = []
     for op in GEMM_OPS:
         avail = ctx.available_backends(op)
         for nsz in sizes:
             args, in_specs, out_specs, (m, n, k) = _gemm_case(op, nsz, n_dev)
             for be in ("bulk", "ring", "ring_bidir", "fused"):
+                if be == "fused" and wire is not None:
+                    continue
                 if not _feasible(op, be, n_dev, nsz, avail):
                     continue
                 # the global grid pins the classic 1-chunk ring; chunk-count
                 # variants are swept per island (calibrate --per-island)
                 fn = jax.jit(compat.shard_map(
-                    partial(getattr(ctx, op), backend=be, n_chunks=1),
+                    partial(getattr(ctx, op), backend=be, n_chunks=1,
+                            wire=wire),
                     mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                     check_vma=False))
                 try:
                     t = _timeit(fn, *args, reps=reps)
                 except Exception as e:  # noqa: BLE001 — skip, don't abort
-                    log(f"  {op}/{be}/N={nsz}: SKIPPED ({type(e).__name__})")
+                    log(f"  {op}/{be}/N={nsz}/b{dtype_bytes}: SKIPPED "
+                        f"({type(e).__name__})")
                     continue
                 rows.append({"op": op, "backend": be, "axis_size": n_dev,
-                             "m": m, "n": n, "k": k, "dtype_bytes": 2,
+                             "m": m, "n": n, "k": k,
+                             "dtype_bytes": dtype_bytes,
                              "n_chunks": 1, "us": t * 1e6})
-                log(f"  {op}/{be}/N={nsz}: {t * 1e6:.1f} us")
+                log(f"  {op}/{be}/N={nsz}/b{dtype_bytes}: {t * 1e6:.1f} us")
     return rows
 
 
@@ -781,7 +807,11 @@ def _sweep_islands(ctx, mesh, axis_name: str, sweeps: Sequence[IslandSweep],
             log(f"  island {sw.island}: m={sw.m} not divisible by "
                 f"{n_dev}-device axis, skipped")
             continue
-        dtype = jnp.bfloat16 if sw.dtype_bytes == 2 else jnp.float32
+        # dtype_bytes=1 is the int8-wire sweep: bf16 operands, ring backends
+        # run quantized (wire="int8"), bulk timed unquantized under the same
+        # b1 key — the comparison measured dispatch actually makes.
+        wire = "int8" if sw.dtype_bytes == 1 else None
+        dtype = jnp.float32 if sw.dtype_bytes == 4 else jnp.bfloat16
         if sw.op == "all_gather_matmul":
             x = jax.random.normal(jax.random.PRNGKey(0), (sw.m, sw.k), dtype)
             w = jax.random.normal(jax.random.PRNGKey(1), (sw.k, sw.n), dtype)
@@ -801,7 +831,8 @@ def _sweep_islands(ctx, mesh, axis_name: str, sweeps: Sequence[IslandSweep],
         for be in backends:
             for c in ((1,) if be == "bulk" else ISLAND_CHUNK_SWEEP):
                 fn = jax.jit(compat.shard_map(
-                    partial(getattr(ctx, sw.op), backend=be, n_chunks=c),
+                    partial(getattr(ctx, sw.op), backend=be, n_chunks=c,
+                            wire=wire),
                     mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                     check_vma=False))
                 try:
@@ -851,7 +882,8 @@ def _sweep_psum(ctx, mesh, axis_name: str, sizes: Sequence[int],
 def calibrate(mesh=None, *, axis_name: str = "x", hw=None,
               grid: str | Sequence[int] = "small", reps: int = 3,
               notes: str = "", verbose: bool = False,
-              islands: Sequence[IslandSweep] = ()) -> CalibrationTable:
+              islands: Sequence[IslandSweep] = (),
+              dtypes: Sequence[int] = (2,)) -> CalibrationTable:
     """Run the full micro-benchmark suite and fit a ``CalibrationTable``.
 
     With ``mesh=None`` a 1-D mesh over every visible device is built. The
@@ -860,7 +892,11 @@ def calibrate(mesh=None, *, axis_name: str = "x", hw=None,
     cache the measured policy searches). ``islands`` adds per-island sweeps
     (backend × chunk count at each island's exact declared coordinates,
     rows tagged with the island key) — the CLI derives them from a model
-    config via ``calibrate --per-island``.
+    config via ``calibrate --per-island``. ``dtypes`` is the wire-width
+    axis: each entry runs the GEMM-op grid once at that element width
+    (``2`` = bf16; ``1`` = int8 wire — ring backends quantized, bulk
+    baseline unquantized but recorded under ``b1`` — so measured dispatch
+    can conclude int8-ring beats bf16-bulk from the table alone).
     """
     from repro.core import costmodel as cm
     from repro.core.comms import CommContext
@@ -885,7 +921,10 @@ def calibrate(mesh=None, *, axis_name: str = "x", hw=None,
     launch = _measure_launch(reps)
     log(f"  launch: {launch * 1e6:.1f} us")
 
-    rows = _sweep_gemm_ops(ctx, mesh, axis_name, sizes, reps, log)
+    rows: list[dict] = []
+    for db in dtypes:
+        rows += _sweep_gemm_ops(ctx, mesh, axis_name, sizes, reps, log,
+                                dtype_bytes=int(db))
     rows += _sweep_psum(ctx, mesh, axis_name, sizes, reps, log)
     if islands:
         log(f"per-island sweep ({len(tuple(islands))} islands) ...")

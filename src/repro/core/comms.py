@@ -111,6 +111,8 @@ from jax import lax
 
 from repro import compat
 from repro.core import costmodel as cm
+from repro.core.quant import (WireFormat, dequantize_blocks, quantize_blocks,
+                              resolve_wire, wire_dtype_bytes)
 from repro.core.schedule import (GEMM_CHUNK_DIM, ChunkSchedule, OverlapPolicy,
                                  a2a_chunk_axis, choose_a2a_chunks,
                                  choose_gemm_chunks, choose_gemm_collective,
@@ -251,6 +253,21 @@ class CommContext:
     #: GEMM×collectives (``RunConfig.comm_chunks``). None = per-call kwarg,
     #: else measured table, else the analytic chunk scheduler.
     chunks: int | None = None
+    #: on-wire element format for the ring GEMM×collectives
+    #: (``RunConfig.comm_wire``): None/"bf16" ships payloads in their own
+    #: dtype; "int8" quantizes each travelling sub-chunk per-row into int8
+    #: blocks + f32 scales (quantize → ring-shift → dequantize-accumulate
+    #: in f32); "int8_sr" adds stochastic rounding (GEMM+AR option). Bulk
+    #: and fused backends ignore the wire — it is a property of the ring
+    #: transfer schedule, and the measured question the dtype axis answers
+    #: is precisely "int8-ring vs bf16-bulk".
+    wire: Any = None
+
+    def wire_format(self, override: Any = None) -> WireFormat | None:
+        """Resolved quantized ``WireFormat`` for a call (per-call ``wire=``
+        override first, then the context default), or None when the wire is
+        full-precision."""
+        return resolve_wire(override if override is not None else self.wire)
 
     # -- introspection -----------------------------------------------------
 
@@ -345,8 +362,8 @@ class CommContext:
         return footprint <= self.hw.vmem_bytes
 
     def gemm_policy(self, m: int, n: int, k: int, *, kind: str,
-                    dtype_bytes: int = 2, hw: cm.HardwareSpec | None = None
-                    ) -> OverlapPolicy:
+                    dtype_bytes: int = 2, hw: cm.HardwareSpec | None = None,
+                    wire: Any = None) -> OverlapPolicy:
         """The §3.1.3 schedule decision for a fused GEMM×collective of global
         GEMM shape (m, n, k) over this context's axis. Pure / trace-free.
 
@@ -358,19 +375,26 @@ class CommContext:
         "all_gather" kind may credit the cost model with the second
         link-pair — otherwise hidden_fraction would be 2x optimistic for
         RS/AR and the policy would report a strategy no backend implements.
+
+        A quantized wire reprices only the ring's transfer side: the hiding
+        condition is evaluated at the on-wire element width (scales and
+        quantize-kernel term included), so the hidden fraction the plan
+        reports reflects what the int8 payload actually ships.
         """
         allow_bidir = self.allow_bidir and kind == "all_gather"
+        fmt = self.wire_format(wire)
         return choose_gemm_collective(
             m, n, k, axis_size=self.axis_size, kind=kind,
             dtype_bytes=dtype_bytes,
             hw=hw if hw is not None else self.effective_hw(),
-            allow_bidir=allow_bidir)
+            allow_bidir=allow_bidir,
+            wire_bytes=fmt.bytes_per_element if fmt is not None else None)
 
     _GEMM_KIND = GEMM_OP_KIND
 
     def auto_gemm_backend(self, op: str, m: int, n: int, k: int, *,
                           dtype_bytes: int = 2, fused_ok: bool = False,
-                          bidir_ok: bool = True) -> str:
+                          bidir_ok: bool = True, wire: Any = None) -> str:
         """The backend ``backend=None`` resolves to for a GEMM×collective of
         global shape (m, n, k) — the policy mapping itself, trace-free, so
         dispatch is unit-testable without running the GEMM. ``fused_ok`` /
@@ -381,7 +405,13 @@ class CommContext:
         near (m, n, k) are compared on *measured* microseconds and the
         analytic model is only consulted when the table has no usable
         coverage (shape too far off the calibrated grid, or fewer than two
-        feasible backends measured)."""
+        feasible backends measured). A quantized ``wire`` moves the lookup
+        to that width's rows (``dtype_bytes=1`` → the ``b1`` island keys a
+        ``calibrate --dtype int8`` sweep produced) — the rows there pit the
+        int8 ring against the still-full-precision bulk collective, so the
+        measured argmin answers exactly "does int8-ring beat bf16-bulk"."""
+        fmt = self.wire_format(wire)
+        q_bytes = fmt.dtype_bytes if fmt is not None else dtype_bytes
         table = self.active_calibration()
         if table is not None:
             allowed = ["bulk", "ring"]
@@ -392,16 +422,20 @@ class CommContext:
                 allowed.append("fused")
             best = table.best_backend(op, m, n, k, allowed=allowed,
                                       axis_size=self.axis_size,
-                                      dtype_bytes=dtype_bytes,
+                                      dtype_bytes=q_bytes,
                                       island=self.island)
             if best is not None:
                 return best
         pol = self.gemm_policy(
             m, n, k, kind=self._GEMM_KIND[op], dtype_bytes=dtype_bytes,
-            hw=table.spec(self.hw) if table is not None else self.hw)
+            hw=table.spec(self.hw) if table is not None else self.hw,
+            wire=wire)
         if not pol.enabled:
             return "bulk"
-        if fused_ok:
+        if fused_ok and fmt is None:
+            # the fused Pallas kernels ship full-precision payloads; under a
+            # quantized wire the ring schedules are the ones that actually
+            # put int8 on the links
             return "fused"
         if (op == "all_gather_matmul" and pol.strategy == "ring_bidir"
                 and bidir_ok):
@@ -411,7 +445,8 @@ class CommContext:
     def gemm_chunk_schedule(self, op: str, m: int, n: int, k: int, *,
                             backend: str, dtype_bytes: int = 2,
                             n_chunks: int | None = None,
-                            chunk_dim: str | None = None) -> ChunkSchedule:
+                            chunk_dim: str | None = None,
+                            wire: Any = None) -> ChunkSchedule:
         """The chunk-pipeline decision for a resolved GEMM×collective call.
 
         Precedence: explicit per-call ``n_chunks`` > the context-wide
@@ -421,8 +456,19 @@ class CommContext:
         backends take no sub-chunks — the whole point of chunking is the ring
         pipeline. The returned count is a request; the impls fit it to the
         chunked sub-shape's largest divisor (never a new shape constraint).
+
+        A quantized ``wire`` pins ``chunk_dim="m"``: blocks are quantized
+        per row (along the last axis), so row chunks leave every scale group
+        intact — the quantized values stay bit-exact across chunk counts —
+        while column chunks would re-cut the blocks per chunk. It also moves
+        the measured chunk lookup to the wire's ``b{dtype_bytes}`` rows and
+        reprices the analytic argmin at the on-wire element width.
         """
         kind = self._GEMM_KIND[op]
+        fmt = self.wire_format(wire)
+        if fmt is not None:
+            # per-row scale groups survive only row chunking (see docstring)
+            chunk_dim = "m"
         dim = chunk_dim if chunk_dim is not None else GEMM_CHUNK_DIM[kind]
         if backend not in ("ring", "ring_bidir"):
             return ChunkSchedule(1, dim, f"{backend} path takes no sub-chunks")
@@ -433,18 +479,20 @@ class CommContext:
             return ChunkSchedule(max(1, self.chunks), dim,
                                  "context chunks= (RunConfig.comm_chunks)",
                                  source="explicit")
+        q_bytes = fmt.dtype_bytes if fmt is not None else dtype_bytes
         table = self.active_calibration()
         if table is not None:
             c = table.best_chunks(op, backend, m, n, k,
                                   axis_size=self.axis_size,
-                                  dtype_bytes=dtype_bytes,
+                                  dtype_bytes=q_bytes,
                                   island=self.island)
             if c is not None:
                 return ChunkSchedule(c, dim, "measured chunk sweep argmin",
                                      source="measured")
-        sched = choose_gemm_chunks(m, n, k, axis_size=self.axis_size,
-                                   kind=kind, dtype_bytes=dtype_bytes,
-                                   hw=self.effective_hw())
+        sched = choose_gemm_chunks(
+            m, n, k, axis_size=self.axis_size, kind=kind,
+            dtype_bytes=dtype_bytes, hw=self.effective_hw(),
+            wire_bytes=fmt.bytes_per_element if fmt is not None else None)
         return sched if chunk_dim is None else dataclasses.replace(
             sched, chunk_dim=chunk_dim)
 
@@ -511,6 +559,7 @@ class CommContext:
     def all_gather_matmul(self, x, w, *, backend: str | None = None,
                           n_chunks: int | None = None,
                           chunk_dim: str | None = None,
+                          wire: Any = None,
                           preferred=jnp.float32):
         """x: (m_loc, k) row-sharded; w: (k, n_loc) local. -> (m, n_loc).
 
@@ -521,6 +570,10 @@ class CommContext:
         odd; the guard validates the chunked sub-shape, not full-shard
         parity). ``n_chunks``/``chunk_dim`` select the chunk-pipeline
         granularity of the ring schedules (None = scheduler/measured table).
+        ``wire`` (per-call override of the context default) selects the
+        on-wire format of the ring payloads: "int8" quantizes each
+        travelling shard chunk once per-row and ships (int8, f32-scale)
+        pairs around the ring, dequantizing for each arrival's GEMM.
 
         Example (inside ``shard_map`` with axis ``"model"`` bound)::
 
@@ -532,6 +585,7 @@ class CommContext:
         n_dev = self.axis_size
         m_loc, k = x.shape
         n_out = w.shape[1]
+        fmt = self.wire_format(wire)
 
         def auto() -> str:
             return self.auto_gemm_backend(
@@ -539,7 +593,7 @@ class CommContext:
                 dtype_bytes=x.dtype.itemsize,
                 fused_ok=self._prefer_fused(
                     x, w, out_bytes=m_loc * n_dev * n_out * 4),
-                bidir_ok=(m_loc >= 2))
+                bidir_ok=(m_loc >= 2), wire=fmt)
 
         be = self._resolve("all_gather_matmul", backend, auto)
         if be == "ring_bidir":
@@ -556,11 +610,12 @@ class CommContext:
             sched = self.gemm_chunk_schedule(
                 "all_gather_matmul", m_loc * n_dev, n_out, k, backend=be,
                 dtype_bytes=x.dtype.itemsize, n_chunks=n_chunks,
-                chunk_dim=chunk_dim)
+                chunk_dim=chunk_dim, wire=fmt)
             return pk_all_gather_matmul(x, w, self.axis_name,
                                         bidirectional=(be == "ring_bidir"),
                                         n_chunks=sched.n_chunks,
                                         chunk_dim=sched.chunk_dim,
+                                        wire=fmt,
                                         preferred=preferred)
         from repro.kernels import ops
         return ops.pk_ag_matmul(x, w, self.axis_name,
@@ -570,6 +625,7 @@ class CommContext:
     def matmul_reduce_scatter(self, x, w, *, backend: str | None = None,
                               n_chunks: int | None = None,
                               chunk_dim: str | None = None,
+                              wire: Any = None,
                               preferred=jnp.float32):
         """x: (m, k_loc); w: (k_loc, n). -> (m_loc, n) = RS(x @ w).
 
@@ -588,6 +644,7 @@ class CommContext:
         n_dev = self.axis_size
         m, k_loc = x.shape
         n_out = w.shape[1]
+        fmt = self.wire_format(wire)
 
         def auto() -> str:
             if m % n_dev != 0:
@@ -596,7 +653,7 @@ class CommContext:
                 "matmul_reduce_scatter", m, n_out, k_loc,
                 dtype_bytes=x.dtype.itemsize,
                 fused_ok=self._prefer_fused(
-                    x, w, out_bytes=(m // n_dev) * n_out * 4))
+                    x, w, out_bytes=(m // n_dev) * n_out * 4), wire=fmt)
 
         be = self._resolve("matmul_reduce_scatter", backend, auto)
         if be != "bulk":
@@ -610,10 +667,11 @@ class CommContext:
             sched = self.gemm_chunk_schedule(
                 "matmul_reduce_scatter", m, n_out, k_loc, backend=be,
                 dtype_bytes=x.dtype.itemsize, n_chunks=n_chunks,
-                chunk_dim=chunk_dim)
+                chunk_dim=chunk_dim, wire=fmt)
             return pk_matmul_reduce_scatter(x, w, self.axis_name,
                                             n_chunks=sched.n_chunks,
                                             chunk_dim=sched.chunk_dim,
+                                            wire=fmt,
                                             preferred=preferred)
         from repro.kernels import ops
         return ops.pk_matmul_rs(x, w, self.axis_name,
@@ -623,6 +681,7 @@ class CommContext:
     def matmul_all_reduce(self, x, w, *, backend: str | None = None,
                           n_chunks: int | None = None,
                           chunk_dim: str | None = None,
+                          wire: Any = None,
                           preferred=jnp.float32):
         """x: (m, k_loc); w: (k_loc, n). -> (m, n) = AR(x @ w).
 
@@ -639,6 +698,7 @@ class CommContext:
         n_dev = self.axis_size
         m, k_loc = x.shape
         n_out = w.shape[1]
+        fmt = self.wire_format(wire)
 
         def auto() -> str:
             if m % n_dev != 0:
@@ -647,7 +707,7 @@ class CommContext:
                 "matmul_all_reduce", m, n_out, k_loc,
                 dtype_bytes=x.dtype.itemsize,
                 fused_ok=self._prefer_fused(
-                    x, w, out_bytes=(m // n_dev) * n_out * 4))
+                    x, w, out_bytes=(m // n_dev) * n_out * 4), wire=fmt)
 
         be = self._resolve("matmul_all_reduce", backend, auto)
         if be != "bulk":
@@ -661,10 +721,11 @@ class CommContext:
             sched = self.gemm_chunk_schedule(
                 "matmul_all_reduce", m, n_out, k_loc, backend=be,
                 dtype_bytes=x.dtype.itemsize, n_chunks=n_chunks,
-                chunk_dim=chunk_dim)
+                chunk_dim=chunk_dim, wire=fmt)
             return pk_matmul_all_reduce(x, w, self.axis_name,
                                         n_chunks=sched.n_chunks,
                                         chunk_dim=sched.chunk_dim,
+                                        wire=fmt,
                                         preferred=preferred)
         from repro.kernels import ops
         rs = ops.pk_matmul_rs(x, w, self.axis_name,
@@ -837,6 +898,18 @@ def _axis_info(axis_name):
 
 # -- chunk plumbing shared by the ring schedules -----------------------------
 
+def _wire_sr_key(wire: WireFormat | None, axis_name: str, salt: int):
+    """Deterministic per-device stochastic-rounding key for a quantized
+    ring, or None for round-to-nearest wires. Derived from a fixed seed +
+    the device's ring position + a per-op salt, so every retrace of the
+    same schedule rounds identically (reproducible runs) while no two
+    devices or hops share noise."""
+    if wire is None or not wire.stochastic_round:
+        return None
+    key = jax.random.fold_in(jax.random.PRNGKey(1729), salt)
+    return jax.random.fold_in(key, lax.axis_index(axis_name))
+
+
 def _row_chunks(t: jax.Array, n_chunks: int) -> list[jax.Array]:
     """Split `t` into `n_chunks` row chunks (fitted to a divisor of the row
     count — the non-divisible fallback validates the chunked sub-shape)."""
@@ -864,7 +937,8 @@ def all_gather_matmul_baseline(x: jax.Array, w: jax.Array, axis_name: str,
 
 
 def _ag_ring_lane(x, w, out, axis_name, *, n, d, row0: int, m_stride: int,
-                  reverse: bool, n_chunks: int, chunk_dim: str, preferred):
+                  reverse: bool, n_chunks: int, chunk_dim: str, preferred,
+                  wire: WireFormat | None = None):
     """One direction of the chunk-pipelined AG+GEMM ring.
 
     The travelling shard is split into chunks (rows for chunk_dim="m",
@@ -872,6 +946,13 @@ def _ag_ring_lane(x, w, out, axis_name, *, n, d, row0: int, m_stride: int,
     ppermutes before the current chunk GEMMs consume their operands
     (double-buffered send-ahead), so the per-chunk shifts hide under the
     per-chunk GEMMs at sub-shard granularity.
+
+    With a quantized ``wire``, each travelling chunk is quantized ONCE
+    per-row before the first hop and travels the whole ring as an
+    (int8 payload, f32 scales) pair; every arrival — the device's own
+    chunk included, so ring == bulk-quantized-AG exactly — is dequantized
+    to f32 for its GEMM. Because blocks are per-row and chunks slice rows,
+    the dequantized values are bit-exact across chunk counts.
     """
     perm = _perm_left(n) if reverse else _perm_right(n)
     if chunk_dim == "n":
@@ -880,14 +961,34 @@ def _ag_ring_lane(x, w, out, axis_name, *, n, d, row0: int, m_stride: int,
     else:
         w_chunks = [w]
         cur = _row_chunks(x, n_chunks)
+    k_cols = x.shape[1]
+    if wire is not None:
+        key = _wire_sr_key(wire, axis_name, salt=1 if reverse else 0)
+        cur = [quantize_blocks(
+                   t, block=wire.block,
+                   stochastic_key=(None if key is None
+                                   else jax.random.fold_in(key, j)))
+               for j, t in enumerate(cur)]
     for i in range(n):
         src = (d + i) % n if reverse else (d - i) % n
         # send-ahead: step i+1's shifts are issued before step i's GEMMs,
         # which depend only on the already-held chunks
-        nxt = ([lax.ppermute(t, axis_name, perm) for t in cur]
-               if i < n - 1 else cur)
+        if i < n - 1:
+            if wire is None:
+                nxt = [lax.ppermute(t, axis_name, perm) for t in cur]
+            else:
+                nxt = [(lax.ppermute(q, axis_name, perm),
+                        lax.ppermute(s, axis_name, perm)) for q, s in cur]
+        else:
+            nxt = cur
         r = 0
         for t in cur:
+            if wire is not None:
+                q, s = t
+                rows = q.shape[0]
+                t = dequantize_blocks(q, s, k_cols)
+            else:
+                rows = t.shape[0]
             col = 0
             for wc in w_chunks:
                 y = jnp.dot(t, wc,
@@ -895,14 +996,14 @@ def _ag_ring_lane(x, w, out, axis_name, *, n, d, row0: int, m_stride: int,
                 out = lax.dynamic_update_slice(
                     out, y, (src * m_stride + row0 + r, col))
                 col += wc.shape[1]
-            r += t.shape[0]
+            r += rows
         cur = nxt
     return out
 
 
 def pk_all_gather_matmul(x: jax.Array, w: jax.Array, axis_name: str, *,
                          bidirectional: bool = False, n_chunks: int = 1,
-                         chunk_dim: str = "m",
+                         chunk_dim: str = "m", wire: WireFormat | None = None,
                          preferred=jnp.float32) -> jax.Array:
     """Chunk-pipelined AG+GEMM: rotate x shards around the ring; GEMM each
     chunk on arrival. Each ring step is split into `n_chunks` double-buffered
@@ -914,8 +1015,15 @@ def pk_all_gather_matmul(x: jax.Array, w: jax.Array, axis_name: str, *,
     ``bidirectional`` splits the shard across the two ring directions (two
     link-pairs, halving T_comm). The split no longer requires an even
     ``m_loc``: an odd shard splits unevenly (ceil right, floor left) — the
-    chunked sub-shapes are what must be sliceable, not the full shard."""
+    chunked sub-shapes are what must be sliceable, not the full shard.
+
+    ``wire`` (a quantized ``core.quant.WireFormat``) ships the travelling
+    shards as int8 blocks + f32 scales; every consumer — including the
+    local device's own shard — sees the dequantized values, so the result
+    equals a bulk all-gather of the per-row-quantized input bit-for-bit,
+    for any chunk count."""
     n, d = _axis_info(axis_name)
+    wire = wire if (wire is not None and wire.quantized) else None
     m_loc, _ = x.shape
     n_out = w.shape[1]
     out = jnp.zeros((n * m_loc, n_out), dtype=x.dtype)
@@ -923,7 +1031,8 @@ def pk_all_gather_matmul(x: jax.Array, w: jax.Array, axis_name: str, *,
     if not bidirectional or n % 2 != 0 or m_loc < 2:
         return _ag_ring_lane(x, w, out, axis_name, n=n, d=d, row0=0,
                              m_stride=m_loc, reverse=False, n_chunks=n_chunks,
-                             chunk_dim=chunk_dim, preferred=preferred)
+                             chunk_dim=chunk_dim, preferred=preferred,
+                             wire=wire)
 
     # Bidirectional: the shard's top rows travel the right-going ring, the
     # bottom rows the left-going ring — each of the n-1 hops moves part of a
@@ -934,10 +1043,10 @@ def pk_all_gather_matmul(x: jax.Array, w: jax.Array, axis_name: str, *,
     x_r, x_l = x[:h_r], x[h_r:]
     out = _ag_ring_lane(x_r, w, out, axis_name, n=n, d=d, row0=0,
                         m_stride=m_loc, reverse=False, n_chunks=n_chunks,
-                        chunk_dim=chunk_dim, preferred=preferred)
+                        chunk_dim=chunk_dim, preferred=preferred, wire=wire)
     return _ag_ring_lane(x_l, w, out, axis_name, n=n, d=d, row0=h_r,
                          m_stride=m_loc, reverse=True, n_chunks=n_chunks,
-                         chunk_dim=chunk_dim, preferred=preferred)
+                         chunk_dim=chunk_dim, preferred=preferred, wire=wire)
 
 
 # -- GEMM + reduce-scatter (paper Fig. 8 / Table 3) — TP second projection. --
@@ -953,6 +1062,7 @@ def matmul_reduce_scatter_baseline(x: jax.Array, w: jax.Array, axis_name: str,
 
 def pk_matmul_reduce_scatter(x: jax.Array, w: jax.Array, axis_name: str, *,
                              n_chunks: int = 1, chunk_dim: str = "m",
+                             wire: WireFormat | None = None,
                              preferred=jnp.float32) -> jax.Array:
     """Chunk-pipelined GEMM+RS (accumulate-and-forward ring).
 
@@ -968,8 +1078,19 @@ def pk_matmul_reduce_scatter(x: jax.Array, w: jax.Array, axis_name: str, *,
     under per-chunk compute at sub-block granularity. Chunk counts are fitted
     to the chunked sub-shape (largest divisor), and every count is
     bit-identical to the unchunked ring (GEMM rows/columns are independent
-    and the accumulation order around the ring is unchanged)."""
+    and the accumulation order around the ring is unchanged).
+
+    A quantized ``wire`` replaces the bf16 accumulator hop with quantize →
+    ring-shift (int8 payload + f32 scales) → dequantize-accumulate in f32:
+    the accumulator stays f32 between hops locally and only crosses the
+    link quantized. ``chunk_dim`` is forced to "m" — blocks are per-row, so
+    row chunks keep every scale group intact and the quantized values stay
+    bit-exact across chunk counts (column chunks would re-cut the blocks).
+    """
     n, d = _axis_info(axis_name)
+    wire = wire if (wire is not None and wire.quantized) else None
+    if wire is not None:
+        chunk_dim = "m"
     m = x.shape[0]
     assert m % n == 0, (m, n)
     m_blk = m // n
@@ -989,6 +1110,26 @@ def pk_matmul_reduce_scatter(x: jax.Array, w: jax.Array, axis_name: str, *,
         def partial_chunk(b, j):
             xb = lax.dynamic_slice_in_dim(x, b * m_blk + j * sub, sub, axis=0)
             return jnp.dot(xb, w, preferred_element_type=preferred)
+
+    if wire is not None:
+        key = _wire_sr_key(wire, axis_name, salt=2)
+        accs = [partial_chunk((d + 1) % n, j).astype(jnp.float32)
+                for j in range(c)]
+        for i in range(1, n):
+            # quantize each chunk accumulator, ship the (int8, scales) pair;
+            # send-ahead: all chunk shifts are issued before this step's GEMMs
+            qs = [quantize_blocks(
+                      a, block=wire.block,
+                      stochastic_key=(None if key is None else
+                                      jax.random.fold_in(key, i * c + j)))
+                  for j, a in enumerate(accs)]
+            qs = [(lax.ppermute(q, axis_name, _perm_left(n)),
+                   lax.ppermute(s, axis_name, _perm_left(n))) for q, s in qs]
+            accs = [dequantize_blocks(q, s, n_out)
+                    + partial_chunk((d + 1 + i) % n, j).astype(jnp.float32)
+                    for j, (q, s) in enumerate(qs)]
+        accs = [a.astype(x.dtype) for a in accs]
+        return accs[0] if c == 1 else jnp.concatenate(accs, axis=0)
 
     # the ring payload travels in the activation dtype (bf16): half the ICI
     # bytes of an f32 accumulator; each hop's add still runs in f32
@@ -1014,16 +1155,32 @@ def matmul_all_reduce_baseline(x: jax.Array, w: jax.Array, axis_name: str,
 
 def pk_matmul_all_reduce(x: jax.Array, w: jax.Array, axis_name: str, *,
                          n_chunks: int = 1, chunk_dim: str = "m",
+                         wire: WireFormat | None = None,
                          preferred=jnp.float32) -> jax.Array:
     """Overlapped GEMM+AR. TPU ICI has no in-network reduction (DESIGN §2.1),
     so the paper's switch-offloaded AR is re-derived as overlapped
     RS(accumulate-on-arrival) + AG: same 2*(N-1)/N per-device traffic, and the
     RS half hides under the GEMM. ``n_chunks``/``chunk_dim`` chunk-pipeline
-    the RS half (see ``pk_matmul_reduce_scatter``)."""
+    the RS half (see ``pk_matmul_reduce_scatter``).
+
+    A quantized ``wire`` applies to BOTH halves: the RS hops ship quantized
+    accumulators, and the trailing gather ships each device's reduced shard
+    as one more (int8, f32 scales) pair, dequantized after the gather —
+    ``wire.stochastic_round`` ("int8_sr") makes every quantize on the path
+    unbiased, the GEMM+AR mode where repeated reductions must not drift."""
     n, _ = _axis_info(axis_name)
+    wire = wire if (wire is not None and wire.quantized) else None
     rs = pk_matmul_reduce_scatter(x, w, axis_name, n_chunks=n_chunks,
-                                  chunk_dim=chunk_dim, preferred=preferred)
-    return lax.all_gather(rs, axis_name, axis=0, tiled=True)
+                                  chunk_dim=chunk_dim, wire=wire,
+                                  preferred=preferred)
+    if wire is None:
+        return lax.all_gather(rs, axis_name, axis=0, tiled=True)
+    key = _wire_sr_key(wire, axis_name, salt=3)
+    q, s = quantize_blocks(rs.astype(jnp.float32), block=wire.block,
+                           stochastic_key=key)
+    q = lax.all_gather(q, axis_name, axis=0, tiled=True)
+    s = lax.all_gather(s, axis_name, axis=0, tiled=True)
+    return dequantize_blocks(q, s, rs.shape[-1]).astype(rs.dtype)
 
 
 # -- Fine-grained all-to-all (paper Fig. 11 / 17). ----------------------------

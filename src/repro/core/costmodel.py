@@ -162,6 +162,21 @@ def collective_tensor_bytes(m: int, n: int, k: int, dtype_bytes: int,
 _collective_tensor_bytes = collective_tensor_bytes
 
 
+def quantize_cost(n_elems: float, hw: HardwareSpec = TPU_V5E, *,
+                  src_bytes: float = 2.0, wire_bytes: float = 1.0) -> float:
+    """Seconds for one quantize (or dequantize) pass over ``n_elems``.
+
+    The quantize kernel is HBM-bound: it streams the full-precision operand
+    in and the packed payload + scales out (symmetrically for dequantize),
+    so its cost is the round-trip bytes over HBM bandwidth plus a launch.
+    This is the extra term a quantized wire adds to the ring schedule —
+    ``t_comm`` shrinks by ``src_bytes / wire_bytes`` but every moved element
+    pays this pass on both ends of the hop.
+    """
+    return (hw.kernel_launch_s
+            + n_elems * (src_bytes + wire_bytes) / hw.hbm_bandwidth)
+
+
 def bulk_gemm_collective_cost(
     m: int, n: int, k: int, *, axis_size: int, dtype_bytes: int = 2,
     kind: str = "reduce_scatter", hw: HardwareSpec = TPU_V5E,
@@ -189,24 +204,38 @@ def bulk_gemm_collective_cost(
 def overlapped_gemm_collective_cost(
     m: int, n: int, k: int, *, axis_size: int, dtype_bytes: int = 2,
     kind: str = "reduce_scatter", n_chunks: int = 1,
-    hw: HardwareSpec = TPU_V5E,
+    hw: HardwareSpec = TPU_V5E, wire_bytes: float | None = None,
 ) -> KernelCost:
     """Analytic cost of a chunked overlapped GEMM×collective (PK schedule).
 
     Models the decomposed ring schedule: the collective for chunk i+1 runs on
     the ICI DMA engines while chunk i's GEMM runs on the MXU. With C chunks the
     non-overlapped residue is one chunk's transfer (pipeline fill).
+
+    ``wire_bytes`` prices a quantized wire: the ring payload travels at that
+    (possibly fractional — scales included) element width instead of
+    ``dtype_bytes``, and every moved element pays ``quantize_cost`` on both
+    ends of the hop, booked under ``t_non_overlap`` (the quantize kernel
+    runs on the VPU/HBM path serially with the chunk handoff, not under the
+    GEMM). The compute and HBM terms stay at the tensor's own width.
     """
     t_comp = gemm_cost(m, n, k, dtype_bytes, hw)
     out_bytes = m * n * dtype_bytes
-    comm_bytes = ring_collective_bytes(
-        _collective_tensor_bytes(m, n, k, dtype_bytes, kind)
-        / max(axis_size, 1), axis_size, kind)
+    elem_bytes = float(dtype_bytes) if wire_bytes is None else float(wire_bytes)
+    moved_elems = (_collective_tensor_bytes(m, n, k, 1, kind)
+                   / max(axis_size, 1))
+    comm_bytes = ring_collective_bytes(moved_elems * elem_bytes,
+                                       axis_size, kind)
     t_comm = transfer_cost(comm_bytes, hw)
     # HBM traffic: read A, B once; write C once (chunking re-reads one operand).
     t_mem = ((m * k + k * n) * dtype_bytes * max(1, n_chunks // 4 + 1)
              + out_bytes) / hw.hbm_bandwidth
     fill = t_comm / max(n_chunks, 1)
+    if wire_bytes is not None:
+        # quantize on send + dequantize on receive for every element moved
+        n_hop_elems = ring_collective_bytes(moved_elems, axis_size, kind)
+        fill += 2.0 * quantize_cost(n_hop_elems, hw, src_bytes=dtype_bytes,
+                                    wire_bytes=elem_bytes)
     t_sync = 2.0 * n_chunks * hw.remote_sync_s * max(axis_size - 1, 0)
     return KernelCost(t_launch=hw.kernel_launch_s, t_comp=t_comp, t_mem=t_mem,
                       t_comm=t_comm, t_non_overlap=fill, t_sync=t_sync)
@@ -215,7 +244,7 @@ def overlapped_gemm_collective_cost(
 def chunk_pipeline_cost(
     m: int, n: int, k: int, *, axis_size: int, sub_chunks: int,
     dtype_bytes: int = 2, kind: str = "reduce_scatter",
-    hw: HardwareSpec = TPU_V5E,
+    hw: HardwareSpec = TPU_V5E, wire_bytes: float | None = None,
 ) -> KernelCost:
     """Cost of the chunk-pipelined ring schedule (paper Fig. 2/11 regime).
 
@@ -237,7 +266,7 @@ def chunk_pipeline_cost(
     total = max(axis_size, 1) * max(sub_chunks, 1)
     base = overlapped_gemm_collective_cost(
         m, n, k, axis_size=axis_size, dtype_bytes=dtype_bytes, kind=kind,
-        n_chunks=total, hw=hw)
+        n_chunks=total, hw=hw, wire_bytes=wire_bytes)
     hops = max(axis_size - 1, 0) * (2 if kind == "all_reduce" else 1)
     return dataclasses.replace(
         base, t_sync=hops * max(sub_chunks, 1) * hw.remote_sync_s)

@@ -1,0 +1,230 @@
+"""Low-precision wire formats: per-block int8 quantization with f32 scales.
+
+The paper's transfer analysis (§3.1.1) prices ``t_comm`` linearly in payload
+bytes, so halving the element width halves the wire time of every ring hop
+— the cheapest ~2x available once the chunk pipeline already hides what it
+can. This module is the single quantization implementation for both wire
+paths in the repo:
+
+* the ring GEMM-collectives (``core/comms.py`` ``wire="int8"``): each
+  travelling sub-chunk is quantized per-row into int8 blocks with f32
+  scales, shifted as an (int8 payload, f32 scales) pair, and
+  dequantize-accumulated in f32 on arrival — the send-ahead double-buffered
+  schedule is untouched, quantize/dequantize are just per-chunk stages on
+  it;
+* the manual-DP gradient compressor (``optim/compress.py``), which
+  re-exports ``quant_dequant`` / ``ErrorFeedbackInt8`` from here so the two
+  paths cannot drift.
+
+Block layout: blocks are cut along the LAST axis (per row). Ring chunk
+schedules slice the payload along *m* (rows), so every row's scale groups
+are identical regardless of the chunk count — quantized values are
+bit-exact across ``n_chunks`` ∈ {1, 2, 4}, preserving the rings'
+bit-identical-to-1-chunk contract at the quantized level.
+
+``WireFormat`` is the descriptor threaded through ``RunConfig.comm_wire`` →
+``CommContext.wire`` → the ring impls, and priced by
+``costmodel``/``autotune`` under the existing ``b{dtype_bytes}`` island
+keys.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+#: default quantization block (elements sharing one f32 scale).
+BLOCK = 256
+
+#: int8 symmetric range.
+QMAX = 127.0
+
+#: scale floor — keeps all-zero blocks from dividing by zero.
+SCALE_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class WireFormat:
+    """Descriptor for the on-wire element format of a transfer schedule.
+
+    ``dtype_bytes`` is the payload element width the cost model and the
+    calibration tables key on (``island_key(..., dtype_bytes)`` →
+    ``b{dtype_bytes}`` rows); ``block`` is the per-row quantization block
+    (elements per f32 scale); ``stochastic_round`` selects unbiased
+    stochastic rounding instead of round-to-nearest (the GEMM+AR option —
+    repeated quantized reductions then average out instead of drifting).
+    """
+
+    name: str
+    dtype_bytes: int
+    block: int = BLOCK
+    stochastic_round: bool = False
+
+    @property
+    def quantized(self) -> bool:
+        return self.dtype_bytes < 2
+
+    @property
+    def bytes_per_element(self) -> float:
+        """Effective wire bytes per payload element, scales included.
+
+        int8 blocks ship one f32 scale per ``block`` elements:
+        1 + 4/256 = 1.015625 B/elem at the default block.
+        """
+        if not self.quantized:
+            return float(self.dtype_bytes)
+        return self.dtype_bytes + 4.0 / self.block
+
+
+#: the formats ``resolve_wire`` accepts by name. "bf16" is the identity
+#: wire (payload ships in its own dtype); "int8" is round-to-nearest block
+#: quantization; "int8_sr" adds stochastic rounding (GEMM+AR option).
+WIRE_FORMATS: dict[str, WireFormat] = {
+    "bf16": WireFormat("bf16", dtype_bytes=2),
+    "int8": WireFormat("int8", dtype_bytes=1),
+    "int8_sr": WireFormat("int8_sr", dtype_bytes=1, stochastic_round=True),
+}
+
+
+def resolve_wire(wire: Any) -> WireFormat | None:
+    """Map a user-facing wire spec to a ``WireFormat`` (or None).
+
+    Accepts None (full-precision: no wire transform), a registry name, or
+    a ``WireFormat`` instance. The "bf16" identity format resolves to None
+    so call sites can treat "no quantization" uniformly.
+    """
+    if wire is None:
+        return None
+    if isinstance(wire, WireFormat):
+        return wire if wire.quantized else None
+    if isinstance(wire, str):
+        try:
+            fmt = WIRE_FORMATS[wire]
+        except KeyError:
+            raise ValueError(
+                f"unknown wire format {wire!r}; expected one of "
+                f"{sorted(WIRE_FORMATS)}") from None
+        return fmt if fmt.quantized else None
+    raise TypeError(f"wire must be None, a name, or a WireFormat; "
+                    f"got {type(wire).__name__}")
+
+
+def wire_dtype_bytes(wire: Any, dtype_bytes: int = 2) -> int:
+    """Element width a transfer keyed on ``wire`` ships (falls back to the
+    tensor's own ``dtype_bytes`` for the identity wire)."""
+    fmt = resolve_wire(wire)
+    return fmt.dtype_bytes if fmt is not None else int(dtype_bytes)
+
+
+def wire_payload_bytes(n_elems: float, wire: Any,
+                       dtype_bytes: int = 2) -> float:
+    """On-wire bytes for ``n_elems`` payload elements, scale planes
+    included — the single payload-bytes formula shared by the cost model
+    and the manual-DP compressor."""
+    fmt = resolve_wire(wire)
+    if fmt is None:
+        return float(n_elems) * float(dtype_bytes)
+    return float(n_elems) * fmt.bytes_per_element
+
+
+# ---------------------------------------------------------------------------
+# Per-block quantize / dequantize
+# ---------------------------------------------------------------------------
+
+
+def _blocked(x: jax.Array, block: int) -> tuple[jax.Array, int]:
+    """(x padded+reshaped to (..., nb, block), original last-dim extent)."""
+    cols = x.shape[-1]
+    pad = (-cols) % block
+    if pad:
+        widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+        x = jnp.pad(x, widths)
+    return x.reshape(*x.shape[:-1], -1, block), cols
+
+
+def quantize_blocks(x: jax.Array, *, block: int = BLOCK,
+                    stochastic_key: jax.Array | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Quantize ``x`` to int8 in blocks along the last axis.
+
+    Returns ``(q, scales)`` with ``q`` int8 of shape ``(*x.shape[:-1], nb,
+    block)`` and ``scales`` f32 of shape ``(*x.shape[:-1], nb, 1)`` (kept
+    dim for broadcasting), where ``nb = ceil(x.shape[-1] / block)``. The
+    last axis is zero-padded to a block multiple; padding quantizes to 0
+    and is dropped by ``dequantize_blocks``.
+
+    With ``stochastic_key`` the round is stochastic (``floor(v + u)``,
+    u ~ U[0, 1)) — unbiased, so repeated quantized reductions average out.
+    """
+    fp = _blocked(x.astype(jnp.float32), block)[0]
+    scales = jnp.max(jnp.abs(fp), axis=-1, keepdims=True) / QMAX
+    scales = jnp.maximum(scales, SCALE_EPS)
+    v = fp / scales
+    if stochastic_key is not None:
+        v = jnp.floor(v + jax.random.uniform(stochastic_key, fp.shape))
+    else:
+        v = jnp.round(v)
+    q = jnp.clip(v, -QMAX, QMAX).astype(jnp.int8)
+    return q, scales
+
+
+def dequantize_blocks(q: jax.Array, scales: jax.Array,
+                      cols: int) -> jax.Array:
+    """Inverse of ``quantize_blocks``: f32 of shape ``(*q.shape[:-2],
+    cols)`` (block padding stripped)."""
+    full = q.astype(jnp.float32) * scales
+    return full.reshape(*q.shape[:-2], -1)[..., :cols]
+
+
+def quant_dequant(x: jax.Array, *, block: int = BLOCK,
+                  stochastic_key: jax.Array | None = None) -> jax.Array:
+    """Round-trip ``x`` through per-block int8 (flattened layout).
+
+    This is the promoted ``optim/compress._quant_dequant``: the array is
+    flattened before blocking, so blocks span row boundaries — right for
+    gradient compression where the tensor shape is incidental, wrong for
+    wire payloads where rows must quantize identically across chunk counts
+    (use ``quantize_blocks`` on the 2-D payload there).
+    """
+    flat = x.astype(jnp.float32).reshape(1, -1)
+    q, scales = quantize_blocks(flat, block=block,
+                                stochastic_key=stochastic_key)
+    return dequantize_blocks(q, scales, flat.shape[-1]).reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Error feedback
+# ---------------------------------------------------------------------------
+
+
+class EFState(NamedTuple):
+    """Error-feedback residual accumulator (one f32 leaf per gradient)."""
+
+    residual: Any
+
+
+class ErrorFeedbackInt8:
+    """EF-SGD style compressor: add the residual, quantize, carry the new
+    residual. Unbiased in the long run even with round-to-nearest — the
+    quantization error is fed back instead of dropped, so repeated
+    applications converge on the true accumulated value.
+    """
+
+    def __init__(self, *, block: int = BLOCK):
+        self.block = block
+
+    def init(self, params: Any) -> EFState:
+        return EFState(residual=jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def transform(self, grads: Any, state: EFState) -> tuple[Any, EFState]:
+        corrected = jax.tree_util.tree_map(
+            lambda g, r: g.astype(jnp.float32) + r, grads, state.residual)
+        deq = jax.tree_util.tree_map(
+            lambda c: quant_dequant(c, block=self.block), corrected)
+        residual = jax.tree_util.tree_map(
+            lambda c, d: c - d, corrected, deq)
+        return deq, EFState(residual=residual)

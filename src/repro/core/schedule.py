@@ -25,6 +25,7 @@ is validated against the sub-shape, not the full shard.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 from repro.core import costmodel as cm
 
@@ -80,22 +81,36 @@ class OverlapPolicy:
 def choose_gemm_collective(m: int, n: int, k: int, *, axis_size: int,
                            kind: str, dtype_bytes: int = 2,
                            hw: cm.HardwareSpec = cm.TPU_V5E,
-                           allow_bidir: bool = True) -> OverlapPolicy:
+                           allow_bidir: bool = True,
+                           wire_bytes: float | None = None) -> OverlapPolicy:
     """Pick the schedule for a fused GEMM×collective.
 
     The paper's hiding condition (§3.1.3): per-ring-step compute must cover the
     per-step transfer. For GEMM+RS with N steps, step compute = 2*m*n*k/N
     flops, step transfer = (m/N)*n*s bytes -> hidden iff K >= s*R/(2*B*links).
+
+    A quantized wire (``wire_bytes``) shrinks s: the transfer side of the
+    hiding condition is priced at the on-wire element width (scales
+    included) while compute stays at the tensor's own dtype — so shapes
+    whose bf16 ring was only partially hidden can become fully hidden at
+    half the wire bytes.
     """
     if axis_size <= 1:
         return OverlapPolicy("none", 1, 1.0, "single device on axis")
     links = 2 if (allow_bidir and axis_size % 2 == 0) else 1
     k_eff = k * axis_size if kind == "all_gather" else k
-    threshold = cm.hiding_threshold_k(dtype_bytes, hw, links=links)
+    elem_bytes = float(dtype_bytes) if wire_bytes is None else float(wire_bytes)
+    threshold = cm.hiding_threshold_k(max(int(math.ceil(elem_bytes)), 1),
+                                      hw, links=links)
     t_comp = cm.gemm_cost(m, n, k_eff, dtype_bytes, hw)
-    shard_bytes = m * n * dtype_bytes / axis_size
+    shard_bytes = m * n * elem_bytes / axis_size
     t_comm = cm.transfer_cost(
         cm.ring_collective_bytes(shard_bytes, axis_size, kind), hw, links=links)
+    if wire_bytes is not None:
+        t_comm += 2.0 * cm.quantize_cost(
+            cm.ring_collective_bytes(shard_bytes / elem_bytes, axis_size,
+                                     kind),
+            hw, src_bytes=dtype_bytes, wire_bytes=elem_bytes)
     if t_comm == 0.0:
         return OverlapPolicy("none", 1, 1.0, "no transfer")
     hidden = min(1.0, t_comp / t_comm)
@@ -115,7 +130,8 @@ def choose_gemm_collective(m: int, n: int, k: int, *, axis_size: int,
 def choose_gemm_chunks(m: int, n: int, k: int, *, axis_size: int, kind: str,
                        dtype_bytes: int = 2,
                        hw: cm.HardwareSpec = cm.TPU_V5E,
-                       candidates=CHUNK_CANDIDATES) -> ChunkSchedule:
+                       candidates=CHUNK_CANDIDATES,
+                       wire_bytes: float | None = None) -> ChunkSchedule:
     """Sub-chunk count + chunk dimension for a chunk-pipelined ring.
 
     Argmin of ``costmodel.chunk_pipeline_cost`` over ``candidates``: more
@@ -133,7 +149,8 @@ def choose_gemm_chunks(m: int, n: int, k: int, *, axis_size: int, kind: str,
     for c in candidates:
         t = cm.chunk_pipeline_cost(m, n, k, axis_size=axis_size,
                                    sub_chunks=c, dtype_bytes=dtype_bytes,
-                                   kind=kind, hw=hw).total
+                                   kind=kind, hw=hw,
+                                   wire_bytes=wire_bytes).total
         if t < best_t:
             best, best_t = c, t
     return ChunkSchedule(

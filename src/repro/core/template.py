@@ -89,7 +89,8 @@ def comm_context(run, axis: str, mesh=None, **overrides) -> CommContext:
     if run is not None:
         kw.update(backend=run.comm_backend, allow_bidir=run.pk_bidirectional,
                   policy=run.comm_policy, calibration=run.calibration_path,
-                  chunks=run.comm_chunks)
+                  chunks=run.comm_chunks,
+                  wire=getattr(run, "comm_wire", None))
     kw.update(overrides)
     return CommContext(**kw)
 
@@ -164,6 +165,10 @@ class IslandPlan:
     chunk_dim: str | None = None
     hidden_fraction: float | None = None
     source: str = "analytic"
+    #: on-wire element format of the island's ring payloads ("int8"/"int8_sr"
+    #: when RunConfig.comm_wire quantizes them, else "bf16"); None for
+    #: non-ring backends and non-GEMM ops, where no wire transform applies
+    wire: str | None = None
 
     def asdict(self) -> dict:
         return dataclasses.asdict(self)
@@ -176,7 +181,7 @@ class IslandPlan:
         return (f"{self.island:<14} op={self.op or '-':<22} "
                 f"backend={self.backend or '-':<10} "
                 f"chunks={self.n_chunks or 1:<3} hidden={hf:<5} "
-                f"src={self.source}")
+                f"wire={self.wire or '-':<8} src={self.source}")
 
 
 def render_plans(plans: Sequence[IslandPlan]) -> str:
@@ -410,8 +415,14 @@ class Island:
             return None
         if backend == "bulk":
             return 0.0          # nothing overlaps, by measurement
-        shard = cm.collective_tensor_bytes(
-            c.m, c.n, c.k, c.dtype_bytes, kind) / max(n_dev, 1)
+        # a quantized wire shrinks the denominator: T_comm is what the ring
+        # actually ships (int8 payload + f32 scale planes), not the tensor's
+        # own width — the repriced hidden fraction the plan reports
+        fmt = ctx.wire_format()
+        elem_bytes = (fmt.bytes_per_element if fmt is not None
+                      else c.dtype_bytes)
+        shard = (cm.collective_tensor_bytes(c.m, c.n, c.k, 1, kind)
+                 * elem_bytes / max(n_dev, 1))
         # same T_comm convention as choose_gemm_collective: the
         # bidirectional ring moves the payload over two link-pairs
         t_comm_us = cm.transfer_cost(
@@ -500,9 +511,16 @@ class Island:
             meas = self._measured_hidden(ctx, backend, GEMM_OP_KIND[c.op])
             if meas is not None:
                 hidden, source = meas, "measured"
+            fmt = ctx.wire_format()
+            wire = None
+            if backend in ("ring", "ring_bidir"):
+                # only the ring schedules implement the quantized wire; bulk
+                # and fused ship full precision whatever the config says
+                wire = fmt.name if fmt is not None else "bf16"
             return dataclasses.replace(
                 base, backend=backend, n_chunks=n_chunks,
                 chunk_dim=chunk_dim, hidden_fraction=hidden, source=source,
+                wire=wire,
                 reason=reason if reason is not None else pol.reason)
         if c.op == "all_to_all":
             source = c.source or "analytic"

@@ -93,6 +93,8 @@ def _lower_one(cfg, cell, mesh, run, rules):
 
 def _cost_of(compiled):
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # older jax: one dict per device
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     coll = HLO.collective_bytes(hlo)
     del hlo
@@ -194,6 +196,7 @@ def lower_cell(arch: str, cell_name: str, *, multi_pod: bool,
         # and whether those came from a calibration table or the analytic
         # model — the "source" field)
         "comm_policy": run.comm_policy,
+        "comm_wire": run.comm_wire or "bf16",
         "islands": [p.asdict() for p in island_plans(
             cfg, run, rules, batch=cell.global_batch, seq=cell.seq_len)],
         "roofline": dataclasses.asdict(roof),

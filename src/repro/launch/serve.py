@@ -87,7 +87,8 @@ def synthetic_trace(n_requests: int, serve: ServeConfig, vocab: int,
 def generate(arch: str, *, reduced: bool, batch: int, prompt_len: int,
              gen_tokens: int, mesh_shape=None, mesh_axes=("data", "model"),
              seed: int = 0, greedy: bool = True,
-             comm_policy: str = "analytic", comm_chunks: int | None = None):
+             comm_policy: str = "analytic", comm_chunks: int | None = None,
+             comm_wire: str | None = None, kv_dtype: str = "bf16"):
     """Static-batch generation (the legacy entry point, now one engine
     call): `batch` synthetic prompts of `prompt_len` tokens, prefilled as
     one batch and decoded in lockstep. Returns the (batch, gen_tokens)
@@ -101,10 +102,11 @@ def generate(arch: str, *, reduced: bool, batch: int, prompt_len: int,
     serve = ServeConfig(bucket_edges=(max(prompt_len, 2),),
                         max_new_tokens=gen_tokens,
                         max_batch=batch, prefill_batch=min(batch, 8),
-                        exact_buckets=True)
+                        exact_buckets=True, kv_dtype=kv_dtype)
     eng = build_engine(arch, reduced=reduced, mesh_shape=mesh_shape,
                        mesh_axes=mesh_axes, serve=serve, seed=seed,
-                       comm_policy=comm_policy, comm_chunks=comm_chunks)
+                       comm_policy=comm_policy, comm_chunks=comm_chunks,
+                       run_overrides={"comm_wire": comm_wire})
     if eng.rules is not None:
         print(f"[plan] comm_policy={comm_policy}")
         print(render_serving_plans(eng.bucket_plans))
@@ -132,7 +134,8 @@ def serve_fleet(args, serve: ServeConfig) -> None:
         return build_engine(args.arch, reduced=args.reduced,
                             mesh_shape=args.mesh_shape, serve=serve,
                             seed=args.seed, comm_policy=args.comm_policy,
-                            comm_chunks=args.comm_chunks)
+                            comm_chunks=args.comm_chunks,
+                            run_overrides={"comm_wire": args.comm_wire})
 
     plan = FaultPlan.parse(args.fault_plan) if args.fault_plan else None
     fleet = ServingFleet(
@@ -195,6 +198,14 @@ def main():
     ap.add_argument("--comm-policy", default="analytic",
                     choices=["analytic", "measured", "auto"])
     ap.add_argument("--comm-chunks", type=int, default=None)
+    ap.add_argument("--comm-wire", default=None,
+                    choices=["bf16", "int8", "int8_sr"],
+                    help="GEMM-collective ring wire format (int8 ships "
+                         "quantized sub-chunks + f32 scales)")
+    ap.add_argument("--kv-dtype", default="bf16", choices=["bf16", "int8"],
+                    help="KV-cache storage dtype: int8 quantizes on write "
+                         "with per-(token, head) f32 scales, roughly "
+                         "halving cache HBM")
     ap.add_argument("--replicas", type=int, default=1,
                     help="continuous mode: >1 runs a ServingFleet of "
                          "data-parallel engine replicas")
@@ -212,7 +223,8 @@ def main():
         generate(args.arch, reduced=args.reduced, batch=args.batch,
                  prompt_len=args.prompt_len, gen_tokens=args.tokens,
                  mesh_shape=args.mesh_shape, comm_policy=args.comm_policy,
-                 comm_chunks=args.comm_chunks, seed=args.seed)
+                 comm_chunks=args.comm_chunks, seed=args.seed,
+                 comm_wire=args.comm_wire, kv_dtype=args.kv_dtype)
         return
 
     edges = tuple(args.bucket_edges) if args.bucket_edges else (8, 16, 32)
@@ -222,14 +234,16 @@ def main():
                         queue_policy=args.queue_policy,
                         cache_layout=args.cache_layout,
                         page_size=args.page_size, n_pages=args.n_pages,
-                        prefill_chunk=args.prefill_chunk)
+                        prefill_chunk=args.prefill_chunk,
+                        kv_dtype=args.kv_dtype)
     if args.replicas > 1:
         serve_fleet(args, serve)
         return
     eng = build_engine(args.arch, reduced=args.reduced,
                        mesh_shape=args.mesh_shape, serve=serve,
                        seed=args.seed, comm_policy=args.comm_policy,
-                       comm_chunks=args.comm_chunks)
+                       comm_chunks=args.comm_chunks,
+                       run_overrides={"comm_wire": args.comm_wire})
     if eng.rules is not None:
         print(f"[plan] comm_policy={args.comm_policy}")
         print(render_serving_plans(eng.bucket_plans))
@@ -248,7 +262,7 @@ def main():
           f"{st['prefill_steps']} prefill + {st['decode_steps']} decode "
           f"steps; buckets jitted: {st['compiled_buckets']})")
     cs = st["cache"]
-    line = (f"[cache] layout={cs['layout']} "
+    line = (f"[cache] layout={cs['layout']} kv={cs['kv_dtype']} "
             f"hbm={cs['hbm_bytes']/1e6:.1f}MB "
             f"(slab-equivalent {cs['slab_bytes']/1e6:.1f}MB) "
             f"peak_slots={cs['peak_resident_slots']}")

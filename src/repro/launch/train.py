@@ -32,7 +32,8 @@ def build_and_train(arch: str, *, steps: int, reduced: bool, mesh_shape,
                     pk_overlap: bool = True, compress_grads: bool = False,
                     fault_hook=None, seed: int = 0, log_every: int = 10,
                     ckpt_every: int = 50, comm_policy: str = "analytic",
-                    comm_chunks: int | None = None, ulysses_chunks: int = 1):
+                    comm_chunks: int | None = None, ulysses_chunks: int = 1,
+                    comm_wire: str | None = None):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -41,7 +42,8 @@ def build_and_train(arch: str, *, steps: int, reduced: bool, mesh_shape,
                     or ("data",),
                     pk_overlap=pk_overlap, microbatches=microbatches,
                     fsdp=mesh is not None, comm_policy=comm_policy,
-                    comm_chunks=comm_chunks, ulysses_chunks=ulysses_chunks)
+                    comm_chunks=comm_chunks, ulysses_chunks=ulysses_chunks,
+                    comm_wire=comm_wire)
     rules = ShardingRules(mesh, run) if mesh is not None else None
     if rules is not None:
         # the overlap schedule every PK island will pick, before tracing —
@@ -108,6 +110,11 @@ def main():
                          "(default: scheduler/measured table)")
     ap.add_argument("--ulysses-chunks", type=int, default=1,
                     help="a2a chunk count for the Ulysses attention island")
+    ap.add_argument("--comm-wire", default=None,
+                    choices=["bf16", "int8", "int8_sr"],
+                    help="GEMM-collective ring wire format: int8 ships "
+                         "quantized sub-chunks + f32 scales (int8_sr adds "
+                         "stochastic rounding); default full precision")
     args = ap.parse_args()
     build_and_train(args.arch, steps=args.steps, reduced=args.reduced,
                     mesh_shape=args.mesh_shape, mesh_axes=args.mesh_axes,
@@ -117,7 +124,8 @@ def main():
                     compress_grads=args.compress_grads,
                     comm_policy=args.comm_policy,
                     comm_chunks=args.comm_chunks,
-                    ulysses_chunks=args.ulysses_chunks)
+                    ulysses_chunks=args.ulysses_chunks,
+                    comm_wire=args.comm_wire)
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ from repro.configs.base import ArchConfig, RunConfig
 from repro.core import moe as pk_moe
 from repro.core import pk_ring_attention, pk_ulysses_attention
 from repro.core.autotune import island_key
+from repro.core.quant import resolve_wire
 from repro.core.template import (Comm, Gather, Island, IslandPlan,
                                  comm_context, island_override)
 from repro.models.sharding import ShardingRules
@@ -38,6 +39,16 @@ def constrain(x, rules: ShardingRules | None, spec: P):
 
 def _dtype_bytes(cfg: ArchConfig) -> int:
     return 2 if cfg.dtype == "bfloat16" else 4
+
+
+def _wire_bytes(cfg: ArchConfig, run: RunConfig) -> int:
+    """Element width a GEMM island's ``Comm`` declares. Under a quantized
+    ``RunConfig.comm_wire`` this is the *wire* width (1 for int8) — the
+    island key becomes ``...|b1``, so ``calibrate --per-island`` rows and
+    measured dispatch both resolve at the width the ring actually ships —
+    else the tensor dtype's own width."""
+    fmt = resolve_wire(getattr(run, "comm_wire", None))
+    return fmt.dtype_bytes if fmt is not None else _dtype_bytes(cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -280,7 +291,7 @@ def attn_out_island(cfg: ArchConfig, run: RunConfig,
         divisible=((h_full, tp), (b * s, tp)),
         comm=Comm("matmul_all_reduce", m=b_loc * s, n=d,
                   k=h_full // tp_size if h_full % tp_size == 0 else h_full,
-                  dtype_bytes=_dtype_bytes(cfg)))
+                  dtype_bytes=_wire_bytes(cfg, run)))
 
 
 def attention_block(p, x, cfg: ArchConfig, run: RunConfig,
@@ -336,23 +347,53 @@ def _cache_write(cache, new, pos):
     lockstep decode (dynamic_update_slice); a ``(B,)`` vector writes each
     slot at its own position via a one-hot select — the continuous-batching
     pool's slots sit at different depths. Out-of-range vector positions
-    write nothing (the engine parks inactive slots past their cache)."""
+    write nothing (the engine parks inactive slots past their cache).
+    Rank-3 ``(B, H, S)`` caches (the int8 mode's per-token scale planes,
+    seq still dim 2) take the same write."""
     if jnp.ndim(pos) == 0:
-        return lax.dynamic_update_slice(cache, new.astype(cache.dtype),
-                                        (0, 0, pos, 0))
+        return lax.dynamic_update_slice(
+            cache, new.astype(cache.dtype),
+            (0, 0, pos) + (0,) * (cache.ndim - 3))
     oh = jnp.arange(cache.shape[2])[None, :] == pos[:, None]       # (B, S)
-    return jnp.where(oh[:, None, :, None], new.astype(cache.dtype), cache)
+    mask = oh[:, None, :, None] if cache.ndim == 4 else oh[:, None, :]
+    return jnp.where(mask, new.astype(cache.dtype), cache)
+
+
+# int8 KV cache (ServeConfig.kv_dtype="int8"): K/V stored as int8 with ONE
+# f32 scale per (token, head) — quantize on write, dequantize on read. The
+# scale planes are cache-shaped minus the hd dim and ride in the cache tree
+# as "k_scale"/"v_scale" leaves; quantization is detected from the cache
+# dtype, so kv_dtype="bf16" trees never touch this path.
+
+KV_SCALE_EPS = 1e-12
+
+
+def _kv_quantize(new):
+    """Symmetric per-(token, head) int8: ``new (..., hd)`` ->
+    ``(q int8, scale f32 of shape new.shape[:-1])``."""
+    f = new.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(f), axis=-1), KV_SCALE_EPS) / 127.0
+    q = jnp.clip(jnp.round(f / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _kv_dequantize(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
 
 
 def decode_island(cfg: ArchConfig, run: RunConfig,
                   rules: ShardingRules | None, b: int, s_max: int, *,
-                  long_ctx: bool, pos, kv_len, window) -> Island:
+                  long_ctx: bool, pos, kv_len, window,
+                  quant: bool = False) -> Island:
     """One-token decode over the sequence-sharded KV cache: shard-local slot
     write + flash-decode logsumexp merge over the tp axis (DESIGN §4). The
     cache write happens INSIDE the island — a dynamic_update_slice on a
     seq-sharded array at the jit level would force XLA to all-gather the
     whole cache (GBs per token). ``pos``/``kv_len`` may be scalars (lockstep
-    decode) or per-slot ``(B,)`` vectors (the serving engine's mixed pool)."""
+    decode) or per-slot ``(B,)`` vectors (the serving engine's mixed pool).
+    ``quant``: the cache is int8 with per-(token, head) f32 scale planes
+    (``cache_ks``/``cache_vs`` inputs) — the new token is quantized before
+    its write and the whole cache dequantized for the mix."""
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     vec = jnp.ndim(pos) > 0
 
@@ -384,6 +425,18 @@ def decode_island(cfg: ArchConfig, run: RunConfig,
     # its arrays are dp-local. The scalar (lockstep) form keeps the closure.
     def reference(q, cache_k, cache_v, k_new, v_new, **kw):
         p_ = kw.get("pos", pos)
+        if quant:
+            qk, sk = _kv_quantize(k_new)
+            qv, sv = _kv_quantize(v_new)
+            ck = _cache_write(cache_k, qk, p_)
+            cv = _cache_write(cache_v, qv, p_)
+            ks = _cache_write(kw["cache_ks"], sk, p_)
+            vs = _cache_write(kw["cache_vs"], sv, p_)
+            o = _full_attention(q, _kv_dequantize(ck, ks, q.dtype),
+                                _kv_dequantize(cv, vs, q.dtype),
+                                causal=False, window=window, q_offset=0,
+                                kv_len=p_ + 1 if vec else kv_len)
+            return o, ck, cv, ks, vs
         ck = _cache_write(cache_k, k_new, p_)
         cv = _cache_write(cache_v, v_new, p_)
         o = _full_attention(q, ck, cv, causal=False, window=window,
@@ -396,6 +449,7 @@ def decode_island(cfg: ArchConfig, run: RunConfig,
     tp = rules.tp
     axis = (tuple(run.dp_axes) + (tp,)) if long_ctx else tp
     cache_spec = rules.kv_cache(hkv, b, long_ctx=long_ctx)
+    scale_spec = P(*cache_spec[:3])
     bspec = None if long_ctx else rules.dim(b, rules.dp)
     qspec = P(bspec, None, None, None)
 
@@ -414,25 +468,39 @@ def decode_island(cfg: ArchConfig, run: RunConfig,
             def upd(c, n):
                 oh = (jnp.arange(s_loc)[None, :] == lp[:, None]) \
                     & hit[:, None]                             # (B, s_loc)
-                return jnp.where(oh[:, None, :, None], n.astype(c.dtype), c)
+                mask = oh[:, None, :, None] if c.ndim == 4 else oh[:, None, :]
+                return jnp.where(mask, n.astype(c.dtype), c)
         else:
             def upd(c, n):
-                new = lax.dynamic_update_slice(c, n.astype(c.dtype),
-                                               (0, 0, lp, 0))
+                new = lax.dynamic_update_slice(
+                    c, n.astype(c.dtype), (0, 0, lp) + (0,) * (c.ndim - 3))
                 return lax.cond(hit, lambda: new, lambda: c)
 
+        if quant:
+            qk, sk = _kv_quantize(k_new)
+            qv, sv = _kv_quantize(v_new)
+            ck, cv = upd(cache_k, qk), upd(cache_v, qv)
+            ks, vs = upd(kw["cache_ks"], sk), upd(kw["cache_vs"], sv)
+            k_ = _kv_dequantize(ck, ks, q.dtype)
+            v_ = _kv_dequantize(cv, vs, q.dtype)
+            return (_mix(q, k_, v_, offset, s_loc, axis, p_),
+                    ck, cv, ks, vs)
         k_ = upd(cache_k, k_new)
         v_ = upd(cache_v, v_new)
         return (_mix(q, k_, v_, offset, s_loc, axis, p_), k_, v_)
 
     inputs = {"q": qspec, "cache_k": cache_spec, "cache_v": cache_spec,
               "k_new": qspec, "v_new": qspec}
+    if quant:
+        inputs["cache_ks"] = scale_spec
+        inputs["cache_vs"] = scale_spec
     if vec:
         inputs["pos"] = P(bspec)
     return Island(
         "decode_attn", rules=rules, run=run, axis=tp, fallback_axes=axis,
         inputs=inputs,
-        out_specs=(qspec, cache_spec, cache_spec),
+        out_specs=((qspec, cache_spec, cache_spec, scale_spec, scale_spec)
+                   if quant else (qspec, cache_spec, cache_spec)),
         body=body, reference=reference,
         enable=run.decode_seq_shard,
         divisible=((s_max, axis),),
@@ -442,7 +510,8 @@ def decode_island(cfg: ArchConfig, run: RunConfig,
 
 def decode_attention(p, x, cache_k, cache_v, pos, cfg: ArchConfig,
                      run: RunConfig, rules: ShardingRules | None, *,
-                     cross_kv=None, long_ctx=False):
+                     cross_kv=None, long_ctx=False, k_scale=None,
+                     v_scale=None):
     """One-token decode with KV cache.
 
     x: (B, 1, d); cache_k/v: (B, Hkv, S_max, hd); pos: scalar current index.
@@ -450,9 +519,15 @@ def decode_attention(p, x, cache_k, cache_v, pos, cfg: ArchConfig,
     over the sharded cache runs through the decode Island — the SP serving
     path (DESIGN §4); the template's fallback predicate routes single-device
     or indivisible meshes to the dense cache path.
+
+    int8 mode: ``cache_k`` is int8 and ``k_scale``/``v_scale`` carry the
+    per-(token, head) f32 scale planes — the new token is quantized on
+    write, the cache dequantized on read, and the return grows to
+    (out, new_k, new_v, new_k_scale, new_v_scale).
     """
     b, _, d = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    quant = k_scale is not None
     cache_k_in, cache_v_in = cache_k, cache_v
     q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, 1, hq, hd).transpose(0, 2, 1, 3)
     if cross_kv is None:
@@ -472,47 +547,97 @@ def decode_attention(p, x, cache_k, cache_v, pos, cfg: ArchConfig,
     if rules is not None and run.decode_seq_shard and cross_kv is None:
         island = decode_island(cfg, run, rules, b, cache_k_in.shape[2],
                                long_ctx=long_ctx, pos=pos, kv_len=kv_len,
-                               window=window)
+                               window=window, quant=quant)
         kw = {"pos": pos} if jnp.ndim(pos) else {}
-        o, cache_k, cache_v = island(q=q, cache_k=cache_k_in,
-                                     cache_v=cache_v_in, k_new=k_new,
-                                     v_new=v_new, **kw)
+        if quant:
+            kw["cache_ks"], kw["cache_vs"] = k_scale, v_scale
+            o, cache_k, cache_v, k_scale, v_scale = island(
+                q=q, cache_k=cache_k_in, cache_v=cache_v_in, k_new=k_new,
+                v_new=v_new, **kw)
+        else:
+            o, cache_k, cache_v = island(q=q, cache_k=cache_k_in,
+                                         cache_v=cache_v_in, k_new=k_new,
+                                         v_new=v_new, **kw)
     else:
         if cross_kv is None:
-            cache_k = _cache_write(cache_k_in, k_new, pos)
-            cache_v = _cache_write(cache_v_in, v_new, pos)
-            k_att, v_att = cache_k, cache_v
+            if quant:
+                qk, sk = _kv_quantize(k_new)
+                qv, sv = _kv_quantize(v_new)
+                cache_k = _cache_write(cache_k_in, qk, pos)
+                cache_v = _cache_write(cache_v_in, qv, pos)
+                k_scale = _cache_write(k_scale, sk, pos)
+                v_scale = _cache_write(v_scale, sv, pos)
+                k_att = _kv_dequantize(cache_k, k_scale, q.dtype)
+                v_att = _kv_dequantize(cache_v, v_scale, q.dtype)
+            else:
+                cache_k = _cache_write(cache_k_in, k_new, pos)
+                cache_v = _cache_write(cache_v_in, v_new, pos)
+                k_att, v_att = cache_k, cache_v
         o = _full_attention(q, k_att, v_att, causal=False, window=window,
                             q_offset=0, kv_len=kv_len)
         # causal handled via kv_len (all cached positions <= pos are visible);
         # SWA via window against kv_len-1.
     o = o.transpose(0, 2, 1, 3).reshape(b, 1, hq * hd)
     out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
-    if cross_kv is None:
-        return out, cache_k, cache_v
-    return out, None, None
+    if cross_kv is not None:
+        return out, None, None
+    if quant:
+        return out, cache_k, cache_v, k_scale, v_scale
+    return out, cache_k, cache_v
 
 
 def prefill_write_island(cfg: ArchConfig, run: RunConfig,
                          rules: ShardingRules | None, b: int,
-                         L: int) -> Island:
+                         L: int, *, quant: bool = False) -> Island:
     """Shard-local write of a prompt's K/V block into the sequence-sharded
     cache: each tp shard takes its own [off, off+s_loc) window of the
     (replicated, activation-sized) new K/V. A ``dynamic_update_slice`` on
     the sharded cache at the jit level would make XLA re-shard /
     all-gather the whole cache per layer — the same trap decode_island's
-    in-island write avoids for the one-token case."""
+    in-island write avoids for the one-token case. ``quant``: ``new`` is
+    the pre-quantized int8 block and ``new_s`` its per-(token, head) scale
+    plane; both land in the sharded (cache, scale) pair."""
     hkv = cfg.n_kv_heads
 
-    def reference(cache, new):
-        return lax.dynamic_update_slice(cache, new.astype(cache.dtype),
-                                        (0, 0, 0, 0))
+    if quant:
+        def reference(cache, scale, new, new_s):
+            cache = lax.dynamic_update_slice(cache, new.astype(cache.dtype),
+                                             (0, 0, 0, 0))
+            scale = lax.dynamic_update_slice(scale, new_s, (0, 0, 0))
+            return cache, scale
+    else:
+        def reference(cache, new):
+            return lax.dynamic_update_slice(cache, new.astype(cache.dtype),
+                                            (0, 0, 0, 0))
 
     if rules is None:
         return Island("prefill_write", run=run, reference=reference)
     tp = rules.tp
     cache_spec = rules.kv_cache(hkv, b)
+    scale_spec = P(*cache_spec[:3])
     bspec = rules.dim(b, rules.dp)
+
+    if quant:
+        def body(ctx, cache, scale, new, new_s):
+            s_loc = cache.shape[2]
+            off = lax.axis_index(tp) * s_loc
+            idx = off + jnp.arange(s_loc)              # global positions
+            window = jnp.take(new, jnp.clip(idx, 0, L - 1), axis=2)
+            swin = jnp.take(new_s, jnp.clip(idx, 0, L - 1), axis=2)
+            hit = idx < L
+            cache = jnp.where(hit[None, None, :, None],
+                              window.astype(cache.dtype), cache)
+            scale = jnp.where(hit[None, None, :], swin, scale)
+            return cache, scale
+
+        return Island(
+            "prefill_write", rules=rules, run=run,
+            inputs={"cache": cache_spec, "scale": scale_spec,
+                    "new": P(bspec, None, None, None),
+                    "new_s": P(bspec, None, None)},
+            out_specs=(cache_spec, scale_spec),
+            body=body, reference=reference,
+            enable=run.decode_seq_shard)
 
     def body(ctx, cache, new):
         s_loc = cache.shape[2]
@@ -531,7 +656,8 @@ def prefill_write_island(cfg: ArchConfig, run: RunConfig,
 
 
 def prefill_attention_block(p, x, cache_k, cache_v, cfg: ArchConfig,
-                            run: RunConfig, rules: ShardingRules | None):
+                            run: RunConfig, rules: ShardingRules | None,
+                            *, k_scale=None, v_scale=None):
     """Batched prefill: causal attention over the whole (padded) prompt with
     the K/V written into the decode cache at positions [0, L).
 
@@ -542,10 +668,14 @@ def prefill_attention_block(p, x, cache_k, cache_v, cfg: ArchConfig,
     safe: rows past a slot's real length are causal-masked garbage the
     caller discards, and the padded cache tail is never attended because
     decode masks ``ki < kv_len`` with ``kv_len`` the slot's real position.
-    Returns (out (B, L, d), new_cache_k, new_cache_v).
+    Returns (out (B, L, d), new_cache_k, new_cache_v) — plus the updated
+    ``k_scale``/``v_scale`` planes in int8 mode, where the prompt's K/V is
+    quantized once and the prefill attends over the dequantized values so
+    prefill logits see exactly what later decode steps will read.
     """
     b, s, d = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    quant = k_scale is not None
     q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, s, hq, hd).transpose(0, 2, 1, 3)
     k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
     v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
@@ -554,18 +684,33 @@ def prefill_attention_block(p, x, cache_k, cache_v, cfg: ArchConfig,
     k = apply_rope(k, positions, cfg.rope_theta)
     if rules is not None:
         q = constrain(q, rules, rules.act_bhsd(hq))
+    if quant:
+        qk, sk = _kv_quantize(k)
+        qv, sv = _kv_quantize(v)
+        k_att = _kv_dequantize(qk, sk, q.dtype)
+        v_att = _kv_dequantize(qv, sv, q.dtype)
+    else:
+        k_att, v_att = k, v
     win = cfg.sliding_window
     if s >= XLA_ATTN_CHUNK_THRESHOLD:
-        o = _chunked_attention(q, k, v, causal=True, window=win)
+        o = _chunked_attention(q, k_att, v_att, causal=True, window=win)
     else:
-        o = _full_attention(q, k, v, causal=True, window=win)
-    write = prefill_write_island(cfg, run, rules, b, s)
-    new_k = write(cache=cache_k, new=k)
-    new_v = write(cache=cache_v, new=v)
+        o = _full_attention(q, k_att, v_att, causal=True, window=win)
+    write = prefill_write_island(cfg, run, rules, b, s, quant=quant)
+    if quant:
+        new_k, k_scale = write(cache=cache_k, scale=k_scale, new=qk,
+                               new_s=sk)
+        new_v, v_scale = write(cache=cache_v, scale=v_scale, new=qv,
+                               new_s=sv)
+    else:
+        new_k = write(cache=cache_k, new=k)
+        new_v = write(cache=cache_v, new=v)
     o = o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
     out = attn_out_island(cfg, run, rules, b, s)(o=o, wo=p["wo"])
     if rules is not None:
         out = constrain(out, rules, rules.act_btd())
+    if quant:
+        return out, new_k, new_v, k_scale, v_scale
     return out, new_k, new_v
 
 
@@ -584,10 +729,12 @@ def prefill_attention_block(p, x, cache_k, cache_v, cfg: ArchConfig,
 
 
 def _paged_gather(pool, bt):
-    """pool (N, Hkv, s, hd); bt (B, P) ids (clipped) -> (B, Hkv, P*s, hd)."""
-    g = pool[jnp.clip(bt, 0, pool.shape[0] - 1)]       # (B, P, Hkv, s, hd)
-    b, pm, hk, s, hd = g.shape
-    return g.transpose(0, 2, 1, 3, 4).reshape(b, hk, pm * s, hd)
+    """pool (N, Hkv, s[, hd]); bt (B, P) ids (clipped) -> (B, Hkv, P*s[, hd]).
+    Rank-3 pools are the int8 mode's per-(token, head) scale planes."""
+    g = pool[jnp.clip(bt, 0, pool.shape[0] - 1)]       # (B, P, Hkv, s[, hd])
+    g = jnp.moveaxis(g, 1, 2)                          # (B, Hkv, P, s[, hd])
+    b, hk, pm, s = g.shape[:4]
+    return g.reshape(b, hk, pm * s, *g.shape[4:])
 
 
 def _page_positions(pmax: int, ps: int, off, s_loc: int):
@@ -647,7 +794,7 @@ def _paged_decode_write(pool, new, bt, pos, ps: int, off, s_loc: int):
     rl = jnp.clip(r - off, 0, s_loc - 1)
     pid_safe = jnp.where(hit, pid, n)
     return pool.at[pid_safe, :, rl].set(
-        new[:, :, 0, :].astype(pool.dtype), mode="drop")
+        new[:, :, 0].astype(pool.dtype), mode="drop")
 
 
 def _paged_chunk_write(pool, new, bt, c0, wf, ps: int, off, s_loc: int):
@@ -656,9 +803,11 @@ def _paged_chunk_write(pool, new, bt, c0, wf, ps: int, off, s_loc: int):
     chunk value and the current content, scatter whole pages back. The
     per-cell select is what makes copy-on-write prefix resume sound —
     positions below ``wf`` (per-slot ``write_from``) keep the donor pages'
-    values byte-for-byte even though the boundary chunk recomputes them."""
+    values byte-for-byte even though the boundary chunk recomputes them.
+    Rank-3 (pool, new) pairs — the int8 scale planes — take the same
+    write with the hd dim absent."""
     n = pool.shape[0]
-    b, hk, sq, hd = new.shape
+    b, hk, sq = new.shape[:3]
     pmax = bt.shape[1]
     npg = -(-sq // ps)
     pgs = c0 // ps + jnp.arange(npg)
@@ -666,12 +815,13 @@ def _paged_chunk_write(pool, new, bt, c0, wf, ps: int, off, s_loc: int):
     pid = jnp.where((pgs < pmax)[None, :], pid, -1)
     tt = jnp.arange(npg)[:, None] * ps + off + jnp.arange(s_loc)[None, :]
     src = jnp.take(new, jnp.clip(tt.reshape(-1), 0, sq - 1), axis=2)
-    src = src.reshape(b, hk, npg, s_loc, hd).transpose(0, 2, 1, 3, 4)
-    cur = pool[jnp.clip(pid, 0, n - 1)]              # (B, npg, hk, s_loc, hd)
+    src = jnp.moveaxis(src.reshape(b, hk, npg, s_loc, *new.shape[3:]), 1, 2)
+    cur = pool[jnp.clip(pid, 0, n - 1)]            # (B, npg, hk, s_loc[, hd])
     t_glob = c0 + tt                                 # (npg, s_loc) global pos
-    cell = ((tt < sq)[None, :, None, :, None]
-            & (t_glob[None, :, None, :, None]
-               >= wf[:, None, None, None, None]))
+    cell = ((tt < sq)[None, :, None, :]
+            & (t_glob[None, :, None, :] >= wf[:, None, None, None]))
+    if pool.ndim == 4:           # value pool (…, hd); scale planes are rank 3
+        cell = cell[..., None]
     vals = jnp.where(cell, src.astype(pool.dtype), cur)
     pid_safe = jnp.where(pid >= 0, pid, n)
     return pool.at[pid_safe].set(vals, mode="drop")
@@ -694,22 +844,44 @@ def _dp_pool_base(rules: ShardingRules, partitioned: bool):
 
 def paged_decode_island(cfg: ArchConfig, run: RunConfig,
                         rules: ShardingRules | None, b: int, page_size: int,
-                        *, window) -> Island:
+                        *, window, quant: bool = False) -> Island:
     """One-token decode over the paged pool: block-table page write + gather
     + flash-decode logsumexp merge over the tp axis. Declares the same name
     and ``Comm`` coordinates as the slab ``decode_island`` — the merge
     collective is identical — so frozen per-bucket plans and overrides apply
-    unchanged to the paged layout."""
+    unchanged to the paged layout. ``quant``: int8 pools with per-(token,
+    head) f32 scale pools (``pool_ks``/``pool_vs``) — the token is
+    quantized before its page write, gathers dequantize."""
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
 
-    def reference(q, pool_k, pool_v, k_new, v_new, bt, pos):
+    def _write_gather(pool_k, pool_v, pool_ks, pool_vs, k_new, v_new, bt,
+                     pos, ps, off, s_loc, qdt):
+        """Shared write+gather: returns (gk, gv, new pools tuple)."""
+        if quant:
+            qk, sk = _kv_quantize(k_new)
+            qv, sv = _kv_quantize(v_new)
+            pk = _paged_decode_write(pool_k, qk, bt, pos, ps, off, s_loc)
+            pv = _paged_decode_write(pool_v, qv, bt, pos, ps, off, s_loc)
+            pks = _paged_decode_write(pool_ks, sk, bt, pos, ps, off, s_loc)
+            pvs = _paged_decode_write(pool_vs, sv, bt, pos, ps, off, s_loc)
+            gk = _kv_dequantize(_paged_gather(pk, bt),
+                                _paged_gather(pks, bt), qdt)
+            gv = _kv_dequantize(_paged_gather(pv, bt),
+                                _paged_gather(pvs, bt), qdt)
+            return gk, gv, (pk, pv, pks, pvs)
+        pk = _paged_decode_write(pool_k, k_new, bt, pos, ps, off, s_loc)
+        pv = _paged_decode_write(pool_v, v_new, bt, pos, ps, off, s_loc)
+        return _paged_gather(pk, bt), _paged_gather(pv, bt), (pk, pv)
+
+    def reference(q, pool_k, pool_v, k_new, v_new, bt, pos, **kw):
         ps = pool_k.shape[2]
-        pk = _paged_decode_write(pool_k, k_new, bt, pos, ps, 0, ps)
-        pv = _paged_decode_write(pool_v, v_new, bt, pos, ps, 0, ps)
+        gk, gv, pools = _write_gather(
+            pool_k, pool_v, kw.get("pool_ks"), kw.get("pool_vs"),
+            k_new, v_new, bt, pos, ps, 0, ps, q.dtype)
         ki = _page_positions(bt.shape[1], ps, 0, ps)
-        o = _paged_mix(q, _paged_gather(pk, bt), _paged_gather(pv, bt), ki,
-                       kv_len=pos + 1, window=window, axis=None)
-        return o, pk, pv
+        o = _paged_mix(q, gk, gv, ki, kv_len=pos + 1, window=window,
+                       axis=None)
+        return (o, *pools)
 
     if rules is None:
         return Island("decode_attn", run=run, reference=reference)
@@ -717,28 +889,33 @@ def paged_decode_island(cfg: ArchConfig, run: RunConfig,
     bspec = rules.dim(b, rules.dp)
     partitioned = bspec is not None
     pool_spec = P(rules.dp if partitioned else None, None, tp, None)
+    scale_spec = P(*pool_spec[:3])
     qspec = P(bspec, None, None, None)
     base_fn = _dp_pool_base(rules, partitioned)
 
-    def body(ctx, q, pool_k, pool_v, k_new, v_new, bt, pos):
-        n_loc, _, s_loc, _ = pool_k.shape
+    def body(ctx, q, pool_k, pool_v, k_new, v_new, bt, pos, **kw):
+        n_loc, _, s_loc = pool_k.shape[:3]
         off = lax.axis_index(tp) * s_loc
         bt_l = jnp.where(bt >= 0, bt - base_fn(n_loc), -1)
-        pk = _paged_decode_write(pool_k, k_new, bt_l, pos, page_size, off,
-                                 s_loc)
-        pv = _paged_decode_write(pool_v, v_new, bt_l, pos, page_size, off,
-                                 s_loc)
+        gk, gv, pools = _write_gather(
+            pool_k, pool_v, kw.get("pool_ks"), kw.get("pool_vs"),
+            k_new, v_new, bt_l, pos, page_size, off, s_loc, q.dtype)
         ki = _page_positions(bt.shape[1], page_size, off, s_loc)
-        o = _paged_mix(q, _paged_gather(pk, bt_l), _paged_gather(pv, bt_l),
-                       ki, kv_len=pos + 1, window=window, axis=tp)
-        return o, pk, pv
+        o = _paged_mix(q, gk, gv, ki, kv_len=pos + 1, window=window,
+                       axis=tp)
+        return (o, *pools)
 
+    inputs = {"q": qspec, "pool_k": pool_spec, "pool_v": pool_spec,
+              "k_new": qspec, "v_new": qspec, "bt": P(bspec, None),
+              "pos": P(bspec)}
+    if quant:
+        inputs["pool_ks"] = scale_spec
+        inputs["pool_vs"] = scale_spec
     return Island(
         "decode_attn", rules=rules, run=run, axis=tp, fallback_axes=tp,
-        inputs={"q": qspec, "pool_k": pool_spec, "pool_v": pool_spec,
-                "k_new": qspec, "v_new": qspec, "bt": P(bspec, None),
-                "pos": P(bspec)},
-        out_specs=(qspec, pool_spec, pool_spec),
+        inputs=inputs,
+        out_specs=((qspec, pool_spec, pool_spec, scale_spec, scale_spec)
+                   if quant else (qspec, pool_spec, pool_spec)),
         body=body, reference=reference,
         enable=run.decode_seq_shard,
         divisible=((page_size, tp),),
@@ -748,23 +925,47 @@ def paged_decode_island(cfg: ArchConfig, run: RunConfig,
 
 def paged_prefill_island(cfg: ArchConfig, run: RunConfig,
                          rules: ShardingRules | None, b: int, s: int,
-                         page_size: int, *, window) -> Island:
+                         page_size: int, *, window,
+                         quant: bool = False) -> Island:
     """One prefill chunk over the paged pool: chunk K/V written into the
     group's block-table pages (shard-local stripes), then causal attention
     of the chunk's queries against every mapped page — donor prefix, earlier
     chunks, and the chunk itself — with the tp logsumexp merge. ``c0`` is
     the chunk's global start position, ``wf`` the per-slot write_from floor
-    below which writes are suppressed (copy-on-write prefix resume)."""
+    below which writes are suppressed (copy-on-write prefix resume).
+    ``quant``: int8 pools + scale pools; the chunk's K/V is quantized once
+    before the write and the queries attend over dequantized pages — so
+    even the chunk's own K/V is seen at cache precision, keeping chunked
+    and single-shot schedules token-identical."""
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
 
-    def reference(q, pool_k, pool_v, k_new, v_new, bt, c0, wf):
+    def _write_gather(pool_k, pool_v, pool_ks, pool_vs, k_new, v_new, bt,
+                     c0, wf, ps, off, s_loc, qdt):
+        if quant:
+            qk, sk = _kv_quantize(k_new)
+            qv, sv = _kv_quantize(v_new)
+            pk = _paged_chunk_write(pool_k, qk, bt, c0, wf, ps, off, s_loc)
+            pv = _paged_chunk_write(pool_v, qv, bt, c0, wf, ps, off, s_loc)
+            pks = _paged_chunk_write(pool_ks, sk, bt, c0, wf, ps, off, s_loc)
+            pvs = _paged_chunk_write(pool_vs, sv, bt, c0, wf, ps, off, s_loc)
+            gk = _kv_dequantize(_paged_gather(pk, bt),
+                                _paged_gather(pks, bt), qdt)
+            gv = _kv_dequantize(_paged_gather(pv, bt),
+                                _paged_gather(pvs, bt), qdt)
+            return gk, gv, (pk, pv, pks, pvs)
+        pk = _paged_chunk_write(pool_k, k_new, bt, c0, wf, ps, off, s_loc)
+        pv = _paged_chunk_write(pool_v, v_new, bt, c0, wf, ps, off, s_loc)
+        return _paged_gather(pk, bt), _paged_gather(pv, bt), (pk, pv)
+
+    def reference(q, pool_k, pool_v, k_new, v_new, bt, c0, wf, **kw):
         ps = pool_k.shape[2]
-        pk = _paged_chunk_write(pool_k, k_new, bt, c0, wf, ps, 0, ps)
-        pv = _paged_chunk_write(pool_v, v_new, bt, c0, wf, ps, 0, ps)
+        gk, gv, pools = _write_gather(
+            pool_k, pool_v, kw.get("pool_ks"), kw.get("pool_vs"),
+            k_new, v_new, bt, c0, wf, ps, 0, ps, q.dtype)
         ki = _page_positions(bt.shape[1], ps, 0, ps)
-        o = _paged_mix(q, _paged_gather(pk, bt), _paged_gather(pv, bt), ki,
-                       q_pos=c0 + jnp.arange(s), window=window, axis=None)
-        return o, pk, pv
+        o = _paged_mix(q, gk, gv, ki, q_pos=c0 + jnp.arange(s),
+                       window=window, axis=None)
+        return (o, *pools)
 
     if rules is None:
         return Island("paged_prefill_attn", run=run, reference=reference)
@@ -772,29 +973,34 @@ def paged_prefill_island(cfg: ArchConfig, run: RunConfig,
     bspec = rules.dim(b, rules.dp)
     partitioned = bspec is not None
     pool_spec = P(rules.dp if partitioned else None, None, tp, None)
+    scale_spec = P(*pool_spec[:3])
     qspec = P(bspec, None, None, None)
     base_fn = _dp_pool_base(rules, partitioned)
 
-    def body(ctx, q, pool_k, pool_v, k_new, v_new, bt, c0, wf):
-        n_loc, _, s_loc, _ = pool_k.shape
+    def body(ctx, q, pool_k, pool_v, k_new, v_new, bt, c0, wf, **kw):
+        n_loc, _, s_loc = pool_k.shape[:3]
         off = lax.axis_index(tp) * s_loc
         bt_l = jnp.where(bt >= 0, bt - base_fn(n_loc), -1)
-        pk = _paged_chunk_write(pool_k, k_new, bt_l, c0, wf, page_size, off,
-                                s_loc)
-        pv = _paged_chunk_write(pool_v, v_new, bt_l, c0, wf, page_size, off,
-                                s_loc)
+        gk, gv, pools = _write_gather(
+            pool_k, pool_v, kw.get("pool_ks"), kw.get("pool_vs"),
+            k_new, v_new, bt_l, c0, wf, page_size, off, s_loc, q.dtype)
         ki = _page_positions(bt.shape[1], page_size, off, s_loc)
-        o = _paged_mix(q, _paged_gather(pk, bt_l), _paged_gather(pv, bt_l),
-                       ki, q_pos=c0 + jnp.arange(s), window=window, axis=tp)
-        return o, pk, pv
+        o = _paged_mix(q, gk, gv, ki, q_pos=c0 + jnp.arange(s),
+                       window=window, axis=tp)
+        return (o, *pools)
 
+    inputs = {"q": qspec, "pool_k": pool_spec, "pool_v": pool_spec,
+              "k_new": qspec, "v_new": qspec, "bt": P(bspec, None),
+              "c0": P(), "wf": P(bspec)}
+    if quant:
+        inputs["pool_ks"] = scale_spec
+        inputs["pool_vs"] = scale_spec
     return Island(
         "paged_prefill_attn", rules=rules, run=run, axis=tp,
         fallback_axes=tp,
-        inputs={"q": qspec, "pool_k": pool_spec, "pool_v": pool_spec,
-                "k_new": qspec, "v_new": qspec, "bt": P(bspec, None),
-                "c0": P(), "wf": P(bspec)},
-        out_specs=(qspec, pool_spec, pool_spec),
+        inputs=inputs,
+        out_specs=((qspec, pool_spec, pool_spec, scale_spec, scale_spec)
+                   if quant else (qspec, pool_spec, pool_spec)),
         body=body, reference=reference,
         enable=run.decode_seq_shard,
         divisible=((page_size, tp),),
@@ -803,14 +1009,17 @@ def paged_prefill_island(cfg: ArchConfig, run: RunConfig,
 
 
 def paged_decode_attention(p, x, pool_k, pool_v, bt, pos, cfg: ArchConfig,
-                           run: RunConfig, rules: ShardingRules | None):
+                           run: RunConfig, rules: ShardingRules | None, *,
+                           k_scale=None, v_scale=None):
     """One-token decode against the paged pool (the block-table twin of
     ``decode_attention``). x: (B, 1, d); pool_k/v: (N_pages, Hkv, page, hd);
     bt: (B, P) block table (−1 = unmapped — the write drops, so free and
     mid-prefill slots are inert); pos: per-slot (B,) positions.
-    Returns (out (B,1,d), new_pool_k, new_pool_v)."""
+    Returns (out (B,1,d), new_pool_k, new_pool_v) — plus the updated scale
+    pools in int8 mode (``k_scale``/``v_scale`` given)."""
     b, _, d = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    quant = k_scale is not None
     q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, 1, hq, hd).transpose(0, 2, 1, 3)
     k_new = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(b, 1, hkv, hd).transpose(0, 2, 1, 3)
     v_new = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(b, 1, hkv, hd).transpose(0, 2, 1, 3)
@@ -818,24 +1027,28 @@ def paged_decode_attention(p, x, pool_k, pool_v, bt, pos, cfg: ArchConfig,
     q = apply_rope(q, positions, cfg.rope_theta)
     k_new = apply_rope(k_new, positions, cfg.rope_theta)
     island = paged_decode_island(cfg, run, rules, b, pool_k.shape[2],
-                                 window=cfg.sliding_window)
-    o, pk, pv = island(q=q, pool_k=pool_k, pool_v=pool_v, k_new=k_new,
-                       v_new=v_new, bt=bt, pos=pos)
-    o = o.transpose(0, 2, 1, 3).reshape(b, 1, hq * hd)
+                                 window=cfg.sliding_window, quant=quant)
+    kw = {"pool_ks": k_scale, "pool_vs": v_scale} if quant else {}
+    res = island(q=q, pool_k=pool_k, pool_v=pool_v, k_new=k_new,
+                 v_new=v_new, bt=bt, pos=pos, **kw)
+    o = res[0].transpose(0, 2, 1, 3).reshape(b, 1, hq * hd)
     out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
-    return out, pk, pv
+    return (out, *res[1:])
 
 
 def paged_prefill_attention_block(p, x, pool_k, pool_v, bt, chunk_start,
                                   write_from, cfg: ArchConfig,
                                   run: RunConfig,
-                                  rules: ShardingRules | None):
+                                  rules: ShardingRules | None, *,
+                                  k_scale=None, v_scale=None):
     """One chunk of paged prefill attention: x (B, cl, d) are the chunk's
     hidden states (global positions [chunk_start, chunk_start+cl)); K/V land
     in the block table's pages and the queries attend over every mapped
-    page. Returns (out (B, cl, d), new_pool_k, new_pool_v)."""
+    page. Returns (out (B, cl, d), new_pool_k, new_pool_v) — plus the
+    updated scale pools in int8 mode."""
     b, s, d = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    quant = k_scale is not None
     q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, s, hq, hd).transpose(0, 2, 1, 3)
     k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
     v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
@@ -845,15 +1058,16 @@ def paged_prefill_attention_block(p, x, pool_k, pool_v, bt, chunk_start,
     if rules is not None:
         q = constrain(q, rules, rules.act_bhsd(hq))
     island = paged_prefill_island(cfg, run, rules, b, s, pool_k.shape[2],
-                                  window=cfg.sliding_window)
-    o, pk, pv = island(q=q, pool_k=pool_k, pool_v=pool_v, k_new=k, v_new=v,
-                       bt=bt, c0=jnp.asarray(chunk_start, jnp.int32),
-                       wf=write_from)
-    o = o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+                                  window=cfg.sliding_window, quant=quant)
+    kw = {"pool_ks": k_scale, "pool_vs": v_scale} if quant else {}
+    res = island(q=q, pool_k=pool_k, pool_v=pool_v, k_new=k, v_new=v,
+                 bt=bt, c0=jnp.asarray(chunk_start, jnp.int32),
+                 wf=write_from, **kw)
+    o = res[0].transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
     out = attn_out_island(cfg, run, rules, b, s)(o=o, wo=p["wo"])
     if rules is not None:
         out = constrain(out, rules, rules.act_btd())
-    return out, pk, pv
+    return (out, *res[1:])
 
 
 # ---------------------------------------------------------------------------
@@ -915,7 +1129,7 @@ def mlp_island(cfg: ArchConfig, run: RunConfig,
         divisible=((ff, tp),),
         comm=Comm("matmul_all_reduce", m=b_loc * s, n=d,
                   k=ff // tp_size if ff % tp_size == 0 else ff,
-                  dtype_bytes=_dtype_bytes(cfg)))
+                  dtype_bytes=_wire_bytes(cfg, run)))
 
 
 def mlp_block(p, x, cfg: ArchConfig, run: RunConfig,

@@ -355,12 +355,18 @@ def forward_train(params, batch, cfg: ArchConfig, run: RunConfig,
 
 def cache_template(cfg: ArchConfig, run: RunConfig, rules: ShardingRules | None,
                    *, batch: int, s_max: int, enc_len: int = 0,
-                   long_ctx: bool = False, slot_pos: bool = False) -> dict:
+                   long_ctx: bool = False, slot_pos: bool = False,
+                   kv_dtype: str = "bf16") -> dict:
     """ShapeDtypeStruct+spec tree for the decode cache (PD-style).
 
     ``slot_pos=True`` gives the cache a per-slot ``(batch,)`` position
     vector instead of the lockstep scalar — the continuous-batching engine's
-    decode pool holds sequences admitted at different times."""
+    decode pool holds sequences admitted at different times.
+
+    ``kv_dtype="int8"`` stores the K/V slabs as int8 and adds per-(token,
+    head) f32 scale planes (``k_scale``/``v_scale``, the slab shape minus
+    hd) — the layers quantize on write and dequantize on read, roughly
+    halving cache HBM. ``"bf16"`` (default) is byte-for-byte today's tree."""
     dt = DTYPES[cfg.dtype]
     hkv, hd, di, n, ck = (cfg.n_kv_heads, cfg.hd, cfg.d_inner, cfg.ssm_state,
                           cfg.conv_kernel)
@@ -372,12 +378,20 @@ def cache_template(cfg: ArchConfig, run: RunConfig, rules: ShardingRules | None,
     pos_pd = PD((batch,), P(bspec), "zeros", jnp.int32) if slot_pos \
         else PD((), P(), "zeros", jnp.int32)
     tree: dict[str, Any] = {"pos": pos_pd, "blocks": {}}
+    kv_dt = {"bf16": dt, "int8": jnp.int8}[kv_dtype]
     for i, spec in enumerate(cfg.layer_pattern()):
         if spec.mixer == "attn":
-            tree["blocks"][f"pos{i}"] = {
-                "k": PD((np_, batch, hkv, s_max, hd), P(None, *kv_spec), "zeros", dt),
-                "v": PD((np_, batch, hkv, s_max, hd), P(None, *kv_spec), "zeros", dt),
+            kv = {
+                "k": PD((np_, batch, hkv, s_max, hd), P(None, *kv_spec), "zeros", kv_dt),
+                "v": PD((np_, batch, hkv, s_max, hd), P(None, *kv_spec), "zeros", kv_dt),
             }
+            if kv_dtype == "int8":
+                sspec = P(None, *kv_spec[:3])
+                kv["k_scale"] = PD((np_, batch, hkv, s_max), sspec, "zeros",
+                                   jnp.float32)
+                kv["v_scale"] = PD((np_, batch, hkv, s_max), sspec, "zeros",
+                                   jnp.float32)
+            tree["blocks"][f"pos{i}"] = kv
         else:
             tree["blocks"][f"pos{i}"] = {
                 "h": PD((np_, batch, di, n), P(None, *ssm_spec), "zeros", jnp.float32),
@@ -423,16 +437,22 @@ def decode_step(params, cache, tokens, cfg: ArchConfig, run: RunConfig,
             cp = period_cache[f"pos{i}"]
             if spec.mixer == "attn":
                 a = bp["attn"]
+                scales = ({"k_scale": cp["k_scale"], "v_scale": cp["v_scale"]}
+                          if "k_scale" in cp else {})
                 if bt is not None:
-                    h, nk, nv = L.paged_decode_attention(
+                    h, nk, nv, *ns = L.paged_decode_attention(
                         a, L.rms_norm(a["norm"], x, cfg.norm_eps), cp["k"],
-                        cp["v"], bt, pos, cfg, run, rules)
+                        cp["v"], bt, pos, cfg, run, rules, **scales)
                 else:
-                    h, nk, nv = L.decode_attention(
+                    h, nk, nv, *ns = L.decode_attention(
                         a, L.rms_norm(a["norm"], x, cfg.norm_eps), cp["k"],
-                        cp["v"], pos, cfg, run, rules, long_ctx=long_ctx)
+                        cp["v"], pos, cfg, run, rules, long_ctx=long_ctx,
+                        **scales)
                 x = x + h
-                new_cache[f"pos{i}"] = {"k": nk, "v": nv}
+                nc = {"k": nk, "v": nv}
+                if scales:
+                    nc["k_scale"], nc["v_scale"] = ns
+                new_cache[f"pos{i}"] = nc
             else:
                 mp = bp["mamba"]
                 h, (nh, nconv) = S.mamba_block(
@@ -554,11 +574,16 @@ def prefill_step(params, cache, tokens, prompt_lens, cfg: ArchConfig,
             cp = period_cache[f"pos{i}"]
             if spec.mixer == "attn":
                 a = bp["attn"]
-                h, nk, nv = L.prefill_attention_block(
+                scales = ({"k_scale": cp["k_scale"], "v_scale": cp["v_scale"]}
+                          if "k_scale" in cp else {})
+                h, nk, nv, *ns = L.prefill_attention_block(
                     a, L.rms_norm(a["norm"], x, cfg.norm_eps), cp["k"],
-                    cp["v"], cfg, run, rules)
+                    cp["v"], cfg, run, rules, **scales)
                 x = x + h
-                new_cache[f"pos{i}"] = {"k": nk, "v": nv}
+                nc = {"k": nk, "v": nv}
+                if scales:
+                    nc["k_scale"], nc["v_scale"] = ns
+                new_cache[f"pos{i}"] = nc
             else:
                 mp = bp["mamba"]
                 h, (nh, nconv) = S.mamba_block(
@@ -636,11 +661,16 @@ def prefill_paged_step(params, cache, tokens, block_tables, prompt_lens,
             cp = period_cache[f"pos{i}"]
             assert spec.mixer == "attn", "paged prefill is attention-only"
             a = bp["attn"]
-            h, nk, nv = L.paged_prefill_attention_block(
+            scales = ({"k_scale": cp["k_scale"], "v_scale": cp["v_scale"]}
+                      if "k_scale" in cp else {})
+            h, nk, nv, *ns = L.paged_prefill_attention_block(
                 a, L.rms_norm(a["norm"], x, cfg.norm_eps), cp["k"],
-                cp["v"], block_tables, c0, wf, cfg, run, rules)
+                cp["v"], block_tables, c0, wf, cfg, run, rules, **scales)
             x = x + h
-            new_cache[f"pos{i}"] = {"k": nk, "v": nv}
+            nc = {"k": nk, "v": nv}
+            if scales:
+                nc["k_scale"], nc["v_scale"] = ns
+            new_cache[f"pos{i}"] = nc
             if spec.mlp == "dense":
                 mp = bp["mlp"]
                 x = x + L.mlp_block(mp, L.rms_norm(mp["norm"], x,

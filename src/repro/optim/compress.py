@@ -1,76 +1,62 @@
 """Gradient compression for the DP all-reduce (distributed-optimization
 substrate): int8 block-quantized gradients with error feedback.
 
-Two layers:
+The quantization implementation lives in ``core/quant.py`` — the same
+per-block int8 + f32-scales format the ring collectives ship on the wire
+(``wire="int8"``) — and this module re-exports it so the two paths cannot
+drift. Two layers remain here:
+
   * `ErrorFeedbackInt8.transform(grads)` — quantize→dequantize with residual
     carry (applied before the optimizer; numerically models the compressed
     collective; used by make_train_step's grad_transform hook).
   * `compressed_psum(x, axis)` — the actual comm-level primitive for the
     manual-DP (shard_map) path: int8 payload + per-block f32 scales, summed
-    in int32. Cuts DP gradient traffic 4× vs f32 / 2× vs bf16 (paper §3.1
-    "T_comm = S/B": shrink S when B is the constraint).
+    in int32. Its payload bytes come from the shared ``WireFormat``
+    descriptor (``COMPRESS_WIRE.bytes_per_element`` ≈ 1.016 B/elem vs 4 for
+    f32 — paper §3.1 "T_comm = S/B": shrink S when B is the constraint).
 """
 
 from __future__ import annotations
-
-from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-BLOCK = 256
+from repro.core.quant import (BLOCK, QMAX, SCALE_EPS, EFState,  # noqa: F401
+                              ErrorFeedbackInt8, WIRE_FORMATS, WireFormat,
+                              quant_dequant, wire_payload_bytes)
 
-
-class EFState(NamedTuple):
-    residual: Any
+#: the wire format the manual-DP compressed all-reduce ships — identical to
+#: the ring collectives' "int8" wire, so both paths price payloads off one
+#: descriptor.
+COMPRESS_WIRE: WireFormat = WIRE_FORMATS["int8"]
 
 
 def _quant_dequant(g: jax.Array) -> jax.Array:
-    flat = g.reshape(-1)
-    pad = (-flat.size) % BLOCK
-    fp = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
-    scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
-    scale = jnp.maximum(scale, 1e-12)
-    q = jnp.clip(jnp.round(fp / scale), -127, 127).astype(jnp.int8)
-    deq = (q.astype(jnp.float32) * scale).reshape(-1)[:flat.size]
-    return deq.reshape(g.shape)
+    """Thin re-export of ``core.quant.quant_dequant`` (historical name)."""
+    return quant_dequant(g, block=BLOCK)
 
 
-class ErrorFeedbackInt8:
-    """g' = Q(g + r); r <- (g + r) - g'. The residual makes the compression
-    unbiased over time (error-feedback SGD convergence argument)."""
-
-    def init(self, params) -> EFState:
-        return EFState(jax.tree.map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), params))
-
-    def transform(self, grads, state: EFState):
-        def one(g, r):
-            corrected = g.astype(jnp.float32) + r
-            deq = _quant_dequant(corrected)
-            return deq, corrected - deq
-
-        out = jax.tree.map(one, grads, state.residual)
-        new_g = jax.tree.map(lambda t: t[0], out,
-                             is_leaf=lambda t: isinstance(t, tuple))
-        new_r = jax.tree.map(lambda t: t[1], out,
-                             is_leaf=lambda t: isinstance(t, tuple))
-        return new_g, EFState(new_r)
+def compressed_payload_bytes(n_elems: float) -> float:
+    """On-wire bytes ``compressed_psum`` ships for ``n_elems`` gradient
+    elements (int8 payload + one f32 scale per block, via the shared
+    ``WireFormat`` math)."""
+    return wire_payload_bytes(n_elems, COMPRESS_WIRE)
 
 
 def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
     """int8 all-reduce with per-block scales (call inside shard_map).
 
-    Payload: int8 blocks + one f32 scale per 256 elements = 4.0625 B/elem ->
-    1.02 B/elem vs 4 (f32). The sum happens in int32 after rescaling to the
-    axis-max scale, so the result is exact w.r.t. the quantized values."""
+    Payload: int8 blocks + one f32 scale per 256 elements
+    (``COMPRESS_WIRE.bytes_per_element`` ≈ 1.016 B/elem vs 4 for f32). The
+    sum happens in int32 after rescaling to the axis-max scale, so the
+    result is exact w.r.t. the quantized values."""
     flat = x.astype(jnp.float32).reshape(-1)
-    pad = (-flat.size) % BLOCK
-    fp = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
-    scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
-    scale = jnp.maximum(lax.pmax(scale, axis_name), 1e-12)  # shared scale
-    q = jnp.clip(jnp.round(fp / scale), -127, 127).astype(jnp.int8)
+    pad = (-flat.size) % COMPRESS_WIRE.block
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, COMPRESS_WIRE.block)
+    scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / QMAX
+    scale = jnp.maximum(lax.pmax(scale, axis_name), SCALE_EPS)  # shared scale
+    q = jnp.clip(jnp.round(fp / scale), -QMAX, QMAX).astype(jnp.int8)
     # int8 payload summed in int32 (n<=2^8 ranks cannot overflow int32)
     total = lax.psum(q.astype(jnp.int32), axis_name)
     out = (total.astype(jnp.float32) * scale).reshape(-1)[:flat.size]

@@ -268,11 +268,15 @@ def paged_kv_pool_spec(rules: ShardingRules | None, n_kv: int, batch: int,
 
 def paged_cache_template(cfg: ArchConfig, run: RunConfig,
                          rules: ShardingRules | None, *, batch: int,
-                         geom: PageGeometry) -> dict:
+                         geom: PageGeometry, kv_dtype: str = "bf16") -> dict:
     """PD tree for the paged decode cache: per-layer page pools, per-slot
     block tables (−1 = unmapped; the engine fills rows at admission) and the
     per-slot position vector. Attention-only architectures — SSM recurrent
-    state has no paged equivalent here."""
+    state has no paged equivalent here.
+
+    ``kv_dtype="int8"`` stores the pools as int8 plus per-(page-position,
+    head) f32 scale pools (``k_scale``/``v_scale``, the pool shape minus hd);
+    the paged islands quantize on write and dequantize on gather."""
     from repro.models.transformer import DTYPES, PD
 
     if cfg.encoder_decoder:
@@ -284,6 +288,7 @@ def paged_cache_template(cfg: ArchConfig, run: RunConfig,
             f"paged (use the slab layout / exact_buckets)")
     import jax.numpy as jnp
     dt = DTYPES[cfg.dtype]
+    kv_dt = {"bf16": dt, "int8": jnp.int8}[kv_dtype]
     hkv, hd, np_ = cfg.n_kv_heads, cfg.hd, cfg.n_periods
     pool_spec = paged_kv_pool_spec(rules, hkv, batch, geom)
     bspec = rules.dim(batch, rules.dp) if rules else None
@@ -295,23 +300,36 @@ def paged_cache_template(cfg: ArchConfig, run: RunConfig,
     }
     shape = (np_, geom.n_pages, hkv, geom.page_size, hd)
     for i, _spec in enumerate(cfg.layer_pattern()):
-        tree["blocks"][f"pos{i}"] = {
-            "k": PD(shape, P(None, *pool_spec), "zeros", dt),
-            "v": PD(shape, P(None, *pool_spec), "zeros", dt),
+        kv = {
+            "k": PD(shape, P(None, *pool_spec), "zeros", kv_dt),
+            "v": PD(shape, P(None, *pool_spec), "zeros", kv_dt),
         }
+        if kv_dtype == "int8":
+            sspec = P(None, *pool_spec[:3])
+            kv["k_scale"] = PD(shape[:-1], sspec, "zeros", jnp.float32)
+            kv["v_scale"] = PD(shape[:-1], sspec, "zeros", jnp.float32)
+        tree["blocks"][f"pos{i}"] = kv
     return tree
 
 
-def pool_hbm_bytes(cfg: ArchConfig, geom: PageGeometry) -> int:
-    """Total K/V pool bytes (all layers, both K and V)."""
+def _kv_bytes_per_pos(cfg: ArchConfig, kv_dtype: str) -> int:
+    """K/V cache bytes per cached position (all layers, both K and V).
+
+    int8 pays 1 byte/element plus one f32 scale per (position, head, K|V)."""
+    if kv_dtype == "int8":
+        return cfg.n_layers * cfg.n_kv_heads * 2 * (cfg.hd + 4)
     dt_bytes = 2 if cfg.dtype == "bfloat16" else 4
-    per_pos = cfg.n_layers * cfg.n_kv_heads * cfg.hd * 2 * dt_bytes
-    return geom.n_pages * geom.page_size * per_pos
+    return cfg.n_layers * cfg.n_kv_heads * cfg.hd * 2 * dt_bytes
 
 
-def slab_hbm_bytes(cfg: ArchConfig, batch: int, s_max: int) -> int:
+def pool_hbm_bytes(cfg: ArchConfig, geom: PageGeometry,
+                   kv_dtype: str = "bf16") -> int:
+    """Total K/V pool bytes (all layers, both K and V, incl. int8 scales)."""
+    return geom.n_pages * geom.page_size * _kv_bytes_per_pos(cfg, kv_dtype)
+
+
+def slab_hbm_bytes(cfg: ArchConfig, batch: int, s_max: int,
+                   kv_dtype: str = "bf16") -> int:
     """Slab-equivalent K/V bytes for the same slot count — the denominator
     of the paged-vs-slab memory story in stats()/fig_serving."""
-    dt_bytes = 2 if cfg.dtype == "bfloat16" else 4
-    per_pos = cfg.n_layers * cfg.n_kv_heads * cfg.hd * 2 * dt_bytes
-    return batch * s_max * per_pos
+    return batch * s_max * _kv_bytes_per_pos(cfg, kv_dtype)

@@ -208,10 +208,18 @@ def serving_plan_record(cfg: ArchConfig, run: RunConfig,
     regressions are reviewable from the artifact alone."""
     table = resolve_serving_plans(cfg, run, rules, serve)
     s_max = padded_s_max(serve, rules)
+    kv_dt = serve.kv_dtype
     cache: dict[str, Any] = {"layout": serve.cache_layout,
                              "s_max": s_max,
+                             "kv_dtype": kv_dt,
+                             # f32 scale-plane bytes per cached position
+                             # (0 in bf16 — no scale leaves exist)
+                             "scale_bytes_per_pos": (
+                                 cfg.n_layers * cfg.n_kv_heads * 2 * 4
+                                 if kv_dt == "int8" else 0),
                              "slab_bytes": paging.slab_hbm_bytes(
-                                 cfg, serve.max_batch, s_max)}
+                                 cfg, serve.max_batch, s_max,
+                                 kv_dtype=kv_dt)}
     if serve.cache_layout == "paged":
         geom = resolve_page_geometry(serve, rules)
         cache.update({
@@ -219,7 +227,7 @@ def serving_plan_record(cfg: ArchConfig, run: RunConfig,
             "pages_per_slot": geom.pages_per_slot,
             "n_partitions": geom.n_partitions,
             "prefill_chunk": serve.prefill_chunk,
-            "pool_bytes": paging.pool_hbm_bytes(cfg, geom),
+            "pool_bytes": paging.pool_hbm_bytes(cfg, geom, kv_dtype=kv_dt),
             # per-bucket resident-slot capacity at full span (L + max_new)
             "resident_capacity": {
                 str(e): geom.resident_capacity(e + serve.max_new_tokens,
@@ -234,6 +242,7 @@ def serving_plan_record(cfg: ArchConfig, run: RunConfig,
                        "max_new_tokens": serve.max_new_tokens,
                        "queue_policy": serve.queue_policy},
             "comm_policy": run.comm_policy,
+            "comm_wire": run.comm_wire or "bf16",
             "cache": cache,
             "buckets": {name: bp.asdict() for name, bp in table.items()}}
 
@@ -316,7 +325,8 @@ class ServingEngine:
                     f"multiple of the pool partition count "
                     f"({self.geom.n_partitions})")
             self._cache_tmpl = paging.paged_cache_template(
-                cfg, self._runs["decode"], rules, batch=b, geom=self.geom)
+                cfg, self._runs["decode"], rules, batch=b, geom=self.geom,
+                kv_dtype=self.serve.kv_dtype)
             self.cache = self._sharded_zeros(self._cache_tmpl)
             # block tables start fully unmapped (-1), never all-zeros: a
             # zero row would alias every free slot onto physical page 0
@@ -337,7 +347,7 @@ class ServingEngine:
             self.geom = None
             self._cache_tmpl = T.cache_template(
                 cfg, self._runs["decode"], rules, batch=b, s_max=self.s_max,
-                slot_pos=True)
+                slot_pos=True, kv_dtype=self.serve.kv_dtype)
             self.cache = self._sharded_zeros(self._cache_tmpl)
         self._job: _PrefillJob | None = None
         self._decode_fn = jax.jit(
@@ -440,7 +450,8 @@ class ServingEngine:
                 donate_argnums=(1,))
             self._prefill_tmpls[bucket] = T.cache_template(
                 self.cfg, run, self.rules, batch=self.serve.prefill_batch,
-                s_max=self.s_max, slot_pos=True)
+                s_max=self.s_max, slot_pos=True,
+                kv_dtype=self.serve.kv_dtype)
         return self._prefill_fns[bucket]
 
     def _paged_prefill_fn(self, bucket: int):
@@ -973,7 +984,8 @@ class ServingEngine:
             run_dec = dataclasses.replace(
                 run, island_overrides=plan_overrides(dec_plans))
             tmpl = T.cache_template(self.cfg, run_dec, self.rules, batch=n,
-                                    s_max=self.s_max, slot_pos=True)
+                                    s_max=self.s_max, slot_pos=True,
+                                    kv_dtype=self.serve.kv_dtype)
             self._static_fns[key] = (
                 jax.jit(make_prefill_cache_step(self.cfg, run_pre,
                                                 self.rules),
@@ -1030,9 +1042,11 @@ class ServingEngine:
         """Cache-memory story: layout, pool bytes vs the slab equivalent,
         residency peaks, prefix-sharing and backpressure counters."""
         slab = paging.slab_hbm_bytes(self.cfg, self.serve.max_batch,
-                                     self.s_max)
+                                     self.s_max,
+                                     kv_dtype=self.serve.kv_dtype)
         out: dict[str, Any] = {
             "layout": self.serve.cache_layout,
+            "kv_dtype": self.serve.kv_dtype,
             "peak_resident_slots": self._peak_slots,
             "slab_bytes": slab,
         }
@@ -1041,7 +1055,8 @@ class ServingEngine:
             return out
         g = self.geom
         out.update({
-            "hbm_bytes": paging.pool_hbm_bytes(self.cfg, g),
+            "hbm_bytes": paging.pool_hbm_bytes(self.cfg, g,
+                                               kv_dtype=self.serve.kv_dtype),
             "page_size": g.page_size, "n_pages": g.n_pages,
             "pages_per_slot": g.pages_per_slot,
             "n_partitions": g.n_partitions,

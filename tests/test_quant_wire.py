@@ -1,0 +1,353 @@
+"""Low-precision wire formats (core.quant + the quantized ring schedules +
+the int8 KV cache):
+
+* per-block int8 round-trip error bounds and the chunk-invariance of the
+  per-row block layout;
+* quantized ring GEMM-collectives == a bulk-quantized reference BIT-EXACT
+  for all 3 ops x chunk counts {1, 2, 4} (the rings' bit-identity contract
+  carried to the quantized level);
+* bounded wire error vs the full-precision baseline, and error-feedback
+  convergence (the residual telescopes, so the accumulated compressed sum
+  tracks the true sum to one quantization step);
+* int8 KV-cache serving: token-identical to its own sequential baseline on
+  slab and paged layouts, logits within a bound of the bf16 cache, and the
+  bf16 templates byte-for-byte unchanged by the new axis.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.configs import get_config
+from repro.configs.base import RunConfig, ServeConfig
+from repro.core.comms import CommContext
+from repro.core.quant import (BLOCK, ErrorFeedbackInt8, WIRE_FORMATS,
+                              dequantize_blocks, quant_dequant,
+                              quantize_blocks, resolve_wire)
+
+N = 4
+
+
+@pytest.fixture(scope="module")
+def sm(mesh4):
+    return partial(compat.shard_map, mesh=mesh4, check_vma=False)
+
+
+@pytest.fixture(scope="module")
+def ctx(mesh4):
+    return CommContext(axis_name="x", mesh=mesh4)
+
+
+def _run(sm, fn, in_specs, out_specs, *args):
+    return np.asarray(jax.jit(sm(fn, in_specs=in_specs,
+                                 out_specs=out_specs))(*args))
+
+
+# ---------------------------------------------------------------------------
+# quantize_blocks round trip
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 300)) * 3.0
+    got = np.asarray(dequantize_blocks(*quantize_blocks(x), 300))
+    # symmetric RTN: |err| <= scale/2 per element, scale = blockmax/127
+    fp = np.asarray(x, np.float32)
+    pad = np.pad(fp, [(0, 0), (0, (-300) % BLOCK)])
+    scales = np.abs(pad.reshape(32, -1, BLOCK)).max(-1) / 127.0
+    bound = np.repeat(scales, BLOCK, axis=-1)[:, :300] / 2 + 1e-6
+    assert (np.abs(got - fp) <= bound).all()
+
+
+def test_row_chunk_invariance():
+    """Splitting rows then quantizing == quantizing then splitting — the
+    property the ring chunk schedules rely on for bit-exactness."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 48))
+    q, s = quantize_blocks(x)
+    for c in (2, 4):
+        rows = 16 // c
+        for j in range(c):
+            qj, sj = quantize_blocks(x[j * rows:(j + 1) * rows])
+            np.testing.assert_array_equal(qj, q[j * rows:(j + 1) * rows])
+            np.testing.assert_array_equal(sj, s[j * rows:(j + 1) * rows])
+
+
+def test_wire_format_registry():
+    assert set(WIRE_FORMATS) == {"bf16", "int8", "int8_sr"}
+    assert resolve_wire(None) is None and resolve_wire("bf16") is None
+    fmt = resolve_wire("int8")
+    assert fmt.quantized and fmt.dtype_bytes == 1
+    assert fmt.bytes_per_element == 1 + 4.0 / fmt.block
+    assert resolve_wire("int8_sr").stochastic_round
+
+
+# ---------------------------------------------------------------------------
+# Quantized rings == bulk-quantized reference, bit-exact across chunk counts
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _ag_ref(x, w):
+    """Bulk-quantized AG+GEMM: every shard quantized per-row once, every
+    consumer GEMMs the dequantized values. Jitted so the dots compile the
+    same way the shard_map body's do — bit-exact, not merely close."""
+    m_loc = x.shape[0] // N
+    outs = []
+    for d in range(N):
+        xs = x[d * m_loc:(d + 1) * m_loc]
+        dq = dequantize_blocks(*quantize_blocks(xs), x.shape[1])
+        outs.append(jnp.dot(dq, w,
+                            preferred_element_type=jnp.float32).astype(
+                                x.dtype))
+    return jnp.concatenate(outs, 0)
+
+
+def _rs_sim(x, w):
+    """Accumulate-and-forward ring with quantized hops, simulated densely:
+    for destination block j the contributions arrive in ring order with a
+    quantize->dequantize between consecutive adds."""
+    m_blk = x.shape[0] // N
+    k_loc = x.shape[1] // N
+    n_out = w.shape[1]
+
+    def partial_(j, d):
+        xs = x[j * m_blk:(j + 1) * m_blk, d * k_loc:(d + 1) * k_loc]
+        return jnp.dot(xs, w[d * k_loc:(d + 1) * k_loc],
+                       preferred_element_type=jnp.float32)
+
+    outs = []
+    for j in range(N):
+        acc = partial_(j, (j - 1) % N)
+        for i in range(1, N):
+            acc = dequantize_blocks(*quantize_blocks(acc), n_out) \
+                + partial_(j, (j - 1 - i) % N)
+        outs.append(acc.astype(x.dtype))
+    return outs
+
+
+@jax.jit
+def _rs_ref(x, w):
+    return jnp.concatenate(_rs_sim(x, w), 0)
+
+
+@jax.jit
+def _ar_ref(x, w):
+    """Quantized RS chain + one more quantized hop for the trailing gather."""
+    n_out = w.shape[1]
+    outs = []
+    for blk in _rs_sim(x, w):
+        outs.append(dequantize_blocks(
+            *quantize_blocks(blk.astype(jnp.float32)), n_out).astype(x.dtype))
+    return jnp.concatenate(outs, 0)
+
+
+@pytest.mark.parametrize("nc", [1, 2, 4])
+def test_quantized_rings_bit_exact(sm, ctx, nc):
+    x_ag = jax.random.normal(jax.random.PRNGKey(0), (8 * N, 16))
+    w_ag = jax.random.normal(jax.random.PRNGKey(1), (16, 12))
+    x_rs = jax.random.normal(jax.random.PRNGKey(2), (16, 8 * N))
+    w_rs = jax.random.normal(jax.random.PRNGKey(3), (8 * N, 12))
+
+    cases = {
+        ("all_gather_matmul", "ring"): (
+            ctx.all_gather_matmul, (x_ag, w_ag), (P("x"), P()), P(),
+            np.asarray(_ag_ref(x_ag, w_ag))),
+        ("all_gather_matmul", "ring_bidir"): (
+            ctx.all_gather_matmul, (x_ag, w_ag), (P("x"), P()), P(),
+            np.asarray(_ag_ref(x_ag, w_ag))),
+        ("matmul_reduce_scatter", "ring"): (
+            ctx.matmul_reduce_scatter, (x_rs, w_rs),
+            (P(None, "x"), P("x", None)), P("x", None),
+            np.asarray(_rs_ref(x_rs, w_rs))),
+        ("matmul_all_reduce", "ring"): (
+            ctx.matmul_all_reduce, (x_rs, w_rs),
+            (P(None, "x"), P("x", None)), P(),
+            np.asarray(_ar_ref(x_rs, w_rs))),
+    }
+    for (op, be), (meth, args, in_specs, out_specs, want) in cases.items():
+        got = _run(sm, partial(meth, backend=be, n_chunks=nc, wire="int8"),
+                   in_specs, out_specs, *args)
+        np.testing.assert_array_equal(got, want,
+                                      err_msg=f"{op}/{be}/c={nc}")
+
+
+def test_quantized_wire_error_bounded(sm, ctx):
+    """The int8 wire stays close to the full-precision result — the payoff
+    is wire bytes, not semantics."""
+    x = jax.random.normal(jax.random.PRNGKey(4), (8 * N, 16))
+    w = jax.random.normal(jax.random.PRNGKey(5), (16, 12))
+    want = np.asarray(jnp.dot(x, w))
+    for wire in ("int8", "int8_sr"):
+        got = _run(sm, partial(ctx.all_gather_matmul, backend="ring",
+                               wire=wire), (P("x"), P()), P(), x, w)
+        np.testing.assert_allclose(got, want, rtol=0.05, atol=0.15,
+                                   err_msg=wire)
+
+
+def test_sr_wire_differs_from_rtn(sm, ctx):
+    x = jax.random.normal(jax.random.PRNGKey(6), (8 * N, 16))
+    w = jax.random.normal(jax.random.PRNGKey(7), (16, 12))
+    a = _run(sm, partial(ctx.all_gather_matmul, backend="ring",
+                         wire="int8"), (P("x"), P()), P(), x, w)
+    b = _run(sm, partial(ctx.all_gather_matmul, backend="ring",
+                         wire="int8_sr"), (P("x"), P()), P(), x, w)
+    assert not np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Error feedback
+# ---------------------------------------------------------------------------
+
+def test_error_feedback_telescopes():
+    """sum_t deq_t = T*g - r_T: the accumulated compressed gradient tracks
+    the true sum to within ONE quantization step, however long the run."""
+    g = {"w": jax.random.normal(jax.random.PRNGKey(8), (33, 7)) * 0.01}
+    ef = ErrorFeedbackInt8()
+    state = ef.init(g)
+    T = 30
+    total = jnp.zeros_like(g["w"], dtype=jnp.float32)
+    for _ in range(T):
+        deq, state = ef.transform(g, state)
+        total = total + deq["w"]
+    err = np.abs(np.asarray(total - T * g["w"].astype(jnp.float32)))
+    one_step = np.abs(np.asarray(g["w"])).max() * 2 / 127.0 + 1e-7
+    assert err.max() <= one_step
+    # and plain quant-dequant of a tiny gradient would NOT converge: its
+    # one-shot error is already the same order as the signal EF removes
+    naive = T * np.asarray(quant_dequant(g["w"]))
+    assert err.max() < np.abs(naive - np.asarray(T * g["w"])).max() + 1e-7
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache
+# ---------------------------------------------------------------------------
+
+def _engine(mesh_shape, serve):
+    from repro.launch.serve import build_engine
+    return build_engine("tinyllama-1.1b", reduced=True,
+                        mesh_shape=mesh_shape, serve=serve)
+
+
+def _trace(serve, vocab, n, seed=0):
+    from repro.launch.serve import synthetic_trace
+    return synthetic_trace(n, serve, vocab, seed=seed)
+
+
+SLAB8 = ServeConfig(max_batch=4, prefill_batch=2, bucket_edges=(8, 16),
+                    max_new_tokens=4, kv_dtype="int8")
+PAGED8 = ServeConfig(max_batch=4, prefill_batch=2, bucket_edges=(8, 16),
+                     max_new_tokens=4, cache_layout="paged", page_size=8,
+                     prefill_chunk=8, kv_dtype="int8")
+
+
+@pytest.mark.parametrize("serve", [SLAB8, PAGED8], ids=["slab", "paged"])
+def test_int8_kv_matches_own_sequential(serve):
+    """Continuous batching with the int8 cache is still deterministic
+    batching: token-identical to a fresh engine serving one request."""
+    eng = _engine((2, 2), serve)
+    trace = _trace(serve, eng.cfg.vocab_size, 4)
+    done = eng.run(trace)
+    assert len(done) == len(trace)
+    for c in done[:2]:
+        solo = _engine((2, 2), serve)
+        ref = solo.run([trace[c.rid]])[0]
+        assert c.tokens == ref.tokens, (c.rid, c.tokens, ref.tokens)
+
+
+def test_int8_kv_logits_near_bf16():
+    """Same params, same prompt: the int8 cache's decode logits stay within
+    a quantization-sized bound of the bf16 cache's."""
+    from repro.models import transformer as T
+    from repro.models.sharding import ShardingRules  # noqa: F401
+
+    cfg = get_config("tinyllama-1.1b").reduced()
+    run = RunConfig(dp_axes=("data",), fsdp=False)
+    tmpl = T.param_template(cfg, run, None)
+    params = T.init_params(tmpl, jax.random.PRNGKey(0), cfg.d_model)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                cfg.vocab_size)
+    outs = {}
+    for kd in ("bf16", "int8"):
+        ct = T.cache_template(cfg, run, None, batch=2, s_max=16,
+                              kv_dtype=kd)
+        cache = T.init_params(ct, jax.random.PRNGKey(2), cfg.d_model)
+        logits, cache = T.prefill_step(params, cache, tokens, 8, cfg, run,
+                                       None)
+        l2, _ = T.decode_step(params, cache,
+                              jnp.argmax(logits[:, -1:], -1).astype(
+                                  jnp.int32), cfg, run, None)
+        outs[kd] = (np.asarray(logits, np.float32),
+                    np.asarray(l2, np.float32))
+    for a, b in zip(outs["bf16"], outs["int8"]):
+        scale = np.abs(a).max()
+        assert np.abs(a - b).max() <= 0.1 * scale + 0.1, \
+            (np.abs(a - b).max(), scale)
+
+
+def test_bf16_templates_unchanged_by_kv_axis():
+    """kv_dtype='bf16' must be byte-for-byte the pre-axis tree: no scale
+    leaves, identical shapes/dtypes/specs."""
+    from repro.models import transformer as T
+    from repro.runtime import paging
+
+    cfg = get_config("tinyllama-1.1b").reduced()
+    run = RunConfig(dp_axes=("data",), fsdp=False)
+    a = T.cache_template(cfg, run, None, batch=2, s_max=16)
+    b = T.cache_template(cfg, run, None, batch=2, s_max=16, kv_dtype="bf16")
+    assert jax.tree_util.tree_structure(a) == jax.tree_util.tree_structure(b)
+    for pa, pb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        assert pa == pb
+    for blk in T.cache_template(cfg, run, None, batch=2, s_max=16,
+                                kv_dtype="int8")["blocks"].values():
+        assert set(blk) == {"k", "v", "k_scale", "v_scale"}
+        assert blk["k"].dtype == jnp.int8
+        assert blk["k_scale"].dtype == jnp.float32
+        assert blk["k_scale"].shape == blk["k"].shape[:-1]
+    geom = paging.resolve_page_geometry(PAGED8, s_max=16)
+    pt = paging.paged_cache_template(cfg, run, None, batch=2, geom=geom,
+                                     kv_dtype="int8")
+    for blk in pt["blocks"].values():
+        assert blk["k"].dtype == jnp.int8
+        assert blk["k_scale"].shape == blk["k"].shape[:-1]
+
+
+def test_int8_cache_bytes_shrink():
+    from repro.runtime import paging
+
+    cfg = get_config("tinyllama-1.1b").reduced()
+    b16 = paging.slab_hbm_bytes(cfg, 4, 64)
+    b8 = paging.slab_hbm_bytes(cfg, 4, 64, kv_dtype="int8")
+    # (hd + 4 scale bytes) vs 2*hd per (pos, head, K|V)
+    assert b8 * (2 * cfg.hd) == b16 * (cfg.hd + 4)
+    assert b8 < b16
+    geom = paging.resolve_page_geometry(PAGED8, s_max=64)
+    assert paging.pool_hbm_bytes(cfg, geom, kv_dtype="int8") < \
+        paging.pool_hbm_bytes(cfg, geom)
+
+
+def test_serve_config_validates_kv_dtype():
+    with pytest.raises(ValueError):
+        ServeConfig(kv_dtype="fp4")
+
+
+def test_plan_record_reports_wire_and_kv(mesh22):
+    from repro.models.sharding import ShardingRules
+    from repro.runtime.serving import serving_plan_record
+
+    cfg = get_config("tinyllama-1.1b").reduced()
+    run = RunConfig(dp_axes=("data",), fsdp=False, comm_wire="int8")
+    rules = ShardingRules(mesh22, run)
+    rec = serving_plan_record(cfg, run, rules, SLAB8)
+    assert rec["comm_wire"] == "int8"
+    assert rec["cache"]["kv_dtype"] == "int8"
+    assert rec["cache"]["scale_bytes_per_pos"] == \
+        cfg.n_layers * cfg.n_kv_heads * 2 * 4
+    rec16 = serving_plan_record(cfg, RunConfig(dp_axes=("data",),
+                                               fsdp=False), rules,
+                                ServeConfig())
+    assert rec16["comm_wire"] == "bf16"
+    assert rec16["cache"]["scale_bytes_per_pos"] == 0
