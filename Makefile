@@ -2,7 +2,7 @@
 PY ?= python
 
 .PHONY: test test-full lint bench bench-baseline calibrate quickstart deps \
-        serve-smoke fleet-smoke
+        serve-smoke fleet-smoke health-smoke fuzz
 
 deps:
 	$(PY) -m pip install -r requirements.txt
@@ -44,6 +44,18 @@ fleet-smoke:        # 2-replica fleet with a scripted kill + rejoin
 	    --fault-plan "drain:1@1 kill:1@3 rejoin:1@5" \
 	    --ckpt-dir /tmp/repro-fleet-ckpt --requests 8 --tokens 4 \
 	    --max-batch 4 --prefill-batch 2 --bucket-edges 8 16
+
+health-smoke:       # scripted comm faults: guards + monitor + quarantine
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+	    $(PY) -m repro.launch.serve --arch tinyllama-1.1b --reduced \
+	    --mode continuous --mesh-shape 1 8 --comm-backend ring \
+	    --island-guards --health-monitor \
+	    --comm-fault-plan "corrupt:mlp@1 stall:mlp@3x4" \
+	    --requests 8 --tokens 4 --max-batch 4 --prefill-batch 2 \
+	    --bucket-edges 8
+
+fuzz:               # slow randomized/property tests (uses hypothesis if installed)
+	PYTHONPATH=src $(PY) -m pytest -q -m slow tests/test_property.py
 
 quickstart:
 	PYTHONPATH=src $(PY) examples/quickstart.py

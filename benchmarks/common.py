@@ -87,7 +87,8 @@ class Recorder:
             tokens_per_s: float | None = None,
             cache_layout: str | None = None,
             wire: str | None = None,
-            dtype_bytes: int | None = None) -> None:
+            dtype_bytes: int | None = None,
+            mode: str | None = None) -> None:
         err = None
         if predicted_us is not None and us > 0:
             err = (predicted_us - us) / us
@@ -98,7 +99,7 @@ class Recorder:
             "predicted_us": predicted_us, "pred_err": err,
             "island": island, "tokens_per_s": tokens_per_s,
             "cache_layout": cache_layout,
-            "wire": wire, "dtype_bytes": dtype_bytes,
+            "wire": wire, "dtype_bytes": dtype_bytes, "mode": mode,
         })
 
     def report(self) -> dict:
@@ -129,7 +130,8 @@ RECORDER = Recorder()
 def row(name: str, us: float, derived: str = "",
         predicted_us: float | None = None, island: str | None = None,
         tokens_per_s: float | None = None, cache_layout: str | None = None,
-        wire: str | None = None, dtype_bytes: int | None = None):
+        wire: str | None = None, dtype_bytes: int | None = None,
+        mode: str | None = None):
     """One measurement: prints the CSV row and records it for the JSON
     artifact. ``predicted_us`` is the §3.1.1 cost-model prediction for the
     same configuration (on ``pred_hw()``) when the bench can supply one;
@@ -139,10 +141,13 @@ def row(name: str, us: float, derived: str = "",
     just a derived string; ``cache_layout`` tags the KV layout
     ("slab"/"paged") behind a serving row; ``wire``/``dtype_bytes`` tag the
     on-wire element format of a quantized-collective row (fig_quant_comm)
-    so dtype regressions gate against same-dtype baselines only."""
+    so dtype regressions gate against same-dtype baselines only; ``mode``
+    tags a runtime-health row's serving condition (fig_health:
+    "healthy" / "degraded" / "hard_failure") so the gate compares
+    like-for-like fault scenarios."""
     print(f"{RECORDER.current_figure},{name},{us:.1f},{derived}")
     RECORDER.add(name, us, derived, predicted_us, island, tokens_per_s,
-                 cache_layout, wire, dtype_bytes)
+                 cache_layout, wire, dtype_bytes, mode)
 
 
 def _pred_table():

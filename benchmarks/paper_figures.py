@@ -607,8 +607,86 @@ def fig_fleet():
             "kill-one-replica run diverged from the no-fault completion set")
 
 
+def fig_health():
+    """Runtime health (runtime/health.py): serving throughput under a
+    scripted sustained link stall, three conditions tagged by ``mode``:
+
+    * ``healthy``      — no faults (the baseline the others gate against);
+    * ``degraded``     — stall + HealthMonitor ON: the mlp island demotes
+                         to bulk after the hysteresis window, so only the
+                         first few steps eat the stall;
+    * ``hard_failure`` — same stall, monitor OFF: every prefill step eats
+                         the stall for the fault's whole duration.
+
+    Stalls inflate *recorded* step times (synthetic, reproducible — no
+    sleeps), so rows report the engine's own ``stats()`` wall: the
+    degraded/hard_failure ratio is the monitor's measured win. The
+    quarantine row rides along: a corrupt ring hop with guards on must
+    quarantine the poisoned requests and complete the rest."""
+    import numpy as np
+
+    from repro.configs.base import ServeConfig
+    from repro.launch.serve import build_engine
+    from repro.runtime.health import CommFaultEvent, CommFaultPlan
+
+    # max_new_tokens=1 makes every step a prefill — the phase whose mlp
+    # plan is ring-family on this mesh, i.e. where a link stall can bite
+    def mk(serve, faults=None):
+        return build_engine(
+            "tinyllama-1.1b", reduced=True, mesh_shape=(1, 8),
+            mesh_axes=("data", "model"), serve=serve,
+            run_overrides={"comm_backend": "ring"}, comm_faults=faults)
+
+    def trace(n=16):
+        rng = np.random.RandomState(0)
+        return [tuple(int(t) for t in rng.randint(1, 64, size=5))
+                for _ in range(n)]
+
+    stall = CommFaultPlan(events=(
+        CommFaultEvent("stall", "mlp", 3, ticks=6, stall_dt=50.0),))
+    base = dict(max_batch=4, prefill_batch=2, bucket_edges=(8,),
+                max_new_tokens=1)
+    runs = [
+        ("healthy", ServeConfig(**base, health_monitor=True), None),
+        ("degraded", ServeConfig(**base, health_monitor=True,
+                                 health_demote_after=2,
+                                 health_probation=4), stall),
+        ("hard_failure", ServeConfig(**base), stall),
+    ]
+    for mode, serve, faults in runs:
+        eng = mk(serve, faults)
+        done = eng.run(trace())
+        st = eng.stats()
+        toks = len(done)
+        row(f"fig_health/stall/{mode}", st["wall_s"] * 1e6 / toks,
+            f"demotions={st['health_demotions']} "
+            f"stragglers={st['straggler_events']} steps={st['steps']}",
+            tokens_per_s=st["tokens_per_s"], mode=mode)
+        if mode == "degraded" and st["health_demotions"] < 1:
+            raise AssertionError("stall never triggered a health demotion")
+
+    # corrupt ring hop: guards catch the NaN, poisoned requests quarantine,
+    # the rest complete (tests pin bit-identity; the row tracks counts)
+    serve = ServeConfig(max_batch=4, prefill_batch=2, bucket_edges=(8,),
+                        max_new_tokens=4, max_retries=0)
+    eng = build_engine(
+        "tinyllama-1.1b", reduced=True, mesh_shape=(1, 8),
+        mesh_axes=("data", "model"), serve=serve,
+        run_overrides={"comm_backend": "ring", "island_guards": True},
+        comm_faults="corrupt:mlp@1")
+    done = eng.run(trace(4))
+    st = eng.stats()
+    row("fig_health/quarantine", st["wall_s"] * 1e6 / max(len(done), 1),
+        f"completed={len(done)} quarantined={st['quarantined']} "
+        f"guard_trips={st['guard_trips']}", mode="hard_failure")
+    if st["quarantined"] == 0 or not done:
+        raise AssertionError(
+            "corrupt hop did not quarantine, or starved all survivors")
+
+
 ALL = [fig2_3_transfer_granularity, table3_hiding_threshold,
        fig6_allreduce_design_overhead, fig7_ag_gemm, fig8_gemm_rs,
        fig9_gemm_ar, fig10_ring_attention, fig11_ulysses, fig12_moe_dispatch,
        fig15_17_strided_collectives, fig_unified_template,
-       fig_chunk_pipeline, fig_quant_comm, fig_serving, fig_fleet]
+       fig_chunk_pipeline, fig_quant_comm, fig_serving, fig_fleet,
+       fig_health]

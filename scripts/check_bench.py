@@ -94,6 +94,10 @@ def validate_schema(doc) -> list[str]:
                                    or not isinstance(db, int)):
                 errors.append(f"{where}.rows[{j}].dtype_bytes must be an "
                               "integer or null")
+            md = r.get("mode")
+            if md is not None and not isinstance(md, str):
+                errors.append(f"{where}.rows[{j}].mode must be a string "
+                              "or null")
     return errors
 
 

@@ -42,9 +42,19 @@ if [ "${REPRO_FLEET:-1}" != "0" ]; then
         echo "WARNING: fleet-smoke stage failed (non-blocking; run" \
              "'make fleet-smoke' for details)" >&2
     fi
-    if ! PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-            python -m pytest -q -m slow tests/test_property.py; then
+    if ! make fuzz; then
         echo "WARNING: slow fuzz stage failed (non-blocking; run" \
-             "'pytest -m slow' for details)" >&2
+             "'make fuzz' for details)" >&2
+    fi
+fi
+
+# Stage 5 (non-blocking): the runtime-health smoke (`make health-smoke`:
+# scripted corrupt + stall comm faults with island guards and the health
+# monitor on — exercises guard trips, quarantine, and backend demotion
+# through the serve CLI). Skip with REPRO_HEALTH=0.
+if [ "${REPRO_HEALTH:-1}" != "0" ]; then
+    if ! make health-smoke; then
+        echo "WARNING: health-smoke stage failed (non-blocking; run" \
+             "'make health-smoke' for details)" >&2
     fi
 fi

@@ -4,6 +4,8 @@
                                        [--out PATH] [--notes TEXT] [--reps R]
     python -m repro.autotune show [PATH]
     python -m repro.autotune diff A [B]
+    python -m repro.autotune check [PATH] [--max-age-days D] [--drift F]
+                                   [--no-probe] [--reps R]
 
 ``calibrate`` micro-benchmarks every comm backend on the live mesh and saves
 the fitted table (default: the user cache ``CommContext(policy="measured")``
@@ -11,6 +13,9 @@ searches, ``~/.cache/repro/autotune-<hw>-<jax>.json``). ``show`` prints a
 table (the resolved dispatch table when no path is given). ``diff`` compares
 two tables — or, with one argument, a table against the analytic constants —
 so a re-calibration's drift is reviewable before it lands in the cache.
+``check`` audits a table for staleness: its ``created`` age against a
+threshold plus a quick spot re-probe of the machine-local corrections
+(launch overhead, GEMM efficiency); exit 1 when the table looks stale.
 
 ``--devices`` forces the CPU-emulated mesh size and must be handled before
 jax initializes, which is why this module only imports jax inside ``main``.
@@ -190,6 +195,37 @@ def cmd_diff(args) -> int:
     return 0
 
 
+def cmd_check(args) -> int:
+    from repro.core import autotune, costmodel
+
+    if args.path:
+        table = autotune.CalibrationTable.load(args.path)
+        where = args.path
+    else:
+        table = autotune.find_table(costmodel.TPU_V5E.name)
+        if table is None:
+            print("no calibration table found to check; run "
+                  "`python -m repro.autotune calibrate`", file=sys.stderr)
+            return 1
+        where = "resolved table"
+    age = autotune.table_age_days(table)
+    print(f"checking {where}: created {table.created or '?'}"
+          f"{f' ({age:.1f} days ago)' if age is not None else ''}")
+    msgs = autotune.staleness(table, max_age_days=args.max_age_days,
+                              drift_threshold=args.drift,
+                              probe=not args.no_probe, reps=args.reps)
+    if not msgs:
+        print("table looks fresh (age and spot-probe drift within "
+              "thresholds)" if not args.no_probe
+              else "table age within threshold (spot probe skipped)")
+        return 0
+    for m in msgs:
+        print(f"STALE: {m}", file=sys.stderr)
+    print("re-run `python -m repro.autotune calibrate` to refresh",
+          file=sys.stderr)
+    return 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.autotune",
@@ -245,6 +281,19 @@ def main(argv=None) -> int:
     p.add_argument("a")
     p.add_argument("b", nargs="?", default=None)
     p.set_defaults(fn=cmd_diff)
+
+    p = sub.add_parser("check",
+                       help="audit a table for staleness (age + spot probe)")
+    p.add_argument("path", nargs="?", default=None)
+    p.add_argument("--max-age-days", type=float, default=30.0,
+                   help="warn when 'created' is older than this (default 30)")
+    p.add_argument("--drift", type=float, default=0.5,
+                   help="relative drift vs the spot probe that counts as "
+                        "stale (default 0.5)")
+    p.add_argument("--no-probe", action="store_true",
+                   help="age check only; skip the micro-benchmark probe")
+    p.add_argument("--reps", type=int, default=3)
+    p.set_defaults(fn=cmd_check)
 
     args = ap.parse_args(argv)
     if getattr(args, "devices", None):

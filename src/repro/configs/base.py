@@ -301,7 +301,27 @@ class RunConfig:
     # count back into each bucket's CommContext through this field, so the
     # decode bucket can run a different schedule than the prefill bucket.
     # () = no overrides (policy dispatch, the default everywhere else).
+    # Entries may also be 4-tuples carrying a source tag (e.g. "health" for
+    # runtime demotions layered above the measured plan by the
+    # runtime.health.HealthMonitor); later entries win.
     island_overrides: tuple = ()
+
+    # runtime health (runtime/health.py)
+    island_guards: bool = False              # jit-compatible finite-checks on
+                                             # island inputs/outputs; trips are
+                                             # logged per island (core.template
+                                             # guard registry) and drained by
+                                             # the serving engine each step
+    comm_fault: tuple | None = None          # scripted comms-level fault for
+                                             # THIS trace: (kind, island, hop)
+                                             # with kind "corrupt"|"bitflip",
+                                             # island name or "*"; consumed by
+                                             # Island.make_context -> the ring
+                                             # collectives corrupt hop's
+                                             # payload. Test-only seam: set by
+                                             # the serving engine when a
+                                             # CommFaultPlan event is active,
+                                             # never in production configs.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -357,6 +377,23 @@ class ServeConfig:
     page_size: int = 16
     n_pages: int = 0
     prefill_chunk: int = 0
+    # request-level robustness (runtime/health.py + engine poison handling):
+    # a request whose prefill yields non-finite logits is re-queued up to
+    # max_retries times with exponential backoff (retry_backoff * 2**attempt
+    # engine steps) before being quarantined; deadline_steps > 0 expires
+    # requests (queued or in-slot) that many steps after submission.
+    max_retries: int = 1
+    retry_backoff: int = 1
+    deadline_steps: int = 0                  # 0 = no deadline
+    # island health monitoring: when True the engine runs a
+    # runtime.health.HealthMonitor over per-island step timings and demotes
+    # a drifting island's backend (ring_bidir -> ring -> bulk) with
+    # hysteresis through RunConfig.island_overrides, re-promoting after
+    # health_probation consecutive clean samples (doubled per demotion).
+    health_monitor: bool = False
+    health_factor: float = 3.0
+    health_demote_after: int = 2
+    health_probation: int = 6
 
     def __post_init__(self):
         if not self.bucket_edges or \
@@ -382,6 +419,18 @@ class ServeConfig:
                 raise ValueError(
                     f"prefill_chunk ({self.prefill_chunk}) must be a "
                     f"multiple of page_size ({self.page_size})")
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.retry_backoff < 1:
+            raise ValueError("retry_backoff must be >= 1")
+        if self.deadline_steps < 0:
+            raise ValueError("deadline_steps must be >= 0 (0 = no deadline)")
+        if self.health_factor <= 1.0:
+            raise ValueError("health_factor must be > 1")
+        if self.health_demote_after < 1:
+            raise ValueError("health_demote_after must be >= 1")
+        if self.health_probation < 1:
+            raise ValueError("health_probation must be >= 1")
 
     @property
     def s_max(self) -> int:

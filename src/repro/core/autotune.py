@@ -518,7 +518,79 @@ def resolve_table(calibration: Any, hw_name: str,
                        f"does not match this process {live}; falling back "
                        "to analytic costs")
         return None
+    if policy == "measured":
+        # fingerprints match, but measurements can rot in place (driver or
+        # thermal changes the fingerprint cannot see): surface age once —
+        # the table is still USED, staleness is a warning, not a rejection
+        age = table_age_days(table)
+        if age is not None and age > STALE_AFTER_DAYS:
+            _warn_once(f"stale:{hw_name}",
+                       f"calibration table for hw={hw_name!r} is "
+                       f"{age:.0f} days old (> {STALE_AFTER_DAYS:.0f}); "
+                       "its measurements may no longer reflect this machine "
+                       "— re-run `python -m repro.autotune calibrate`, or "
+                       "audit with `python -m repro.autotune check`")
     return table
+
+
+# ---------------------------------------------------------------------------
+# Staleness audit (the `python -m repro.autotune check` backend)
+# ---------------------------------------------------------------------------
+
+#: age past which a fingerprint-compatible table warns under
+#: ``policy="measured"`` (and fails ``repro.autotune check``)
+STALE_AFTER_DAYS = 30.0
+
+
+def table_age_days(table: CalibrationTable) -> float | None:
+    """Days since the table's ``created`` stamp; None when unparseable."""
+    if not table.created:
+        return None
+    try:
+        t = time.mktime(time.strptime(table.created, "%Y-%m-%dT%H:%M:%S"))
+    except ValueError:
+        return None
+    return max(0.0, (time.time() - t) / 86400.0)
+
+
+def staleness(table: CalibrationTable, *,
+              max_age_days: float = STALE_AFTER_DAYS,
+              drift_threshold: float = 0.5, probe: bool = True,
+              reps: int = 3) -> list[str]:
+    """Reasons this table should be re-calibrated; empty = looks fresh.
+
+    Two independent checks: the ``created`` stamp's age against
+    ``max_age_days``, and (with ``probe``) a quick spot re-measurement of
+    the machine-local corrections — kernel launch overhead and sustained
+    GEMM efficiency — against the table's fitted values at
+    ``drift_threshold`` relative drift. The spot probe runs two tiny jitted
+    micro-benchmarks, not a re-calibration.
+    """
+    msgs: list[str] = []
+    age = table_age_days(table)
+    if age is None:
+        msgs.append("table has no parseable 'created' timestamp — age "
+                    "cannot be checked")
+    elif age > max_age_days:
+        msgs.append(f"table is {age:.0f} days old "
+                    f"(threshold {max_age_days:.0f})")
+    if not probe:
+        return msgs
+    from repro.core import costmodel as cm
+
+    hw = getattr(cm, table.fingerprint.hw.upper(), cm.TPU_V5E)
+    probes = {"kernel_launch_s": _measure_launch(reps),
+              "gemm_efficiency": _measure_gemm_efficiency(hw, reps)}
+    for key, now in probes.items():
+        old = table.corrections.get(key)
+        if not old:
+            continue
+        drift = abs(now - old) / old
+        if drift > drift_threshold:
+            msgs.append(f"{key} drifted {drift * 100:.0f}% vs spot probe "
+                        f"(table {old:.3g}, now {now:.3g}; threshold "
+                        f"{drift_threshold * 100:.0f}%)")
+    return msgs
 
 
 # ---------------------------------------------------------------------------

@@ -262,6 +262,13 @@ class CommContext:
     #: transfer schedule, and the measured question the dtype axis answers
     #: is precisely "int8-ring vs bf16-bulk".
     wire: Any = None
+    #: scripted comms-level payload fault (runtime/health.py): a
+    #: ``(kind, hop)`` pair with kind "corrupt" (NaN the whole hop payload)
+    #: or "bitflip" (NaN one element), applied to the ring GEMM×collectives'
+    #: hop ``hop`` after its ppermute. Trace-time-static test seam — None
+    #: everywhere outside scripted fault injection. Bulk and fused backends
+    #: ignore it (only ring transfers have hops to poison).
+    fault: Any = None
 
     def wire_format(self, override: Any = None) -> WireFormat | None:
         """Resolved quantized ``WireFormat`` for a call (per-call ``wire=``
@@ -615,7 +622,7 @@ class CommContext:
                                         bidirectional=(be == "ring_bidir"),
                                         n_chunks=sched.n_chunks,
                                         chunk_dim=sched.chunk_dim,
-                                        wire=fmt,
+                                        wire=fmt, fault=self.fault,
                                         preferred=preferred)
         from repro.kernels import ops
         return ops.pk_ag_matmul(x, w, self.axis_name,
@@ -671,7 +678,7 @@ class CommContext:
             return pk_matmul_reduce_scatter(x, w, self.axis_name,
                                             n_chunks=sched.n_chunks,
                                             chunk_dim=sched.chunk_dim,
-                                            wire=fmt,
+                                            wire=fmt, fault=self.fault,
                                             preferred=preferred)
         from repro.kernels import ops
         return ops.pk_matmul_rs(x, w, self.axis_name,
@@ -725,7 +732,7 @@ class CommContext:
             return pk_matmul_all_reduce(x, w, self.axis_name,
                                         n_chunks=sched.n_chunks,
                                         chunk_dim=sched.chunk_dim,
-                                        wire=fmt,
+                                        wire=fmt, fault=self.fault,
                                         preferred=preferred)
         from repro.kernels import ops
         rs = ops.pk_matmul_rs(x, w, self.axis_name,
@@ -910,6 +917,21 @@ def _wire_sr_key(wire: WireFormat | None, axis_name: str, salt: int):
     return jax.random.fold_in(key, lax.axis_index(axis_name))
 
 
+def _poison_hop(fault, hop: int, t: jax.Array) -> jax.Array:
+    """Scripted payload fault (``CommContext.fault``): corrupt ``t`` when
+    ``fault`` = (kind, hop') targets ring hop ``hop``. "corrupt" NaNs the
+    whole payload, "bitflip" a single element. Float payloads only — a
+    quantized wire's int8 payload is poisoned through its f32 scales at
+    the call site. Trace-time static: no fault, no extra ops."""
+    if fault is None or fault[1] != hop:
+        return t
+    if not jnp.issubdtype(t.dtype, jnp.floating):
+        return t
+    if fault[0] == "bitflip":
+        return t.at[(0,) * t.ndim].set(jnp.nan)
+    return jnp.full_like(t, jnp.nan)
+
+
 def _row_chunks(t: jax.Array, n_chunks: int) -> list[jax.Array]:
     """Split `t` into `n_chunks` row chunks (fitted to a divisor of the row
     count — the non-divisible fallback validates the chunked sub-shape)."""
@@ -938,7 +960,7 @@ def all_gather_matmul_baseline(x: jax.Array, w: jax.Array, axis_name: str,
 
 def _ag_ring_lane(x, w, out, axis_name, *, n, d, row0: int, m_stride: int,
                   reverse: bool, n_chunks: int, chunk_dim: str, preferred,
-                  wire: WireFormat | None = None):
+                  wire: WireFormat | None = None, fault=None):
     """One direction of the chunk-pipelined AG+GEMM ring.
 
     The travelling shard is split into chunks (rows for chunk_dim="m",
@@ -975,10 +997,13 @@ def _ag_ring_lane(x, w, out, axis_name, *, n, d, row0: int, m_stride: int,
         # which depend only on the already-held chunks
         if i < n - 1:
             if wire is None:
-                nxt = [lax.ppermute(t, axis_name, perm) for t in cur]
+                nxt = [_poison_hop(fault, i, lax.ppermute(t, axis_name, perm))
+                       for t in cur]
             else:
                 nxt = [(lax.ppermute(q, axis_name, perm),
-                        lax.ppermute(s, axis_name, perm)) for q, s in cur]
+                        _poison_hop(fault, i,
+                                    lax.ppermute(s, axis_name, perm)))
+                       for q, s in cur]
         else:
             nxt = cur
         r = 0
@@ -1004,7 +1029,7 @@ def _ag_ring_lane(x, w, out, axis_name, *, n, d, row0: int, m_stride: int,
 def pk_all_gather_matmul(x: jax.Array, w: jax.Array, axis_name: str, *,
                          bidirectional: bool = False, n_chunks: int = 1,
                          chunk_dim: str = "m", wire: WireFormat | None = None,
-                         preferred=jnp.float32) -> jax.Array:
+                         fault=None, preferred=jnp.float32) -> jax.Array:
     """Chunk-pipelined AG+GEMM: rotate x shards around the ring; GEMM each
     chunk on arrival. Each ring step is split into `n_chunks` double-buffered
     chunks whose shifts for step i+1 are issued before step i's GEMMs (paper
@@ -1032,7 +1057,7 @@ def pk_all_gather_matmul(x: jax.Array, w: jax.Array, axis_name: str, *,
         return _ag_ring_lane(x, w, out, axis_name, n=n, d=d, row0=0,
                              m_stride=m_loc, reverse=False, n_chunks=n_chunks,
                              chunk_dim=chunk_dim, preferred=preferred,
-                             wire=wire)
+                             wire=wire, fault=fault)
 
     # Bidirectional: the shard's top rows travel the right-going ring, the
     # bottom rows the left-going ring — each of the n-1 hops moves part of a
@@ -1043,10 +1068,12 @@ def pk_all_gather_matmul(x: jax.Array, w: jax.Array, axis_name: str, *,
     x_r, x_l = x[:h_r], x[h_r:]
     out = _ag_ring_lane(x_r, w, out, axis_name, n=n, d=d, row0=0,
                         m_stride=m_loc, reverse=False, n_chunks=n_chunks,
-                        chunk_dim=chunk_dim, preferred=preferred, wire=wire)
+                        chunk_dim=chunk_dim, preferred=preferred, wire=wire,
+                        fault=fault)
     return _ag_ring_lane(x_l, w, out, axis_name, n=n, d=d, row0=h_r,
                          m_stride=m_loc, reverse=True, n_chunks=n_chunks,
-                         chunk_dim=chunk_dim, preferred=preferred, wire=wire)
+                         chunk_dim=chunk_dim, preferred=preferred, wire=wire,
+                         fault=fault)
 
 
 # -- GEMM + reduce-scatter (paper Fig. 8 / Table 3) — TP second projection. --
@@ -1063,7 +1090,7 @@ def matmul_reduce_scatter_baseline(x: jax.Array, w: jax.Array, axis_name: str,
 def pk_matmul_reduce_scatter(x: jax.Array, w: jax.Array, axis_name: str, *,
                              n_chunks: int = 1, chunk_dim: str = "m",
                              wire: WireFormat | None = None,
-                             preferred=jnp.float32) -> jax.Array:
+                             fault=None, preferred=jnp.float32) -> jax.Array:
     """Chunk-pipelined GEMM+RS (accumulate-and-forward ring).
 
     At step i, device d computes the partial block destined for device
@@ -1124,7 +1151,9 @@ def pk_matmul_reduce_scatter(x: jax.Array, w: jax.Array, axis_name: str, *,
                                       jax.random.fold_in(key, i * c + j)))
                   for j, a in enumerate(accs)]
             qs = [(lax.ppermute(q, axis_name, _perm_left(n)),
-                   lax.ppermute(s, axis_name, _perm_left(n))) for q, s in qs]
+                   _poison_hop(fault, i - 1,
+                               lax.ppermute(s, axis_name, _perm_left(n))))
+                  for q, s in qs]
             accs = [dequantize_blocks(q, s, n_out)
                     + partial_chunk((d + 1 + i) % n, j).astype(jnp.float32)
                     for j, (q, s) in enumerate(qs)]
@@ -1136,7 +1165,9 @@ def pk_matmul_reduce_scatter(x: jax.Array, w: jax.Array, axis_name: str, *,
     accs = [partial_chunk((d + 1) % n, j).astype(x.dtype) for j in range(c)]
     for i in range(1, n):
         # send-ahead: all chunk shifts are issued before this step's GEMMs
-        accs = [lax.ppermute(a, axis_name, _perm_left(n)) for a in accs]
+        accs = [_poison_hop(fault, i - 1,
+                            lax.ppermute(a, axis_name, _perm_left(n)))
+                for a in accs]
         accs = [(a.astype(preferred)
                  + partial_chunk((d + 1 + i) % n, j)).astype(x.dtype)
                 for j, a in enumerate(accs)]
@@ -1156,7 +1187,7 @@ def matmul_all_reduce_baseline(x: jax.Array, w: jax.Array, axis_name: str,
 def pk_matmul_all_reduce(x: jax.Array, w: jax.Array, axis_name: str, *,
                          n_chunks: int = 1, chunk_dim: str = "m",
                          wire: WireFormat | None = None,
-                         preferred=jnp.float32) -> jax.Array:
+                         fault=None, preferred=jnp.float32) -> jax.Array:
     """Overlapped GEMM+AR. TPU ICI has no in-network reduction (DESIGN §2.1),
     so the paper's switch-offloaded AR is re-derived as overlapped
     RS(accumulate-on-arrival) + AG: same 2*(N-1)/N per-device traffic, and the
@@ -1172,7 +1203,7 @@ def pk_matmul_all_reduce(x: jax.Array, w: jax.Array, axis_name: str, *,
     wire = wire if (wire is not None and wire.quantized) else None
     rs = pk_matmul_reduce_scatter(x, w, axis_name, n_chunks=n_chunks,
                                   chunk_dim=chunk_dim, wire=wire,
-                                  preferred=preferred)
+                                  fault=fault, preferred=preferred)
     if wire is None:
         return lax.all_gather(rs, axis_name, axis=0, tiled=True)
     key = _wire_sr_key(wire, axis_name, salt=3)

@@ -54,10 +54,12 @@ exception).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Any, Callable, Mapping, Sequence
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P  # noqa: F401  (re-export for call sites)
 
 from repro import compat
@@ -68,7 +70,44 @@ from repro.core.schedule import a2a_chunk_axis, choose_a2a_chunks
 
 __all__ = ["Island", "Gather", "Comm", "IslandPlan", "comm_context",
            "maybe_allgather", "render_plans", "plan_overrides",
-           "island_override"]
+           "island_override", "record_guard_trip", "take_guard_trips"]
+
+
+# ---------------------------------------------------------------------------
+# Island boundary guards (RunConfig.island_guards). The check itself is a
+# jit-compatible finite-reduction over the island's float inputs/outputs;
+# trips land in this process-wide registry via jax.debug.callback and are
+# drained once per engine step (the fleet steps replicas serially, so the
+# plain dict needs no locking). re-exported by runtime.health.
+# ---------------------------------------------------------------------------
+
+_GUARD_TRIPS: dict[str, int] = {}
+
+
+def record_guard_trip(island: str, ok) -> None:
+    """Guard callback target: count a trip when ``ok`` is False."""
+    if not bool(ok):
+        _GUARD_TRIPS[island] = _GUARD_TRIPS.get(island, 0) + 1
+
+
+def take_guard_trips() -> dict[str, int]:
+    """Drain the guard-trip registry: {island: trips since last drain}."""
+    out = dict(_GUARD_TRIPS)
+    _GUARD_TRIPS.clear()
+    return out
+
+
+def _boundary_guard(name: str, args, out):
+    """Emit one finite-check over every float leaf of an island's inputs and
+    outputs. Cheap (a single fused all-isfinite reduction per leaf) and
+    jit-compatible; the verdict leaves the trace through a debug callback."""
+    leaves = [a for a in jax.tree.leaves((args, out))
+              if hasattr(a, "dtype") and jnp.issubdtype(a.dtype, jnp.floating)]
+    if not leaves:
+        return out
+    ok = jnp.all(jnp.stack([jnp.all(jnp.isfinite(a)) for a in leaves]))
+    jax.debug.callback(functools.partial(record_guard_trip, name), ok)
+    return out
 
 
 def _axes_size(mesh, axes) -> int:
@@ -222,14 +261,18 @@ def plan_overrides(plans: Sequence[IslandPlan]) -> tuple:
 
 
 def island_override(run, name: str) -> tuple | None:
-    """The ``(backend, chunks)`` override ``RunConfig.island_overrides``
-    carries for island ``name``, or None. Later entries win (a re-resolved
-    plan appended to an existing tuple supersedes the stale one)."""
+    """The ``(backend, chunks, source)`` override
+    ``RunConfig.island_overrides`` carries for island ``name``, or None.
+    Later entries win (a re-resolved plan appended to an existing tuple
+    supersedes the stale one — the seam the runtime HealthMonitor's
+    demotions layer through, as 4-tuples whose source is ``"health"``;
+    plain plan entries report source ``"plan"``)."""
     entries = getattr(run, "island_overrides", ()) if run is not None else ()
     hit = None
     for entry in entries:
         if entry and entry[0] == name:
-            hit = (entry[1], entry[2] if len(entry) > 2 else None)
+            hit = (entry[1], entry[2] if len(entry) > 2 else None,
+                   entry[3] if len(entry) > 3 else "plan")
     return hit
 
 
@@ -327,12 +370,21 @@ class Island:
         # at the declaration site still win (setdefault).
         ov = island_override(self.run, self.name)
         if ov is not None:
-            be, chunks = ov
+            be, chunks, _src = ov
             if be is not None:
                 kw.setdefault("backend", be)
             if (chunks is not None and self.comm is not None
                     and self.comm.op in GEMM_OP_KIND):
                 kw.setdefault("chunks", chunks)
+        # scripted comms-level payload fault (RunConfig.comm_fault, set by
+        # the serving engine while a CommFaultPlan corrupt/bitflip event is
+        # active): thread (kind, hop) to the ring collectives when this
+        # island is the target ("*" targets every island)
+        ft = getattr(self.run, "comm_fault", None) \
+            if self.run is not None else None
+        if ft is not None and ft[1] in ("*", self.name):
+            kw.setdefault("fault",
+                          (ft[0], ft[2] if len(ft) > 2 else 0))
         # a declared Comm.n_chunks becomes the context's chunk default, so
         # the body's GEMM-collective calls run the schedule plan() reports
         # without every call site re-passing n_chunks=. The global A/B knob
@@ -370,7 +422,14 @@ class Island:
             shard_body, mesh=self.mesh,
             in_specs=tuple(self.inputs[n] for n in names),
             out_specs=self.out_specs, check_vma=False)
-        return f(*(arrays[n] for n in names))
+        args = tuple(arrays[n] for n in names)
+        out = f(*args)
+        if self.run is not None and getattr(self.run, "island_guards", False):
+            # guard at the island BOUNDARY — outside the shard_map, inside
+            # the enclosing jit — so one check covers the re-assembled
+            # logical arrays on every backend
+            out = _boundary_guard(self.name, args, out)
+        return out
 
     # -- introspection -----------------------------------------------------
 
@@ -511,6 +570,12 @@ class Island:
             meas = self._measured_hidden(ctx, backend, GEMM_OP_KIND[c.op])
             if meas is not None:
                 hidden, source = meas, "measured"
+            ov = island_override(self.run, self.name)
+            if ov is not None and ov[2] == "health" and ov[0] == backend:
+                # a runtime HealthMonitor demotion is the decision on
+                # record, layered above plan/measured dispatch
+                source = "health"
+                reason = f"health demotion -> {backend}"
             fmt = ctx.wire_format()
             wire = None
             if backend in ("ring", "ring_bidir"):

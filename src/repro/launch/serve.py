@@ -44,10 +44,13 @@ def build_engine(arch: str, *, reduced: bool = True, mesh_shape=None,
                  mesh_axes=("data", "model"), serve: ServeConfig | None = None,
                  seed: int = 0, comm_policy: str = "analytic",
                  comm_chunks: int | None = None,
-                 run_overrides: dict | None = None) -> ServingEngine:
+                 run_overrides: dict | None = None,
+                 comm_faults=None) -> ServingEngine:
     """Config -> params -> ServingEngine, on local devices (CPU-emulated or
     a real slice). The tests and the bench harness build engines through
-    this, so there is exactly one construction path."""
+    this, so there is exactly one construction path. ``comm_faults`` is a
+    ``runtime.health.CommFaultPlan`` (or its spec string) of scripted
+    comms-level faults."""
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -67,7 +70,8 @@ def build_engine(arch: str, *, reduced: bool = True, mesh_shape=None,
     if serve is None:
         ssm = any(sp.mixer == "mamba" for sp in cfg.layer_pattern())
         serve = ServeConfig(exact_buckets=ssm)
-    return ServingEngine(cfg, run, rules, params, serve)
+    return ServingEngine(cfg, run, rules, params, serve,
+                         comm_faults=comm_faults)
 
 
 def synthetic_trace(n_requests: int, serve: ServeConfig, vocab: int,
@@ -131,11 +135,15 @@ def serve_fleet(args, serve: ServeConfig) -> None:
     from repro.runtime.fleet import FaultPlan, ServingFleet
 
     def factory(i: int) -> ServingEngine:
+        overrides = {"comm_wire": args.comm_wire,
+                     "island_guards": args.island_guards}
+        if args.comm_backend:
+            overrides["comm_backend"] = args.comm_backend
         return build_engine(args.arch, reduced=args.reduced,
                             mesh_shape=args.mesh_shape, serve=serve,
                             seed=args.seed, comm_policy=args.comm_policy,
                             comm_chunks=args.comm_chunks,
-                            run_overrides={"comm_wire": args.comm_wire})
+                            run_overrides=overrides)
 
     plan = FaultPlan.parse(args.fault_plan) if args.fault_plan else None
     fleet = ServingFleet(
@@ -165,7 +173,7 @@ def serve_fleet(args, serve: ServeConfig) -> None:
     if args.fault_plan:
         kinds = [e[0] for e in fleet.events
                  if e[0] in ("kill", "drain", "rejoin", "delay", "stall",
-                             "steal", "snapshot")]
+                             "steal", "snapshot", "comm_fault")]
         print(f"[fleet] fault events fired: {kinds}")
 
 
@@ -212,8 +220,25 @@ def main():
     ap.add_argument("--router", default="least-loaded",
                     choices=["fcfs", "least-loaded", "cache-affinity"])
     ap.add_argument("--fault-plan", default=None,
-                    help="scripted faults, e.g. 'kill:1@4 rejoin:1@8' "
-                         "or 'delay:0@2x3' (kind:replica@step[xticks])")
+                    help="scripted fleet faults, e.g. 'kill:1@4 rejoin:1@8', "
+                         "'delay:0@2x3', or comms-level "
+                         "'linkdown:1.mlp@4x3' "
+                         "(kind:replica[.island]@step[xticks])")
+    ap.add_argument("--comm-fault-plan", default=None,
+                    help="single-engine scripted comms faults, e.g. "
+                         "'corrupt:mlp@3 stall:mlp@5x6' "
+                         "(kind:island@step[xticks])")
+    ap.add_argument("--comm-backend", default=None,
+                    help="pin every GEMM island's collective backend "
+                         "(e.g. ring), bypassing dispatch — mostly for "
+                         "fault drills")
+    ap.add_argument("--island-guards", action="store_true",
+                    help="jit-compatible finite-checks on island "
+                         "inputs/outputs; trips feed the health monitor")
+    ap.add_argument("--health-monitor", action="store_true",
+                    help="per-island EMA health monitor: demote a drifting "
+                         "island's backend with hysteresis, re-promote "
+                         "after probation")
     ap.add_argument("--ckpt-dir", default=None,
                     help="fleet: snapshot/rejoin checkpoint directory")
     ap.add_argument("--seed", type=int, default=0)
@@ -235,15 +260,21 @@ def main():
                         cache_layout=args.cache_layout,
                         page_size=args.page_size, n_pages=args.n_pages,
                         prefill_chunk=args.prefill_chunk,
-                        kv_dtype=args.kv_dtype)
+                        kv_dtype=args.kv_dtype,
+                        health_monitor=args.health_monitor)
     if args.replicas > 1:
         serve_fleet(args, serve)
         return
+    overrides = {"comm_wire": args.comm_wire,
+                 "island_guards": args.island_guards}
+    if args.comm_backend:
+        overrides["comm_backend"] = args.comm_backend
     eng = build_engine(args.arch, reduced=args.reduced,
                        mesh_shape=args.mesh_shape, serve=serve,
                        seed=args.seed, comm_policy=args.comm_policy,
                        comm_chunks=args.comm_chunks,
-                       run_overrides={"comm_wire": args.comm_wire})
+                       run_overrides=overrides,
+                       comm_faults=args.comm_fault_plan)
     if eng.rules is not None:
         print(f"[plan] comm_policy={args.comm_policy}")
         print(render_serving_plans(eng.bucket_plans))
@@ -273,6 +304,22 @@ def main():
                  f"cow={cs['cow_copies']} "
                  f"blocked={cs['admission_blocked']}")
     print(line)
+    if args.comm_fault_plan or args.island_guards or args.health_monitor:
+        print(f"[health] quarantined={st['quarantined']} "
+              f"retries={st['retries']} guard_trips={st['guard_trips']} "
+              f"demotions={st['health_demotions']} "
+              f"idle_steps={st['idle_steps']}")
+        kinds = [e[0] for e in eng.events
+                 if e[0] in ("comm_fault", "comm_fault_end", "guard_trip",
+                             "retry", "quarantine", "deadline",
+                             "health_demote", "health_promote",
+                             "health_link_up")]
+        print(f"[health] events fired: {kinds}")
+        if eng.health is not None and any(
+                o[3] == "health" for o in eng.plan_record()
+                ["health_overrides"]):
+            print("[health] live overrides: "
+                  f"{eng.plan_record()['health_overrides']}")
 
 
 if __name__ == "__main__":

@@ -229,7 +229,7 @@ def sp_attention_island(cfg: ArchConfig, run: RunConfig,
         source = None
         if ov is not None and ov[1] is not None:
             a2a_chunks = max(1, ov[1])
-            source = "plan"
+            source = ov[2]          # "plan", or "health" for a demotion
         elif run.ulysses_chunks > 0:
             a2a_chunks = run.ulysses_chunks
         else:

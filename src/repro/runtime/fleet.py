@@ -58,7 +58,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Callable, Literal, Sequence
+from typing import Any, Callable, Sequence
 
 from repro.configs.base import FleetConfig
 from repro.runtime.serving import Completion, Request, ServingEngine
@@ -71,7 +71,8 @@ __all__ = ["FaultEvent", "FaultPlan", "ServingFleet"]
 # fault plans
 # --------------------------------------------------------------------------
 
-_KINDS = ("kill", "delay", "drain", "rejoin")
+_COMM_KINDS = ("corrupt", "bitflip", "stall", "linkdown")
+_KINDS = ("kill", "delay", "drain", "rejoin") + _COMM_KINDS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,13 +81,20 @@ class FaultEvent:
 
     ``ticks`` is kind-specific: for ``delay`` it is how many fleet ticks the
     replica stalls (its turns pass without engine steps, each recording a
-    synthetic ``FleetConfig.stall_dt`` watchdog sample); other kinds ignore
-    it."""
+    synthetic ``FleetConfig.stall_dt`` watchdog sample); for comms-level
+    kinds it is how many ENGINE steps the fault stays active on the target
+    replica; other kinds ignore it.
 
-    kind: Literal["kill", "delay", "drain", "rejoin"]
+    Comms-level kinds (``runtime.health.COMM_FAULT_KINDS``) target one
+    island INSIDE a replica — spec location ``replica.island``, e.g.
+    ``linkdown:1.mlp@4`` or ``corrupt:0.attn_out@2`` — and are delivered via
+    ``ServingEngine.inject_comm_fault``."""
+
+    kind: str
     replica: int
     step: int
     ticks: int = 0
+    island: str | None = None
 
     def __post_init__(self):
         if self.kind not in _KINDS:
@@ -96,15 +104,31 @@ class FaultEvent:
             raise ValueError(f"replica/step must be >= 0: {self}")
         if self.kind == "delay" and self.ticks < 1:
             raise ValueError(f"delay needs ticks >= 1 (spec 'xK'): {self}")
+        if self.kind in _COMM_KINDS and not self.island:
+            raise ValueError(
+                f"comm fault {self.kind!r} targets an island inside the "
+                f"replica: spec location is replica.island "
+                f"(e.g. {self.kind}:1.mlp@4)")
+        if self.kind not in _COMM_KINDS and self.island:
+            raise ValueError(
+                f"replica-level fault {self.kind!r} takes no island "
+                f"(got {self.replica}.{self.island})")
 
 
 @dataclasses.dataclass(frozen=True)
 class FaultPlan:
     """An ordered script of ``FaultEvent``s, parseable from the CLI spec
-    ``kind:replica@step[xticks]`` (comma/space/semicolon separated)::
+    ``kind:replica[.island]@step[xticks]`` (comma/space/semicolon
+    separated)::
 
         FaultPlan.parse("kill:1@5, rejoin:1@9")
         FaultPlan.parse("delay:0@3x4 drain:2@7")
+        FaultPlan.parse("linkdown:1.mlp@4x3 corrupt:0.attn_out@2")
+
+    Duplicate events (same kind+target+step) and contradictory pairs at one
+    (replica, step) — ``kill`` plus anything else, ``rejoin`` plus
+    ``drain``, or two payload poisons on one island — are rejected with
+    named errors at parse time rather than silently racing at fire time.
     """
 
     events: tuple[FaultEvent, ...] = ()
@@ -119,16 +143,55 @@ class FaultPlan:
             try:
                 kind, rest = item.split(":", 1)
                 rloc, sloc = rest.split("@", 1)
+                island = None
+                if "." in rloc:
+                    rloc, island = rloc.split(".", 1)
                 ticks = 0
                 if "x" in sloc:
                     sloc, t = sloc.split("x", 1)
                     ticks = int(t)
-                evs.append(FaultEvent(kind, int(rloc), int(sloc), ticks))
+                evs.append(FaultEvent(kind, int(rloc), int(sloc), ticks,
+                                      island=island))
             except ValueError as e:
                 raise ValueError(
-                    f"bad fault spec {item!r} (want kind:replica@step"
-                    f"[xticks], kind in {_KINDS}): {e}") from e
-        return cls(tuple(sorted(evs, key=lambda e: (e.step, e.replica))))
+                    f"bad fault spec {item!r} (want kind:replica[.island]"
+                    f"@step[xticks], kind in {_KINDS}): {e}") from e
+        return cls(cls._checked(evs))
+
+    @staticmethod
+    def _checked(evs) -> tuple[FaultEvent, ...]:
+        seen = set()
+        by_loc: dict[tuple, list] = {}
+        for ev in evs:
+            key = (ev.kind, ev.replica, ev.island, ev.step)
+            if key in seen:
+                raise ValueError(
+                    f"duplicate fault event: {ev.kind}:{ev.replica}"
+                    f"{'.' + ev.island if ev.island else ''}@{ev.step} "
+                    "appears more than once")
+            seen.add(key)
+            by_loc.setdefault((ev.replica, ev.step), []).append(ev)
+        for (rep, step), group in by_loc.items():
+            kinds = [e.kind for e in group]
+            if "kill" in kinds and len(group) > 1:
+                raise ValueError(
+                    f"contradictory fault events at replica {rep} step "
+                    f"{step}: kill cannot combine with {sorted(kinds)}")
+            if "rejoin" in kinds and "drain" in kinds:
+                raise ValueError(
+                    f"contradictory fault events at replica {rep} step "
+                    f"{step}: rejoin and drain cancel each other")
+            payload = {}
+            for e in group:
+                if e.kind in ("corrupt", "bitflip"):
+                    prior = payload.get(e.island)
+                    if prior is not None:
+                        raise ValueError(
+                            f"contradictory fault events: {prior} and "
+                            f"{e.kind} both poison replica {rep} island "
+                            f"{e.island!r} at step {step}")
+                    payload[e.island] = e.kind
+        return tuple(sorted(evs, key=lambda e: (e.step, e.replica)))
 
     def at(self, step: int) -> list[FaultEvent]:
         return [e for e in self.events if e.step == step]
@@ -374,6 +437,14 @@ class ServingFleet:
     # -- stepping ----------------------------------------------------------
 
     def _fire(self, ev: FaultEvent) -> None:
+        if ev.kind in _COMM_KINDS:
+            rep = self.replicas[ev.replica]
+            if rep.alive:
+                rep.engine.inject_comm_fault(ev.kind, ev.island,
+                                             ticks=ev.ticks or 1)
+                self.events.append(("comm_fault", self.step_no, ev.replica,
+                                    ev.kind, ev.island))
+            return
         {"kill": lambda: self.kill(ev.replica),
          "drain": lambda: self.drain(ev.replica),
          "rejoin": lambda: self.rejoin(ev.replica),

@@ -84,6 +84,9 @@ from repro.models import transformer as T
 from repro.models.layers import island_plans
 from repro.models.sharding import ShardingRules
 from repro.runtime import paging
+from repro.runtime.health import (COMM_FAULT_KINDS, PAYLOAD_FAULT_KINDS,
+                                  CommFaultPlan, HealthMonitor,
+                                  demotion_ladder, take_guard_trips)
 from repro.runtime.straggler import StepTimer, StragglerWatchdog
 from repro.train.step import (make_paged_prefill_step,
                               make_prefill_cache_step, make_serve_step)
@@ -280,6 +283,7 @@ class _PrefillJob:
     shared: list                     # per row: leading shared-page count
     logit_chunk: list                # per row: chunk containing L-1
     first_token: list                # per row: captured greedy first token
+    poisoned: list                   # per row: non-finite logits seen
     started_step: int
 
 
@@ -293,7 +297,8 @@ class ServingEngine:
 
     def __init__(self, cfg: ArchConfig, run: RunConfig,
                  rules: ShardingRules | None, params,
-                 serve: ServeConfig | None = None):
+                 serve: ServeConfig | None = None,
+                 comm_faults: CommFaultPlan | str | None = None):
         self.cfg = cfg
         self.serve = serve if serve is not None else ServeConfig()
         if cfg.encoder_decoder:
@@ -379,6 +384,29 @@ class ServingEngine:
         self.admission_blocked = 0
         self._peak_pages = 0
         self._peak_slots = 0
+        # --- runtime health (runtime/health.py) ---------------------------
+        if isinstance(comm_faults, str):
+            comm_faults = CommFaultPlan.parse(comm_faults)
+        self.comm_faults = comm_faults if comm_faults is not None \
+            else CommFaultPlan()
+        self._active_faults: list[dict] = []
+        self._current_fault: tuple | None = None   # (kind, island, hop)
+        self._fault_fns: dict[tuple, Any] = {}     # faulted-trace jit cache
+        self._base_plans = dict(self.bucket_plans)  # pristine, pre-health
+        self._hov: tuple = ()                      # live health overrides
+        self._retries: dict[int, int] = {}
+        self._not_before: dict[int, int] = {}      # retry backoff gate
+        self._submit_step: dict[int, int] = {}
+        self.quarantined: dict[int, dict] = {}
+        self.expired: dict[int, dict] = {}
+        self.health: HealthMonitor | None = None
+        self._health_ev_seen = 0
+        if self.serve.health_monitor:
+            self.health = HealthMonitor(
+                self._health_ladders(),
+                factor=self.serve.health_factor,
+                demote_after=self.serve.health_demote_after,
+                probation=self.serve.health_probation)
 
     # -- plumbing ----------------------------------------------------------
 
@@ -442,8 +470,11 @@ class ServingEngine:
                 self.bucket_plans[name] = BucketPlan(
                     "prefill", bucket, self.serve.prefill_batch, bucket,
                     plans, plan_overrides(plans))
+                self._base_plans[name] = self.bucket_plans[name]
+                # live health demotions layer above the fresh plan too
                 self._runs[name] = dataclasses.replace(
-                    run, island_overrides=self.bucket_plans[name].overrides)
+                    run, island_overrides=(
+                        self.bucket_plans[name].overrides + self._hov))
             run = self._runs[name]
             self._prefill_fns[bucket] = jax.jit(
                 make_prefill_cache_step(self.cfg, run, self.rules),
@@ -472,8 +503,10 @@ class ServingEngine:
                 self.bucket_plans[name] = BucketPlan(
                     "prefill", bucket, self.serve.prefill_batch, cl,
                     plans, plan_overrides(plans))
+                self._base_plans[name] = self.bucket_plans[name]
                 self._runs[name] = dataclasses.replace(
-                    run, island_overrides=self.bucket_plans[name].overrides)
+                    run, island_overrides=(
+                        self.bucket_plans[name].overrides + self._hov))
             self._prefill_fns[cl] = jax.jit(
                 make_paged_prefill_step(self.cfg, self._runs[name],
                                         self.rules),
@@ -484,6 +517,218 @@ class ServingEngine:
     def compiled_buckets(self) -> list[int]:
         """Prefill buckets a step has been jitted for (the jit cache)."""
         return sorted(self._prefill_fns)
+
+    # -- runtime health ----------------------------------------------------
+
+    def _health_ladders(self) -> dict:
+        """island -> demotion ladder, from the planned backends. The first
+        bucket declaring an island wins (the ladders only need the backend
+        family, which is stable across buckets)."""
+        ladders: dict[str, tuple] = {}
+        for bp in self.bucket_plans.values():
+            for p in bp.plans:
+                if p.fallback or p.backend is None or p.island in ladders:
+                    continue
+                lad = demotion_ladder(p.backend)
+                if lad:
+                    ladders[p.island] = lad
+        return ladders
+
+    def inject_comm_fault(self, kind: str, island: str, ticks: int = 1,
+                          hop: int = 0, stall_dt: float = 1.0) -> None:
+        """Activate a comms-level fault NOW, for ``ticks`` engine steps —
+        the fleet's (and the scripted ``CommFaultPlan``'s) entry point."""
+        if kind not in COMM_FAULT_KINDS:
+            raise ValueError(f"unknown comm fault kind {kind!r}; one of "
+                             f"{COMM_FAULT_KINDS}")
+        self._active_faults.append({"kind": kind, "island": island,
+                                    "hop": int(hop),
+                                    "remaining": max(1, int(ticks)),
+                                    "stall_dt": float(stall_dt)})
+        self.events.append(("comm_fault", self.step_no, kind, island,
+                            max(1, int(ticks))))
+        if kind == "linkdown" and self.health is not None:
+            if self.health.link_down(island, self.step_no):
+                self._refresh_health_overrides()
+
+    def _fire_comm_faults(self) -> None:
+        """Activate scripted events for the step ABOUT to run, then pick the
+        payload fault (if any) this step's traces must carry."""
+        for ev in self.comm_faults.at(self.step_no + 1):
+            self.inject_comm_fault(ev.kind, ev.island, ticks=ev.ticks,
+                                   hop=ev.hop, stall_dt=ev.stall_dt)
+        self._current_fault = None
+        for f in self._active_faults:
+            if f["kind"] in PAYLOAD_FAULT_KINDS:
+                self._current_fault = (f["kind"], f["island"], f["hop"])
+                break
+
+    def _tick_comm_faults(self) -> None:
+        still = []
+        for f in self._active_faults:
+            f["remaining"] -= 1
+            if f["remaining"] > 0:
+                still.append(f)
+            else:
+                self.events.append(("comm_fault_end", self.step_no,
+                                    f["kind"], f["island"]))
+                if f["kind"] == "linkdown" and self.health is not None:
+                    # link restored; re-promotion earns its way back through
+                    # the probation window, not instantly
+                    self.health.link_up(f["island"], self.step_no)
+        self._active_faults = still
+
+    def _faulted_fn(self, key: tuple, fault: tuple):
+        """Jitted step variant whose ``RunConfig.comm_fault`` poisons the
+        targeted ring hop (trace-time static) — cached per (program, fault)
+        so repeated fault ticks reuse the compiled program."""
+        k = (key, fault)
+        if k not in self._fault_fns:
+            phase, bucket = key
+            if phase == "decode":
+                run = dataclasses.replace(self._runs["decode"],
+                                          comm_fault=fault)
+                self._fault_fns[k] = jax.jit(
+                    make_serve_step(self.cfg, run, self.rules),
+                    donate_argnums=(1,))
+            elif phase == "paged":
+                self._paged_prefill_fn(bucket)     # materialize the plan
+                cl = self.serve.prefill_chunk or bucket
+                name = (f"prefill@chunk{cl}" if self.serve.prefill_chunk
+                        else f"prefill@{bucket}")
+                run = dataclasses.replace(self._runs[name], comm_fault=fault)
+                self._fault_fns[k] = jax.jit(
+                    make_paged_prefill_step(self.cfg, run, self.rules),
+                    donate_argnums=(1,))
+            else:
+                self._prefill_fn(bucket)           # materialize the plan
+                run = dataclasses.replace(self._runs[f"prefill@{bucket}"],
+                                          comm_fault=fault)
+                self._fault_fns[k] = jax.jit(
+                    make_prefill_cache_step(self.cfg, run, self.rules),
+                    donate_argnums=(1,))
+        return self._fault_fns[k]
+
+    def _stall_applies(self, island: str, kind: str) -> bool:
+        """A scripted link stall penalizes a step only while the island's
+        CURRENT effective backend still rides the slow link (a ring-family
+        schedule). A health demotion to bulk routes around it — which is
+        exactly the throughput recovery the monitor's demotion buys."""
+        names = ([n for n, bp in self.bucket_plans.items()
+                  if bp.phase == "prefill"] if kind == "prefill"
+                 else ["decode"])
+        for n in names:
+            for p in self.bucket_plans[n].plans:
+                if p.fallback or p.island != island:
+                    continue
+                # health overrides patch bucket_plans live, so p.backend
+                # already reflects any demotion
+                if p.backend in ("ring", "ring_bidir", "chunked", "fused"):
+                    return True
+        return False
+
+    def _refresh_health_overrides(self) -> None:
+        """Re-layer the monitor's demotions (source ``"health"``) above every
+        bucket's frozen plan overrides, patch the live plan records, and
+        re-jit the step programs. The calibration table and the measured
+        dispatch below this layer are never touched — promotion is just the
+        override disappearing."""
+        hov = self.health.overrides() if self.health is not None else ()
+        self._hov = hov
+        by_island = {o[0]: o for o in hov}
+        for name, base in self._base_plans.items():
+            plans = tuple(
+                dataclasses.replace(
+                    p, backend=by_island[p.island][1],
+                    n_chunks=(by_island[p.island][2]
+                              if by_island[p.island][2] is not None
+                              else p.n_chunks),
+                    source="health",
+                    reason=f"health demotion -> {by_island[p.island][1]}")
+                if (not p.fallback and p.island in by_island) else p
+                for p in base.plans)
+            ov = base.overrides + hov
+            self.bucket_plans[name] = dataclasses.replace(
+                base, plans=plans, overrides=ov)
+            self._runs[name] = dataclasses.replace(
+                self.base_run, island_overrides=ov)
+        self._decode_fn = jax.jit(
+            make_serve_step(self.cfg, self._runs["decode"], self.rules),
+            donate_argnums=(1,))
+        self._prefill_fns.clear()
+        self._fault_fns.clear()
+
+    def _drain_health_events(self) -> None:
+        if self.health is None:
+            return
+        for ev in self.health.events[self._health_ev_seen:]:
+            self.events.append(("health_" + ev[0],) + tuple(ev[1:]))
+        self._health_ev_seen = len(self.health.events)
+
+    def plan_record(self) -> dict:
+        """LIVE per-bucket plan table — unlike ``serving_plan_record()``,
+        which re-resolves from config, this reflects runtime health
+        demotions (``src=health`` islands and the layered overrides)."""
+        return {"buckets": {n: bp.asdict()
+                            for n, bp in self.bucket_plans.items()},
+                "health_overrides": [list(o) for o in self._hov]}
+
+    def _finite_rows(self, logits) -> np.ndarray:
+        """(B,) bool per batch row: the final-position logits are all
+        finite — the poison detector (NaN and ±inf both trip it)."""
+        v = self.cfg.vocab_size
+        return np.asarray(jnp.isfinite(
+            jnp.max(jnp.abs(logits[:, -1, :v]), axis=-1)))
+
+    def _poisoned(self, req: Request, reason: str) -> None:
+        """Retry-with-backoff, or quarantine once retries are exhausted."""
+        attempt = self._retries.get(req.rid, 0)
+        if attempt < self.serve.max_retries:
+            self._retries[req.rid] = attempt + 1
+            self._not_before[req.rid] = (
+                self.step_no + self.serve.retry_backoff * (2 ** attempt))
+            self.queue.append(req)
+            self.events.append(("retry", self.step_no, req.rid, attempt + 1))
+        else:
+            self.quarantined[req.rid] = {"prompt_len": len(req.prompt),
+                                         "step": self.step_no,
+                                         "reason": reason}
+            self._requests.pop(req.rid, None)
+            self.events.append(("quarantine", self.step_no, req.rid))
+
+    def _evict_slot(self, slot: int) -> None:
+        """Drop a live slot WITHOUT a completion (quarantine/deadline).
+        Slab cache rows left behind are inert — the next admission into the
+        slot overwrites every position it will ever attend to."""
+        s = self.slots[slot]
+        self._requests.pop(s.rid, None)
+        self.slots[slot] = None
+        if self.paged:
+            self._bt_host[slot] = -1
+            self._commit_leaf("block_tables",
+                              self.cache["block_tables"].at[slot].set(-1))
+            self.allocator.release(self._slot_pages[slot] or [])
+            self._slot_pages[slot] = None
+
+    def _expire_deadlines(self) -> None:
+        dl = self.serve.deadline_steps
+        if not dl:
+            return
+        for r in [r for r in self.queue
+                  if self.step_no - self._submit_step.get(r.rid,
+                                                          self.step_no) >= dl]:
+            self.queue.remove(r)
+            self._requests.pop(r.rid, None)
+            self.expired[r.rid] = {"tokens": [], "step": self.step_no,
+                                   "where": "queued"}
+            self.events.append(("deadline", self.step_no, r.rid))
+        for i, s in enumerate(self.slots):
+            if s is not None and (self.step_no - self._submit_step.get(
+                    s.rid, self.step_no)) >= dl:
+                self.expired[s.rid] = {"tokens": list(s.tokens),
+                                       "step": self.step_no, "where": "slot"}
+                self.events.append(("deadline", self.step_no, s.rid))
+                self._evict_slot(i)
 
     # -- request intake ----------------------------------------------------
 
@@ -507,6 +752,7 @@ class ServingEngine:
         self._next_rid = max(self._next_rid, rid) + 1
         req = Request(rid, prompt, mx)
         self._requests[rid] = req
+        self._submit_step[rid] = self.step_no    # deadline clock starts now
         self.queue.append(req)
         return rid
 
@@ -587,19 +833,22 @@ class ServingEngine:
         queue for head-bucket requests (may reorder across buckets).
         """
         free = [i for i, s in enumerate(self.slots) if s is None]
-        if self.draining or not free or not self.queue:
+        # retry backoff: a poisoned request sits out until its gate opens
+        eligible = [r for r in self.queue
+                    if self._not_before.get(r.rid, 0) <= self.step_no]
+        if self.draining or not free or not eligible:
             return None
         cap = min(len(free), self.serve.prefill_batch)
-        head_bucket = self.serve.bucket_for(len(self.queue[0].prompt))
+        head_bucket = self.serve.bucket_for(len(eligible[0].prompt))
         group = []
         if self.serve.queue_policy == "fcfs":
-            for r in self.queue:
+            for r in eligible:
                 if len(group) == cap or \
                         self.serve.bucket_for(len(r.prompt)) != head_bucket:
                     break
                 group.append(r)
         else:                                    # bucket-greedy
-            for r in self.queue:
+            for r in eligible:
                 if len(group) == cap:
                     break
                 if self.serve.bucket_for(len(r.prompt)) == head_bucket:
@@ -620,6 +869,10 @@ class ServingEngine:
         is (request, slot, row, pages, n_shared, cow_src, write_from)."""
         if self.draining or self._job is not None or not self.queue:
             return None
+        eligible = [r for r in self.queue
+                    if self._not_before.get(r.rid, 0) <= self.step_no]
+        if not eligible:
+            return None
         geom, serve = self.geom, self.serve
         b_loc = serve.max_batch // geom.n_partitions
         rows_per_part = serve.prefill_batch // geom.n_partitions
@@ -628,15 +881,15 @@ class ServingEngine:
                 for p in range(geom.n_partitions)}
         if not any(free.values()):
             return None
-        head_bucket = serve.bucket_for(len(self.queue[0].prompt))
+        head_bucket = serve.bucket_for(len(eligible[0].prompt))
         if serve.queue_policy == "fcfs":
             cands = []
-            for r in self.queue:
+            for r in eligible:
                 if serve.bucket_for(len(r.prompt)) != head_bucket:
                     break
                 cands.append(r)
         else:                                    # bucket-greedy
-            cands = [r for r in self.queue
+            cands = [r for r in eligible
                      if serve.bucket_for(len(r.prompt)) == head_bucket]
         sched = ("chunk", serve.prefill_chunk or head_bucket)
         placements, used = [], {p: 0 for p in range(geom.n_partitions)}
@@ -705,6 +958,7 @@ class ServingEngine:
             group_bt=np.full((g, geom.pages_per_slot), -1, np.int32),
             pages=[[] for _ in range(g)], shared=[0] * g,
             logit_chunk=[0] * g, first_token=[None] * g,
+            poisoned=[False] * g,
             started_step=self.step_no)
         copies = []
         for (r, slot, row, pages, nsh, cow_src, wf) in placements:
@@ -752,14 +1006,19 @@ class ServingEngine:
         c = job.next_chunk
         c0 = c * job.chunk_len
         fn = self._paged_prefill_fn(job.bucket)
+        if self._current_fault is not None:
+            fn = self._faulted_fn(("paged", job.bucket), self._current_fault)
         logits, self.cache = fn(
             self.params, self.cache,
             jnp.asarray(job.tokens[:, c0:c0 + job.chunk_len]),
             jnp.asarray(job.group_bt), jnp.asarray(job.lens),
             jnp.asarray(c0, jnp.int32), jnp.asarray(job.write_from))
+        finite = self._finite_rows(logits)
         first = self._greedy(logits)
         for row, r in enumerate(job.reqs):
             if r is not None and job.logit_chunk[row] == c:
+                if not finite[row]:
+                    job.poisoned[row] = True
                 job.first_token[row] = int(first[row])
         self.events.append(
             ("prefill_chunk", self.step_no,
@@ -774,7 +1033,16 @@ class ServingEngine:
         live cache, open the slots, register prompts for prefix sharing."""
         job, geom = self._job, self.geom
         self._job = None
-        rows = [i for i, r in enumerate(job.reqs) if r is not None]
+        # poisoned rows never commit: block-table rows stay -1, their pages
+        # go back to the pool, and the request retries or quarantines
+        for i in [i for i, r in enumerate(job.reqs)
+                  if r is not None and job.poisoned[i]]:
+            self.allocator.release(job.pages[i])
+            self._poisoned(job.reqs[i], "prefill_nonfinite")
+        rows = [i for i, r in enumerate(job.reqs)
+                if r is not None and not job.poisoned[i]]
+        if not rows:
+            return
         idx = np.asarray([job.slot_ids[i] for i in rows])
         for i in rows:
             self._bt_host[job.slot_ids[i]] = job.group_bt[i]
@@ -807,6 +1075,8 @@ class ServingEngine:
                  slot_ids: list[int]) -> None:
         g = self.serve.prefill_batch
         fn = self._prefill_fn(bucket)
+        if self._current_fault is not None:
+            fn = self._faulted_fn(("prefill", bucket), self._current_fault)
         tokens = np.zeros((g, bucket), np.int32)
         lens = np.ones((g,), np.int32)           # inert pad slots: 1 token
         for i, r in enumerate(reqs):
@@ -815,17 +1085,26 @@ class ServingEngine:
         gcache = self._sharded_zeros(self._prefill_tmpls[bucket])
         logits, gcache = fn(self.params, gcache, jnp.asarray(tokens),
                             jnp.asarray(lens))
+        finite = self._finite_rows(logits)
         first = self._greedy(logits)
-        idx = np.asarray(slot_ids)
+        # only finite rows scatter into the live cache and open slots —
+        # poisoned rows retry or quarantine, and because every slot's cache
+        # row is independent the survivors' tokens are unaffected
+        ok = [i for i in range(len(reqs)) if finite[i]]
+        bad = [i for i in range(len(reqs)) if not finite[i]]
+        if ok:
+            idx = np.asarray([slot_ids[i] for i in ok])
+            rows = np.asarray(ok)
 
-        def scatter(dst, src):
-            if dst.ndim == 1:                    # pos: batch is dim 0
-                return dst.at[idx].set(src[:len(reqs)])
-            return dst.at[:, idx].set(src[:, :len(reqs)])
+            def scatter(dst, src):
+                if dst.ndim == 1:                # pos: batch is dim 0
+                    return dst.at[idx].set(src[rows])
+                return dst.at[:, idx].set(src[:, rows])
 
-        self.cache = self._recommit_cache(
-            jax.tree.map(scatter, self.cache, gcache))
-        for i, (r, slot) in enumerate(zip(reqs, slot_ids)):
+            self.cache = self._recommit_cache(
+                jax.tree.map(scatter, self.cache, gcache))
+        for i in ok:
+            r, slot = reqs[i], slot_ids[i]
             self.slots[slot] = _Slot(
                 rid=r.rid, last_token=int(first[i]),
                 remaining=r.max_new_tokens - 1,
@@ -836,6 +1115,8 @@ class ServingEngine:
             self.tokens_generated += 1
             if self.slots[slot].remaining == 0:
                 self._retire(slot)
+        for i in bad:
+            self._poisoned(reqs[i], "prefill_nonfinite")
 
     def _retire(self, slot: int) -> None:
         s = self.slots[slot]
@@ -862,11 +1143,25 @@ class ServingEngine:
         for i, s in enumerate(self.slots):
             if s is not None:
                 tokens[i, 0] = s.last_token
-        logits, self.cache = self._decode_fn(self.params, self.cache,
-                                             jnp.asarray(tokens))
+        fn = self._decode_fn
+        if self._current_fault is not None:
+            fn = self._faulted_fn(("decode", 0), self._current_fault)
+        logits, self.cache = fn(self.params, self.cache,
+                                jnp.asarray(tokens))
+        finite = self._finite_rows(logits)
         nxt = self._greedy(logits)
         for i, s in enumerate(self.slots):
             if s is None:
+                continue
+            if not finite[i]:
+                # mid-decode poison: the slot's cache row may hold corrupted
+                # K/V, so quarantine directly — no retry, since replaying the
+                # partial generation cannot be trusted from poisoned state
+                self.quarantined[s.rid] = {"prompt_len": s.prompt_len,
+                                           "step": self.step_no,
+                                           "reason": "decode_nonfinite"}
+                self.events.append(("quarantine", self.step_no, s.rid))
+                self._evict_slot(i)
                 continue
             s.last_token = int(nxt[i])
             s.tokens.append(s.last_token)
@@ -885,14 +1180,21 @@ class ServingEngine:
         ...), so decode latency is bounded by a chunk — the whole point of
         chunked prefill. Pool exhaustion shows up here as "no group" with a
         non-empty queue: the step decodes instead, draining pages."""
+        self._fire_comm_faults()
+        self._expire_deadlines()
         active = any(s is not None for s in self.slots)
         if self.paged:
             group = self._next_group_paged()
             if group is None and self._job is None and not active:
                 if self.queue and not self.draining:
-                    raise RuntimeError(
-                        "paged admission deadlock: queue non-empty but no "
-                        "slots/pages can ever free (pool undersized?)")
+                    if any(self._not_before.get(r.rid, 0) <= self.step_no
+                           for r in self.queue):
+                        raise RuntimeError(
+                            "paged admission deadlock: queue non-empty but "
+                            "no slots/pages can ever free (pool undersized?)")
+                    # every queued request is backing off after a retry —
+                    # burn an idle step so the gates can open
+                    return self._record_step("idle", 0.0)
                 return None
             with StepTimer() as t:
                 if group is not None:
@@ -910,6 +1212,9 @@ class ServingEngine:
             return self._record_step(kind, t.dt)
         group = self._next_group()
         if group is None and not active:
+            if self.queue and not self.draining:
+                # all queued requests are in retry backoff: idle-tick
+                return self._record_step("idle", 0.0)
             return None
         with StepTimer() as t:
             if group is not None:
@@ -922,15 +1227,45 @@ class ServingEngine:
 
     def _record_step(self, kind: str, dt: float) -> str:
         """Shared step accounting: injected fault delay folds into the
-        recorded time (watchdog + fleet feed see it; no wall-clock sleep)."""
+        recorded time (watchdog + fleet feed see it; no wall-clock sleep),
+        scripted link stalls attribute their synthetic hop time to the
+        targeted island's health feed, boundary-guard trips drain into the
+        event log, and the health monitor's verdicts re-layer the plans."""
         dt += self._injected_delay
         self._injected_delay = 0.0
+        # scripted stall: synthetic per-hop time, only while the island's
+        # CURRENT backend still rides the slow link (post-demotion steps
+        # route around it — the throughput recovery the monitor buys)
+        stall: dict[str, float] = {}
+        if kind in ("prefill", "decode"):
+            for f in self._active_faults:
+                if f["kind"] == "stall" and \
+                        self._stall_applies(f["island"], kind):
+                    stall[f["island"]] = (stall.get(f["island"], 0.0)
+                                          + f["stall_dt"])
+        dt += sum(stall.values())
         self.step_no += 1
         self.step_kinds.append(kind)
         self.step_times.append(dt)
-        if self.watchdog.record(self.step_no, dt):
+        if kind != "idle" and self.watchdog.record(self.step_no, dt):
             print(f"[serve] STRAGGLER step {self.step_no} ({kind}): "
                   f"{dt:.3f}s (deadline {self.watchdog.deadline:.3f}s)")
+        # island boundary guards that tripped during this step's device work
+        changed = False
+        for island, n in sorted(take_guard_trips().items()):
+            self.events.append(("guard_trip", self.step_no, island, n))
+            if self.health is not None:
+                changed |= self.health.guard_trip(island, self.step_no)
+        # per-island health feed: shared base time + this island's stall cut
+        if self.health is not None and kind in ("prefill", "decode"):
+            base = dt - sum(stall.values())
+            for island in self.health.islands:
+                changed |= self.health.record(
+                    island, self.step_no, base + stall.get(island, 0.0))
+        if changed:
+            self._refresh_health_overrides()
+        self._drain_health_events()
+        self._tick_comm_faults()
         return kind
 
     def run(self, requests=None, max_steps: int = 100_000,
@@ -1076,10 +1411,18 @@ class ServingEngine:
             "steps": self.step_no,
             "prefill_steps": self.step_kinds.count("prefill"),
             "decode_steps": self.step_kinds.count("decode"),
+            "idle_steps": self.step_kinds.count("idle"),
             "tokens_generated": self.tokens_generated,
             "wall_s": total,
             "tokens_per_s": self.tokens_generated / total if total else 0.0,
             "straggler_events": len(self.watchdog.events),
             "compiled_buckets": self.compiled_buckets,
             "cache": self.cache_stats(),
+            "quarantined": len(self.quarantined),
+            "expired": len(self.expired),
+            "retries": sum(self._retries.values()),
+            "guard_trips": sum(e[0] == "guard_trip" for e in self.events),
+            "health_demotions": (
+                sum(e[0] == "demote" for e in self.health.events)
+                if self.health is not None else 0),
         }

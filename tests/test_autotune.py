@@ -446,8 +446,80 @@ def test_analytic_policy_ignores_tables(mesh4, table):
 
 
 # ---------------------------------------------------------------------------
+# Staleness (table age + spot-probe drift)
+# ---------------------------------------------------------------------------
+
+def test_table_age_days_parses_created(table):
+    t = dataclasses.replace(table, created="2020-01-01T00:00:00")
+    assert autotune.table_age_days(t) > 365
+    assert autotune.table_age_days(
+        dataclasses.replace(table, created="not-a-date")) is None
+    assert autotune.table_age_days(
+        dataclasses.replace(table, created="")) is None
+
+
+def test_staleness_flags_old_table(table):
+    old = dataclasses.replace(table, created="2020-01-01T00:00:00")
+    msgs = autotune.staleness(old, probe=False)
+    assert len(msgs) == 1 and "days old" in msgs[0]
+
+
+def test_staleness_fresh_table_quiet(table):
+    import time as _time
+
+    fresh = dataclasses.replace(
+        table, created=_time.strftime("%Y-%m-%dT%H:%M:%S"))
+    assert autotune.staleness(fresh, probe=False) == []
+
+
+def test_staleness_spot_probe_catches_drift(table):
+    import time as _time
+
+    # a freshly-stamped table whose machine-local corrections are absurd:
+    # only the spot probe can catch it
+    drifted = autotune.CalibrationTable(
+        fingerprint=table.fingerprint,
+        corrections={**table.corrections, "kernel_launch_s": 1e4,
+                     "gemm_efficiency": 1e9},
+        created=_time.strftime("%Y-%m-%dT%H:%M:%S"))
+    msgs = autotune.staleness(drifted, reps=1)
+    assert any("kernel_launch_s drifted" in m for m in msgs)
+    assert any("gemm_efficiency drifted" in m for m in msgs)
+
+
+def test_measured_policy_warns_once_on_stale_table(mesh4, table):
+    stale = dataclasses.replace(table, created="2020-01-01T00:00:00")
+    ctx = CommContext(axis_name="x", mesh=mesh4, policy="measured",
+                      calibration=stale)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        # the stale table is still USED (measured keeps dispatching on it)
+        assert ctx.active_calibration() is stale
+        assert ctx.active_calibration() is stale
+    stale_warnings = [w for w in rec if "days old" in str(w.message)]
+    assert len(stale_warnings) == 1    # warn-once, not per lookup
+
+
+# ---------------------------------------------------------------------------
 # CLI
 # ---------------------------------------------------------------------------
+
+def test_cli_check_stale_and_fresh(table, tmp_path, capsys):
+    import time as _time
+
+    from repro.autotune import main
+
+    old = dataclasses.replace(table, created="2020-01-01T00:00:00")
+    p_old = old.save(tmp_path / "old.json")
+    assert main(["check", str(p_old), "--no-probe"]) == 1
+    assert "STALE" in capsys.readouterr().err
+
+    fresh = dataclasses.replace(
+        table, created=_time.strftime("%Y-%m-%dT%H:%M:%S"))
+    p_fresh = fresh.save(tmp_path / "fresh.json")
+    assert main(["check", str(p_fresh), "--no-probe"]) == 0
+    assert "within threshold" in capsys.readouterr().out
+
 
 def test_cli_show_and_diff(table, tmp_path, capsys):
     from repro.autotune import main
@@ -539,6 +611,12 @@ def test_bench_schema_validation():
     failed = _bench_doc()
     failed["figures"][0]["status"] = "failed"
     assert any("error" in e for e in cb.validate_schema(failed))
+    # fig_health rows tag the serving condition: string or null only
+    moded = _bench_doc()
+    moded["figures"][0]["rows"][0]["mode"] = "degraded"
+    assert cb.validate_schema(moded) == []
+    moded["figures"][0]["rows"][0]["mode"] = 3
+    assert any(".mode" in e for e in cb.validate_schema(moded))
 
 
 def test_bench_regression_gate():

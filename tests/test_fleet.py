@@ -63,6 +63,57 @@ def test_fault_plan_rejects(bad):
         FaultPlan.parse(bad)
 
 
+def test_fault_plan_parses_comm_kinds():
+    plan = FaultPlan.parse("linkdown:1.mlp@4x3 corrupt:0.attn_out@2")
+    assert plan.events == (
+        FaultEvent("corrupt", 0, 2, island="attn_out"),
+        FaultEvent("linkdown", 1, 4, 3, island="mlp"))
+
+
+def test_fault_plan_comm_kind_requires_island():
+    with pytest.raises(ValueError, match=r"replica\.island"):
+        FaultPlan.parse("corrupt:0@2")
+
+
+def test_fault_plan_replica_fault_rejects_island():
+    with pytest.raises(ValueError, match="takes no island"):
+        FaultPlan.parse("kill:0.mlp@2")
+
+
+def test_fault_plan_rejects_duplicate_comm_event():
+    with pytest.raises(ValueError, match="duplicate fault event"):
+        FaultPlan.parse("stall:0.mlp@2 stall:0.mlp@2")
+
+
+def test_fault_plan_rejects_kill_plus_comm():
+    with pytest.raises(ValueError, match="contradictory fault events"):
+        FaultPlan.parse("kill:0@2 stall:0.mlp@2")
+
+
+def test_fault_plan_rejects_contradictory_payload_poisons():
+    with pytest.raises(ValueError, match="both poison"):
+        FaultPlan.parse("corrupt:1.mlp@3 bitflip:1.mlp@3")
+    # different islands at the same step are fine
+    plan = FaultPlan.parse("corrupt:1.mlp@3 bitflip:1.attn_out@3")
+    assert len(plan.at(3)) == 2
+
+
+def test_fleet_delivers_comm_fault_to_replica_engine():
+    trace = _trace(6)
+    ref = _tokens(_engine().run(trace))
+    plan = FaultPlan.parse("stall:1.mlp@2x2")
+    fleet = ServingFleet(_factory(), FleetConfig(n_replicas=2, steal=False),
+                         fault_plan=plan)
+    done = fleet.run(trace)
+    # the fleet fired the event and the target engine recorded it
+    assert any(e[:2] == ("comm_fault", 2) and e[2] == 1 and e[3] == "stall"
+               for e in fleet.events)
+    assert any(e[0] == "comm_fault" and e[2] == "stall" and e[3] == "mlp"
+               for e in fleet.replicas[1].engine.events)
+    # a stall only inflates recorded step time: tokens are unaffected
+    assert _tokens(done) == ref
+
+
 # ---------------------------------------------------------------------------
 # Routing determinism + fleet == single engine
 # ---------------------------------------------------------------------------

@@ -1,0 +1,287 @@
+"""Runtime health subsystem (repro.runtime.health + serving hooks):
+
+* CommFaultPlan grammar: parse/reject (duplicates, contradictory payload
+  faults), CommFaultEvent field validation, demotion ladders;
+* HealthMonitor unit transitions: drift -> demote with hysteresis, guard
+  trip / linkdown -> instant demote, re-promote after probation with
+  exponential backoff, calibration table never consulted;
+* acceptance (a): an injected corrupt ring hop is caught by the island
+  guards, the poisoned requests are quarantined (or retried to success),
+  and the surviving requests' tokens are bit-identical to a no-fault run;
+* acceptance (b): a sustained injected stall triggers a backend demotion
+  (visible as src=health in the live plan record), throughput recovers
+  while the fault is still active, and the backend re-promotes after
+  probation without flapping.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.base import RunConfig, ServeConfig
+from repro.runtime.health import (CommFaultEvent, CommFaultPlan,
+                                  HealthMonitor, demotion_ladder)
+
+
+def _engine(mesh_shape, serve, arch="tinyllama-1.1b", **kw):
+    from repro.launch.serve import build_engine
+    return build_engine(arch, reduced=True, mesh_shape=mesh_shape,
+                        serve=serve, **kw)
+
+
+# ---------------------------------------------------------------------------
+# CommFaultPlan grammar
+# ---------------------------------------------------------------------------
+
+def test_comm_fault_plan_parse_roundtrip():
+    plan = CommFaultPlan.parse("corrupt:mlp@1, stall:attn_out@3x4; "
+                               "linkdown:mlp@7 bitflip:embed@2")
+    assert [(e.kind, e.island, e.step, e.ticks) for e in plan.events] == [
+        ("corrupt", "mlp", 1, 1), ("bitflip", "embed", 2, 1),
+        ("stall", "attn_out", 3, 4), ("linkdown", "mlp", 7, 1)]
+    assert [e.kind for e in plan.at(3)] == ["stall"]
+    assert plan.at(4) == []
+
+
+@pytest.mark.parametrize("bad", ["boom:mlp@1", "corrupt:mlp", "corrupt:@1",
+                                 "corrupt:mlp@-1", "stall:mlp@2x0"])
+def test_comm_fault_plan_rejects(bad):
+    with pytest.raises(ValueError):
+        CommFaultPlan.parse(bad)
+
+
+def test_comm_fault_plan_rejects_duplicates():
+    with pytest.raises(ValueError, match="duplicate fault event"):
+        CommFaultPlan.parse("corrupt:mlp@1 corrupt:mlp@1")
+
+
+def test_comm_fault_plan_rejects_contradictory_payload_faults():
+    # two different payload corruptions of the same island at the same step
+    # cannot both be applied to the jitted step
+    with pytest.raises(ValueError, match="contradictory fault events"):
+        CommFaultPlan.parse("corrupt:mlp@1 bitflip:mlp@1")
+
+
+def test_comm_fault_plan_allows_payload_plus_stall():
+    plan = CommFaultPlan.parse("corrupt:mlp@1 stall:mlp@1")
+    assert len(plan.at(1)) == 2
+
+
+def test_comm_fault_event_validation():
+    with pytest.raises(ValueError):
+        CommFaultEvent("nope", "mlp", 1)
+    with pytest.raises(ValueError):
+        CommFaultEvent("stall", "mlp", 1, ticks=0)
+    with pytest.raises(ValueError):
+        CommFaultEvent("stall", "mlp", -1)
+
+
+# ---------------------------------------------------------------------------
+# Demotion ladder
+# ---------------------------------------------------------------------------
+
+def test_demotion_ladder_ring_bidir():
+    assert demotion_ladder("ring_bidir") == (("ring", None), ("bulk", None))
+
+
+def test_demotion_ladder_ring():
+    assert demotion_ladder("ring") == (("bulk", None),)
+
+
+def test_demotion_ladder_chunked_drops_to_bulk_single_chunk():
+    assert demotion_ladder("chunked", 4) == (("bulk", 1),)
+
+
+def test_demotion_ladder_bulk_has_no_rungs():
+    assert demotion_ladder("bulk") == ()
+
+
+# ---------------------------------------------------------------------------
+# HealthMonitor unit transitions (no mesh)
+# ---------------------------------------------------------------------------
+
+def _monitor(**kw):
+    kw.setdefault("demote_after", 2)
+    kw.setdefault("probation", 3)
+    kw.setdefault("min_samples", 2)
+    return HealthMonitor({"mlp": (("bulk", None),)}, **kw)
+
+
+def test_monitor_demotes_after_consecutive_drift():
+    mon = _monitor()
+    for s in range(4):
+        mon.record("mlp", s, 1.0)        # seed the EMA
+    assert not mon.record("mlp", 4, 50.0)   # 1st flag: hysteresis holds
+    assert mon.record("mlp", 5, 50.0)       # 2nd consecutive flag: demote
+    assert mon.overrides() == (("mlp", "bulk", None, "health"),)
+    assert ("demote", 5, "mlp", "bulk", "drift") in mon.events
+
+
+def test_monitor_hysteresis_resets_on_clean_sample():
+    mon = _monitor()
+    for s in range(4):
+        mon.record("mlp", s, 1.0)
+    assert not mon.record("mlp", 4, 50.0)
+    mon.record("mlp", 5, 1.0)               # clean sample resets the count
+    assert not mon.record("mlp", 6, 50.0)   # back to 1st flag
+    assert mon.overrides() == ()
+
+
+def test_monitor_guard_trip_demotes_instantly():
+    mon = _monitor()
+    assert mon.guard_trip("mlp", 0)
+    assert mon.rung("mlp") == ("bulk", None)
+    assert ("demote", 0, "mlp", "bulk", "guard") in mon.events
+
+
+def test_monitor_linkdown_and_linkup():
+    mon = _monitor()
+    assert mon.link_down("mlp", 2)
+    assert mon.overrides() == (("mlp", "bulk", None, "health"),)
+    mon.link_up("mlp", 5)
+    assert ("link_up", 5, "mlp") in mon.events
+    # link_up alone does not re-promote: probation still applies
+    assert mon.overrides() == (("mlp", "bulk", None, "health"),)
+
+
+def test_monitor_promotes_after_probation():
+    mon = _monitor()
+    mon.guard_trip("mlp", 0)
+    changed = False
+    for s in range(1, 10):
+        changed = mon.record("mlp", s, 1.0)
+        if changed:
+            break
+    assert changed and mon.overrides() == ()
+    assert any(e[0] == "promote" and e[2] == "mlp" for e in mon.events)
+
+
+def test_monitor_probation_backs_off_on_repeat_demotion():
+    mon = _monitor()
+    mon.guard_trip("mlp", 0)
+    assert mon._probation_for(mon._state["mlp"]) == 3
+    # promote, then demote again: probation doubles
+    for s in range(1, 10):
+        if mon.record("mlp", s, 1.0):
+            break
+    mon.guard_trip("mlp", 20)
+    assert mon._probation_for(mon._state["mlp"]) == 6
+
+
+def test_monitor_ignores_unmonitored_islands():
+    mon = _monitor()
+    assert not mon.record("embed", 0, 100.0)
+    assert not mon.guard_trip("embed", 0)
+    assert mon.overrides() == ()
+
+
+# ---------------------------------------------------------------------------
+# Acceptance (a): corrupt ring hop -> guards trip, poisoned requests
+# quarantined, survivors bit-identical to a no-fault run
+# ---------------------------------------------------------------------------
+
+_PROMPTS = [tuple(range(1, 6)), tuple(range(2, 7)),
+            tuple(range(3, 8)), tuple(range(4, 9))]
+
+
+def _ref_tokens(mesh_shape=(1, 8)):
+    serve = ServeConfig(max_batch=4, prefill_batch=2, bucket_edges=(8,),
+                        max_new_tokens=4)
+    eng = _engine(mesh_shape, serve,
+                  run_overrides={"comm_backend": "ring"})
+    done = eng.run(list(_PROMPTS))
+    return {c.rid: tuple(c.tokens) for c in done}
+
+
+def test_corrupt_hop_quarantines_and_survivors_bit_identical():
+    ref = _ref_tokens()
+    serve = ServeConfig(max_batch=4, prefill_batch=2, bucket_edges=(8,),
+                        max_new_tokens=4, max_retries=0)
+    eng = _engine((1, 8), serve,
+                  run_overrides={"comm_backend": "ring",
+                                 "island_guards": True},
+                  comm_faults="corrupt:mlp@1")
+    done = eng.run(list(_PROMPTS))
+    # the first prefill group (rids 0,1) hits the corrupted step
+    assert set(eng.quarantined) == {0, 1}
+    for rec in eng.quarantined.values():
+        assert rec["reason"] == "prefill_nonfinite"
+    # the guards saw the NaN at the faulted island's boundary
+    tripped = {e[2] for e in eng.events if e[0] == "guard_trip"}
+    assert "mlp" in tripped
+    # survivors: tokens bit-identical to the no-fault run
+    got = {c.rid: tuple(c.tokens) for c in done}
+    assert set(got) == {2, 3}
+    for rid in got:
+        assert got[rid] == ref[rid], rid
+    assert eng.stats()["quarantined"] == 2
+
+
+def test_corrupt_hop_retry_recovers_all_requests():
+    ref = _ref_tokens()
+    serve = ServeConfig(max_batch=4, prefill_batch=2, bucket_edges=(8,),
+                        max_new_tokens=4, max_retries=1)
+    eng = _engine((1, 8), serve,
+                  run_overrides={"comm_backend": "ring",
+                                 "island_guards": True},
+                  comm_faults="corrupt:mlp@1")
+    done = eng.run(list(_PROMPTS))
+    # the fault is one step long: the retried prefill succeeds
+    assert eng._retries == {0: 1, 1: 1}
+    assert not eng.quarantined
+    got = {c.rid: tuple(c.tokens) for c in done}
+    assert got == ref
+
+
+# ---------------------------------------------------------------------------
+# Acceptance (b): sustained stall -> demotion via the override seam,
+# recovery, re-promotion after probation, no flapping
+# ---------------------------------------------------------------------------
+
+def test_stall_demotes_recovers_and_promotes_without_flapping():
+    serve = ServeConfig(max_batch=4, prefill_batch=2, bucket_edges=(8,),
+                        max_new_tokens=1, health_monitor=True,
+                        health_demote_after=2, health_probation=4)
+    # stall_dt dwarfs the compile-time-seeded EMA so the drift detector
+    # flags it; ticks=4 outlasts the demote_after hysteresis
+    plan = CommFaultPlan(events=(
+        CommFaultEvent("stall", "mlp", 3, ticks=4, stall_dt=50.0),))
+    eng = _engine((1, 8), serve,
+                  run_overrides={"comm_backend": "ring"},
+                  comm_faults=plan)
+    rng = np.random.RandomState(0)
+    for _ in range(20):
+        eng.submit(tuple(int(t) for t in
+                         rng.randint(1, eng.cfg.vocab_size, size=5)))
+    hov_by_step = {}
+    dts = {}
+    while eng.pending:
+        before = len(eng.step_times)
+        eng.step()
+        hov_by_step[eng.step_no] = eng.plan_record()["health_overrides"]
+        if len(eng.step_times) > before:
+            dts[eng.step_no] = eng.step_times[-1]
+
+    demotes = [e for e in eng.health.events if e[0] == "demote"]
+    promotes = [e for e in eng.health.events if e[0] == "promote"]
+    # exactly one demotion and one re-promotion: no flapping
+    assert len(demotes) == 1 and len(promotes) == 1
+    d = demotes[0]
+    assert d[2] == "mlp" and d[3] == "bulk" and d[4] == "drift"
+    demote_step, promote_step = demotes[0][1], promotes[0][1]
+    assert demote_step < promote_step
+
+    # the demotion is visible as src=health in the live plan record
+    assert hov_by_step[demote_step] == [["mlp", "bulk", None, "health"]]
+    assert hov_by_step[promote_step] == []
+
+    # throughput recovers while the fault is still active: the first
+    # post-demotion step no longer eats the stall
+    stalled = [dt for s, dt in dts.items() if s <= demote_step and dt >= 50.0]
+    assert stalled, "stall never landed before the demotion"
+    recovered = [dt for s, dt in dts.items()
+                 if demote_step < s <= demote_step + 2]
+    assert recovered and max(recovered) < 5.0
+
+    # probation honoured: clean samples between demote and promote
+    assert promote_step - demote_step >= serve.health_probation
+    assert eng.stats()["health_demotions"] == 1

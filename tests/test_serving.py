@@ -228,8 +228,8 @@ def test_per_bucket_plans_consumed_and_distinct(tmp_path):
         assert ("mlp", "bulk", None) in eng.bucket_plans["decode"].overrides
         run_pre = eng._runs["prefill@16"]
         run_dec = eng._runs["decode"]
-        assert island_override(run_pre, "mlp") == ("ring", 2)
-        assert island_override(run_dec, "mlp") == ("bulk", None)
+        assert island_override(run_pre, "mlp") == ("ring", 2, "plan")
+        assert island_override(run_dec, "mlp") == ("bulk", None, "plan")
         from repro.models.layers import mlp_island
         rules = eng.rules
         ctx_pre = mlp_island(cfg, run_pre, rules, 4, 16).make_context()
@@ -287,8 +287,11 @@ def test_plan_overrides_normalization(mesh4):
     # later entries win
     run = RunConfig(island_overrides=(("a", "bulk", None),
                                       ("a", "ring", 4)))
-    assert island_override(run, "a") == ("ring", 4)
+    assert island_override(run, "a") == ("ring", 4, "plan")
     assert island_override(run, "b") is None
+    # 4-tuple entries carry an explicit source tag (health demotions)
+    run = RunConfig(island_overrides=(("a", "bulk", None, "health"),))
+    assert island_override(run, "a") == ("bulk", None, "health")
 
 
 def test_override_pins_context_and_plan_roundtrip(mesh4):

@@ -1,0 +1,127 @@
+"""Straggler watchdog edge cases (repro.runtime.straggler):
+
+* zero-sample behaviour: infinite deadline, nothing flagged, empty median;
+* median-of-one: a single live replica is never a *fleet* straggler;
+* ``FleetWatchdog.reset`` on rejoin: the stale EMA really is discarded;
+* EMA propagation under scripted ``inject_step_delay`` faults.
+"""
+
+import math
+
+from repro.configs.base import ServeConfig
+from repro.runtime.straggler import FleetWatchdog, StepTimer, StragglerWatchdog
+
+
+# ---------------------------------------------------------------------------
+# StragglerWatchdog
+# ---------------------------------------------------------------------------
+
+def test_zero_samples_never_flags():
+    wd = StragglerWatchdog(min_samples=5)
+    assert wd.deadline == float("inf")
+    # even an absurd first sample cannot be a straggler: no baseline yet
+    assert not wd.record(0, 1e9)
+    assert wd.n == 1 and wd.ema == 1e9
+    assert wd.events == []
+
+
+def test_deadline_infinite_until_min_samples():
+    wd = StragglerWatchdog(factor=3.0, min_samples=3)
+    for s in range(2):
+        wd.record(s, 1.0)
+        assert wd.deadline == float("inf")
+    wd.record(2, 1.0)
+    assert math.isclose(wd.deadline, 3.0)
+
+
+def test_straggler_does_not_poison_ema():
+    wd = StragglerWatchdog(factor=3.0, min_samples=1, ema_decay=0.9)
+    wd.record(0, 1.0)
+    assert wd.record(1, 100.0)          # flagged
+    assert wd.ema == 1.0                # EMA untouched by the outlier
+    assert not wd.record(2, 1.0)        # baseline intact afterwards
+
+
+def test_ema_converges_to_steady_state():
+    wd = StragglerWatchdog(min_samples=1, ema_decay=0.5)
+    for s in range(30):
+        wd.record(s, 2.0)
+    assert math.isclose(wd.ema, 2.0, rel_tol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# FleetWatchdog
+# ---------------------------------------------------------------------------
+
+def test_fleet_zero_samples_no_stragglers():
+    fw = FleetWatchdog(n_replicas=3)
+    assert fw.stragglers() == []
+    assert fw.ema(0) == 0.0
+
+
+def test_fleet_median_of_one_replica():
+    # a single live replica has no peers: the median IS its own EMA, so the
+    # relative test can never fire and only its own deadline can flag it
+    fw = FleetWatchdog(n_replicas=1)
+    for s in range(5):
+        fw.record(0, s, 1.0)
+    assert fw.stragglers() == []
+    assert fw.record(0, 5, 100.0)       # own deadline blown
+    assert fw.stragglers() == [0]
+
+
+def test_fleet_median_excludes_dead_replicas():
+    fw = FleetWatchdog(n_replicas=3)
+    for s in range(3):
+        fw.record(0, s, 1.0)
+        fw.record(1, s, 1.0)
+        fw.record(2, s, 10.0)
+    # with all three live, replica 2's EMA is > factor x median(1,1,10)=1
+    assert fw.stragglers() == [2]
+    # restrict to the live set {2}: no peers to compare against
+    assert fw.stragglers(live=[2]) == []
+
+
+def test_fleet_reset_discards_stale_ema_on_rejoin():
+    fw = FleetWatchdog(n_replicas=2)
+    for s in range(4):
+        fw.record(0, s, 1.0)
+        fw.record(1, s, 10.0)
+    assert fw.ema(1) > 5.0
+    fw.reset(1)
+    assert fw.ema(1) == 0.0
+    assert fw.feeds[1].n == 0
+    assert fw.stragglers() == []        # the flag is cleared too
+    # the first post-rejoin sample reseeds the EMA (min_samples=1)
+    assert not fw.record(1, 5, 1.0)
+    assert fw.ema(1) == 1.0
+
+
+def test_fleet_ema_under_injected_delay():
+    # the serving engine inflates its recorded step time via
+    # inject_step_delay; the fleet feed must see the inflated dt
+    from repro.launch.serve import build_engine
+    serve = ServeConfig(max_batch=2, prefill_batch=1, bucket_edges=(8,),
+                        max_new_tokens=2)
+    eng = build_engine("tinyllama-1.1b", reduced=True, mesh_shape=(2, 2),
+                       serve=serve)
+    eng.submit(tuple(range(1, 6)))
+    eng.step()                          # prefill, seeds the engine EMA
+    base = eng.step_times[-1]
+    eng.inject_step_delay(30.0)
+    eng.step()
+    assert eng.step_times[-1] >= 30.0
+    assert eng.step_times[-1] - 30.0 < base * 100  # the dt itself stayed sane
+    fw = FleetWatchdog(n_replicas=3)
+    fw.record(0, 0, eng.step_times[-2])
+    fw.record(1, 0, eng.step_times[-1])
+    fw.record(2, 0, eng.step_times[-2])
+    assert fw.ema(1) >= 30.0
+    # two fast peers: the median EMA is the fast one, replica 1 stands out
+    assert fw.stragglers() == [1]
+
+
+def test_step_timer_measures_elapsed():
+    with StepTimer() as t:
+        sum(range(1000))
+    assert t.dt >= 0.0
