@@ -2,7 +2,7 @@
 PY ?= python
 
 .PHONY: test test-full lint bench bench-baseline calibrate quickstart deps \
-        serve-smoke fleet-smoke health-smoke fuzz
+        serve-smoke fleet-smoke health-smoke kernels-smoke fuzz
 
 deps:
 	$(PY) -m pip install -r requirements.txt
@@ -53,6 +53,14 @@ health-smoke:       # scripted comm faults: guards + monitor + quarantine
 	    --comm-fault-plan "corrupt:mlp@1 stall:mlp@3x4" \
 	    --requests 8 --tokens 4 --max-batch 4 --prefill-batch 2 \
 	    --bucket-edges 8
+
+kernels-smoke:      # Pallas kernel suites incl. the chunk-pipelined fused
+	            # collectives (interpret-mode tests skip cleanly on JAX
+	            # builds without pltpu.InterpretParams; on TPU they run
+	            # against the hardware)
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	    PYTHONPATH=src $(PY) -m pytest -q -rs tests/test_kernels.py \
+	    tests/test_pk_comm.py tests/test_fused_chunks.py
 
 fuzz:               # slow randomized/property tests (uses hypothesis if installed)
 	PYTHONPATH=src $(PY) -m pytest -q -m slow tests/test_property.py

@@ -88,7 +88,9 @@ class Recorder:
             cache_layout: str | None = None,
             wire: str | None = None,
             dtype_bytes: int | None = None,
-            mode: str | None = None) -> None:
+            mode: str | None = None,
+            sub_chunks: int | None = None,
+            chunks_src: str | None = None) -> None:
         err = None
         if predicted_us is not None and us > 0:
             err = (predicted_us - us) / us
@@ -100,6 +102,7 @@ class Recorder:
             "island": island, "tokens_per_s": tokens_per_s,
             "cache_layout": cache_layout,
             "wire": wire, "dtype_bytes": dtype_bytes, "mode": mode,
+            "sub_chunks": sub_chunks, "chunks_src": chunks_src,
         })
 
     def report(self) -> dict:
@@ -131,7 +134,8 @@ def row(name: str, us: float, derived: str = "",
         predicted_us: float | None = None, island: str | None = None,
         tokens_per_s: float | None = None, cache_layout: str | None = None,
         wire: str | None = None, dtype_bytes: int | None = None,
-        mode: str | None = None):
+        mode: str | None = None, sub_chunks: int | None = None,
+        chunks_src: str | None = None):
     """One measurement: prints the CSV row and records it for the JSON
     artifact. ``predicted_us`` is the §3.1.1 cost-model prediction for the
     same configuration (on ``pred_hw()``) when the bench can supply one;
@@ -144,10 +148,14 @@ def row(name: str, us: float, derived: str = "",
     so dtype regressions gate against same-dtype baselines only; ``mode``
     tags a runtime-health row's serving condition (fig_health:
     "healthy" / "degraded" / "hard_failure") so the gate compares
-    like-for-like fault scenarios."""
+    like-for-like fault scenarios, and the fused chunk sweep's cost source
+    ("measured" on TPU, "analytic" off it); ``sub_chunks``/``chunks_src``
+    tag a chunk-pipeline row with the sub-chunk count it ran (or priced)
+    and where the resolved count came from (``ChunkSchedule.source``)."""
     print(f"{RECORDER.current_figure},{name},{us:.1f},{derived}")
     RECORDER.add(name, us, derived, predicted_us, island, tokens_per_s,
-                 cache_layout, wire, dtype_bytes, mode)
+                 cache_layout, wire, dtype_bytes, mode, sub_chunks,
+                 chunks_src)
 
 
 def _pred_table():

@@ -376,6 +376,67 @@ def fig_chunk_pipeline():
             island=isl.island_key)
 
 
+def fig_fused_chunks():
+    """Fused single-kernel chunk sweep: the chunk-pipelined fused Pallas
+    GEMM×collectives at sub-chunk counts {1, 2, 4, 8}, all three ops.
+
+    On a real TPU each count is timed (the rows ``calibrate --per-island``
+    would also produce); off-TPU the fused kernels cannot run — interpret
+    timings would be meaningless — so the rows price the same sweep with
+    ``costmodel.fused_pipeline_cost`` and carry ``mode="analytic"``. Either
+    way a trailing ``/schedule`` row records the chunk count the dispatch
+    layer resolves for each op (``sub_chunks``/``chunks_src`` fields), so
+    the artifact shows the decision alongside the sweep that justifies it.
+    """
+    mesh = make_mesh()
+    hw = pred_hw()
+    on_tpu = jax.default_backend() == "tpu"
+    ctx = CommContext(axis_name="x", mesh=mesh, policy="auto")
+    cases = (
+        ("ag_gemm", "all_gather_matmul", (P("x"), P()), P()),
+        ("gemm_rs", "matmul_reduce_scatter",
+         (P(None, "x"), P("x", None)), P("x", None)),
+        ("gemm_ar", "matmul_all_reduce", (P(None, "x"), P("x", None)), P()),
+    )
+    m, n, k = 2048, 512, 256
+    for tag, op, in_specs, out_specs in cases:
+        kind = _OP_KIND[op]
+        for c in (1, 2, 4, 8):
+            pred = cm.fused_pipeline_cost(
+                m, n, k, axis_size=N, sub_chunks=c, kind=kind,
+                hw=hw).total * 1e6
+            if not on_tpu:
+                row(f"fig_fused_chunks/{tag}/c{c}", pred,
+                    "analytic fused_pipeline_cost (fused kernels need TPU)",
+                    mode="analytic", sub_chunks=c, dtype_bytes=2)
+                continue
+            if op == "all_gather_matmul":
+                x = jax.random.normal(jax.random.PRNGKey(0), (m, k),
+                                      jnp.bfloat16)
+            else:
+                x = jax.random.normal(jax.random.PRNGKey(0), (m, N * k),
+                                      jnp.bfloat16)
+            w = jax.random.normal(
+                jax.random.PRNGKey(1),
+                (k if op == "all_gather_matmul" else N * k, n), jnp.bfloat16)
+            island = Island(
+                f"fig_fused/{tag}/c{c}", mesh=mesh, axis="x",
+                inputs={"x": in_specs[0], "w": in_specs[1]},
+                out_specs=out_specs,
+                body=lambda ctx_, x, w, c=c, op=op: getattr(ctx_, op)(
+                    x, w, backend="fused", n_chunks=c),
+                comm=Comm(op, m=m, n=n, k=k, backend="fused", n_chunks=c))
+            us = timeit(jax.jit(lambda x, w, i=island: i(x=x, w=w)), x, w)
+            row(f"fig_fused_chunks/{tag}/c{c}", us, f"sub_chunks={c}",
+                predicted_us=pred, mode="measured", sub_chunks=c,
+                dtype_bytes=2)
+        sched = ctx.gemm_chunk_schedule(op, m, n, k, backend="fused")
+        row(f"fig_fused_chunks/{tag}/schedule", 0.0,
+            f"resolved sub_chunks={sched.n_chunks} ({sched.reason})",
+            mode="measured" if on_tpu else "analytic",
+            sub_chunks=sched.n_chunks, chunks_src=sched.source)
+
+
 def fig_quant_comm():
     """Quantized wire formats on the ring GEMM×collectives: bf16 payloads vs
     the int8+per-block-scale wire (core.quant), same chunk count, all three
@@ -688,5 +749,5 @@ ALL = [fig2_3_transfer_granularity, table3_hiding_threshold,
        fig6_allreduce_design_overhead, fig7_ag_gemm, fig8_gemm_rs,
        fig9_gemm_ar, fig10_ring_attention, fig11_ulysses, fig12_moe_dispatch,
        fig15_17_strided_collectives, fig_unified_template,
-       fig_chunk_pipeline, fig_quant_comm, fig_serving, fig_fleet,
-       fig_health]
+       fig_chunk_pipeline, fig_fused_chunks, fig_quant_comm, fig_serving,
+       fig_fleet, fig_health]

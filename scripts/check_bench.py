@@ -98,6 +98,16 @@ def validate_schema(doc) -> list[str]:
             if md is not None and not isinstance(md, str):
                 errors.append(f"{where}.rows[{j}].mode must be a string "
                               "or null")
+            sc = r.get("sub_chunks")
+            if sc is not None and (isinstance(sc, bool)
+                                   or not isinstance(sc, int) or sc < 1):
+                errors.append(f"{where}.rows[{j}].sub_chunks must be a "
+                              "positive integer or null")
+            cs = r.get("chunks_src")
+            if cs is not None and cs not in ("explicit", "measured",
+                                             "analytic"):
+                errors.append(f"{where}.rows[{j}].chunks_src must be "
+                              "'explicit', 'measured', 'analytic' or null")
     return errors
 
 

@@ -48,7 +48,19 @@ if [ "${REPRO_FLEET:-1}" != "0" ]; then
     fi
 fi
 
-# Stage 5 (non-blocking): the runtime-health smoke (`make health-smoke`:
+# Stage 5 (non-blocking, opt-in): the Pallas kernel smoke (`make
+# kernels-smoke`): the matmul/attention kernel suite plus the ring and
+# chunk-pipelined fused collective kernels — redundant with stage 1 on
+# this container (the interpret-gated tests skip), so it is opt-in for
+# machines where the kernels actually execute. Enable with REPRO_KERNELS=1.
+if [ "${REPRO_KERNELS:-0}" = "1" ]; then
+    if ! make kernels-smoke; then
+        echo "WARNING: kernels-smoke stage failed (non-blocking; run" \
+             "'make kernels-smoke' for details)" >&2
+    fi
+fi
+
+# Stage 6 (non-blocking): the runtime-health smoke (`make health-smoke`:
 # scripted corrupt + stall comm faults with island guards and the health
 # monitor on — exercises guard trips, quarantine, and backend demotion
 # through the serve CLI). Skip with REPRO_HEALTH=0.

@@ -105,24 +105,33 @@ def _island_sweeps(args):
     return sweeps
 
 
-def cmd_calibrate(args) -> int:
+def int8_island_sweeps(islands):
+    """Re-key GEMM island sweeps at the int8 wire width (the ``--dtype
+    both``/``int8`` dtype axis): same declared (m, n, k), rows land under the
+    island's ``…|b1`` key so per-island measured dispatch resolves when the
+    run sets ``comm_wire="int8"`` — paired with the full-precision ``…|b2``
+    rows the original sweeps emit. The b1 sweep itself excludes the fused
+    backend (``island_sweep_cases``: fused kernels ship full precision)."""
     import dataclasses
 
+    from repro.core import autotune
+
+    return [
+        dataclasses.replace(
+            sw, island=sw.island.rsplit("|", 1)[0] + "|b1",
+            dtype_bytes=1)
+        for sw in islands
+        if sw.op in autotune.GEMM_OPS and sw.dtype_bytes != 1]
+
+
+def cmd_calibrate(args) -> int:
     from repro.core import autotune, costmodel
 
     hw = getattr(costmodel, args.hw.upper())
     dtypes = {"bf16": (2,), "int8": (1,), "both": (2, 1)}[args.dtype]
     islands = list(_island_sweeps(args)) if args.per_island else []
     if 1 in dtypes and islands:
-        # re-key each GEMM island sweep at the int8 wire width: same declared
-        # (m, n, k), rows land under the island's b1 key so per-island
-        # measured dispatch resolves when the run sets comm_wire="int8"
-        islands += [
-            dataclasses.replace(
-                sw, island=sw.island.rsplit("|", 1)[0] + "|b1",
-                dtype_bytes=1)
-            for sw in islands
-            if sw.op in autotune.GEMM_OPS and sw.dtype_bytes != 1]
+        islands += int8_island_sweeps(islands)
     table = autotune.calibrate(grid=args.grid, reps=args.reps, hw=hw,
                                notes=args.notes, verbose=True,
                                islands=islands, dtypes=dtypes)
@@ -251,9 +260,11 @@ def main(argv=None) -> int:
                         "key); both runs the grid twice")
     p.add_argument("--per-island", action="store_true",
                    help="additionally sweep backend x chunk count at every "
-                        "active GEMM-collective island's declared (m, n, k), "
-                        "tagging rows with the island key so dispatch and "
-                        "Island.plan() become per-island measured")
+                        "active GEMM-collective island's declared (m, n, k) "
+                        "(rings x {1,2,4}; on TPU also the fused kernels x "
+                        "{1,2,4,8}), tagging rows with the island key so "
+                        "dispatch and Island.plan() become per-island "
+                        "measured")
     p.add_argument("--arch", default="tinyllama-1.1b",
                    help="model whose islands --per-island sweeps")
     p.add_argument("--reduced", action="store_true",

@@ -795,6 +795,45 @@ def _sweep_gemm_ops(ctx, mesh, axis_name: str, sizes: Sequence[int],
 #: sub-chunk counts the per-island sweep measures for each ring backend.
 ISLAND_CHUNK_SWEEP = (1, 2, 4)
 
+#: sub-chunk counts the per-island sweep measures for the fused backend —
+#: one more octave than the rings: in-kernel chunk handoffs are a scalar-core
+#: descriptor issue + local semaphore wait, so the fused pipeline tolerates
+#: (and usually prefers) finer chunking (``costmodel.fused_pipeline_cost``).
+ISLAND_FUSED_CHUNK_SWEEP = (1, 2, 4, 8)
+
+
+def island_sweep_cases(sw: IslandSweep, n_dev: int,
+                       available: Sequence[str]) -> list[tuple[str, int]]:
+    """The (backend, n_chunks) grid the per-island GEMM sweep times for one
+    island — exposed as a pure function so the fused-inclusion rules are
+    unit-testable without running a calibration.
+
+    * ``bulk`` is always timed, at 1 chunk (no pipeline to sub-chunk);
+    * ``ring`` sweeps :data:`ISLAND_CHUNK_SWEEP`; ``ring_bidir`` joins it for
+      AG×GEMM on an even axis with >= 2 local rows;
+    * ``fused`` sweeps :data:`ISLAND_FUSED_CHUNK_SWEEP` when feasible (real
+      TPU only — interpret-mode timings would poison the table) and the
+      sweep is full-precision: fused kernels do not ship a quantized wire,
+      so b1 sweeps exclude them the same way the global grid does.
+    """
+    backends = ["bulk", "ring"]
+    if (sw.op == "all_gather_matmul" and sw.m // n_dev >= 2
+            and n_dev % 2 == 0):
+        backends.append("ring_bidir")
+    if sw.dtype_bytes != 1 and _feasible(sw.op, "fused", n_dev, sw.m,
+                                         available):
+        backends.append("fused")
+    cases: list[tuple[str, int]] = []
+    for be in backends:
+        if be == "bulk":
+            counts: Sequence[int] = (1,)
+        elif be == "fused":
+            counts = ISLAND_FUSED_CHUNK_SWEEP
+        else:
+            counts = ISLAND_CHUNK_SWEEP
+        cases += [(be, c) for c in counts]
+    return cases
+
 
 def _sweep_a2a_island(ctx, mesh, axis_name: str, sw: IslandSweep,
                       reps: int, log) -> list[dict]:
@@ -888,9 +927,6 @@ def _sweep_islands(ctx, mesh, axis_name: str, sweeps: Sequence[IslandSweep],
             x = jax.random.normal(jax.random.PRNGKey(0), (sw.m, sw.k), dtype)
             w = jax.random.normal(jax.random.PRNGKey(1), (sw.k, sw.n), dtype)
             in_specs, out_specs = (P(axis_name), P()), P()
-            backends = ["bulk", "ring"]
-            if sw.m // n_dev >= 2 and n_dev % 2 == 0:
-                backends.append("ring_bidir")
         else:
             x = jax.random.normal(jax.random.PRNGKey(0),
                                   (sw.m, n_dev * sw.k), dtype)
@@ -899,25 +935,25 @@ def _sweep_islands(ctx, mesh, axis_name: str, sweeps: Sequence[IslandSweep],
             in_specs = (P(None, axis_name), P(axis_name, None))
             out_specs = (P(axis_name, None)
                          if sw.op == "matmul_reduce_scatter" else P())
-            backends = ["bulk", "ring"]
-        for be in backends:
-            for c in ((1,) if be == "bulk" else ISLAND_CHUNK_SWEEP):
-                fn = jax.jit(compat.shard_map(
-                    partial(getattr(ctx, sw.op), backend=be, n_chunks=c,
-                            wire=wire),
-                    mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                    check_vma=False))
-                try:
-                    t = _timeit(fn, x, w, reps=reps)
-                except Exception as e:  # noqa: BLE001 — skip, don't abort
-                    log(f"  {sw.island}/{be}/c={c}: SKIPPED "
-                        f"({type(e).__name__})")
-                    continue
-                rows.append({"op": sw.op, "backend": be, "axis_size": n_dev,
-                             "m": sw.m, "n": sw.n, "k": sw.k,
-                             "dtype_bytes": sw.dtype_bytes, "n_chunks": c,
-                             "island": sw.island, "us": t * 1e6})
-                log(f"  {sw.island}/{be}/c={c}: {t * 1e6:.1f} us")
+        for be, c in island_sweep_cases(sw, n_dev,
+                                        ctx.available_backends(sw.op)):
+            fused = be == "fused"
+            fn = jax.jit(compat.shard_map(
+                partial(getattr(ctx, sw.op), backend=be, n_chunks=c,
+                        wire=None if fused else wire),
+                mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_vma=False))
+            try:
+                t = _timeit(fn, x, w, reps=reps)
+            except Exception as e:  # noqa: BLE001 — skip, don't abort
+                log(f"  {sw.island}/{be}/c={c}: SKIPPED "
+                    f"({type(e).__name__})")
+                continue
+            rows.append({"op": sw.op, "backend": be, "axis_size": n_dev,
+                         "m": sw.m, "n": sw.n, "k": sw.k,
+                         "dtype_bytes": sw.dtype_bytes, "n_chunks": c,
+                         "island": sw.island, "us": t * 1e6})
+            log(f"  {sw.island}/{be}/c={c}: {t * 1e6:.1f} us")
     return rows
 
 

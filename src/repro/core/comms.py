@@ -37,7 +37,12 @@ Ops (uniform signature: operands, then ``backend=None`` plus op kwargs):
               ceil/floor
 ``chunked`` — payload split so downstream compute overlaps later chunks
 ``fused``   — single Pallas kernel with intra-kernel RDMA overlap (LCSC
-              template; needs a TPU backend or TPU interpret mode)
+              template; needs a TPU backend or TPU interpret mode). Each
+              ring hop is itself chunk-pipelined: per-chunk one-way DMAs
+              issued ahead of the chunk GEMM, same ``ChunkSchedule``
+              resolution as the jax-level rings but priced with
+              ``costmodel.fused_pipeline_cost`` (in-kernel sync is cheap,
+              so the argmin sits at finer chunks)
 
 The GEMM×collective ops take ``n_chunks=``/``chunk_dim=`` knobs; left unset,
 the chunk count resolves via ``CommContext.gemm_chunk_schedule`` (context
@@ -459,25 +464,34 @@ class CommContext:
         Precedence: explicit per-call ``n_chunks`` > the context-wide
         ``chunks`` default (``RunConfig.comm_chunks``) > chunk counts
         *measured* in the calibration table (island-keyed rows first) > the
-        analytic ``schedule.choose_gemm_chunks`` argmin. Bulk and fused
-        backends take no sub-chunks — the whole point of chunking is the ring
-        pipeline. The returned count is a request; the impls fit it to the
-        chunked sub-shape's largest divisor (never a new shape constraint).
+        analytic argmin. Bulk takes no sub-chunks — its whole point is the
+        monolithic collective. Ring backends price the analytic tier with
+        ``schedule.choose_gemm_chunks``; the fused single-kernel pipeline
+        prices it with the ``fused=True`` variant
+        (``costmodel.fused_pipeline_cost``: one launch, VMEM-resident
+        operands, local-sync chunk handoffs), whose argmin usually sits at a
+        finer count. The returned count is a request; the impls fit it to
+        the chunked sub-shape's largest divisor (never a new shape
+        constraint).
 
         A quantized ``wire`` pins ``chunk_dim="m"``: blocks are quantized
         per row (along the last axis), so row chunks leave every scale group
         intact — the quantized values stay bit-exact across chunk counts —
         while column chunks would re-cut the blocks per chunk. It also moves
         the measured chunk lookup to the wire's ``b{dtype_bytes}`` rows and
-        reprices the analytic argmin at the on-wire element width.
+        reprices the analytic argmin at the on-wire element width. The fused
+        kernels ship full precision, so their schedule ignores ``wire``
+        (chunk rows always slice "m" — the payload's row dim).
         """
         kind = self._GEMM_KIND[op]
-        fmt = self.wire_format(wire)
-        if fmt is not None:
-            # per-row scale groups survive only row chunking (see docstring)
+        fused = backend == "fused"
+        fmt = self.wire_format(wire) if not fused else None
+        if fmt is not None or fused:
+            # per-row scale groups survive only row chunking; the fused
+            # kernels likewise chunk the payload's rows (see docstring)
             chunk_dim = "m"
         dim = chunk_dim if chunk_dim is not None else GEMM_CHUNK_DIM[kind]
-        if backend not in ("ring", "ring_bidir"):
+        if backend not in ("ring", "ring_bidir", "fused"):
             return ChunkSchedule(1, dim, f"{backend} path takes no sub-chunks")
         if n_chunks is not None:
             return ChunkSchedule(max(1, n_chunks), dim, "per-call n_chunks=",
@@ -499,7 +513,8 @@ class CommContext:
         sched = choose_gemm_chunks(
             m, n, k, axis_size=self.axis_size, kind=kind,
             dtype_bytes=dtype_bytes, hw=self.effective_hw(),
-            wire_bytes=fmt.bytes_per_element if fmt is not None else None)
+            wire_bytes=fmt.bytes_per_element if fmt is not None else None,
+            fused=fused)
         return sched if chunk_dim is None else dataclasses.replace(
             sched, chunk_dim=chunk_dim)
 
@@ -625,7 +640,12 @@ class CommContext:
                                         wire=fmt, fault=self.fault,
                                         preferred=preferred)
         from repro.kernels import ops
+        sched = self.gemm_chunk_schedule(
+            "all_gather_matmul", m_loc * n_dev, n_out, k, backend="fused",
+            dtype_bytes=x.dtype.itemsize, n_chunks=n_chunks,
+            chunk_dim=chunk_dim)
         return ops.pk_ag_matmul(x, w, self.axis_name,
+                                n_chunks=sched.n_chunks,
                                 interpret=self._interpret_mode()
                                 ).astype(x.dtype)
 
@@ -681,7 +701,12 @@ class CommContext:
                                             wire=fmt, fault=self.fault,
                                             preferred=preferred)
         from repro.kernels import ops
+        sched = self.gemm_chunk_schedule(
+            "matmul_reduce_scatter", m, n_out, k_loc, backend="fused",
+            dtype_bytes=x.dtype.itemsize, n_chunks=n_chunks,
+            chunk_dim=chunk_dim)
         return ops.pk_matmul_rs(x, w, self.axis_name,
+                                n_chunks=sched.n_chunks,
                                 interpret=self._interpret_mode()
                                 ).astype(x.dtype)
 
@@ -735,9 +760,17 @@ class CommContext:
                                         wire=fmt, fault=self.fault,
                                         preferred=preferred)
         from repro.kernels import ops
-        rs = ops.pk_matmul_rs(x, w, self.axis_name,
-                              interpret=self._interpret_mode()).astype(x.dtype)
-        return lax.all_gather(rs, self.axis_name, axis=0, tiled=True)
+        sched = self.gemm_chunk_schedule(
+            "matmul_all_reduce", m, n_out, k_loc, backend="fused",
+            dtype_bytes=x.dtype.itemsize, n_chunks=n_chunks,
+            chunk_dim=chunk_dim)
+        # one kernel end to end (RS ring + in-kernel gather) — the old
+        # pk_matmul_rs + lax.all_gather composition re-entered XLA for the
+        # trailing gather, forfeiting the fused path's single-launch win
+        return ops.pk_matmul_ar(x, w, self.axis_name,
+                                n_chunks=sched.n_chunks,
+                                interpret=self._interpret_mode()
+                                ).astype(x.dtype)
 
     # -- data-movement ops -------------------------------------------------
 

@@ -241,6 +241,51 @@ def overlapped_gemm_collective_cost(
                       t_comm=t_comm, t_non_overlap=fill, t_sync=t_sync)
 
 
+def fused_pipeline_cost(
+    m: int, n: int, k: int, *, axis_size: int, sub_chunks: int,
+    dtype_bytes: int = 2, kind: str = "reduce_scatter",
+    hw: HardwareSpec = TPU_V5E,
+) -> KernelCost:
+    """Cost of the chunk-pipelined *fused* single-kernel schedule.
+
+    Same pipeline geometry as ``chunk_pipeline_cost`` — every ring hop is
+    split into ``sub_chunks`` double-buffered payloads whose DMA is issued
+    ahead of the chunk GEMM — but priced for the in-kernel regime the fused
+    Pallas path runs in:
+
+      * one kernel launch total (the jax-level ring re-enters the runtime
+        per chunked step, so its launch term hides inside XLA's schedule;
+        the fused kernel pays exactly one ``t_launch``);
+      * operands are VMEM-resident for the kernel's lifetime, so chunking
+        never re-reads an operand from HBM — ``t_mem`` is a single pass
+        regardless of chunk count;
+      * per-chunk synchronization is a scalar-core DMA-descriptor issue plus
+        a local semaphore wait (``local_sync_s``), not a cross-chip
+        launch-visible handoff: only the first chunk of each hop pays
+        ``remote_sync_s`` (the one-way cap-sem ack), the rest ride the
+        already-open channel.
+
+    The last point is the paper's thesis in cost-model form: the fused path
+    tolerates much finer chunking than the jax-level rings, so its argmin
+    sits at a higher chunk count for the same shape. Fused kernels ship
+    full-precision payloads, so there is no ``wire_bytes`` axis here.
+    """
+    total = max(axis_size, 1) * max(sub_chunks, 1)
+    t_comp = gemm_cost(m, n, k, dtype_bytes, hw)
+    out_bytes = m * n * dtype_bytes
+    comm_bytes = ring_collective_bytes(
+        _collective_tensor_bytes(m, n, k, dtype_bytes, kind)
+        / max(axis_size, 1), axis_size, kind)
+    t_comm = transfer_cost(comm_bytes, hw)
+    t_mem = ((m * k + k * n) * dtype_bytes + out_bytes) / hw.hbm_bandwidth
+    fill = t_comm / max(total, 1)
+    hops = max(axis_size - 1, 0) * (2 if kind == "all_reduce" else 1)
+    t_sync = hops * (hw.remote_sync_s
+                     + max(sub_chunks, 1) * hw.local_sync_s)
+    return KernelCost(t_launch=hw.kernel_launch_s, t_comp=t_comp, t_mem=t_mem,
+                      t_comm=t_comm, t_non_overlap=fill, t_sync=t_sync)
+
+
 def chunk_pipeline_cost(
     m: int, n: int, k: int, *, axis_size: int, sub_chunks: int,
     dtype_bytes: int = 2, kind: str = "reduce_scatter",

@@ -131,7 +131,8 @@ def choose_gemm_chunks(m: int, n: int, k: int, *, axis_size: int, kind: str,
                        dtype_bytes: int = 2,
                        hw: cm.HardwareSpec = cm.TPU_V5E,
                        candidates=CHUNK_CANDIDATES,
-                       wire_bytes: float | None = None) -> ChunkSchedule:
+                       wire_bytes: float | None = None,
+                       fused: bool = False) -> ChunkSchedule:
     """Sub-chunk count + chunk dimension for a chunk-pipelined ring.
 
     Argmin of ``costmodel.chunk_pipeline_cost`` over ``candidates``: more
@@ -141,21 +142,34 @@ def choose_gemm_chunks(m: int, n: int, k: int, *, axis_size: int, kind: str,
     CPU-emulated one) resolves to 1 chunk while a real ICI mesh with cheap
     sync resolves to more. Call sites degrade the count to the chunked
     sub-shape's largest divisor via ``fit_chunks``.
+
+    ``fused=True`` prices the single-kernel Pallas pipeline with
+    ``costmodel.fused_pipeline_cost`` instead: one launch, VMEM-resident
+    operands, local-sync chunk handoffs. Its argmin usually sits at a finer
+    chunk count than the jax-level ring for the same shape, which is the
+    point of the fused path. Fused kernels ship full precision, so
+    ``wire_bytes`` is ignored there.
     """
     dim = GEMM_CHUNK_DIM[kind]
     if axis_size <= 1:
         return ChunkSchedule(1, dim, "single device on axis")
     best, best_t = 1, float("inf")
     for c in candidates:
-        t = cm.chunk_pipeline_cost(m, n, k, axis_size=axis_size,
-                                   sub_chunks=c, dtype_bytes=dtype_bytes,
-                                   kind=kind, hw=hw,
-                                   wire_bytes=wire_bytes).total
+        if fused:
+            t = cm.fused_pipeline_cost(m, n, k, axis_size=axis_size,
+                                       sub_chunks=c, dtype_bytes=dtype_bytes,
+                                       kind=kind, hw=hw).total
+        else:
+            t = cm.chunk_pipeline_cost(m, n, k, axis_size=axis_size,
+                                       sub_chunks=c, dtype_bytes=dtype_bytes,
+                                       kind=kind, hw=hw,
+                                       wire_bytes=wire_bytes).total
         if t < best_t:
             best, best_t = c, t
+    model = "fused_pipeline_cost" if fused else "chunk_pipeline_cost"
     return ChunkSchedule(
         best, dim,
-        f"argmin of chunk_pipeline_cost over {tuple(candidates)} "
+        f"argmin of {model} over {tuple(candidates)} "
         f"-> {best} (t={best_t:.2e}s)")
 
 

@@ -248,7 +248,8 @@ def plan_overrides(plans: Sequence[IslandPlan]) -> tuple:
             continue
         if p.op in GEMM_OP_KIND:
             chunks = None
-            if p.backend in ("ring", "ring_bidir") and p.n_chunks:
+            if (p.backend in ("ring", "ring_bidir", "fused")
+                    and p.n_chunks):
                 chunks = max(1, p.n_chunks // max(p.axis_size, 1))
         elif p.op == "all_to_all":
             chunks = p.n_chunks
@@ -445,9 +446,12 @@ class Island:
         *bulk* decision (the table showed bulk winning) reports 0.0 — still
         a measurement, not a prediction. Island-keyed rows are preferred;
         the generic shape grid is the fallback. None — no usable
-        measurement — leaves the plan on the analytic prediction.
+        measurement — leaves the plan on the analytic prediction. The fused
+        backend participates the same way once ``calibrate --per-island``
+        has swept fused×chunks rows: its delta over the bulk row is the
+        overlap the single-kernel pipeline actually achieved.
         """
-        if backend not in ("bulk", "ring", "ring_bidir"):
+        if backend not in ("bulk", "ring", "ring_bidir", "fused"):
             return None
         table = ctx.active_calibration()
         if table is None or self.comm is None:
@@ -550,12 +554,13 @@ class Island:
                 reason = None
             pol = ctx.gemm_policy(c.m, c.n, c.k, kind=GEMM_OP_KIND[c.op],
                                   dtype_bytes=c.dtype_bytes)
-            if backend in ("ring", "ring_bidir"):
+            if backend in ("ring", "ring_bidir", "fused"):
                 # chunk-pipeline schedule, resolved through the SAME context
                 # the body receives (make_context threads Comm.n_chunks into
                 # ctx.chunks, RunConfig.comm_chunks winning): context default
                 # > measured chunk sweep (island-keyed rows first) >
-                # analytic argmin — plan and runtime cannot diverge
+                # analytic argmin (fused-pipeline cost term for the fused
+                # kernels) — plan and runtime cannot diverge
                 sched = ctx.gemm_chunk_schedule(
                     c.op, c.m, c.n, c.k, backend=backend,
                     dtype_bytes=c.dtype_bytes, chunk_dim=c.chunk_dim)

@@ -5,13 +5,27 @@ the transfer flies. This is the TPU realization of the paper's intra-SM
 overlapping (§3.1.3): the "communication warp" is the scalar core + ICI DMA
 engine, and it costs zero MXU occupancy.
 
+Chunk pipeline (``core/schedule.ChunkSchedule``, Syncopate's chunk-centric
+thesis): every ring hop is additionally split into ``n_chunks`` row
+sub-chunks. The scalar core issues chunk c's one-way RDMA *ahead of* the
+chunk GEMM it overlaps, so the first output rows are computed (AG×GEMM) or
+on the wire (GEMM×RS/AR) while the rest of the hop's payload is still
+flying — the pipeline fill shrinks from one shard transfer to one chunk
+transfer. Chunks slice the payload's row dim only, so the per-row K
+reduction order is untouched and every chunk count is **bit-identical** to
+the 1-chunk schedule (enforced by tests/test_fused_chunks.py). Requested
+counts that do not divide the payload rows degrade via ``fit_chunks`` —
+chunking is never a shape constraint.
+
 Communication code in each kernel is ~12 lines (start / wait / signal),
 mirroring the paper's <50-LOC claim; everything else is the same GEMM a
 single-device kernel would have.
 
 Synchronization discipline (see kernels/pk_comm.py for the derivation):
-per-hop send/recv DMA semaphores order arrivals; cap_sem acks guard
-double-buffer reuse. All one-way — no rendezvous (paper §3.1.4).
+per-hop × per-chunk send/recv DMA semaphores order arrivals; cap_sem acks
+guard double-buffer reuse and stay per-slot (the consumer frees a whole
+slot, so the capacity ack does not chunk). All one-way — no rendezvous
+(paper §3.1.4).
 """
 
 from __future__ import annotations
@@ -26,9 +40,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
 from repro.core.comms import collective_id
+from repro.core.schedule import fit_chunks
 
 from repro.kernels.pk_comm import (pk_neighbor_barrier, pk_signal,
-                                   pk_store_async, pk_wait)
+                                   pk_store_async, pk_store_chunked, pk_wait)
 
 
 # ---------------------------------------------------------------------------
@@ -36,7 +51,8 @@ from repro.kernels.pk_comm import (pk_neighbor_barrier, pk_signal,
 # ---------------------------------------------------------------------------
 
 def _ag_mm_kernel(x_ref, w_ref, out_ref, buf, w_v, y_v, send_sem, recv_sem,
-                  cap_sem, copy_sem, *, axis_name: str, n_dev: int):
+                  cap_sem, copy_sem, *, axis_name: str, n_dev: int,
+                  n_chunks: int, m_chunk: int):
     my = lax.axis_index(axis_name)
     right = lax.rem(my + 1, jnp.int32(n_dev))
     left = lax.rem(my + n_dev - 1, jnp.int32(n_dev))
@@ -57,15 +73,22 @@ def _ag_mm_kernel(x_ref, w_ref, out_ref, buf, w_v, y_v, send_sem, recv_sem,
         def _reuse_ack():           # right must have consumed slot `nxt`
             pk_wait(cap_sem.at[nxt], 1)
 
-        @pl.when(i < n_dev - 1)
-        def _send():                # next shard in flight...
-            pk_store_async(buf.at[cur], buf.at[nxt], send_sem.at[i],
-                           recv_sem.at[i], right)
+        # Chunk pipeline: chunk c of the next shard goes on the wire, THEN
+        # the MXU computes chunk c of the current shard — each chunk's DMA
+        # is issued ahead of the chunk GEMM it overlaps.
+        for c in range(n_chunks):
+            rows = pl.dslice(c * m_chunk, m_chunk)
 
-        # ...while the MXU computes the current shard (intra-kernel overlap)
-        y_v[...] = jax.lax.dot(buf[cur], w_v[...],
-                               preferred_element_type=jnp.float32
-                               ).astype(y_v.dtype)
+            @pl.when(i < n_dev - 1)
+            def _send(rows=rows, c=c):
+                pk_store_async(buf.at[cur].at[rows], buf.at[nxt].at[rows],
+                               send_sem.at[i, c], recv_sem.at[i, c], right)
+
+            sl = slice(c * m_chunk, (c + 1) * m_chunk)
+            y_v[sl] = jax.lax.dot(buf.at[cur][sl], w_v[...],
+                                  preferred_element_type=jnp.float32
+                                  ).astype(y_v.dtype)
+
         src = lax.rem(my - i + n_dev, jnp.int32(n_dev))
         st = pltpu.make_async_copy(y_v, out_ref.at[src], copy_sem)
         st.start()
@@ -73,12 +96,14 @@ def _ag_mm_kernel(x_ref, w_ref, out_ref, buf, w_v, y_v, send_sem, recv_sem,
 
         @pl.when(i < n_dev - 1)
         def _wait():
-            # recreate the matching descriptor to wait send+recv of hop i
-            pltpu.make_async_remote_copy(
-                src_ref=buf.at[cur], dst_ref=buf.at[nxt],
-                send_sem=send_sem.at[i], recv_sem=recv_sem.at[i],
-                device_id=(right,),
-                device_id_type=pltpu.DeviceIdType.MESH).wait()
+            # recreate the matching descriptors to wait send+recv of hop i
+            for c in range(n_chunks):
+                rows = pl.dslice(c * m_chunk, m_chunk)
+                pltpu.make_async_remote_copy(
+                    src_ref=buf.at[cur].at[rows], dst_ref=buf.at[nxt].at[rows],
+                    send_sem=send_sem.at[i, c], recv_sem=recv_sem.at[i, c],
+                    device_id=(right,),
+                    device_id_type=pltpu.DeviceIdType.MESH).wait()
 
         @pl.when(jnp.logical_and(i >= 1, i <= n_dev - 3))
         def _consumed():            # buf[cur] free (dot done + send done)
@@ -88,16 +113,22 @@ def _ag_mm_kernel(x_ref, w_ref, out_ref, buf, w_v, y_v, send_sem, recv_sem,
     lax.fori_loop(0, n_dev, step, 0)
 
 
-def ag_matmul_fused(x, w, axis_name: str, *, interpret=True):
+def ag_matmul_fused(x, w, axis_name: str, *, n_chunks: int = 1,
+                    interpret=True):
     """x: (m_loc, k) row shard; w: (k, n) local weight. Returns
     (n_dev*m_loc, n) — all-gather fused into the GEMM. Call inside shard_map.
+    ``n_chunks`` splits each hop into row sub-chunks (largest-divisor
+    ``fit_chunks`` fallback); bit-identical to the 1-chunk schedule.
     Whole-operand VMEM residency: sized for benchmark/validation shapes; the
     production path tiles K via kernels/matmul.py blocking (DESIGN §5)."""
     n_dev = compat.axis_size(axis_name)
     m_loc, k = x.shape
     n = w.shape[1]
+    n_chunks = fit_chunks(m_loc, n_chunks)
+    m_chunk = m_loc // n_chunks
     return pl.pallas_call(
-        functools.partial(_ag_mm_kernel, axis_name=axis_name, n_dev=n_dev),
+        functools.partial(_ag_mm_kernel, axis_name=axis_name, n_dev=n_dev,
+                          n_chunks=n_chunks, m_chunk=m_chunk),
         in_specs=[pl.BlockSpec(memory_space=compat.ANY),
                   pl.BlockSpec(memory_space=compat.ANY)],
         out_specs=pl.BlockSpec(memory_space=compat.ANY),
@@ -105,8 +136,8 @@ def ag_matmul_fused(x, w, axis_name: str, *, interpret=True):
         scratch_shapes=[pltpu.VMEM((2, m_loc, k), x.dtype),
                         pltpu.VMEM((k, n), w.dtype),
                         pltpu.VMEM((m_loc, n), x.dtype),
-                        pltpu.SemaphoreType.DMA((n_dev - 1,)),
-                        pltpu.SemaphoreType.DMA((n_dev - 1,)),
+                        pltpu.SemaphoreType.DMA((n_dev - 1, n_chunks)),
+                        pltpu.SemaphoreType.DMA((n_dev - 1, n_chunks)),
                         pltpu.SemaphoreType.REGULAR((2,)),
                         pltpu.SemaphoreType.DMA],
         compiler_params=compat.CompilerParams(collective_id=collective_id("ag_matmul_fused")),
@@ -118,17 +149,14 @@ def ag_matmul_fused(x, w, axis_name: str, *, interpret=True):
 # Fused GEMM × reduce-scatter (paper Fig. 8 / Table 3)
 # ---------------------------------------------------------------------------
 
-def _mm_rs_kernel(x_ref, w_ref, out_ref, landing, acc_v, p_v, l_v, x_v, w_v,
-                  send_sem, recv_sem, cap_sem, copy_sem, *,
-                  axis_name: str, n_dev: int, m_blk: int):
+def _rs_ring(x_ref, landing, acc_v, p_v, l_v, x_v, w_v, send_sem, recv_sem,
+             cap_sem, copy_sem, *, axis_name: str, n_dev: int, m_blk: int,
+             n_chunks: int, m_chunk: int):
+    """The accumulate-and-forward GEMM×RS ring, shared by the RS and AR
+    kernels. On return ``acc_v`` holds this device's fully reduced block."""
     my = lax.axis_index(axis_name)
     left = lax.rem(my + n_dev - 1, jnp.int32(n_dev))
     right = lax.rem(my + 1, jnp.int32(n_dev))
-    pk_neighbor_barrier(axis_name)
-
-    cp_w = pltpu.make_async_copy(w_ref, w_v, copy_sem)
-    cp_w.start()
-    cp_w.wait()
 
     def load_block(b):
         cp = pltpu.make_async_copy(x_ref.at[pl.dslice(b * m_blk, m_blk)],
@@ -148,17 +176,29 @@ def _mm_rs_kernel(x_ref, w_ref, out_ref, landing, acc_v, p_v, l_v, x_v, w_v,
         def _reuse_ack():
             pk_wait(cap_sem.at[slot], 1)
 
-        # forward the accumulator (one-way, pre-allocated landing slot)...
-        rdma = pk_store_async(acc_v, landing.at[slot], send_sem.at[i - 1],
-                              recv_sem.at[i - 1], left)
+        def send_chunk(c):
+            # one-way, into the left neighbor's pre-allocated landing slot
+            rows = pl.dslice(c * m_chunk, m_chunk)
+            return pk_store_async(acc_v.at[rows], landing.at[slot].at[rows],
+                                  send_sem.at[i - 1, c],
+                                  recv_sem.at[i - 1, c], left)
 
-        # ...while the MXU computes the next partial block (overlap): the
-        # paper's hiding condition K >= s*R/(2*B) decides if this dot fully
-        # covers the transfer (costmodel.hiding_threshold_k).
+        # Chunk 0 of the accumulator is on the wire before anything else;
+        # the x-block HBM read and every chunk GEMM then overlap the
+        # remaining chunk transfers — chunk c+1's DMA is issued ahead of
+        # chunk c's dot. The paper's hiding condition K >= s*R/(2*B)
+        # decides if the dots fully cover the transfers
+        # (costmodel.hiding_threshold_k).
+        rdmas = [send_chunk(0)]
         load_block(lax.rem(my + 1 + i, jnp.int32(n_dev)))
-        p_v[...] = jax.lax.dot(x_v[...], w_v[...],
-                               preferred_element_type=jnp.float32)
-        rdma.wait()
+        for c in range(n_chunks):
+            if c + 1 < n_chunks:
+                rdmas.append(send_chunk(c + 1))
+            sl = slice(c * m_chunk, (c + 1) * m_chunk)
+            p_v[sl] = jax.lax.dot(x_v[sl], w_v[...],
+                                  preferred_element_type=jnp.float32)
+        for r in rdmas:
+            r.wait()
         cp_l = pltpu.make_async_copy(landing.at[slot], l_v, copy_sem)
         cp_l.start()
         cp_l.wait()
@@ -170,22 +210,40 @@ def _mm_rs_kernel(x_ref, w_ref, out_ref, landing, acc_v, p_v, l_v, x_v, w_v,
         return 0
 
     lax.fori_loop(1, n_dev, step, 0)
+
+
+def _mm_rs_kernel(x_ref, w_ref, out_ref, landing, acc_v, p_v, l_v, x_v, w_v,
+                  send_sem, recv_sem, cap_sem, copy_sem, *,
+                  axis_name: str, n_dev: int, m_blk: int, n_chunks: int,
+                  m_chunk: int):
+    pk_neighbor_barrier(axis_name)
+    cp_w = pltpu.make_async_copy(w_ref, w_v, copy_sem)
+    cp_w.start()
+    cp_w.wait()
+    _rs_ring(x_ref, landing, acc_v, p_v, l_v, x_v, w_v, send_sem, recv_sem,
+             cap_sem, copy_sem, axis_name=axis_name, n_dev=n_dev, m_blk=m_blk,
+             n_chunks=n_chunks, m_chunk=m_chunk)
     st = pltpu.make_async_copy(acc_v, out_ref, copy_sem)
     st.start()
     st.wait()
 
 
-def matmul_rs_fused(x, w, axis_name: str, *, interpret=True):
+def matmul_rs_fused(x, w, axis_name: str, *, n_chunks: int = 1,
+                    interpret=True):
     """x: (m, k_loc); w: (k_loc, n) (K sharded over the axis). Returns the
-    reduce-scattered (m/n_dev, n) fp32 shard. Call inside shard_map."""
+    reduce-scattered (m/n_dev, n) fp32 shard. Call inside shard_map.
+    ``n_chunks`` splits each hop's accumulator payload into row sub-chunks
+    (``fit_chunks`` fallback); bit-identical to the 1-chunk schedule."""
     n_dev = compat.axis_size(axis_name)
     m, k_loc = x.shape
     n = w.shape[1]
     assert m % n_dev == 0
     m_blk = m // n_dev
+    n_chunks = fit_chunks(m_blk, n_chunks)
+    m_chunk = m_blk // n_chunks
     return pl.pallas_call(
         functools.partial(_mm_rs_kernel, axis_name=axis_name, n_dev=n_dev,
-                          m_blk=m_blk),
+                          m_blk=m_blk, n_chunks=n_chunks, m_chunk=m_chunk),
         in_specs=[pl.BlockSpec(memory_space=compat.ANY),
                   pl.BlockSpec(memory_space=compat.ANY)],
         out_specs=pl.BlockSpec(memory_space=compat.ANY),
@@ -196,10 +254,89 @@ def matmul_rs_fused(x, w, axis_name: str, *, interpret=True):
                         pltpu.VMEM((m_blk, n), jnp.float32),
                         pltpu.VMEM((m_blk, k_loc), x.dtype),
                         pltpu.VMEM((k_loc, n), w.dtype),
-                        pltpu.SemaphoreType.DMA((n_dev - 1,)),
-                        pltpu.SemaphoreType.DMA((n_dev - 1,)),
+                        pltpu.SemaphoreType.DMA((n_dev - 1, n_chunks)),
+                        pltpu.SemaphoreType.DMA((n_dev - 1, n_chunks)),
                         pltpu.SemaphoreType.REGULAR((2,)),
                         pltpu.SemaphoreType.DMA],
         compiler_params=compat.CompilerParams(collective_id=collective_id("matmul_rs_fused")),
+        interpret=compat.interpret_params() if interpret else False,
+    )(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Fused GEMM × all-reduce — the §3.1.3 re-derivation (AR = RS ∘ AG on the
+# same ring), still ONE kernel: the reduce-scatter ring above, then a
+# chunked all-gather of the reduced blocks without leaving the kernel.
+# ---------------------------------------------------------------------------
+
+def _mm_ar_kernel(x_ref, w_ref, out_ref, landing, acc_v, p_v, l_v, x_v, w_v,
+                  send_sem, recv_sem, ag_send, ag_recv, cap_sem, copy_sem, *,
+                  axis_name: str, n_dev: int, m_blk: int, n_chunks: int,
+                  m_chunk: int):
+    my = lax.axis_index(axis_name)
+    right = lax.rem(my + 1, jnp.int32(n_dev))
+    pk_neighbor_barrier(axis_name)
+    cp_w = pltpu.make_async_copy(w_ref, w_v, copy_sem)
+    cp_w.start()
+    cp_w.wait()
+    _rs_ring(x_ref, landing, acc_v, p_v, l_v, x_v, w_v, send_sem, recv_sem,
+             cap_sem, copy_sem, axis_name=axis_name, n_dev=n_dev, m_blk=m_blk,
+             n_chunks=n_chunks, m_chunk=m_chunk)
+
+    # publish my reduced block into my PGL slot, then ring-gather the rest —
+    # same hop/chunk discipline as _ag_kernel, no rendezvous: out_ref slots
+    # are pre-allocated kernel outputs, live since the opening barrier.
+    st = pltpu.make_async_copy(acc_v, out_ref.at[my], copy_sem)
+    st.start()
+    st.wait()
+
+    def ag_hop(j, _):
+        # forward the reduced block received j hops ago (origin my - j)
+        slot = lax.rem(my - j + n_dev, jnp.int32(n_dev))
+        rdmas = pk_store_chunked(out_ref.at[slot], out_ref.at[slot],
+                                 ag_send.at[j], ag_recv.at[j], right,
+                                 n_chunks=n_chunks, chunk_rows=m_chunk)
+        for r in rdmas:
+            r.wait()
+        return 0
+
+    lax.fori_loop(0, n_dev - 1, ag_hop, 0)
+
+
+def matmul_ar_fused(x, w, axis_name: str, *, n_chunks: int = 1,
+                    interpret=True):
+    """x: (m, k_loc); w: (k_loc, n) (K sharded over the axis). Returns the
+    all-reduced (n_dev, m/n_dev, n) fp32 blocks (reshape to (m, n) outside).
+    Call inside shard_map. One kernel end to end: the GEMM×RS ring followed
+    by an in-kernel chunked all-gather of the reduced blocks — the trailing
+    gather's hops reuse the chunk pipeline, so no second launch and no bulk
+    re-entry into XLA. Bit-identical to the 1-chunk schedule."""
+    n_dev = compat.axis_size(axis_name)
+    m, k_loc = x.shape
+    n = w.shape[1]
+    assert m % n_dev == 0
+    m_blk = m // n_dev
+    n_chunks = fit_chunks(m_blk, n_chunks)
+    m_chunk = m_blk // n_chunks
+    return pl.pallas_call(
+        functools.partial(_mm_ar_kernel, axis_name=axis_name, n_dev=n_dev,
+                          m_blk=m_blk, n_chunks=n_chunks, m_chunk=m_chunk),
+        in_specs=[pl.BlockSpec(memory_space=compat.ANY),
+                  pl.BlockSpec(memory_space=compat.ANY)],
+        out_specs=pl.BlockSpec(memory_space=compat.ANY),
+        out_shape=jax.ShapeDtypeStruct((n_dev, m_blk, n), jnp.float32),
+        scratch_shapes=[compat.hbm_scratch((2, m_blk, n), jnp.float32),
+                        pltpu.VMEM((m_blk, n), jnp.float32),
+                        pltpu.VMEM((m_blk, n), jnp.float32),
+                        pltpu.VMEM((m_blk, n), jnp.float32),
+                        pltpu.VMEM((m_blk, k_loc), x.dtype),
+                        pltpu.VMEM((k_loc, n), w.dtype),
+                        pltpu.SemaphoreType.DMA((n_dev - 1, n_chunks)),
+                        pltpu.SemaphoreType.DMA((n_dev - 1, n_chunks)),
+                        pltpu.SemaphoreType.DMA((n_dev - 1, n_chunks)),
+                        pltpu.SemaphoreType.DMA((n_dev - 1, n_chunks)),
+                        pltpu.SemaphoreType.REGULAR((2,)),
+                        pltpu.SemaphoreType.DMA],
+        compiler_params=compat.CompilerParams(collective_id=collective_id("matmul_ar_fused")),
         interpret=compat.interpret_params() if interpret else False,
     )(x, w)

@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
-from repro.kernels.collective_matmul import ag_matmul_fused, matmul_rs_fused
+from repro.kernels.collective_matmul import (ag_matmul_fused, matmul_ar_fused,
+                                             matmul_rs_fused)
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.grouped_matmul import grouped_matmul as _gmm
 from repro.kernels.mamba_scan import mamba_scan as _mscan
@@ -90,18 +91,25 @@ def mamba_scan(dt, b_ssm, c_ssm, x, a, h0, *, chunk=128, interpret=None):
 
 
 # --- PK collectives (call inside shard_map) ---
+#
+# ``n_chunks`` on the GEMM×collectives is the ChunkSchedule seam: the count
+# resolved by ``CommContext.gemm_chunk_schedule`` (explicit > RunConfig >
+# measured table > analytic fused cost term) lands here and is fitted to the
+# payload rows by the kernel wrappers (``fit_chunks`` — never a constraint).
 
-def pk_all_gather(x, axis_name, *, interpret=None):
+def pk_all_gather(x, axis_name, *, n_chunks=1, interpret=None):
     interpret = (not _on_tpu()) if interpret is None else interpret
-    return ring_all_gather(x, axis_name, interpret=interpret)
+    return ring_all_gather(x, axis_name, n_chunks=n_chunks,
+                           interpret=interpret)
 
 
-def pk_reduce_scatter(x, axis_name, *, interpret=None):
+def pk_reduce_scatter(x, axis_name, *, n_chunks=1, interpret=None):
     interpret = (not _on_tpu()) if interpret is None else interpret
-    return ring_reduce_scatter(x, axis_name, interpret=interpret)
+    return ring_reduce_scatter(x, axis_name, n_chunks=n_chunks,
+                               interpret=interpret)
 
 
-def pk_all_reduce(x, axis_name, *, interpret=None):
+def pk_all_reduce(x, axis_name, *, n_chunks=1, interpret=None):
     """all_reduce = reduce_scatter ∘ all_gather (no in-network reduction on
     ICI — DESIGN §2.1; same 2(N-1)/N per-device traffic as switch-offload)."""
     n = compat.axis_size(axis_name)
@@ -110,8 +118,9 @@ def pk_all_reduce(x, axis_name, *, interpret=None):
         x = jnp.pad(x, [(0, n - rem)] + [(0, 0)] * (x.ndim - 1))
         blk = x.shape[0] // n
     parts = x.reshape(n, blk, *x.shape[1:])
-    rs = pk_reduce_scatter(parts, axis_name, interpret=interpret)
-    ag = pk_all_gather(rs, axis_name, interpret=interpret)
+    rs = pk_reduce_scatter(parts, axis_name, n_chunks=n_chunks,
+                           interpret=interpret)
+    ag = pk_all_gather(rs, axis_name, n_chunks=n_chunks, interpret=interpret)
     out = ag.reshape(n * blk, *x.shape[1:])
     return out[:x.shape[0] - (n - rem if rem else 0)] if rem else out
 
@@ -121,12 +130,23 @@ def pk_ring_shift(x, axis_name, *, interpret=None):
     return p2p_ring_shift(x, axis_name, interpret=interpret)
 
 
-def pk_ag_matmul(x, w, axis_name, *, interpret=None):
+def pk_ag_matmul(x, w, axis_name, *, n_chunks=1, interpret=None):
     interpret = (not _on_tpu()) if interpret is None else interpret
-    out = ag_matmul_fused(x, w, axis_name, interpret=interpret)
+    out = ag_matmul_fused(x, w, axis_name, n_chunks=n_chunks,
+                          interpret=interpret)
     return out.reshape(-1, w.shape[1])
 
 
-def pk_matmul_rs(x, w, axis_name, *, interpret=None):
+def pk_matmul_rs(x, w, axis_name, *, n_chunks=1, interpret=None):
     interpret = (not _on_tpu()) if interpret is None else interpret
-    return matmul_rs_fused(x, w, axis_name, interpret=interpret)
+    return matmul_rs_fused(x, w, axis_name, n_chunks=n_chunks,
+                           interpret=interpret)
+
+
+def pk_matmul_ar(x, w, axis_name, *, n_chunks=1, interpret=None):
+    """Fused GEMM×all-reduce: one kernel (RS ring + in-kernel gather of the
+    reduced blocks). Returns (m, n) fp32."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    out = matmul_ar_fused(x, w, axis_name, n_chunks=n_chunks,
+                          interpret=interpret)
+    return out.reshape(-1, w.shape[1])

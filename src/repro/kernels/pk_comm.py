@@ -38,6 +38,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
 from repro.core.comms import collective_id
+from repro.core.schedule import fit_chunks
 
 
 # ---------------------------------------------------------------------------
@@ -55,6 +56,28 @@ def pk_store_async(src_ref, dst_ref, send_sem, recv_sem, dst_dev):
         device_id_type=pltpu.DeviceIdType.MESH)
     rdma.start()
     return rdma
+
+
+def pk_store_chunked(src_ref, dst_ref, send_sems, recv_sems, dst_dev, *,
+                     n_chunks: int, chunk_rows: int):
+    """``store_async`` at sub-chunk granularity: one one-way RDMA per row
+    chunk of the payload, each ordered by its own (send, recv) pair from the
+    supplied per-chunk semaphore rows (shape ``(n_chunks,)``). The chunk loop
+    is static, so the scalar core issues every descriptor back-to-back and
+    chunk c is on the wire before the consumer's chunk-c compute runs — the
+    seam the fused kernels build their sub-shard overlap on. Still one-way:
+    per-chunk semaphores extend the hop discipline, they do not add a
+    rendezvous. Returns the descriptors (static list; ``.wait()`` each to
+    block on send+recv completion)."""
+    if n_chunks <= 1:
+        return [pk_store_async(src_ref, dst_ref, send_sems.at[0],
+                               recv_sems.at[0], dst_dev)]
+    out = []
+    for c in range(n_chunks):
+        rows = pl.dslice(c * chunk_rows, chunk_rows)
+        out.append(pk_store_async(src_ref.at[rows], dst_ref.at[rows],
+                                  send_sems.at[c], recv_sems.at[c], dst_dev))
+    return out
 
 
 def pk_signal(sem, dst_dev, inc: int = 1):
@@ -95,13 +118,14 @@ def pk_neighbor_barrier(axis_name: str, sem=None):
 # ---------------------------------------------------------------------------
 
 def _ag_kernel(x_ref, out_ref, send_sem, recv_sem, copy_sem, *,
-               axis_name: str, n_dev: int):
+               axis_name: str, n_dev: int, n_chunks: int, chunk_rows: int):
     """Per-hop semaphores: a bare DMA-semaphore *count* only proves that SOME
     transfer landed, not the one this hop forwards — under out-of-order
     delivery that is a real data race (caught by InterpretParams
-    detect_races). recv_sem[i] is signaled exclusively by the hop-i transfer,
-    so waiting on it orders the ring correctly with zero extra messages —
-    the PK one-way-sync principle (paper §3.1.4) preserved."""
+    detect_races). recv_sem[i, c] is signaled exclusively by the hop-i
+    chunk-c transfer, so waiting on it orders the ring correctly with zero
+    extra messages — the PK one-way-sync principle (paper §3.1.4) preserved
+    at sub-chunk granularity."""
     my = lax.axis_index(axis_name)
     right = lax.rem(my + 1, jnp.int32(n_dev))
     pk_neighbor_barrier(axis_name)
@@ -114,26 +138,35 @@ def _ag_kernel(x_ref, out_ref, send_sem, recv_sem, copy_sem, *,
     def hop(i, _):
         # forward the shard received i hops ago (origin my - i)
         slot = lax.rem(my - i + n_dev, jnp.int32(n_dev))
-        rdma = pk_store_async(out_ref.at[slot], out_ref.at[slot],
-                              send_sem.at[i], recv_sem.at[i], right)
-        rdma.wait()
+        rdmas = pk_store_chunked(out_ref.at[slot], out_ref.at[slot],
+                                 send_sem.at[i], recv_sem.at[i], right,
+                                 n_chunks=n_chunks, chunk_rows=chunk_rows)
+        for r in rdmas:
+            r.wait()
         return 0
 
     lax.fori_loop(0, n_dev - 1, hop, 0)
 
 
-def ring_all_gather(x, axis_name: str, *, mesh=None, interpret=True):
+def ring_all_gather(x, axis_name: str, *, mesh=None, n_chunks: int = 1,
+                    interpret=True):
     """x: (blk, ...) local shard -> (n_dev, blk, ...) full array, via one-way
-    RDMA hops into pre-allocated slots. Call inside shard_map."""
+    RDMA hops into pre-allocated slots. Call inside shard_map. ``n_chunks``
+    splits each hop's payload into row sub-chunks (largest-divisor fallback
+    via ``fit_chunks`` — never a shape constraint); results are bit-identical
+    to the 1-chunk schedule."""
     n_dev = compat.axis_size(axis_name)
+    n_chunks = fit_chunks(x.shape[0], n_chunks) if x.ndim else 1
+    chunk_rows = (x.shape[0] // n_chunks) if x.ndim else 0
     out_shape = jax.ShapeDtypeStruct((n_dev, *x.shape), x.dtype)
     return pl.pallas_call(
-        functools.partial(_ag_kernel, axis_name=axis_name, n_dev=n_dev),
+        functools.partial(_ag_kernel, axis_name=axis_name, n_dev=n_dev,
+                          n_chunks=n_chunks, chunk_rows=chunk_rows),
         in_specs=[pl.BlockSpec(memory_space=compat.ANY)],
         out_specs=pl.BlockSpec(memory_space=compat.ANY),
         out_shape=out_shape,
-        scratch_shapes=[pltpu.SemaphoreType.DMA((n_dev - 1,)),
-                        pltpu.SemaphoreType.DMA((n_dev - 1,)),
+        scratch_shapes=[pltpu.SemaphoreType.DMA((n_dev - 1, n_chunks)),
+                        pltpu.SemaphoreType.DMA((n_dev - 1, n_chunks)),
                         pltpu.SemaphoreType.DMA],
         compiler_params=compat.CompilerParams(collective_id=collective_id("ring_all_gather")),
         interpret=compat.interpret_params() if interpret else False,
@@ -146,13 +179,16 @@ def ring_all_gather(x, axis_name: str, *, mesh=None, interpret=True):
 # ---------------------------------------------------------------------------
 
 def _rs_kernel(x_ref, out_ref, landing, acc_v, tmp_v, send_sem, recv_sem,
-               cap_sem, copy_sem, *, axis_name: str, n_dev: int):
+               cap_sem, copy_sem, *, axis_name: str, n_dev: int,
+               n_chunks: int, chunk_rows: int):
     """Accumulate-and-forward ring. Two sync obligations, both one-way
     (paper §3.1.4 — no rendezvous):
-      * per-hop recv semaphores order data arrival;
+      * per-hop (and per-chunk) recv semaphores order data arrival;
       * cap_sem[slot] is the consumer's ack that a landing slot was read —
         a fast sender may otherwise lap a slow receiver by two hops and
-        overwrite an unconsumed slot (WAR hazard)."""
+        overwrite an unconsumed slot (WAR hazard). The ack stays per-slot:
+        the consumer reads the whole slot at once, so chunking the data
+        path does not chunk the capacity ack."""
     my = lax.axis_index(axis_name)
     left = lax.rem(my + n_dev - 1, jnp.int32(n_dev))
     right = lax.rem(my + 1, jnp.int32(n_dev))
@@ -172,10 +208,13 @@ def _rs_kernel(x_ref, out_ref, landing, acc_v, tmp_v, send_sem, recv_sem,
         def _ack():
             pk_wait(cap_sem.at[slot], 1)
         # one-way send of the running accumulator to the left neighbor's
-        # pre-allocated landing slot; per-hop semaphores order the ring
-        rdma = pk_store_async(acc_v, landing.at[slot], send_sem.at[i - 1],
-                              recv_sem.at[i - 1], left)
-        rdma.wait()
+        # pre-allocated landing slot; per-hop/per-chunk semaphores order
+        # the ring
+        rdmas = pk_store_chunked(acc_v, landing.at[slot], send_sem.at[i - 1],
+                                 recv_sem.at[i - 1], left,
+                                 n_chunks=n_chunks, chunk_rows=chunk_rows)
+        for r in rdmas:
+            r.wait()
         # accumulate on arrival: landing + my partial for block (my+1+i)
         blk = lax.rem(my + 1 + i, jnp.int32(n_dev))
         cp_in = pltpu.make_async_copy(landing.at[slot], acc_v, copy_sem)
@@ -200,22 +239,29 @@ def _rs_kernel(x_ref, out_ref, landing, acc_v, tmp_v, send_sem, recv_sem,
     done.wait()
 
 
-def ring_reduce_scatter(x, axis_name: str, *, interpret=True):
+def ring_reduce_scatter(x, axis_name: str, *, n_chunks: int = 1,
+                        interpret=True):
     """x: (n_dev, blk, ...) per-destination partials -> (blk, ...) reduced
     shard for this device. Accumulate-and-forward ring; landing buffers are
-    double-buffered PGL scratch slots (no staging copies)."""
+    double-buffered PGL scratch slots (no staging copies). ``n_chunks``
+    splits each hop's payload into row sub-chunks (``fit_chunks`` fallback);
+    the accumulation order is untouched, so results stay bit-identical to
+    the 1-chunk schedule."""
     n_dev = compat.axis_size(axis_name)
     blk_shape = x.shape[1:]
+    n_chunks = fit_chunks(blk_shape[0], n_chunks) if blk_shape else 1
+    chunk_rows = (blk_shape[0] // n_chunks) if blk_shape else 0
     return pl.pallas_call(
-        functools.partial(_rs_kernel, axis_name=axis_name, n_dev=n_dev),
+        functools.partial(_rs_kernel, axis_name=axis_name, n_dev=n_dev,
+                          n_chunks=n_chunks, chunk_rows=chunk_rows),
         in_specs=[pl.BlockSpec(memory_space=compat.ANY)],
         out_specs=pl.BlockSpec(memory_space=compat.ANY),
         out_shape=jax.ShapeDtypeStruct(blk_shape, x.dtype),
         scratch_shapes=[compat.hbm_scratch((2, *blk_shape), x.dtype),
                         pltpu.VMEM(blk_shape, x.dtype),
                         pltpu.VMEM(blk_shape, x.dtype),
-                        pltpu.SemaphoreType.DMA((n_dev - 1,)),
-                        pltpu.SemaphoreType.DMA((n_dev - 1,)),
+                        pltpu.SemaphoreType.DMA((n_dev - 1, n_chunks)),
+                        pltpu.SemaphoreType.DMA((n_dev - 1, n_chunks)),
                         pltpu.SemaphoreType.REGULAR((2,)),
                         pltpu.SemaphoreType.DMA],
         compiler_params=compat.CompilerParams(collective_id=collective_id("ring_reduce_scatter")),

@@ -78,3 +78,9 @@ def ag_matmul_ref(x, w):
 def matmul_rs_ref(x, w):
     """Global semantics of GEMM+RS: plain matmul; sharding splits rows."""
     return matmul_ref(x, w)
+
+
+def matmul_ar_ref(x, w):
+    """Global semantics of GEMM+AR: plain matmul, replicated on every
+    device. f32 out (the fused kernel accumulates and ships f32)."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)

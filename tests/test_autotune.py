@@ -340,6 +340,59 @@ def test_per_island_calibrate_sweeps_and_dispatches(mesh4):
     assert ctx.auto_gemm_backend("matmul_all_reduce", 8 * N, 16, 8) == best
 
 
+def test_per_island_calibrate_dtype_axis(mesh4):
+    """The --per-island dtype axis (CLI helper + core sweep): a GEMM island
+    swept at b2 AND its int8-wire twin produce paired ``…|b2`` / ``…|b1``
+    row families at the same coordinates, each tagged with its own
+    dtype_bytes — so the b1 dispatch query never reads b2 evidence."""
+    from repro.autotune import int8_island_sweeps
+    sweeps = [autotune.IslandSweep(island=MLP_KEY, op="matmul_all_reduce",
+                                   m=8 * N, n=16, k=8)]
+    sweeps += int8_island_sweeps(sweeps)
+    b1_key = autotune.island_key("mlp", "matmul_all_reduce", 1)
+    assert [sw.island for sw in sweeps] == [MLP_KEY, b1_key]
+    table = autotune.calibrate(mesh=mesh4, grid="tiny", reps=1,
+                               islands=tuple(sweeps))
+    by_key = {key: [r for r in table.measurements
+                    if r.get("island") == key]
+              for key in (MLP_KEY, b1_key)}
+    for key, want_b in ((MLP_KEY, 2), (b1_key, 1)):
+        rows = by_key[key]
+        assert rows, key
+        assert all(r["dtype_bytes"] == want_b for r in rows)
+        assert all((r["m"], r["n"], r["k"]) == (8 * N, 16, 8) for r in rows)
+        assert {r["backend"] for r in rows} >= {"bulk", "ring"}
+
+
+def test_measured_us_island_dtype_precedence(mesh4):
+    """Same island name calibrated at both widths: each context reads its
+    own ``b{dtype}`` family; measured_us at one width never falls through
+    to the other width's rows."""
+    live = autotune.live_fingerprint("tpu_v5e", mesh4)
+    b1_key = autotune.island_key("mlp", "matmul_all_reduce", 1)
+    rows = []
+    for key, db, us in ((MLP_KEY, 2, 10.0), (b1_key, 1, 99.0)):
+        rows.append({"op": "matmul_all_reduce", "backend": "ring",
+                     "axis_size": N, "m": 256, "n": 64, "k": 16,
+                     "dtype_bytes": db, "n_chunks": 1, "island": key,
+                     "us": us})
+    t = _synthetic(live, rows)
+    assert t.measured_us("matmul_all_reduce", "ring", 256, 64, 16,
+                         axis_size=N, dtype_bytes=2,
+                         island=MLP_KEY) == 10.0
+    assert t.measured_us("matmul_all_reduce", "ring", 256, 64, 16,
+                         axis_size=N, dtype_bytes=1,
+                         island=b1_key) == 99.0
+    # cross-width queries find nothing in the island tier (and there is no
+    # matching global row): width is part of the evidence, not a fallback
+    assert t.measured_us("matmul_all_reduce", "ring", 256, 64, 16,
+                         axis_size=N, dtype_bytes=1, island=MLP_KEY,
+                         island_only=True) is None
+    assert t.measured_us("matmul_all_reduce", "ring", 256, 64, 16,
+                         axis_size=N, dtype_bytes=2, island=b1_key,
+                         island_only=True) is None
+
+
 # ---------------------------------------------------------------------------
 # Graceful fallback
 # ---------------------------------------------------------------------------
@@ -617,6 +670,16 @@ def test_bench_schema_validation():
     assert cb.validate_schema(moded) == []
     moded["figures"][0]["rows"][0]["mode"] = 3
     assert any(".mode" in e for e in cb.validate_schema(moded))
+    # fig_fused_chunks rows tag the sub-chunk count + schedule source
+    chunked = _bench_doc()
+    chunked["figures"][0]["rows"][0].update(sub_chunks=4,
+                                            chunks_src="measured")
+    assert cb.validate_schema(chunked) == []
+    chunked["figures"][0]["rows"][0]["sub_chunks"] = 0
+    assert any(".sub_chunks" in e for e in cb.validate_schema(chunked))
+    chunked["figures"][0]["rows"][0].update(sub_chunks=4,
+                                            chunks_src="vibes")
+    assert any(".chunks_src" in e for e in cb.validate_schema(chunked))
 
 
 def test_bench_regression_gate():

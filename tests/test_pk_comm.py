@@ -20,7 +20,8 @@ pytestmark = pytest.mark.skipif(
     reason="no TPU backend and no pltpu.InterpretParams in this JAX")
 
 from repro.kernels import ref
-from repro.kernels.collective_matmul import ag_matmul_fused, matmul_rs_fused
+from repro.kernels.collective_matmul import (ag_matmul_fused, matmul_ar_fused,
+                                             matmul_rs_fused)
 from repro.kernels.pk_comm import (p2p_ring_shift, ring_all_gather,
                                    ring_reduce_scatter)
 
@@ -83,10 +84,27 @@ def test_matmul_rs_fused(sm):
                                rtol=1e-4, atol=1e-4)
 
 
+def test_matmul_ar_fused(sm):
+    """Single-kernel GEMM×all-reduce (RS ring + in-kernel gather of the
+    reduced blocks) matches the replicated matmul oracle on every device."""
+    m, k_loc, n_out = 16, 8, 24
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, N * k_loc), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (N * k_loc, n_out), jnp.float32)
+    f = jax.jit(sm(
+        lambda x, w: matmul_ar_fused(x, w, "x").reshape(m, n_out)[None],
+        in_specs=(P(None, "x"), P("x", None)), out_specs=P("x")))
+    got = np.asarray(f(x, w))        # (dev, m, n_out): replica per device
+    want = np.asarray(ref.matmul_ar_ref(x, w))
+    for d in range(N):
+        np.testing.assert_allclose(got[d], want, rtol=1e-4, atol=1e-4)
+
+
 @pytest.mark.parametrize("seed", [0, 1, 2])
-def test_ring_all_gather_race_free(mesh4, seed):
-    """Per-hop semaphores must order the ring under randomized DMA delivery
-    (this catches the count-only synchronization bug — see pk_comm.py)."""
+@pytest.mark.parametrize("n_chunks", [1, 2])
+def test_ring_all_gather_race_free(mesh4, seed, n_chunks):
+    """Per-hop (and per-sub-chunk) semaphores must order the ring under
+    randomized DMA delivery (this catches the count-only synchronization
+    bug — see pk_comm.py)."""
     import functools
     from jax.experimental import pallas as pl
     from jax.experimental.pallas import tpu as pltpu
@@ -95,12 +113,14 @@ def test_ring_all_gather_race_free(mesh4, seed):
     def ag(x):
         from repro.core.comms import collective_id
         return pl.pallas_call(
-            functools.partial(_ag_kernel, axis_name="x", n_dev=N),
+            functools.partial(_ag_kernel, axis_name="x", n_dev=N,
+                              n_chunks=n_chunks,
+                              chunk_rows=x.shape[0] // n_chunks),
             in_specs=[pl.BlockSpec(memory_space=compat.ANY)],
             out_specs=pl.BlockSpec(memory_space=compat.ANY),
             out_shape=jax.ShapeDtypeStruct((N, *x.shape), x.dtype),
-            scratch_shapes=[pltpu.SemaphoreType.DMA((N - 1,)),
-                            pltpu.SemaphoreType.DMA((N - 1,)),
+            scratch_shapes=[pltpu.SemaphoreType.DMA((N - 1, n_chunks)),
+                            pltpu.SemaphoreType.DMA((N - 1, n_chunks)),
                             pltpu.SemaphoreType.DMA],
             compiler_params=compat.CompilerParams(
                 collective_id=collective_id("ring_all_gather")),
@@ -108,7 +128,7 @@ def test_ring_all_gather_race_free(mesh4, seed):
                                               detect_races=True),
         )(x)
 
-    x = jnp.arange(N, dtype=jnp.float32)[:, None, None] * jnp.ones((N, 1, 8))
+    x = jnp.arange(N, dtype=jnp.float32)[:, None, None] * jnp.ones((N, 4, 8))
     f = jax.jit(partial(compat.shard_map, mesh=mesh4, check_vma=False)(
         lambda x: ag(x[0])[None], in_specs=P("x"), out_specs=P("x")))
     got = np.asarray(f(x))
